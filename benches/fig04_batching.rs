@@ -1,0 +1,80 @@
+//! Paper Fig 4: the b_p batching knob — GEMM time, speedup over b_p = 1,
+//! and memory footprint as b_p grows from 1 to the full batch.
+//!
+//! Two panels on this substrate:
+//! * WALLCLOCK (paper Fig 4b): 32/b_p launches of the XLA-native conv
+//!   chunk — XLA CPU's convolution is a real cache-blocked GEMM, so call
+//!   granularity shows the paper's effect (one large GEMM beats b small
+//!   ones).
+//! * STRUCTURE (paper Fig 4c + TPU adaptation): the Pallas lowering's
+//!   D-hat footprint (linear in b_p) and grid-launch count per batch —
+//!   interpret-mode wallclock is NOT a TPU proxy (DESIGN.md §Perf), so
+//!   the Pallas variant is evaluated structurally.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::metrics::Table;
+use omnivore::runtime::to_literal;
+use omnivore::tensor::HostTensor;
+use omnivore::util::bench::bench;
+use omnivore::util::rng::Rng;
+
+fn main() {
+    support::banner("Fig 4", "conv GEMM time / speedup / memory vs b_p (total batch 32)");
+    let rt = support::runtime();
+    let mut rng = Rng::seed_from_u64(1);
+    let w = HostTensor::randn(&[5, 5, 32, 64], 0.1, &mut rng);
+    let total_gflop = rt.manifest().entry("convbench_bp32").unwrap().gflops.unwrap();
+
+    // Panel 1: wallclock at each call granularity (XLA-native conv).
+    let mut rows = vec![];
+    for bp in [1usize, 2, 4, 8, 16, 32] {
+        let name = format!("convchunk_jnp_b{bp}");
+        let entry = rt.manifest().entry(&name).expect("bench artifact").clone();
+        let xc = HostTensor::randn(&[bp, 16, 16, 32], 1.0, &mut rng);
+        let lits = vec![to_literal(&xc).unwrap(), to_literal(&w).unwrap()];
+        let calls = 32 / bp;
+        let stats = bench(&name, 2, 6, || {
+            for _ in 0..calls {
+                rt.execute_literals(&name, &lits).unwrap();
+            }
+        });
+        rows.push((bp, stats.mean_secs, entry.lowered_bytes.unwrap_or(0)));
+    }
+    let t1 = rows[0].1;
+    let mut table = Table::new(&[
+        "b_p", "calls", "time/batch (ms)", "speedup vs b_p=1", "GFLOP/s", "lowered D-hat bytes",
+    ]);
+    let mut csv = String::from("bp,calls,time_ms,speedup,gflops,lowered_bytes,grid_steps\n");
+    for (bp, secs, bytes) in &rows {
+        // Pallas-structural: grid steps per batch at this b_p (chunks x
+        // k-tiles for the 256-row x 800-K x 64-N conv2 GEMM).
+        let grid_steps = (32 / bp) * ((bp * 256).div_ceil(256)) * 2;
+        table.row(&[
+            bp.to_string(),
+            (32 / bp).to_string(),
+            format!("{:.2}", secs * 1e3),
+            format!("{:.2}x", t1 / secs),
+            format!("{:.2}", total_gflop / secs),
+            bytes.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{bp},{},{},{},{},{bytes},{grid_steps}\n",
+            32 / bp,
+            secs * 1e3,
+            t1 / secs,
+            total_gflop / secs,
+        ));
+    }
+    table.print();
+    let best = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    println!(
+        "wallclock speedup at b_p=b vs b_p=1: {:.2}x (paper Fig 4b: ~2x);\n\
+         memory strictly linear in b_p (paper Fig 4c): {} -> {} bytes.",
+        t1 / best,
+        rows[0].2,
+        rows.last().unwrap().2
+    );
+    support::write_results("fig04_batching.csv", &csv);
+}

@@ -1,0 +1,92 @@
+//! Paper Fig 7 (and Fig 25): the headline tradeoff — hardware efficiency,
+//! statistical efficiency, and total time to a target loss across
+//! execution strategies g ∈ {1, 2, ..., N} on the CPU-L cluster, with
+//! momentum tuned per g.
+//!
+//! Paper's result: g=32 is 6.7x faster per iteration but needs 1.8x the
+//! iterations; intermediate g (chosen by the optimizer) wins end-to-end,
+//! >2x faster than sync.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::Hyper;
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::se_model;
+
+fn main() {
+    support::banner("Fig 7", "HE / SE / total time vs compute groups (CPU-L, momentum tuned)");
+    let rt = support::runtime();
+    let cl = support::preset("cpu-l");
+    let n = cl.machines - 1;
+    let target = 0.95f32;
+    let steps = support::scaled(220);
+
+    // Common warm checkpoint (paper: every strategy starts from the same
+    // checkpoint after cold start).
+    let warm = support::warm_params(&rt, "caffenet8", &cl, 16);
+
+    let mut table = Table::new(&[
+        "g", "k", "mu*", "HE: time/iter", "P_HE", "SE: iters", "P_SE", "total time", "P_total",
+    ]);
+    let mut csv = String::from("g,k,mu,he,p_he,se_iters,p_se,total,p_total\n");
+    let mut base: Option<(f64, f64, f64)> = None;
+    let mut best: Option<(usize, f64)> = None;
+    let mut g = 1;
+    while g <= n {
+        let mu = se_model::compensated_momentum(0.9, g) as f32;
+        let cfg = support::cfg(
+            "caffenet8",
+            cl.clone(),
+            g,
+            Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
+            steps,
+        );
+        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
+            .run(warm.clone())
+            .unwrap();
+        let he = report.mean_iter_time();
+        let se = report.iters_to_accuracy(target, 16).map(|i| i as f64);
+        let total = report.time_to_accuracy(target, 16);
+        if g == 1 {
+            base = Some((he, se.unwrap_or(f64::NAN), total.unwrap_or(f64::NAN)));
+        }
+        let b = base.unwrap();
+        if let Some(t) = total {
+            if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((g, t));
+            }
+        }
+        table.row(&[
+            g.to_string(),
+            (n / g).to_string(),
+            format!("{mu:.2}"),
+            fmt_secs(he),
+            format!("{:.2}", he / b.0),
+            se.map(|i| format!("{i:.0}")).unwrap_or_else(|| "-".into()),
+            se.map(|i| format!("{:.2}", i / b.1)).unwrap_or_else(|| "-".into()),
+            total.map(fmt_secs).unwrap_or_else(|| "-".into()),
+            total.map(|t| format!("{:.2}", t / b.2)).unwrap_or_else(|| "-".into()),
+        ]);
+        csv.push_str(&format!(
+            "{g},{},{mu},{he},{},{},{},{},{}\n",
+            n / g,
+            he / b.0,
+            se.unwrap_or(f64::NAN),
+            se.map(|i| i / b.1).unwrap_or(f64::NAN),
+            total.unwrap_or(f64::NAN),
+            total.map(|t| t / b.2).unwrap_or(f64::NAN),
+        ));
+        g *= 2;
+    }
+    table.print();
+    if let (Some((gb, tb)), Some(b)) = (best, base) {
+        println!(
+            "best strategy: g={gb} — {:.1}x faster than sync to target (paper: optimal g\n\
+             is >2x faster than sync, async pays an SE penalty).",
+            b.2 / tb
+        );
+    }
+    support::write_results("fig07_tradeoff.csv", &csv);
+}

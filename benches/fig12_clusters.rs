@@ -1,0 +1,85 @@
+//! Paper Fig 12: accuracy vs time on the three clusters (CPU-S, GPU-S,
+//! CPU-L), Omnivore's chosen strategy vs the MXNet-style envelope.
+//!
+//! Paper's findings: CPU-S -> both pick sync, Omnivore still faster
+//! (single-device + merged-FC effects); GPU-S -> Omnivore picks 2 groups;
+//! CPU-L -> Omnivore picks 4 groups, 3.2x faster.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::baselines::BaselineSystem;
+use omnivore::config::{FcMapping, Hyper, Strategy};
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::{se_model, HeParams};
+
+fn main() {
+    support::banner("Fig 12", "cluster comparison: Omnivore vs MXNet envelope");
+    let rt = support::runtime();
+    let arch_name = "caffenet8";
+    let target = 0.9f32;
+    let steps = support::scaled(200);
+    let arch = rt.manifest().arch(arch_name).unwrap();
+
+    let mut table = Table::new(&["cluster", "system", "g", "mu", "time->target", "final acc"]);
+    let mut csv = String::from("cluster,system,g,mu,time_to_target,final_acc\n");
+
+    for cname in ["cpu-s", "gpu-s", "cpu-l"] {
+        let cl = support::preset(cname);
+        let n = cl.machines - 1;
+        let warm = support::warm_params(&rt, arch_name, &cl, 48);
+        let he = HeParams::derive(&cl, arch, 32, 0.5);
+        // Omnivore's strategy: smallest FC-saturating g (Algorithm 1's
+        // start), momentum compensated.
+        let g_omni = he.smallest_saturating_g(n).min(n);
+        let mu_omni = se_model::compensated_momentum(0.9, g_omni) as f32;
+
+        let runs: Vec<(String, Strategy, f32, FcMapping)> = vec![
+            ("mxnet-sync".into(), Strategy::Sync, 0.9, FcMapping::Unmerged),
+            ("mxnet-async".into(), Strategy::Async, 0.9, FcMapping::Unmerged),
+            (
+                format!("omnivore(g={g_omni})"),
+                Strategy::Groups(g_omni),
+                mu_omni,
+                FcMapping::Merged,
+            ),
+        ];
+        for (label, strategy, mu, fc) in runs {
+            let mut cfg = support::cfg(
+                arch_name,
+                cl.clone(),
+                1,
+                Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
+                steps,
+            );
+            cfg.strategy = strategy;
+            cfg.fc_mapping = fc;
+            let report = SimTimeEngine::new(&rt, cfg.clone(), EngineOptions::default())
+                .run(warm.clone())
+                .unwrap();
+            let t = report.time_to_accuracy(target, 32);
+            table.row(&[
+                cname.into(),
+                label.clone(),
+                cfg.groups().to_string(),
+                format!("{mu:.2}"),
+                t.map(fmt_secs).unwrap_or_else(|| "timeout".into()),
+                format!("{:.3}", report.final_acc(32)),
+            ]);
+            csv.push_str(&format!(
+                "{cname},{label},{},{mu},{},{}\n",
+                cfg.groups(),
+                t.unwrap_or(f64::NAN),
+                report.final_acc(32)
+            ));
+        }
+        let _ = BaselineSystem::MxnetSync; // envelope documented in baselines::
+    }
+    table.print();
+    println!(
+        "shape check (paper): omnivore never slower; gap grows with cluster size\n\
+         (CPU-L: 3.2x) and with device speed (GPU-S: async pays off)."
+    );
+    support::write_results("fig12_clusters.csv", &csv);
+}

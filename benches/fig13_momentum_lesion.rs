@@ -1,0 +1,72 @@
+//! Paper Fig 13: lesion study of momentum at the optimizer-chosen group
+//! count — (i) default 0.9, (ii) sync-tuned momentum, (iii) momentum
+//! tuned for the actual g.
+//!
+//! Paper's result: tuning for the right amount of asynchrony is worth
+//! ~1.5x (and up to 2x elsewhere).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::Hyper;
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::se_model;
+
+fn main() {
+    support::banner("Fig 13", "momentum lesion study at g=8 (CPU-L)");
+    let rt = support::runtime();
+    let cl = support::preset("cpu-l");
+    let g = 8;
+    let target = 0.95f32;
+    let steps = support::scaled(240);
+    let warm = support::warm_params(&rt, "caffenet8", &cl, 16);
+
+    let tuned = se_model::compensated_momentum(0.9, g) as f32;
+    let cases = [
+        ("default 0.9 (AlexNet)", 0.9f32),
+        ("sync-tuned (also 0.9)", 0.9),
+        (&format!("tuned for g={g} ({tuned:.2})"), tuned),
+    ];
+    let mut table = Table::new(&["momentum policy", "mu", "iters->target", "time->target", "final acc"]);
+    let mut csv = String::from("policy,mu,iters,time,final_acc\n");
+    let mut times = vec![];
+    for (label, mu) in cases {
+        let cfg = support::cfg(
+            "caffenet8",
+            cl.clone(),
+            g,
+            Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
+            steps,
+        );
+        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
+            .run(warm.clone())
+            .unwrap();
+        let iters = report.iters_to_accuracy(target, 16);
+        let time = report.time_to_accuracy(target, 16);
+        times.push(time);
+        table.row(&[
+            label.into(),
+            format!("{mu:.2}"),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            time.map(fmt_secs).unwrap_or_else(|| "timeout".into()),
+            format!("{:.3}", report.final_acc(32)),
+        ]);
+        csv.push_str(&format!(
+            "{label},{mu},{},{},{}\n",
+            iters.map(|i| i as f64).unwrap_or(f64::NAN),
+            time.unwrap_or(f64::NAN),
+            report.final_acc(32)
+        ));
+    }
+    table.print();
+    if let (Some(Some(t_def)), Some(Some(t_tuned))) = (times.first(), times.last()) {
+        println!(
+            "tuning speedup: {:.2}x (paper: 1.5x, up to 2x)",
+            t_def / t_tuned
+        );
+    } else {
+        println!("untuned momentum failed to reach target at g={g} (stronger-than-paper effect)");
+    }
+    support::write_results("fig13_momentum_lesion.csv", &csv);
+}

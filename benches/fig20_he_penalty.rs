@@ -1,0 +1,52 @@
+//! Paper Fig 20: hardware-efficiency penalty P_HE(S) vs number of compute
+//! groups for the three dataset/network pairs on 32 CPU machines.
+//!
+//! P_HE(S) = HE(S)/HE(0) <= 1; more groups -> faster iterations, with the
+//! floor set by FC saturation. Each arch has different conv/FC balance,
+//! so the curves separate (the paper's point).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::metrics::Table;
+use omnivore::optimizer::HeParams;
+use omnivore::sim::{ClusterSim, ServiceDist, TimingModel};
+
+fn main() {
+    support::banner("Fig 20", "HE penalty vs compute groups, 3 networks (32 machines)");
+    let rt = support::runtime();
+    let cl = support::preset("cpu-l");
+    let n = cl.machines - 1;
+    let iters = support::scaled(500) as u64;
+
+    let mut table = Table::new(&["groups g", "mnist-sim", "cifar-sim", "imagenet8-sim"]);
+    let mut curves: Vec<Vec<f64>> = vec![];
+    for arch_name in ["lenet", "cifar", "caffenet8"] {
+        let arch = rt.manifest().arch(arch_name).unwrap();
+        let he = HeParams::derive(&cl, arch, 32, 0.5);
+        let sim = ClusterSim::new(
+            TimingModel::new(he, ServiceDist::Lognormal { cv: 0.06 }),
+            n,
+        );
+        let results = sim.he_curve(iters, 7);
+        let base = results[0].mean_iter_time;
+        curves.push(results.iter().map(|r| r.mean_iter_time / base).collect());
+    }
+    let mut csv = String::from("g,lenet,cifar,caffenet8\n");
+    let gs: Vec<usize> = (0..curves[0].len()).map(|i| 1 << i).collect();
+    for (i, g) in gs.iter().enumerate() {
+        table.row(&[
+            g.to_string(),
+            format!("{:.3}", curves[0][i]),
+            format!("{:.3}", curves[1][i]),
+            format!("{:.3}", curves[2][i]),
+        ]);
+        csv.push_str(&format!("{g},{},{},{}\n", curves[0][i], curves[1][i], curves[2][i]));
+    }
+    table.print();
+    println!(
+        "shape check (paper): all curves decrease in g and flatten at FC\n\
+         saturation; penalties normalized to sync (g=1) = 1.0."
+    );
+    support::write_results("fig20_he_penalty.csv", &csv);
+}

@@ -1,0 +1,109 @@
+//! Paper Fig 23 (Appendix E-A): batch size vs epochs-to-converge and the
+//! optimal learning rate per batch size.
+//!
+//! Single-device full_step training at b ∈ {4..64} with a small η grid
+//! per batch; reports the winning η and the epochs (images consumed /
+//! corpus size) to reach target accuracy. Paper's shape: η* grows with b
+//! then plateaus; once η* stops scaling, larger batches waste epochs.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::data::SyntheticDataset;
+use omnivore::metrics::Table;
+use omnivore::model::ParamSet;
+use omnivore::runtime::{from_literal, labels_literal, to_literal, Runtime};
+use omnivore::tensor::HostTensor;
+
+/// Plain single-device momentum-SGD loop over the full_step artifact.
+fn train_single(
+    rt: &Runtime,
+    batch: usize,
+    lr: f32,
+    steps: usize,
+    target: f32,
+) -> (Option<usize>, f32) {
+    let arch = rt.manifest().arch("caffenet8").unwrap();
+    let params = ParamSet::init(arch, 0);
+    let data = SyntheticDataset::for_arch("caffenet8", 0);
+    let name = format!("caffenet8_jnp_full_step_b{batch}");
+    let mut w: Vec<HostTensor> = params.tensors().to_vec();
+    let mut v: Vec<HostTensor> = w.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+    let (mu, lambda) = (0.9f32, 5e-4f32);
+    let mut acc_win: Vec<f32> = vec![];
+    let mut reached = None;
+    let mut last_acc = 0.0;
+    for it in 0..steps {
+        let b = data.batch(it as u64, batch);
+        let mut lits = vec![to_literal(&b.images).unwrap(), labels_literal(&b.labels).unwrap()];
+        for t in &w {
+            lits.push(to_literal(t).unwrap());
+        }
+        let outs = rt.execute_literals(&name, &lits).unwrap();
+        let loss = from_literal(&outs[0]).unwrap().scalar().unwrap();
+        let acc = from_literal(&outs[1]).unwrap().scalar().unwrap();
+        last_acc = acc;
+        if !loss.is_finite() || loss > 1e4 {
+            return (None, f32::NAN); // diverged
+        }
+        for ((wi, vi), go) in w.iter_mut().zip(v.iter_mut()).zip(&outs[2..]) {
+            let g = from_literal(go).unwrap();
+            let (wd, vd, gd) = (wi.data_mut(), vi.data_mut(), g.data());
+            for i in 0..wd.len() {
+                vd[i] = mu * vd[i] - lr * (gd[i] + lambda * wd[i]);
+                wd[i] += vd[i];
+            }
+        }
+        acc_win.push(acc);
+        let wlen = 16.min(acc_win.len());
+        let m: f32 = acc_win[acc_win.len() - wlen..].iter().sum::<f32>() / wlen as f32;
+        if reached.is_none() && acc_win.len() >= wlen && m >= target {
+            reached = Some(it + 1);
+            break;
+        }
+    }
+    (reached, last_acc)
+}
+
+fn main() {
+    support::banner("Fig 23", "epochs-to-converge and optimal eta vs batch size");
+    let rt = support::runtime();
+    let corpus = 10_000f64; // imagenet8-sim images (paper Fig 8: 10K)
+    let target = 0.9f32;
+    let mut table = Table::new(&["batch", "eta*", "iters->target", "epochs->target"]);
+    let mut csv = String::from("batch,eta,iters,epochs\n");
+    for batch in [4usize, 8, 16, 32, 64] {
+        let steps = support::scaled(2400 / batch.max(4)); // iteration budget shrinks with b
+        let mut best: Option<(f32, usize)> = None;
+        for lr in [0.005f32, 0.01, 0.02, 0.04] {
+            let (reached, _) = train_single(&rt, batch, lr, steps, target);
+            if let Some(it) = reached {
+                if best.map(|(_, bi)| it < bi).unwrap_or(true) {
+                    best = Some((lr, it));
+                }
+            }
+        }
+        match best {
+            Some((lr, iters)) => {
+                let epochs = iters as f64 * batch as f64 / corpus;
+                table.row(&[
+                    batch.to_string(),
+                    format!("{lr}"),
+                    iters.to_string(),
+                    format!("{epochs:.3}"),
+                ]);
+                csv.push_str(&format!("{batch},{lr},{iters},{epochs}\n"));
+            }
+            None => {
+                table.row(&[batch.to_string(), "-".into(), "-".into(), "-".into()]);
+                csv.push_str(&format!("{batch},,,\n"));
+            }
+        }
+    }
+    table.print();
+    println!(
+        "shape check (paper Fig 23): eta* grows with batch size then plateaus;\n\
+         epochs-to-converge grow once eta* stops scaling."
+    );
+    support::write_results("fig23_batch_size.csv", &csv);
+}

@@ -1,0 +1,88 @@
+//! Paper Fig 31 (Appendix F-C4): the optimizer-dimension ablation — start
+//! from the naive default (fully async, AlexNet hyperparameters, unmerged
+//! FC) and add one optimizer decision at a time:
+//!
+//!   1. naive async, mu=0.9, sync-optimal eta    (divergence expected)
+//!   2. + tuned eta                              (avoids divergence)
+//!   3. + merged FC servers                      (HE and SE gain)
+//!   4. + tuned momentum                         (SE gain)
+//!   5. + optimizer's group count                (the full system)
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::{FcMapping, Hyper};
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::{se_model, HeParams};
+
+fn main() {
+    support::banner("Fig 31", "ablation: each optimizer dimension added in turn (CPU-L)");
+    let rt = support::runtime();
+    let cl = support::preset("cpu-l");
+    let n = cl.machines - 1;
+    let target = 0.95f32;
+    let steps = support::scaled(240);
+    let warm = support::warm_params(&rt, "caffenet8", &cl, 8);
+    let arch = rt.manifest().arch("caffenet8").unwrap();
+    let he = HeParams::derive(&cl, arch, 32, 0.5);
+    let g_opt = he.smallest_saturating_g(n);
+
+    // (label, g, eta, mu, merged_fc)
+    let eta_sync = 0.02f32;
+    let eta_tuned_async = 0.005f32; // an order of magnitude-ish down, like the paper
+    let mu_tuned = se_model::compensated_momentum(0.9, n) as f32;
+    let mu_opt = se_model::compensated_momentum(0.9, g_opt) as f32;
+    let cases: Vec<(&str, usize, f32, f32, FcMapping)> = vec![
+        ("naive async (mu .9, sync eta)", n, eta_sync, 0.9, FcMapping::Unmerged),
+        ("+ tuned eta", n, eta_tuned_async, 0.9, FcMapping::Unmerged),
+        ("+ merged FC", n, eta_tuned_async, 0.9, FcMapping::Merged),
+        ("+ tuned momentum", n, eta_sync, mu_tuned, FcMapping::Merged),
+        (
+            Box::leak(format!("+ optimizer groups (g={g_opt})").into_boxed_str()),
+            g_opt,
+            eta_sync,
+            mu_opt,
+            FcMapping::Merged,
+        ),
+    ];
+
+    let mut table =
+        Table::new(&["configuration", "g", "eta", "mu", "time->target", "final acc", "diverged"]);
+    let mut csv = String::from("config,g,eta,mu,time,final_acc,diverged\n");
+    for (label, g, eta, mu, fc) in cases {
+        let mut cfg = support::cfg(
+            "caffenet8",
+            cl.clone(),
+            g,
+            Hyper { lr: eta, momentum: mu, lambda: 5e-4 },
+            steps,
+        );
+        cfg.fc_mapping = fc;
+        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
+            .run(warm.clone())
+            .unwrap();
+        let t = report.time_to_accuracy(target, 16);
+        table.row(&[
+            label.into(),
+            g.to_string(),
+            format!("{eta}"),
+            format!("{mu:.2}"),
+            t.map(fmt_secs).unwrap_or_else(|| "timeout".into()),
+            format!("{:.3}", report.final_acc(32)),
+            if report.diverged() { "YES".into() } else { "no".into() },
+        ]);
+        csv.push_str(&format!(
+            "{label},{g},{eta},{mu},{},{},{}\n",
+            t.unwrap_or(f64::NAN),
+            report.final_acc(32),
+            report.diverged()
+        ));
+    }
+    table.print();
+    println!(
+        "shape check (paper Fig 31): naive async diverges or stalls; each added\n\
+         dimension improves time-to-target; the full optimizer configuration wins."
+    );
+    support::write_results("fig31_ablation.csv", &csv);
+}

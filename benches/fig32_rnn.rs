@@ -1,0 +1,72 @@
+//! Paper Fig 32 (Appendix F-F): the compute-group tradeoff on a
+//! Recurrent Neural Network — same protocol as the CNN sweeps, on the
+//! shakespeare-sim sequence corpus with the vanilla-RNN encoder.
+//!
+//! Paper's result: the HE/SE tradeoff carries over; fully sync or fully
+//! async is up to 2x slower than the optimal intermediate configuration.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::Hyper;
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::se_model;
+
+fn main() {
+    support::banner("Fig 32", "RNN: HE / SE / total-time tradeoff (CPU-S, shakespeare-sim)");
+    let rt = support::runtime();
+    if rt.manifest().arch("rnn").is_err() {
+        println!("rnn artifacts missing — rerun `make artifacts`");
+        return;
+    }
+    let cl = support::preset("cpu-s");
+    let n = cl.machines - 1;
+    let target = 0.9f32;
+    let steps = support::scaled(200);
+    let warm = support::warm_params(&rt, "rnn", &cl, 32);
+
+    let mut table = Table::new(&["g", "mu*", "time/iter", "iters->acc", "time->acc"]);
+    let mut csv = String::from("g,mu,he,iters,total\n");
+    let mut results = vec![];
+    let mut g = 1;
+    while g <= n {
+        let mu = se_model::compensated_momentum(0.9, g) as f32;
+        let cfg = support::cfg(
+            "rnn",
+            cl.clone(),
+            g,
+            Hyper { lr: 0.05, momentum: mu, lambda: 5e-4 },
+            steps,
+        );
+        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
+            .run(warm.clone())
+            .unwrap();
+        let he = report.mean_iter_time();
+        let iters = report.iters_to_accuracy(target, 32);
+        let total = report.time_to_accuracy(target, 32);
+        results.push((g, total));
+        table.row(&[
+            g.to_string(),
+            format!("{mu:.2}"),
+            fmt_secs(he),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            total.map(fmt_secs).unwrap_or_else(|| "-".into()),
+        ]);
+        csv.push_str(&format!(
+            "{g},{mu},{he},{},{}\n",
+            iters.map(|i| i as f64).unwrap_or(f64::NAN),
+            total.unwrap_or(f64::NAN)
+        ));
+        g *= 2;
+    }
+    table.print();
+    let best = results.iter().filter_map(|r| r.1).fold(f64::INFINITY, f64::min);
+    if let (Some(sync_t), true) = (results.first().and_then(|r| r.1), best.is_finite()) {
+        println!(
+            "sync vs best intermediate: {:.2}x (paper: sync/async up to 2x slower than optimal)",
+            sync_t / best
+        );
+    }
+    support::write_results("fig32_rnn.csv", &csv);
+}

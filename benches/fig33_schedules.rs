@@ -1,0 +1,97 @@
+//! Paper Fig 33 (Appendix F-G): Omnivore's periodic re-optimization vs a
+//! fixed default learning-rate schedule (drop 10x every K iterations).
+//!
+//! Paper's result: the re-optimizing run reaches the same loss ~1.5x
+//! faster because it retunes (mu, eta) when progress stalls rather than
+//! on a fixed clock.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::TrainConfig;
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Series, Table};
+use omnivore::model::ParamSet;
+use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams};
+
+fn main() {
+    support::banner("Fig 33", "auto-optimizer vs default LR schedule");
+    let rt = support::runtime();
+    let cl = support::preset("cpu-l");
+    let arch = rt.manifest().arch("caffenet8").unwrap();
+    let init = ParamSet::init(arch, 0);
+    let total_steps = support::scaled(360);
+    let mut series = vec![];
+
+    // Default schedule: fixed strategy (optimizer's g), eta drops 10x at
+    // 2/3 of the budget (the CaffeNet default schedule, scaled).
+    let he = HeParams::derive(&cl, arch, 32, 0.5);
+    let g = he.smallest_saturating_g(cl.machines - 1);
+    let mut sched_params = support::warm_params(&rt, "caffenet8", &cl, 48);
+    let mut sched_curve = Series::new("default_schedule");
+    let mut t_off = 0.0;
+    let mut sched_final = 0.0f32;
+    for (phase, (eta, steps)) in
+        [(0.02f32, total_steps * 2 / 3), (0.002, total_steps / 3)].iter().enumerate()
+    {
+        let cfg = TrainConfig {
+            arch: "caffenet8".into(),
+            variant: "jnp".into(),
+            cluster: cl.clone(),
+            strategy: omnivore::config::Strategy::Groups(g),
+            hyper: omnivore::config::Hyper { lr: *eta, momentum: 0.6, lambda: 5e-4 },
+            steps: *steps,
+            seed: phase as u64 + 10,
+            ..TrainConfig::default()
+        };
+        let engine = SimTimeEngine::new(&rt, cfg, EngineOptions::default());
+        let (report, p) = engine.run_with_params(sched_params).unwrap();
+        sched_params = p;
+        for r in report.records.iter().step_by(8) {
+            sched_curve.push(t_off + r.vtime, r.loss as f64);
+        }
+        sched_final = report.final_loss(32);
+        t_off += report.virtual_time;
+    }
+    let sched_time = t_off;
+    series.push(sched_curve);
+
+    // Omnivore: Algorithm 1 epochs with retuning between them.
+    let base = TrainConfig {
+        arch: "caffenet8".into(),
+        variant: "jnp".into(),
+        cluster: cl.clone(),
+        seed: 0,
+        ..TrainConfig::default()
+    };
+    let mut trainer = EngineTrainer { rt: &rt, base, opts: EngineOptions::default() };
+    let opt = AutoOptimizer {
+        epochs: 3,
+        epoch_steps: total_steps / 3,
+        probe_steps: 16,
+        warmup_steps: 48,
+        lambda: 5e-4,
+        skip_cold_start: false,
+    };
+    let (trace, _) = opt.run(&mut trainer, init, &he).unwrap();
+    let mut auto_curve = Series::new("omnivore_auto");
+    let mut t_off = 0.0;
+    for rep in &trace.reports {
+        for r in rep.records.iter().step_by(8) {
+            auto_curve.push(t_off + r.vtime, r.loss as f64);
+        }
+        t_off += rep.virtual_time;
+    }
+    series.push(auto_curve);
+    let auto_final = trace.epochs.last().map(|e| e.final_loss).unwrap_or(f32::NAN);
+    let auto_time = t_off;
+
+    let mut table = Table::new(&["policy", "final loss", "virtual time"]);
+    table.row(&["default 10x schedule".into(), format!("{sched_final:.4}"), fmt_secs(sched_time)]);
+    table.row(&["omnivore re-optimizer".into(), format!("{auto_final:.4}"), fmt_secs(auto_time)]);
+    table.print();
+    println!("shape check (paper): the re-optimizing run achieves equal/lower loss in equal/less time.");
+    omnivore::metrics::write_csv(&series, std::path::Path::new("results/fig33_schedules.csv"))
+        .unwrap();
+    println!("[csv] results/fig33_schedules.csv");
+}

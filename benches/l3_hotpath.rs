@@ -1,0 +1,77 @@
+//! L3 coordinator hot-path microbenchmarks (DESIGN.md §Perf): the
+//! coordinator must not be the bottleneck — parameter-server updates,
+//! literal conversions, event-loop overhead, and the fraction of a
+//! training run spent outside XLA execution.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::Hyper;
+use omnivore::coordinator::ParamServer;
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::Table;
+use omnivore::model::ParamSet;
+use omnivore::runtime::to_literal;
+use omnivore::tensor::HostTensor;
+use omnivore::util::bench::{bench, row};
+use omnivore::util::rng::Rng;
+
+fn main() {
+    support::banner("L3 hot path", "coordinator microbenchmarks + XLA share of a real run");
+    let rt = support::runtime();
+    let mut rng = Rng::seed_from_u64(0);
+
+    // 1. Param-server update throughput at caffenet8's conv-model size.
+    let arch = rt.manifest().arch("caffenet8").unwrap();
+    let params = ParamSet::init(arch, 0);
+    let conv: Vec<HostTensor> = params.conv().to_vec();
+    let n_scalars: usize = conv.iter().map(|t| t.len()).sum();
+    let ps = ParamServer::new(conv.clone(), Hyper::default());
+    let grads: Vec<HostTensor> =
+        conv.iter().map(|t| HostTensor::randn(t.shape(), 0.01, &mut rng)).collect();
+    let s = bench("param_server publish (conv model)", 10, 200, || {
+        let v = ps.read().version;
+        ps.publish(&grads, v).unwrap();
+    });
+    println!("{}  [{:.1} M scalars/s]", row(&s), n_scalars as f64 / s.mean_secs / 1e6);
+
+    let s2 = bench("param_server read (snapshot clone)", 10, 200, || {
+        std::hint::black_box(ps.read());
+    });
+    println!("{}", row(&s2));
+
+    // 2. Literal conversion (host -> XLA) for a batch of images.
+    let x = HostTensor::randn(&[32, 32, 32, 3], 1.0, &mut rng);
+    let s3 = bench("to_literal 32x32x32x3 batch", 10, 200, || {
+        std::hint::black_box(to_literal(&x).unwrap());
+    });
+    println!("{}  [{:.2} GB/s]", row(&s3), x.len() as f64 * 4.0 / s3.mean_secs / 1e9);
+
+    // 3. End-to-end share: coordinator vs XLA in a real run.
+    let cfg = support::cfg(
+        "lenet",
+        support::preset("cpu-s"),
+        4,
+        Hyper { lr: 0.03, momentum: 0.6, lambda: 5e-4 },
+        support::scaled(48),
+    );
+    let before = rt.stats();
+    let init = ParamSet::init(rt.manifest().arch("lenet").unwrap(), 0);
+    let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default()).run(init).unwrap();
+    let after = rt.stats();
+    let xla = after.execute_secs - before.execute_secs;
+    let wall = report.wallclock_secs;
+    let coord = wall - xla;
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["run wall time".into(), format!("{wall:.2}s")]);
+    t.row(&["XLA execute time".into(), format!("{xla:.2}s")]);
+    t.row(&["coordinator overhead".into(), format!("{coord:.2}s ({:.1}%)", coord / wall * 100.0)]);
+    t.row(&["iterations".into(), report.records.len().to_string()]);
+    t.print();
+    println!("target (DESIGN.md §Perf): coordinator overhead < 10% of wall time.");
+    let mut csv = String::from("metric,value\n");
+    csv.push_str(&format!("publish_scalars_per_sec,{}\n", n_scalars as f64 / s.mean_secs));
+    csv.push_str(&format!("to_literal_gb_per_sec,{}\n", x.len() as f64 * 4.0 / s3.mean_secs / 1e9));
+    csv.push_str(&format!("coordinator_overhead_frac,{}\n", coord / wall));
+    support::write_results("l3_hotpath.csv", &csv);
+}

@@ -1,0 +1,79 @@
+//! Shared support for the figure-regeneration benches.
+//!
+//! Every `benches/figXX_*.rs` binary reproduces one table/figure of the
+//! paper (see DESIGN.md experiment index): it prints the same rows/series
+//! the paper reports and writes a CSV under `results/`. Absolute numbers
+//! come from this repo's simulated substrate; the reproduction target is
+//! the SHAPE of each result (who wins, crossovers, saturation points).
+
+#![allow(dead_code)]
+
+use omnivore::config::{cluster, ClusterSpec, Hyper, Strategy, TrainConfig};
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::model::ParamSet;
+use omnivore::runtime::Runtime;
+
+/// Global effort scale: OMNIVORE_BENCH_SCALE=0.25 quarters every step
+/// budget (quick smoke), =2 doubles it (higher fidelity).
+pub fn scaled(steps: usize) -> usize {
+    let scale: f64 = std::env::var("OMNIVORE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    ((steps as f64 * scale) as usize).max(8)
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::load("artifacts").expect("run `make artifacts` first")
+}
+
+pub fn preset(name: &str) -> ClusterSpec {
+    cluster::preset(name).unwrap_or_else(|| panic!("unknown preset {name}"))
+}
+
+/// Standard run config used across benches.
+pub fn cfg(arch: &str, cluster: ClusterSpec, g: usize, hyper: Hyper, steps: usize) -> TrainConfig {
+    TrainConfig {
+        arch: arch.into(),
+        variant: "jnp".into(),
+        cluster,
+        strategy: Strategy::Groups(g),
+        hyper,
+        steps,
+        seed: 0,
+        ..TrainConfig::default()
+    }
+}
+
+/// Warm-started parameters: a short synchronous run from cold init (the
+/// paper's tradeoff experiments all start from a common checkpoint).
+pub fn warm_params(rt: &Runtime, arch: &str, cluster: &ClusterSpec, steps: usize) -> ParamSet {
+    let arch_info = rt.manifest().arch(arch).expect("arch in manifest");
+    let c = cfg(
+        arch,
+        cluster.clone(),
+        1,
+        Hyper { lr: 0.02, momentum: 0.9, lambda: 5e-4 },
+        steps,
+    );
+    let engine = SimTimeEngine::new(rt, c, EngineOptions::default());
+    engine
+        .run_with_params(ParamSet::init(arch_info, 0))
+        .expect("warmup run")
+        .1
+}
+
+/// Write a results CSV (creating results/).
+pub fn write_results(name: &str, contents: &str) {
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let path = format!("results/{name}");
+    std::fs::write(&path, contents).expect("write results");
+    println!("[csv] {path}");
+}
+
+/// Banner tying the binary to the paper artifact it regenerates.
+pub fn banner(id: &str, what: &str) {
+    println!("================================================================");
+    println!("{id} — {what}");
+    println!("================================================================");
+}

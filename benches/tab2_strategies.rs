@@ -1,0 +1,92 @@
+//! Paper Table II / Appendix D-B3: execution-strategy families compared
+//! on one substrate — parameter server (sync / groups / async, Omnivore's
+//! focus) vs model averaging (SparkNet/DL4J) across its tau knob.
+//!
+//! Paper: "the choice of tau is similar to the tradeoff of multiple
+//! groups"; parameter-server with tuned momentum dominates.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::Hyper;
+use omnivore::engine::{AveragingEngine, EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::{se_model, HeParams};
+
+fn main() {
+    support::banner("Table II", "parameter server vs model averaging (CPU-S, mnist-sim)");
+    let rt = support::runtime();
+    let cl = support::preset("cpu-s");
+    let arch = rt.manifest().arch("lenet").unwrap();
+    let he = HeParams::derive(&cl, arch, 32, 0.5);
+    let target = 0.9f32;
+    let steps = support::scaled(200);
+    let warm = support::warm_params(&rt, "lenet", &cl, 20);
+
+    let mut table = Table::new(&["strategy", "knob", "iters->acc", "time->acc", "final acc"]);
+    let mut csv = String::from("strategy,knob,iters,time,final_acc\n");
+
+    // Parameter server at the optimizer's pick.
+    for g in [1usize, 4] {
+        let mu = se_model::compensated_momentum(0.9, g) as f32;
+        let cfg = support::cfg(
+            "lenet",
+            cl.clone(),
+            g,
+            Hyper { lr: 0.03, momentum: mu, lambda: 5e-4 },
+            steps,
+        );
+        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
+            .run(warm.clone())
+            .unwrap();
+        let iters = report.iters_to_accuracy(target, 32);
+        let t = report.time_to_accuracy(target, 32);
+        table.row(&[
+            "param server".into(),
+            format!("g={g}"),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            t.map(fmt_secs).unwrap_or_else(|| "-".into()),
+            format!("{:.3}", report.final_acc(32)),
+        ]);
+        csv.push_str(&format!(
+            "param_server,g={g},{},{},{}\n",
+            iters.map(|i| i as f64).unwrap_or(f64::NAN),
+            t.unwrap_or(f64::NAN),
+            report.final_acc(32)
+        ));
+    }
+
+    // Model averaging across tau.
+    for tau in [1usize, 4, 16] {
+        let cfg = support::cfg(
+            "lenet",
+            cl.clone(),
+            4,
+            Hyper { lr: 0.03, momentum: 0.6, lambda: 5e-4 },
+            steps,
+        );
+        let engine = AveragingEngine::new(&rt, cfg, tau, he);
+        let report = engine.run(warm.clone()).unwrap();
+        let iters = report.iters_to_accuracy(target, 32);
+        let t = report.time_to_accuracy(target, 32);
+        table.row(&[
+            "model averaging".into(),
+            format!("tau={tau}"),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            t.map(fmt_secs).unwrap_or_else(|| "-".into()),
+            format!("{:.3}", report.final_acc(32)),
+        ]);
+        csv.push_str(&format!(
+            "model_averaging,tau={tau},{},{},{}\n",
+            iters.map(|i| i as f64).unwrap_or(f64::NAN),
+            t.unwrap_or(f64::NAN),
+            report.final_acc(32)
+        ));
+    }
+    table.print();
+    println!(
+        "shape check (paper App D-B3): small tau ~ sync parameter server; large\n\
+         tau pays replica drift; tuned parameter-server groups dominate."
+    );
+    support::write_results("tab2_strategies.csv", &csv);
+}

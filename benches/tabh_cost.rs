@@ -1,0 +1,77 @@
+//! Paper Appendix H: total-cost-of-ownership analysis — dollars to reach
+//! target accuracy per cluster, using Fig 9's EC2 prices and each
+//! cluster's Omnivore-optimal strategy.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use omnivore::config::Hyper;
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::optimizer::{se_model, HeParams};
+
+/// Paper Fig 9 $/hour.
+fn price_per_hour(cluster: &str) -> f64 {
+    match cluster {
+        "1xcpu" => 0.84,
+        "2xcpu" => 1.68,
+        "1xgpu" => 0.65,
+        "4xgpu" => 2.60,
+        "cpu-s" => 7.56,
+        "cpu-l" => 27.72,
+        "gpu-s" => 23.40,
+        _ => f64::NAN,
+    }
+}
+
+fn main() {
+    support::banner("Appendix H", "cost to target accuracy per cluster (Fig 9 prices)");
+    let rt = support::runtime();
+    let arch = rt.manifest().arch("caffenet8").unwrap();
+    let target = 0.9f32;
+    let steps = support::scaled(220);
+
+    let mut table =
+        Table::new(&["cluster", "$/hr", "strategy", "time->target", "cost->target"]);
+    let mut csv = String::from("cluster,price_hr,g,time,cost\n");
+    for cname in ["cpu-s", "gpu-s", "cpu-l"] {
+        let cl = support::preset(cname);
+        let n = cl.machines - 1;
+        let he = HeParams::derive(&cl, arch, 32, 0.5);
+        let g = he.smallest_saturating_g(n).min(n);
+        let mu = se_model::compensated_momentum(0.9, g) as f32;
+        let warm = support::warm_params(&rt, "caffenet8", &cl, 48);
+        let cfg = support::cfg(
+            "caffenet8",
+            cl.clone(),
+            g,
+            Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
+            steps,
+        );
+        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
+            .run(warm)
+            .unwrap();
+        let t = report.time_to_accuracy(target, 32);
+        let price = price_per_hour(cname);
+        let cost = t.map(|t| t / 3600.0 * price);
+        table.row(&[
+            cname.into(),
+            format!("${price:.2}"),
+            format!("g={g}"),
+            t.map(fmt_secs).unwrap_or_else(|| "timeout".into()),
+            cost.map(|c| format!("${c:.4}")).unwrap_or_else(|| "-".into()),
+        ]);
+        csv.push_str(&format!(
+            "{cname},{price},{g},{},{}\n",
+            t.unwrap_or(f64::NAN),
+            cost.unwrap_or(f64::NAN)
+        ));
+    }
+    table.print();
+    println!(
+        "shape check (paper Appendix H): faster clusters cost more per hour but\n\
+         can be cheaper per result; the optimizer's strategy choice moves the\n\
+         cost frontier, not just the time frontier."
+    );
+    support::write_results("tabh_cost.csv", &csv);
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, train a small CNN synchronously on
+//! the MNIST-sim dataset, and print the loss curve summary.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use omnivore::config::{cluster, Hyper, Strategy, TrainConfig};
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::fmt_secs;
+use omnivore::model::ParamSet;
+use omnivore::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The runtime loads artifacts/manifest.json and lazily compiles
+    //    the HLO-text artifacts through the PJRT CPU client.
+    let rt = Runtime::load("artifacts")?;
+
+    // 2. Configure a run: LeNet-S on mnist-sim, 9-machine CPU cluster
+    //    (paper Fig 9's CPU-S), fully synchronous.
+    let cfg = TrainConfig {
+        arch: "lenet".into(),
+        variant: "jnp".into(),
+        cluster: cluster::preset("cpu-s").unwrap(),
+        strategy: Strategy::Sync,
+        hyper: Hyper { lr: 0.03, momentum: 0.9, lambda: 5e-4 },
+        steps: 150,
+        seed: 0,
+        ..TrainConfig::default()
+    };
+
+    // 3. Initialize the model and train. The engine advances a virtual
+    //    cluster clock while every gradient runs for real through XLA.
+    let init = ParamSet::init(rt.manifest().arch(&cfg.arch)?, cfg.seed);
+    println!(
+        "training {} ({} params) on {} machines, batch {}...",
+        cfg.arch,
+        init.num_params(),
+        cfg.cluster.machines,
+        cfg.batch
+    );
+    let opts = EngineOptions { eval_every: 50, ..Default::default() };
+    let report = SimTimeEngine::new(&rt, cfg, opts).run(init)?;
+
+    // 4. Inspect the results.
+    for r in report.records.iter().step_by(25) {
+        println!(
+            "  iter {:>4}  vtime {:>8}  loss {:.4}  acc {:.2}",
+            r.seq,
+            fmt_secs(r.vtime),
+            r.loss,
+            r.acc
+        );
+    }
+    println!(
+        "final: loss {:.4}, train acc {:.3}, eval acc {:.3} | {} virtual, {} wall",
+        report.final_loss(32),
+        report.final_acc(32),
+        report.evals.last().map(|e| e.acc).unwrap_or(0.0),
+        fmt_secs(report.virtual_time),
+        fmt_secs(report.wallclock_secs),
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! The paper's Fig 7 experiment as a runnable example: fix the cluster,
+//! sweep the number of compute groups g, tune momentum per g (Theorem 1
+//! compensation), and report hardware efficiency (time/iter), statistical
+//! efficiency (iters to target accuracy), and their product (total time).
+//!
+//! ```bash
+//! cargo run --release --example tradeoff_sweep [-- --cluster cpu-l --steps 200]
+//! ```
+
+use omnivore::config::{cluster, Hyper, Strategy, TrainConfig};
+use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::metrics::{fmt_secs, write_csv, Series, Table};
+use omnivore::model::ParamSet;
+use omnivore::optimizer::se_model;
+use omnivore::runtime::Runtime;
+use omnivore::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cluster_name = args.str("cluster", "cpu-l");
+    let arch = args.str("arch", "caffenet8");
+    let steps = args.get("steps", 200usize)?;
+    let target = args.get("target-acc", 0.9f32)?;
+    args.finish()?;
+
+    let rt = Runtime::load("artifacts")?;
+    let cl = cluster::preset(&cluster_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster {cluster_name}"))?;
+    let n = cl.machines - 1;
+    let arch_info = rt.manifest().arch(&arch)?;
+
+    // Warm start (the paper measures the tradeoff from a common
+    // checkpoint after cold start, §V-B).
+    let warm = {
+        let cfg = TrainConfig {
+            arch: arch.clone(),
+            variant: "jnp".into(),
+            cluster: cl.clone(),
+            strategy: Strategy::Sync,
+            hyper: Hyper { lr: 0.01, momentum: 0.9, lambda: 5e-4 },
+            steps: 48,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+        let engine = SimTimeEngine::new(&rt, cfg, EngineOptions::default());
+        engine.run_with_params(ParamSet::init(arch_info, 0))?.1
+    };
+
+    let mut table = Table::new(&[
+        "g", "k", "mu*", "HE time/iter", "SE iters->acc", "total time->acc", "staleness",
+    ]);
+    let mut he_series = Series::new("hardware_efficiency");
+    let mut se_series = Series::new("statistical_efficiency");
+    let mut total_series = Series::new("total_time");
+    let mut g = 1;
+    while g <= n {
+        let mu = se_model::compensated_momentum(0.9, g) as f32;
+        let cfg = TrainConfig {
+            arch: arch.clone(),
+            variant: "jnp".into(),
+            cluster: cl.clone(),
+            strategy: Strategy::Groups(g),
+            hyper: Hyper { lr: 0.01, momentum: mu, lambda: 5e-4 },
+            steps,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+        let engine = SimTimeEngine::new(&rt, cfg, EngineOptions::default());
+        let report = engine.run(warm.clone())?;
+        let he = report.mean_iter_time();
+        let se = report.iters_to_accuracy(target, 32);
+        let total = report.time_to_accuracy(target, 32);
+        he_series.push(g as f64, he);
+        if let Some(i) = se {
+            se_series.push(g as f64, i as f64);
+        }
+        if let Some(t) = total {
+            total_series.push(g as f64, t);
+        }
+        table.row(&[
+            g.to_string(),
+            (n / g).to_string(),
+            format!("{mu:.2}"),
+            fmt_secs(he),
+            se.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            total.map(fmt_secs).unwrap_or_else(|| "-".into()),
+            format!("{:.2}", report.conv_staleness.mean()),
+        ]);
+        g *= 2;
+    }
+    table.print();
+    write_csv(
+        &[he_series, se_series, total_series],
+        std::path::Path::new("results/tradeoff_sweep.csv"),
+    )?;
+    println!("series written to results/tradeoff_sweep.csv");
+    Ok(())
+}

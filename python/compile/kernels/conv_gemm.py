@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: convolution by lowering (im2col) + batched GEMM.
+
+This is the paper's single-device contribution (§III, Fig 2/4): lower all
+`b_p` images of a batch into one big D-hat matrix, then run ONE large GEMM
+over it instead of `b` small per-image GEMMs. `b_p` (1 <= b_p <= b) trades
+memory footprint for throughput:
+
+  * b_p = b  — the paper's CPU strategy: maximum tile utilization, D-hat
+    is b x larger (Fig 4c memory curve).
+  * b_p = 1  — the paper's GPU/Caffe strategy: serial per-image lowering,
+    minimum footprint, poor utilization for small m*m (Fig 4b).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of OpenBLAS
+cache blocking, the GEMM is a Pallas grid over
+    (batch-chunks, row-tiles, col-tiles, k-tiles)
+where the leading grid dimension is the b_p chunk — one grid step per
+"GEMM call" in the paper's terms — and BlockSpecs express the HBM->VMEM
+schedule the paper expressed with thread/core partitioning.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .gemm import pick_tile
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _conv_mm_kernel(d_ref, k_ref, o_ref):
+    """One (chunk, i, j, kk) step: accumulate a [bm,bk]@[bk,bn] product."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        d_ref[...], k_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("b_p", "bm", "bn", "bk"))
+def conv2d_same(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    b_p: int = 0,
+    bm: int = 256,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """SAME stride-1 conv via lowering + batched Pallas GEMM.
+
+    x [b,h,w,cin], w [kh,kw,cin,cout] -> [b,h,w,cout].
+    b_p: images lowered per GEMM chunk; 0 means b_p = b (paper's CPU pick).
+    Result is b_p-invariant (tested); only the schedule changes.
+    """
+    b, h, wid, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2
+    if b_p <= 0 or b_p > b:
+        b_p = b
+    assert b % b_p == 0, f"b_p={b_p} must divide b={b}"
+
+    # Lowering phase: D-hat [b, h*w, kh*kw*cin]; K-hat [kh*kw*cin, cout].
+    dhat = ref.im2col_ref(x, kh, kw).reshape(b, h * wid, kh * kw * cin)
+    khat = w.reshape(kh * kw * cin, cout)
+
+    # One GEMM chunk covers b_p images => m_p rows.
+    n_chunks = b // b_p
+    m_p = b_p * h * wid
+    kk = kh * kw * cin
+    dhat = dhat.reshape(n_chunks, m_p, kk)
+
+    bm = pick_tile(m_p, bm)
+    bn = pick_tile(cout, bn)
+    bk = pick_tile(kk, bk)
+    mp, kp, np_ = _ceil_to(m_p, bm), _ceil_to(kk, bk), _ceil_to(cout, bn)
+    dhat = jnp.pad(dhat, ((0, 0), (0, mp - m_p), (0, kp - kk)))
+    khat = jnp.pad(khat, ((0, kp - kk), (0, np_ - cout)))
+
+    grid = (n_chunks, mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _conv_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda c, i, j, kk_: (c, i, kk_)),
+            pl.BlockSpec((bk, bn), lambda c, i, j, kk_: (kk_, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda c, i, j, kk_: (c, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, mp, np_), jnp.float32),
+        interpret=True,
+    )(dhat, khat)
+
+    out = out[:, :m_p, :cout].reshape(b, h, wid, cout)
+    return out
+
+
+def lowered_bytes(b_p: int, h: int, w: int, kh: int, kw: int, cin: int) -> int:
+    """Memory footprint of the lowered D-hat for one GEMM chunk (paper
+    Fig 4c: linear in b_p). f32."""
+    return 4 * b_p * h * w * kh * kw * cin
+
+
+def conv_gflops(b: int, h: int, w: int, kh: int, kw: int, cin: int, cout: int) -> float:
+    """Total GEMM FLOPs for the conv (2*M*N*K), in GFLOP."""
+    return 2.0 * (b * h * w) * cout * (kh * kw * cin) / 1e9

@@ -1,0 +1,96 @@
+"""L1 Pallas tiled GEMM — the FC-layer hot kernel.
+
+The paper's FC phase is a dense matrix multiply ([paper §II-C]); on the
+TPU-shaped Pallas model we tile for VMEM with MXU-friendly blocks instead
+of the paper's OpenBLAS cache blocking (see DESIGN.md §Hardware-Adaptation).
+
+Accumulation runs over the innermost grid dimension (k) so each (i, j)
+output tile stays resident in VMEM across the k loop — the Pallas analogue
+of the BLAS "C-tile stationary" schedule.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles. 128x128 matches the MXU systolic array;
+# bk=512 keeps the A/B stripes in a few hundred KB of VMEM.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_tile(n: int, max_tile: int) -> int:
+    """Largest 8-aligned tile <= max_tile that splits `n` evenly-ish.
+
+    Naive `min(max_tile, n)` pads the last tile: e.g. K=800 with
+    max_tile=512 -> 2 tiles of 512 = 21.9% wasted MACs. Splitting into
+    ceil(n/max_tile) near-equal tiles (800 -> 2x400) eliminates the
+    padding waste (EXPERIMENTS.md §Perf L1)."""
+    if n <= max_tile:
+        return _ceil_to(n, 8)
+    n_tiles = -(-n // max_tile)
+    return _ceil_to(-(-n // n_tiles), 8)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """a [m,k] @ b [k,n] -> [m,n] via a VMEM-tiled Pallas kernel.
+
+    Inputs are zero-padded up to tile multiples (zeros contribute nothing
+    to the accumulation) and the result is sliced back, so any shape works.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = pick_tile(m, bm)
+    bn = pick_tile(n, bn)
+    bk = pick_tile(k, bk)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp_ = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp_)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated per-step VMEM residency for DESIGN.md §Perf: one A tile,
+    one B tile, one accumulator tile, all f32."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

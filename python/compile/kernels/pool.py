@@ -1,0 +1,34 @@
+"""L1 Pallas kernel: 2x2 stride-2 max pooling (paper's down-sampling layer).
+
+Grid over the batch: one image (all channels) per grid step keeps the
+block comfortably inside a VMEM budget for the model sizes in this repo
+(32*32*64*4B = 256 KB) while giving the scheduler b-way parallelism —
+the Pallas analogue of the paper's per-image data parallelism for
+non-GEMM kernels (Appendix C-B2).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [1, h, w, c]
+    _, h, w, c = x.shape
+    x = x.reshape(h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(1, 3))[None]
+
+
+@jax.jit
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """x [b,h,w,c] (h, w even) -> [b,h/2,w/2,c]."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims: {h}x{w}"
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(x)

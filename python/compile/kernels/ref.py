@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+Each function here is the textbook definition of the op, written with
+stock jax.numpy / lax primitives only. pytest (python/tests/) asserts the
+Pallas kernels match these within tolerance over hypothesis-swept shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain dense GEMM: a [m,k] @ b [k,n] -> [m,n]."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def conv2d_same_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME-padded stride-1 conv. x [b,h,w,cin], w [kh,kw,cin,cout] (NHWC/HWIO)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def im2col_ref(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Lowering step (paper Fig 2): x [b,h,w,c] -> D-hat [b, h, w, kh*kw*c].
+
+    SAME padding, stride 1. Column order matches conv2d_same_ref's HWIO
+    weight reshape: (kh, kw, cin) row-major.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [
+        xp[:, i : i + h, j : j + w, :] for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool. x [b,h,w,c], h and w even."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array):
+    """Mean softmax cross-entropy + grad wrt logits + accuracy.
+
+    logits [b, n], labels int32 [b]. Returns (loss scalar, grad [b,n], acc).
+    """
+    b, n = logits.shape
+    zmax = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - jax.lax.stop_gradient(zmax)
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    logp = z - lse
+    onehot = jax.nn.one_hot(labels, n, dtype=logits.dtype)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    grad = (jnp.exp(logp) - onehot) / b
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, grad, acc
+
+
+def relu_ref(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: fused softmax + cross-entropy loss + gradient + accuracy.
+
+The final FC-phase op (paper §II-B). Fusing loss and gradient in one
+kernel avoids materializing probabilities twice — the whole [b, ncls]
+block lives in VMEM (ncls <= 10 here, so a few KB).
+
+Outputs: per-example loss [b], grad wrt logits [b, ncls], per-example
+correctness [b] (mean-reduced to loss/acc scalars by the L2 caller, which
+keeps the kernel shape-polymorphic in b).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(z_ref, y_ref, loss_ref, grad_ref, correct_ref):
+    z = z_ref[...]  # [b, n] logits
+    y = y_ref[...]  # [b] int32 labels
+    b, n = z.shape
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    zs = z - zmax
+    ez = jnp.exp(zs)
+    sez = jnp.sum(ez, axis=-1, keepdims=True)
+    logp = zs - jnp.log(sez)
+    cls = jax.lax.broadcasted_iota(jnp.int32, (b, n), 1)
+    onehot = (cls == y[:, None]).astype(jnp.float32)
+    loss_ref[...] = -jnp.sum(onehot * logp, axis=-1)
+    grad_ref[...] = ez / sez - onehot
+    pred = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    correct_ref[...] = (pred == y).astype(jnp.float32)
+
+
+@jax.jit
+def softmax_xent(logits: jax.Array, labels: jax.Array):
+    """logits [b,n] f32, labels [b] int32 ->
+    (loss scalar, grad [b,n] (already /b), acc scalar)."""
+    b, n = logits.shape
+    loss_i, grad, correct = pl.pallas_call(
+        _xent_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i: (0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b, n), lambda i: (0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, labels)
+    return jnp.mean(loss_i), grad / b, jnp.mean(correct)

@@ -1,0 +1,257 @@
+"""L2 — the paper's two-phase CNN (conv phase / FC phase), fwd + manual bwd.
+
+The paper abstracts every CNN into a **conv phase** (large data, small
+model) followed by an **FC phase** (small data, large model) — Fig 1 /
+§II-C. Omnivore's distributed architecture splits exactly along this
+boundary (conv compute groups vs. the merged FC server), so the L2 compute
+graph is lowered as *separate* artifacts per phase:
+
+  conv_fwd   : (x, conv params)            -> flattened activations
+  conv_bwd   : (x, conv params, g_act)     -> conv param grads (recompute)
+  fc_step    : (act, labels, fc params)    -> loss, acc, g_act, fc grads
+  full_step  : (x, labels, all params)     -> loss, acc, all grads
+  infer      : (x, all params)             -> logits
+
+The backward pass is written out explicitly (chain rule, eq. (2) of the
+paper) in terms of the same L1 kernels as the forward pass — conv-by-
+lowering for the weight gradient is itself one big GEMM over D-hat^T — so
+both kernel variants ("pallas" and pure-"jnp") share one code path and the
+AOT artifacts never rely on AD through `pallas_call`. Manual gradients are
+verified against `jax.grad` of a pure-jnp loss in python/tests/.
+
+SGD itself (momentum, eq. (3)-(4)) lives in the Rust parameter server —
+the artifacts return raw gradients.
+"""
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_gemm, gemm, pool, ref, softmax_xent
+
+
+@dataclass(frozen=True)
+class Kernels:
+    """Dispatch table selecting the L1 implementation of each hot op."""
+
+    name: str
+    conv2d: Callable  # (x, w) -> y, SAME stride-1
+    matmul: Callable  # (a, b) -> a @ b
+    maxpool: Callable  # (x) -> 2x2/2 max pool
+    xent: Callable  # (logits, labels) -> (loss, grad/b, acc)
+
+
+PALLAS = Kernels(
+    name="pallas",
+    conv2d=conv_gemm.conv2d_same,
+    matmul=gemm.matmul,
+    maxpool=pool.maxpool2x2,
+    xent=softmax_xent.softmax_xent,
+)
+
+JNP = Kernels(
+    name="jnp",
+    conv2d=ref.conv2d_same_ref,
+    matmul=ref.matmul_ref,
+    maxpool=ref.maxpool2x2_ref,
+    xent=ref.softmax_xent_ref,
+)
+
+VARIANTS = {"pallas": PALLAS, "jnp": JNP}
+
+
+@dataclass(frozen=True)
+class Arch:
+    """CaffeNet-S architecture config (paper-scale ratios, repo-scale dims).
+
+    conv: [conv kxk cin->c1, relu, pool2] [conv kxk c1->c2, relu, pool2]
+    fc:   [fc feat->f1, relu] [fc f1->ncls, softmax-xent]
+    """
+
+    name: str
+    h: int
+    w: int
+    cin: int
+    c1: int
+    c2: int
+    f1: int
+    ncls: int
+    k: int = 5
+
+    @property
+    def feat(self) -> int:
+        return (self.h // 4) * (self.w // 4) * self.c2
+
+    def conv_param_shapes(self):
+        k = self.k
+        return [
+            ("wc1", (k, k, self.cin, self.c1)),
+            ("bc1", (self.c1,)),
+            ("wc2", (k, k, self.c1, self.c2)),
+            ("bc2", (self.c2,)),
+        ]
+
+    def fc_param_shapes(self):
+        return [
+            ("wf1", (self.feat, self.f1)),
+            ("bf1", (self.f1,)),
+            ("wf2", (self.f1, self.ncls)),
+            ("bf2", (self.ncls,)),
+        ]
+
+    def param_shapes(self):
+        return self.conv_param_shapes() + self.fc_param_shapes()
+
+    def conv_params_bytes(self) -> int:
+        return 4 * sum(
+            int(jnp.prod(jnp.array(s))) for _, s in self.conv_param_shapes()
+        )
+
+    def fc_params_bytes(self) -> int:
+        return 4 * sum(
+            int(jnp.prod(jnp.array(s))) for _, s in self.fc_param_shapes()
+        )
+
+
+# The three dataset/model pairs of the paper's study (Fig 8/9), scaled per
+# DESIGN.md §Substitutions. conv FLOPs >> fc FLOPs and fc params >> conv
+# params, preserving the paper's two-phase ratios.
+ARCHS = {
+    "caffenet8": Arch("caffenet8", 32, 32, 3, 32, 64, 256, 8),
+    "cifar": Arch("cifar", 32, 32, 3, 32, 64, 256, 10),
+    "lenet": Arch("lenet", 28, 28, 1, 16, 32, 128, 10),
+}
+
+
+def _flip_w(w: jax.Array) -> jax.Array:
+    """HWIO kernel -> 180-degree-rotated, in/out-swapped kernel for dx."""
+    return jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)
+
+
+def _conv_wgrad(K: Kernels, x: jax.Array, g: jax.Array, k: int) -> jax.Array:
+    """dL/dw for SAME stride-1 conv as one GEMM: D-hat^T @ g-hat.
+
+    This is the paper's lowering insight applied to the backward pass —
+    the weight gradient is D-hat [b*h*w, k*k*cin]^T times the output grad
+    [b*h*w, cout], a single large GEMM.
+    """
+    b, h, w, cin = x.shape
+    cout = g.shape[-1]
+    dhat = ref.im2col_ref(x, k, k).reshape(b * h * w, k * k * cin)
+    ghat = g.reshape(b * h * w, cout)
+    gw = K.matmul(dhat.T, ghat)
+    return gw.reshape(k, k, cin, cout)
+
+
+def _maxpool_bwd(x: jax.Array, y: jax.Array, g: jax.Array) -> jax.Array:
+    """Route pooled grads to argmax positions (ties measure-zero for
+    continuous activations; routing to all ties is the standard fallback)."""
+    yu = jnp.repeat(jnp.repeat(y, 2, axis=1), 2, axis=2)
+    gu = jnp.repeat(jnp.repeat(g, 2, axis=1), 2, axis=2)
+    return gu * (x == yu).astype(x.dtype)
+
+
+def _conv_phase(K: Kernels, arch: Arch, x, wc1, bc1, wc2, bc2):
+    """Forward conv phase keeping intermediates for the backward pass."""
+    z1 = K.conv2d(x, wc1) + bc1
+    a1 = jnp.maximum(z1, 0.0)
+    p1 = K.maxpool(a1)
+    z2 = K.conv2d(p1, wc2) + bc2
+    a2 = jnp.maximum(z2, 0.0)
+    p2 = K.maxpool(a2)
+    act = p2.reshape(x.shape[0], arch.feat)
+    return act, (z1, a1, p1, z2, a2, p2)
+
+
+def conv_fwd(K: Kernels, arch: Arch, x, wc1, bc1, wc2, bc2):
+    act, _ = _conv_phase(K, arch, x, wc1, bc1, wc2, bc2)
+    return (act,)
+
+
+def conv_bwd(K: Kernels, arch: Arch, x, wc1, bc1, wc2, bc2, g_act):
+    """Recompute-vjp conv backward: recompute fwd intermediates, then run
+    the chain rule (paper eq. (2)) back through pool/relu/conv twice.
+    Returns (gwc1, gbc1, gwc2, gbc2)."""
+    b = x.shape[0]
+    _, (z1, a1, p1, z2, a2, p2) = _conv_phase(K, arch, x, wc1, bc1, wc2, bc2)
+    g_p2 = g_act.reshape(p2.shape)
+    g_a2 = _maxpool_bwd(a2, p2, g_p2)
+    g_z2 = g_a2 * (z2 > 0.0).astype(jnp.float32)
+    gwc2 = _conv_wgrad(K, p1, g_z2, arch.k)
+    gbc2 = jnp.sum(g_z2, axis=(0, 1, 2))
+    g_p1 = K.conv2d(g_z2, _flip_w(wc2))
+    g_a1 = _maxpool_bwd(a1, p1, g_p1)
+    g_z1 = g_a1 * (z1 > 0.0).astype(jnp.float32)
+    gwc1 = _conv_wgrad(K, x, g_z1, arch.k)
+    gbc1 = jnp.sum(g_z1, axis=(0, 1, 2))
+    return (gwc1, gbc1, gwc2, gbc2)
+
+
+def _fc_phase(K: Kernels, act, wf1, bf1, wf2, bf2):
+    z1 = K.matmul(act, wf1) + bf1
+    h = jnp.maximum(z1, 0.0)
+    logits = K.matmul(h, wf2) + bf2
+    return logits, (z1, h)
+
+
+def fc_step(K: Kernels, arch: Arch, act, labels, wf1, bf1, wf2, bf2):
+    """FC phase forward + backward + loss, one artifact (the merged FC
+    server's unit of work). Returns
+    (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2)."""
+    logits, (z1, h) = _fc_phase(K, act, wf1, bf1, wf2, bf2)
+    loss, g_logits, acc = K.xent(logits, labels)
+    gwf2 = K.matmul(h.T, g_logits)
+    gbf2 = jnp.sum(g_logits, axis=0)
+    g_h = K.matmul(g_logits, wf2.T)
+    g_z1 = g_h * (z1 > 0.0).astype(jnp.float32)
+    gwf1 = K.matmul(act.T, g_z1)
+    gbf1 = jnp.sum(g_z1, axis=0)
+    g_act = K.matmul(g_z1, wf1.T)
+    return (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2)
+
+
+def full_step(K: Kernels, arch: Arch, x, labels, *params):
+    """Single-device iteration: whole fwd+bwd in one artifact.
+    params = (wc1, bc1, wc2, bc2, wf1, bf1, wf2, bf2). Returns
+    (loss, acc, gwc1, gbc1, gwc2, gbc2, gwf1, gbf1, gwf2, gbf2)."""
+    wc1, bc1, wc2, bc2, wf1, bf1, wf2, bf2 = params
+    (act,) = conv_fwd(K, arch, x, wc1, bc1, wc2, bc2)
+    loss, acc, g_act, gwf1, gbf1, gwf2, gbf2 = fc_step(
+        K, arch, act, labels, wf1, bf1, wf2, bf2
+    )
+    gwc1, gbc1, gwc2, gbc2 = conv_bwd(
+        K, arch, x, wc1, bc1, wc2, bc2, g_act
+    )
+    return (loss, acc, gwc1, gbc1, gwc2, gbc2, gwf1, gbf1, gwf2, gbf2)
+
+
+def infer(K: Kernels, arch: Arch, x, *params):
+    """Logits only (eval path)."""
+    wc1, bc1, wc2, bc2, wf1, bf1, wf2, bf2 = params
+    (act,) = conv_fwd(K, arch, x, wc1, bc1, wc2, bc2)
+    logits, _ = _fc_phase(K, act, wf1, bf1, wf2, bf2)
+    return (logits,)
+
+
+INIT_STD = 0.05
+
+
+def init_params(arch: Arch, seed: int = 0):
+    """Gaussian(0, INIT_STD) weights, zero biases.
+
+    The paper uses std 0.01 (Appendix F-B) for full-size CaffeNet; at this
+    repo's scaled-down dimensions that under-scales activations and
+    stretches the cold-start plateau ~5x. 0.05 approximates the He
+    fan-in scaling for our layer sizes while keeping the paper's
+    Gaussian-init protocol. Must match rust ParamSet::init."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in arch.param_shapes():
+        if name.startswith("w"):
+            key, sub = jax.random.split(key)
+            out.append(INIT_STD * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return out

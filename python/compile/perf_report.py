@@ -1,0 +1,137 @@
+"""L1 performance report: VMEM footprint + MXU-utilization *estimates*
+for every Pallas GEMM in the model, per DESIGN.md §Perf.
+
+interpret=True wallclock is NOT a TPU proxy, so the L1 optimization
+target is structural: tiles fit VMEM (~16 MiB budget), MXU-aligned
+(multiples of 128 where the problem allows), and minimal padding waste.
+
+Usage: python -m compile.perf_report [--arch caffenet8] [--batch 32]
+"""
+
+import argparse
+from dataclasses import dataclass
+
+from . import model
+from .kernels.gemm import pick_tile
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes, v4-class core
+MXU = 128
+
+
+def _ceil_to(x, m):
+    return -(-x // m) * m
+
+
+@dataclass
+class GemmPerf:
+    name: str
+    m: int
+    n: int
+    k: int
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def vmem_bytes(self) -> int:
+        # A-tile + B-tile + accumulator, f32.
+        return 4 * (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of MACs wasted on zero padding."""
+        useful = self.m * self.n * self.k
+        padded = (
+            _ceil_to(self.m, self.bm)
+            * _ceil_to(self.n, self.bn)
+            * _ceil_to(self.k, self.bk)
+        )
+        return 1.0 - useful / padded
+
+    @property
+    def mxu_alignment(self) -> float:
+        """Fraction of each MXU pass that is occupied: tiles smaller than
+        128 in a dimension leave systolic rows/cols idle."""
+        fm = min(self.bm, MXU) / MXU
+        fn = min(self.bn, MXU) / MXU
+        # K streams through the MXU, no occupancy penalty.
+        return fm * fn
+
+    @property
+    def mxu_utilization_estimate(self) -> float:
+        return (1.0 - self.padding_waste) * self.mxu_alignment
+
+    def row(self):
+        return (
+            f"{self.name:<26} M={self.m:<6} N={self.n:<5} K={self.k:<6} "
+            f"tiles=({self.bm},{self.bn},{self.bk}) "
+            f"vmem={self.vmem_bytes / 1024:>7.0f} KiB "
+            f"waste={self.padding_waste * 100:>5.1f}% "
+            f"mxu~{self.mxu_utilization_estimate * 100:>5.1f}%"
+        )
+
+
+def gemms_for(arch: model.Arch, batch: int, b_p: int = 0):
+    """Every GEMM the model's forward+backward runs, with tile choices."""
+    if b_p <= 0:
+        b_p = batch
+    out = []
+    h, w = arch.h, arch.w
+    k2 = arch.k * arch.k
+    layers = [
+        ("conv1", h * w, arch.c1, k2 * arch.cin),
+        ("conv2", (h // 2) * (w // 2), arch.c2, k2 * arch.c1),
+    ]
+    for name, hw, cout, kk in layers:
+        m_p = b_p * hw
+        out.append(
+            GemmPerf(f"{name} fwd (b_p={b_p})", m_p, cout, kk,
+                     pick_tile(m_p, 256), pick_tile(cout, 128), pick_tile(kk, 512))
+        )
+        # weight grad: D-hat^T @ g  => [kk, b*hw] x [b*hw, cout]
+        m_w = kk
+        k_w = batch * hw
+        out.append(
+            GemmPerf(f"{name} wgrad", m_w, cout, k_w,
+                     pick_tile(m_w, 128), pick_tile(cout, 128), pick_tile(k_w, 512))
+        )
+    fcs = [("fc1", arch.feat, arch.f1), ("fc2", arch.f1, arch.ncls)]
+    for name, fin, fout in fcs:
+        out.append(
+            GemmPerf(f"{name} fwd", batch, fout, fin,
+                     pick_tile(batch, 128), pick_tile(fout, 128), pick_tile(fin, 512))
+        )
+        out.append(
+            GemmPerf(f"{name} wgrad", fin, fout, batch,
+                     pick_tile(fin, 128), pick_tile(fout, 128), pick_tile(batch, 512))
+        )
+    return out
+
+
+def report(arch_name: str, batch: int):
+    arch = model.ARCHS[arch_name]
+    print(f"== {arch_name} (batch {batch}) — L1 GEMM perf estimates ==")
+    worst_vmem = 0
+    for bp in [1, batch]:
+        print(f"-- b_p = {bp} --")
+        for g in gemms_for(arch, batch, bp):
+            print("  " + g.row())
+            worst_vmem = max(worst_vmem, g.vmem_bytes)
+            assert g.vmem_bytes <= VMEM_BUDGET, f"{g.name} exceeds VMEM budget"
+    print(
+        f"max per-step VMEM residency: {worst_vmem / 1024:.0f} KiB "
+        f"(budget {VMEM_BUDGET // 1024} KiB) — double-buffering headroom "
+        f"{VMEM_BUDGET / worst_vmem:.1f}x"
+    )
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="caffenet8")
+    p.add_argument("--batch", type=int, default=32)
+    a = p.parse_args()
+    report(a.arch, a.batch)
+
+
+if __name__ == "__main__":
+    main()

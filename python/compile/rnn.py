@@ -1,0 +1,155 @@
+"""L2 — recurrent model (paper Appendix F-F / Fig 32: RNN/LSTM results).
+
+The paper's observation: the conv/FC two-phase abstraction and the whole
+asynchrony tradeoff carry over to recurrent models. We express a vanilla
+tanh RNN sequence classifier in exactly the two-phase interface the
+coordinator already speaks:
+
+  * "conv phase"  -> the recurrent encoder (data-heavy, small model):
+        h_{t+1} = tanh(x_t Wx + h_t Wh + b),  act = h_T
+  * "FC phase"    -> the classifier head (identical structure to the CNN
+        FC phase: fc1 + relu + fc2 + softmax-xent)
+
+so the Rust runtime trains RNNs with zero coordinator changes — same
+artifact kinds (conv_fwd / conv_bwd / fc_step / full_step / infer), same
+parameter-server split, same optimizer. BPTT is written out manually
+(like the CNN's backward) in terms of the L1 GEMM kernel.
+
+Input layout: x [b, T, 1, F] — sequences ride in the image container
+(h = T timesteps, w = 1, c = F features), matching the paper's
+Shakespeare corpus entry "25 x 1 x 128" in Fig 8.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .model import Kernels, VARIANTS  # noqa: F401  (re-exported for aot)
+
+
+@dataclass(frozen=True)
+class RnnArch:
+    """Two-phase RNN architecture."""
+
+    name: str
+    t: int  # sequence length
+    f: int  # features per step
+    hidden: int
+    f1: int
+    ncls: int
+
+    @property
+    def feat(self) -> int:
+        return self.hidden
+
+    def conv_param_shapes(self):
+        # Recurrent encoder = the "conv phase" (small model, big data).
+        return [
+            ("wx", (self.f, self.hidden)),
+            ("wh", (self.hidden, self.hidden)),
+            ("bh", (self.hidden,)),
+        ]
+
+    def fc_param_shapes(self):
+        return [
+            ("wf1", (self.hidden, self.f1)),
+            ("bf1", (self.f1,)),
+            ("wf2", (self.f1, self.ncls)),
+            ("bf2", (self.ncls,)),
+        ]
+
+    def param_shapes(self):
+        return self.conv_param_shapes() + self.fc_param_shapes()
+
+    def conv_params_bytes(self) -> int:
+        return 4 * (self.f * self.hidden + self.hidden * self.hidden + self.hidden)
+
+    def fc_params_bytes(self) -> int:
+        return 4 * (self.hidden * self.f1 + self.f1 + self.f1 * self.ncls + self.ncls)
+
+
+# Shakespeare-sim (paper Fig 8: 162K samples of 25x1x128), scaled.
+RNN_ARCHS = {
+    "rnn": RnnArch("rnn", t=16, f=32, hidden=96, f1=256, ncls=8),
+}
+
+
+def _steps(K: Kernels, arch: RnnArch, x, wx, wh, bh):
+    """Forward keeping every hidden state for BPTT. x [b,T,1,F]."""
+    b = x.shape[0]
+    xs = x.reshape(b, arch.t, arch.f)
+    h = jnp.zeros((b, arch.hidden), jnp.float32)
+    hs = [h]
+    for t in range(arch.t):
+        z = K.matmul(xs[:, t, :], wx) + K.matmul(h, wh) + bh
+        h = jnp.tanh(z)
+        hs.append(h)
+    return xs, hs
+
+
+def conv_fwd(K: Kernels, arch: RnnArch, x, wx, wh, bh):
+    """Recurrent encoder: returns the final hidden state [b, hidden]."""
+    _, hs = _steps(K, arch, x, wx, wh, bh)
+    return (hs[-1],)
+
+
+def conv_bwd(K: Kernels, arch: RnnArch, x, wx, wh, bh, g_act):
+    """Manual BPTT: d loss / d (wx, wh, bh) given d loss / d h_T."""
+    xs, hs = _steps(K, arch, x, wx, wh, bh)
+    gwx = jnp.zeros_like(wx)
+    gwh = jnp.zeros_like(wh)
+    gbh = jnp.zeros_like(bh)
+    g_h = g_act
+    for t in reversed(range(arch.t)):
+        h_next = hs[t + 1]
+        h_prev = hs[t]
+        dz = g_h * (1.0 - h_next * h_next)  # tanh'
+        gwx = gwx + K.matmul(xs[:, t, :].T, dz)
+        gwh = gwh + K.matmul(h_prev.T, dz)
+        gbh = gbh + jnp.sum(dz, axis=0)
+        g_h = K.matmul(dz, wh.T)
+    return (gwx, gwh, gbh)
+
+
+def fc_step(K: Kernels, arch: RnnArch, act, labels, wf1, bf1, wf2, bf2):
+    """Classifier head — same math as the CNN FC phase."""
+    from . import model as cnn
+
+    return cnn.fc_step(K, arch, act, labels, wf1, bf1, wf2, bf2)
+
+
+def full_step(K: Kernels, arch: RnnArch, x, labels, *params):
+    wx, wh, bh, wf1, bf1, wf2, bf2 = params
+    (act,) = conv_fwd(K, arch, x, wx, wh, bh)
+    loss, acc, g_act, gwf1, gbf1, gwf2, gbf2 = fc_step(
+        K, arch, act, labels, wf1, bf1, wf2, bf2
+    )
+    gwx, gwh, gbh = conv_bwd(K, arch, x, wx, wh, bh, g_act)
+    return (loss, acc, gwx, gwh, gbh, gwf1, gbf1, gwf2, gbf2)
+
+
+def infer(K: Kernels, arch: RnnArch, x, *params):
+    from . import model as cnn
+
+    wx, wh, bh, wf1, bf1, wf2, bf2 = params
+    (act,) = conv_fwd(K, arch, x, wx, wh, bh)
+    logits, _ = cnn._fc_phase(K, act, wf1, bf1, wf2, bf2)
+    return (logits,)
+
+
+def init_params(arch: RnnArch, seed: int = 0):
+    """Orthogonal-ish recurrent init: N(0, 1/sqrt(H)) for Wh (keeps the
+    spectral radius near 1), N(0, INIT_STD-scaled) elsewhere."""
+    from . import model as cnn
+
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in arch.param_shapes():
+        if name.startswith("w"):
+            key, sub = jax.random.split(key)
+            std = (1.0 / jnp.sqrt(shape[0])) if name == "wh" else cnn.INIT_STD
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return out

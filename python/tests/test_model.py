@@ -1,0 +1,127 @@
+"""L2 correctness: the two-phase model's manual backward vs jax.grad,
+pallas-vs-jnp variant agreement, and shape contracts for every artifact
+kind the manifest promises.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def data_for(arch, b=4, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, arch.h, arch.w, arch.cin), jnp.float32)
+    y = jax.random.randint(ky, (b,), 0, arch.ncls)
+    return x, y
+
+
+@pytest.mark.parametrize("arch_name", list(model.ARCHS))
+def test_manual_bwd_matches_jax_grad(arch_name):
+    """full_step's hand-written chain rule == AD of the jnp loss."""
+    arch = model.ARCHS[arch_name]
+    params = model.init_params(arch, 1)
+    x, y = data_for(arch)
+
+    def loss_fn(params):
+        wc1, bc1, wc2, bc2, wf1, bf1, wf2, bf2 = params
+        (act,) = model.conv_fwd(model.JNP, arch, x, wc1, bc1, wc2, bc2)
+        logits, _ = model._fc_phase(model.JNP, act, wf1, bf1, wf2, bf2)
+        return ref.softmax_xent_ref(logits, y)[0]
+
+    auto = jax.grad(loss_fn)(params)
+    manual = model.full_step(model.JNP, arch, x, y, *params)[2:]
+    assert len(auto) == len(manual)
+    for a, m in zip(auto, manual):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(m), atol=3e-5, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch_name", ["lenet"])
+def test_pallas_variant_matches_jnp(arch_name):
+    arch = model.ARCHS[arch_name]
+    params = model.init_params(arch, 2)
+    x, y = data_for(arch)
+    out_j = model.full_step(model.JNP, arch, x, y, *params)
+    out_p = model.full_step(model.PALLAS, arch, x, y, *params)
+    for a, b in zip(out_j, out_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=1e-2)
+
+
+def test_phase_split_equals_full_step():
+    """conv_fwd + fc_step + conv_bwd == full_step (the distributed
+    decomposition computes the same gradients as single-device)."""
+    arch = model.ARCHS["lenet"]
+    params = model.init_params(arch, 3)
+    cps, fps = params[:4], params[4:]
+    x, y = data_for(arch)
+    (act,) = model.conv_fwd(model.JNP, arch, x, *cps)
+    loss, acc, g_act, gwf1, gbf1, gwf2, gbf2 = model.fc_step(
+        model.JNP, arch, act, y, *fps
+    )
+    conv_grads = model.conv_bwd(model.JNP, arch, x, *cps, g_act)
+    full = model.full_step(model.JNP, arch, x, y, *params)
+    np.testing.assert_allclose(float(loss), float(full[0]), atol=1e-6)
+    np.testing.assert_allclose(float(acc), float(full[1]), atol=1e-6)
+    for got, want in zip(
+        list(conv_grads) + [gwf1, gbf1, gwf2, gbf2], full[2:]
+    ):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_microbatch_gradient_sum_equals_full_batch():
+    """Intra-group data parallelism: summing microbatch conv grads equals
+    the full-batch gradient (paper Fig 18b semantics)."""
+    arch = model.ARCHS["lenet"]
+    params = model.init_params(arch, 4)
+    cps, fps = params[:4], params[4:]
+    x, y = data_for(arch, b=8)
+    (act,) = model.conv_fwd(model.JNP, arch, x, *cps)
+    _, _, g_act, *_ = model.fc_step(model.JNP, arch, act, y, *fps)
+    whole = model.conv_bwd(model.JNP, arch, x, *cps, g_act)
+    # split into 2 microbatches of 4
+    parts = None
+    for lo, hi in [(0, 4), (4, 8)]:
+        grads = model.conv_bwd(model.JNP, arch, x[lo:hi], *cps, g_act[lo:hi])
+        parts = grads if parts is None else [p + g for p, g in zip(parts, grads)]
+    for got, want in zip(parts, whole):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch_name", list(model.ARCHS))
+def test_shapes_contract(arch_name):
+    arch = model.ARCHS[arch_name]
+    params = model.init_params(arch, 0)
+    x, y = data_for(arch, b=2)
+    (act,) = model.conv_fwd(model.JNP, arch, x, *params[:4])
+    assert act.shape == (2, arch.feat)
+    (logits,) = model.infer(model.JNP, arch, x, *params)
+    assert logits.shape == (2, arch.ncls)
+    out = model.full_step(model.JNP, arch, x, y, *params)
+    assert len(out) == 2 + len(params)
+    for g, p in zip(out[2:], params):
+        assert g.shape == p.shape
+
+
+def test_init_params_distribution():
+    arch = model.ARCHS["lenet"]
+    params = model.init_params(arch, 0)
+    names = [n for n, _ in arch.param_shapes()]
+    for name, p in zip(names, params):
+        if name.startswith("w"):
+            std = float(jnp.std(p))
+            assert 0.7 * model.INIT_STD < std < 1.3 * model.INIT_STD, f"{name} std {std}"
+        else:
+            assert float(jnp.abs(p).max()) == 0.0
+
+
+def test_arch_two_phase_ratios():
+    """The paper's shape: conv FLOPs >> FC FLOPs, FC params >> conv params."""
+    for arch in model.ARCHS.values():
+        conv_b = arch.conv_params_bytes()
+        fc_b = arch.fc_params_bytes()
+        assert fc_b > 3 * conv_b, f"{arch.name}: fc model must dominate"

@@ -1,0 +1,72 @@
+"""RNN (Appendix F-F) correctness: manual BPTT vs jax.grad, variant
+agreement, and the two-phase decomposition contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, rnn
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH = rnn.RNN_ARCHS["rnn"]
+
+
+def data(b=4, seed=2):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, ARCH.t, 1, ARCH.f), jnp.float32)
+    y = jax.random.randint(ky, (b,), 0, ARCH.ncls)
+    return x, y
+
+
+def test_bptt_matches_jax_grad():
+    params = rnn.init_params(ARCH, 1)
+    x, y = data()
+
+    def loss_fn(params):
+        wx, wh, bh, wf1, bf1, wf2, bf2 = params
+        (act,) = rnn.conv_fwd(model.JNP, ARCH, x, wx, wh, bh)
+        logits, _ = model._fc_phase(model.JNP, act, wf1, bf1, wf2, bf2)
+        return ref.softmax_xent_ref(logits, y)[0]
+
+    auto = jax.grad(loss_fn)(params)
+    manual = rnn.full_step(model.JNP, ARCH, x, y, *params)[2:]
+    for a, m in zip(auto, manual):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(m), atol=3e-5, rtol=2e-3)
+
+
+def test_pallas_variant_matches_jnp():
+    params = rnn.init_params(ARCH, 2)
+    x, y = data(seed=3)
+    out_j = rnn.full_step(model.JNP, ARCH, x, y, *params)
+    out_p = rnn.full_step(model.PALLAS, ARCH, x, y, *params)
+    for a, b in zip(out_j, out_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=1e-2)
+
+
+def test_phase_split_equals_full_step():
+    params = rnn.init_params(ARCH, 3)
+    cps, fps = params[:3], params[3:]
+    x, y = data(seed=4)
+    (act,) = rnn.conv_fwd(model.JNP, ARCH, x, *cps)
+    assert act.shape == (4, ARCH.hidden)
+    loss, acc, g_act, *fc_grads = rnn.fc_step(model.JNP, ARCH, act, y, *fps)
+    conv_grads = rnn.conv_bwd(model.JNP, ARCH, x, *cps, g_act)
+    full = rnn.full_step(model.JNP, ARCH, x, y, *params)
+    np.testing.assert_allclose(float(loss), float(full[0]), atol=1e-6)
+    for got, want in zip(list(conv_grads) + fc_grads, full[2:]):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_recurrent_init_spectral_scale():
+    params = rnn.init_params(ARCH, 0)
+    wh = np.asarray(params[1])
+    # N(0, 1/sqrt(H)) keeps singular values O(1): largest should be ~2.
+    s = np.linalg.svd(wh, compute_uv=False)
+    assert 0.5 < s[0] < 4.0, f"spectral norm {s[0]}"
+
+
+def test_two_phase_ratio():
+    # FC model bytes > recurrent model bytes (paper's phase asymmetry).
+    assert ARCH.fc_params_bytes() > ARCH.conv_params_bytes()

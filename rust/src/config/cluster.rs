@@ -1,0 +1,180 @@
+//! Cluster specifications — the device graph of paper §II-D, reduced (as
+//! the paper does for homogeneous clusters) to a few scalars: machine
+//! count, per-machine throughput, and network speed. Presets mirror the
+//! paper's Fig 9 table of EC2 machines and clusters.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// What kind of device a machine's throughput comes from (used by the
+/// FLOPS-proportional partitioner and Fig 11-style tables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    /// CPU + GPU used together via FLOPS-proportional data parallelism
+    /// (paper Appendix C-D).
+    Hybrid,
+}
+
+impl DeviceKind {
+    fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "cpu",
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Hybrid => "hybrid",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cpu" => Ok(DeviceKind::Cpu),
+            "gpu" => Ok(DeviceKind::Gpu),
+            "hybrid" => Ok(DeviceKind::Hybrid),
+            other => anyhow::bail!("unknown device kind {other:?}"),
+        }
+    }
+}
+
+/// A homogeneous cluster: `machines` nodes of `tflops_per_machine`,
+/// connected by `network_gbits` links (paper Fig 9).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub machines: usize,
+    pub tflops_per_machine: f64,
+    pub network_gbits: f64,
+    pub device: DeviceKind,
+}
+
+impl ClusterSpec {
+    pub fn new(
+        name: &str,
+        machines: usize,
+        tflops: f64,
+        gbits: f64,
+        device: DeviceKind,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            machines,
+            tflops_per_machine: tflops,
+            network_gbits: gbits,
+            device,
+        }
+    }
+
+    /// Total cluster TFLOPS (Fig 9 column).
+    pub fn total_tflops(&self) -> f64 {
+        self.machines as f64 * self.tflops_per_machine
+    }
+
+    /// Seconds to move `bytes` over one link.
+    pub fn link_seconds(&self, bytes: usize) -> f64 {
+        if self.network_gbits <= 0.0 {
+            return 0.0; // single machine: no network
+        }
+        let bits = bytes as f64 * 8.0;
+        bits / (self.network_gbits * 1e9)
+    }
+
+    /// Seconds of pure compute for `gflop` of work on one machine at
+    /// `utilization` of peak.
+    pub fn compute_seconds(&self, gflop: f64, utilization: f64) -> f64 {
+        gflop / (self.tflops_per_machine * 1e3 * utilization.max(1e-6))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("machines", Json::Num(self.machines as f64)),
+            ("tflops_per_machine", Json::Num(self.tflops_per_machine)),
+            ("network_gbits", Json::Num(self.network_gbits)),
+            ("device", Json::Str(self.device.name().into())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        // Accept either a preset name string or a full object.
+        if let Json::Str(name) = v {
+            return preset(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown cluster preset {name:?}"));
+        }
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            machines: v.get("machines")?.as_usize()?,
+            tflops_per_machine: v.get("tflops_per_machine")?.as_f64()?,
+            network_gbits: v.get("network_gbits")?.as_f64()?,
+            device: DeviceKind::parse(v.get("device")?.as_str()?)?,
+        })
+    }
+}
+
+/// Paper Fig 9 presets. TFLOPS and link speeds are the paper's; the
+/// discrete-event simulator consumes these directly, so the HE curves are
+/// generated for the *paper's* hardware even though numerics run locally.
+pub const CLUSTER_PRESETS: &[(&str, usize, f64, f64, DeviceKind)] = &[
+    ("1xcpu", 1, 0.74, 0.0, DeviceKind::Cpu),
+    ("2xcpu", 1, 1.67, 0.0, DeviceKind::Cpu),
+    ("1xgpu", 1, 1.23, 0.0, DeviceKind::Gpu),
+    ("4xgpu", 1, 4.89, 0.0, DeviceKind::Gpu),
+    ("cpu-s", 9, 0.74, 1.0, DeviceKind::Cpu),
+    ("cpu-l", 33, 0.74, 1.0, DeviceKind::Cpu),
+    ("gpu-s", 9, 4.89, 10.0, DeviceKind::Gpu),
+];
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Option<ClusterSpec> {
+    CLUSTER_PRESETS
+        .iter()
+        .find(|(n, ..)| *n == name)
+        .map(|&(n, m, t, g, d)| ClusterSpec::new(n, m, t, g, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_fig9() {
+        let cpu_l = preset("cpu-l").unwrap();
+        assert_eq!(cpu_l.machines, 33);
+        assert!((cpu_l.total_tflops() - 24.42).abs() < 0.2); // paper: 24.51
+        let gpu_s = preset("gpu-s").unwrap();
+        assert!((gpu_s.total_tflops() - 44.01).abs() < 0.3); // paper: 44.24
+    }
+
+    #[test]
+    fn link_seconds_sane() {
+        let c = preset("cpu-s").unwrap();
+        // 1 Gbit/s: 125 MB takes ~1 s.
+        let t = c.link_seconds(125_000_000);
+        assert!((t - 1.0).abs() < 1e-9);
+        // single machine: no network time
+        assert_eq!(preset("1xcpu").unwrap().link_seconds(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn compute_seconds_sane() {
+        let c = preset("1xcpu").unwrap();
+        // 0.74 TFLOPS at 50% utilization: 370 GFLOP/s -> 1 GFLOP = 1/370 s.
+        let t = c.compute_seconds(1.0, 0.5);
+        assert!((t - 1.0 / 370.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_preset_none() {
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_and_preset_form() {
+        let c = preset("gpu-s").unwrap();
+        let j = c.to_json().dump();
+        let c2 = ClusterSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, c2);
+        let c3 = ClusterSpec::from_json(&Json::Str("gpu-s".into())).unwrap();
+        assert_eq!(c, c3);
+    }
+}

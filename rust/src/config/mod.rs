@@ -1,0 +1,284 @@
+//! Configuration system: cluster specs (paper Fig 9), hyperparameters
+//! (paper eq. (4)), execution strategies (paper §IV), and the top-level
+//! train config. Configs (de)serialize through the in-repo JSON layer so
+//! runs can be driven from files (`omnivore train --config run.json`).
+
+pub mod cluster;
+
+pub use cluster::{ClusterSpec, DeviceKind, CLUSTER_PRESETS};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// SGD hyperparameters of paper eq. (4):
+/// `V <- mu V - eta (grad + lambda W);  W <- W + V`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hyper {
+    /// Learning rate eta.
+    pub lr: f32,
+    /// Explicit momentum mu.
+    pub momentum: f32,
+    /// L2 regularization lambda (input to the training problem).
+    pub lambda: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        // Momentum 0.9 is "the standard momentum value used in most
+        // existing work" (paper §I) — the thing Omnivore tunes away from.
+        Self { lr: 0.01, momentum: 0.9, lambda: 5e-4 }
+    }
+}
+
+impl Hyper {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lr", Json::Num(self.lr as f64)),
+            ("momentum", Json::Num(self.momentum as f64)),
+            ("lambda", Json::Num(self.lambda as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            lr: v.get("lr")?.as_f64()? as f32,
+            momentum: v.get("momentum")?.as_f64()? as f32,
+            lambda: v.get("lambda")?.as_f64()? as f32,
+        })
+    }
+}
+
+/// Execution strategy: how the N conv-compute machines are partitioned
+/// into compute groups (paper §IV-A). `g` groups of `k = N/g` machines;
+/// staleness S = g - 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// One group of N machines: fully synchronous SGD (S = 0).
+    Sync,
+    /// N groups of 1 machine: fully asynchronous SGD (S = N-1).
+    Async,
+    /// g groups of N/g machines (the paper's intermediate points).
+    Groups(usize),
+}
+
+impl Strategy {
+    /// Number of compute groups for a cluster of `n` conv machines.
+    pub fn groups(&self, n: usize) -> usize {
+        match self {
+            Strategy::Sync => 1,
+            Strategy::Async => n.max(1),
+            Strategy::Groups(g) => (*g).clamp(1, n.max(1)),
+        }
+    }
+
+    /// Staleness S = g - 1 (paper §IV-A).
+    pub fn staleness(&self, n: usize) -> usize {
+        self.groups(n) - 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Strategy::Sync => Json::Str("sync".into()),
+            Strategy::Async => Json::Str("async".into()),
+            Strategy::Groups(g) => Json::Num(*g as f64),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v {
+            Json::Str(s) if s == "sync" => Ok(Strategy::Sync),
+            Json::Str(s) if s == "async" => Ok(Strategy::Async),
+            Json::Num(_) => Ok(Strategy::Groups(v.as_usize()?)),
+            other => anyhow::bail!("bad strategy {other:?}"),
+        }
+    }
+}
+
+/// Physical mapping of the FC servers (paper §V-A / Fig 16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FcMapping {
+    /// Merged FC compute+model server on one machine: zero FC staleness,
+    /// no FC model over the network (Omnivore's choice, after [Adam]).
+    #[default]
+    Merged,
+    /// One FC compute server per conv group; FC model behind a parameter
+    /// server with staleness (the MXNet/DistBelief-style map, Fig 16a).
+    Unmerged,
+}
+
+/// Top-level training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model/dataset pair: "caffenet8" (imagenet8-sim), "cifar", "lenet".
+    pub arch: String,
+    /// Kernel variant of the artifacts: "pallas" or "jnp".
+    pub variant: String,
+    /// Compute-group batch size (must match an AOT `fc_step` batch).
+    pub batch: usize,
+    /// Execution strategy (number of compute groups).
+    pub strategy: Strategy,
+    /// FC server physical mapping.
+    pub fc_mapping: FcMapping,
+    /// Hyperparameters.
+    pub hyper: Hyper,
+    /// Cluster this run models.
+    pub cluster: ClusterSpec,
+    /// Number of SGD iterations to run.
+    pub steps: usize,
+    /// RNG seed (data, init, service times).
+    pub seed: u64,
+    /// Path to the artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            arch: "caffenet8".into(),
+            variant: "jnp".into(),
+            batch: 32,
+            strategy: Strategy::Sync,
+            fc_mapping: FcMapping::Merged,
+            hyper: Hyper::default(),
+            cluster: cluster::preset("cpu-s").expect("cpu-s preset exists"),
+            steps: 100,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("variant", Json::Str(self.variant.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("strategy", self.strategy.to_json()),
+            (
+                "fc_mapping",
+                Json::Str(
+                    match self.fc_mapping {
+                        FcMapping::Merged => "merged",
+                        FcMapping::Unmerged => "unmerged",
+                    }
+                    .into(),
+                ),
+            ),
+            ("hyper", self.hyper.to_json()),
+            ("cluster", self.cluster.to_json()),
+            ("steps", Json::Num(self.steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = TrainConfig::default();
+        Ok(Self {
+            arch: v.get("arch")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+            batch: v.get("batch")?.as_usize()?,
+            strategy: Strategy::from_json(v.get("strategy")?)?,
+            fc_mapping: match v.opt("fc_mapping").map(|m| m.as_str()).transpose()? {
+                Some("unmerged") => FcMapping::Unmerged,
+                _ => FcMapping::Merged,
+            },
+            hyper: v.opt("hyper").map(Hyper::from_json).transpose()?.unwrap_or(d.hyper),
+            cluster: ClusterSpec::from_json(v.get("cluster")?)?,
+            steps: v.get("steps")?.as_usize()?,
+            seed: v.opt("seed").map(|s| s.as_usize()).transpose()?.unwrap_or(0) as u64,
+            artifacts_dir: v
+                .opt("artifacts_dir")
+                .map(|s| s.as_str().map(String::from))
+                .transpose()?
+                .unwrap_or(d.artifacts_dir),
+        })
+    }
+
+    /// Load from a JSON config file.
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_json(&Json::parse(&text).with_context(|| format!("parsing {path}"))?)
+    }
+
+    /// Number of conv-compute machines (cluster minus the FC machine,
+    /// paper Fig 5a: N+1 machines, one for FC).
+    pub fn conv_machines(&self) -> usize {
+        self.cluster.machines.saturating_sub(1).max(1)
+    }
+
+    /// Number of compute groups under this config's strategy.
+    pub fn groups(&self) -> usize {
+        self.strategy.groups(self.conv_machines())
+    }
+
+    /// Machines per group k = N/g.
+    pub fn group_size(&self) -> usize {
+        let n = self.conv_machines();
+        let g = self.groups();
+        (n / g).max(1)
+    }
+
+    /// Per-worker conv microbatch = batch / k, clamped to the available
+    /// AOT batch sizes by the runtime.
+    pub fn microbatch(&self) -> usize {
+        (self.batch / self.group_size()).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_groups() {
+        assert_eq!(Strategy::Sync.groups(32), 1);
+        assert_eq!(Strategy::Async.groups(32), 32);
+        assert_eq!(Strategy::Groups(4).groups(32), 4);
+        assert_eq!(Strategy::Groups(64).groups(32), 32); // clamped
+        assert_eq!(Strategy::Groups(0).groups(32), 1); // clamped
+    }
+
+    #[test]
+    fn staleness_is_g_minus_1() {
+        assert_eq!(Strategy::Sync.staleness(32), 0);
+        assert_eq!(Strategy::Async.staleness(32), 31);
+        assert_eq!(Strategy::Groups(4).staleness(32), 3);
+    }
+
+    #[test]
+    fn config_derived_quantities() {
+        let mut c = TrainConfig::default();
+        c.cluster = cluster::preset("cpu-l").unwrap();
+        assert_eq!(c.conv_machines(), 32);
+        c.strategy = Strategy::Groups(4);
+        assert_eq!(c.groups(), 4);
+        assert_eq!(c.group_size(), 8);
+        assert_eq!(c.microbatch(), 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.strategy = Strategy::Groups(4);
+        c.fc_mapping = FcMapping::Unmerged;
+        let j = c.to_json().dump();
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c.arch, c2.arch);
+        assert_eq!(c.strategy, c2.strategy);
+        assert_eq!(c.fc_mapping, c2.fc_mapping);
+        assert_eq!(c.hyper, c2.hyper);
+        assert_eq!(c.cluster, c2.cluster);
+    }
+
+    #[test]
+    fn strategy_json_forms() {
+        assert_eq!(Strategy::from_json(&Json::Str("sync".into())).unwrap(), Strategy::Sync);
+        assert_eq!(Strategy::from_json(&Json::Str("async".into())).unwrap(), Strategy::Async);
+        assert_eq!(Strategy::from_json(&Json::Num(8.0)).unwrap(), Strategy::Groups(8));
+        assert!(Strategy::from_json(&Json::Null).is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! A compute group (paper §IV-A): k machines processing ONE batch per
+//! iteration with intra-group data parallelism — the batch is split into
+//! k microbatches, each worker runs conv fwd/bwd on its slice against a
+//! shared conv-model snapshot, and the k partial gradients are summed
+//! into the group's single published gradient.
+//!
+//! Numerically this module is exact (not simulated). Because the summed
+//! microbatch gradient equals the full-batch gradient (linearity —
+//! verified by `it_runtime::conv_fwd_microbatch_composition` and
+//! `test_microbatch_gradient_sum_equals_full_batch`), the k per-worker
+//! artifact calls are collapsed into ONE full-batch call per phase; `k`
+//! only drives the *timing* model. This is the §Perf L3 optimization
+//! that removed (2k−1)/2k of PJRT dispatches per iteration (5.7x fewer
+//! at k = 8) with bit-identical training trajectories up to fp reduction
+//! order.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::merged_fc::FcServer;
+use super::param_server::{ModelSnapshot, ParamServer};
+use crate::runtime::{from_literal, to_literal, Runtime};
+use crate::tensor::HostTensor;
+
+/// Everything observable about one group iteration.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub acc: f32,
+    pub conv_staleness: u64,
+    pub fc_staleness: u64,
+}
+
+/// Intermediate state between conv-fwd and fc (the engine splits the
+/// iteration into events at the FC queue boundary).
+///
+/// Perf (EXPERIMENTS.md §Perf L3): the conv-model snapshot and batch
+/// images are converted to XLA literals ONCE and reused by the forward
+/// and backward calls.
+pub struct ConvFwdState {
+    pub snapshot: ModelSnapshot,
+    pub fc_snapshot: Option<ModelSnapshot>,
+    pub activations: HostTensor,
+    pub labels: Vec<i32>,
+    param_lits: Vec<xla::Literal>,
+    images_lit: xla::Literal,
+}
+
+/// One compute group of `k` workers.
+pub struct ComputeGroup {
+    pub id: usize,
+    pub k: usize,
+    conv_fwd_artifact: String,
+    conv_bwd_artifact: String,
+    conv_ps: Arc<ParamServer>,
+}
+
+impl ComputeGroup {
+    pub fn new(
+        id: usize,
+        k: usize,
+        conv_fwd_artifact: String,
+        conv_bwd_artifact: String,
+        conv_ps: Arc<ParamServer>,
+    ) -> Self {
+        Self { id, k, conv_fwd_artifact, conv_bwd_artifact, conv_ps }
+    }
+
+    pub fn conv_ps(&self) -> &Arc<ParamServer> {
+        &self.conv_ps
+    }
+
+    /// Phase 1: read the conv model (and, if unmerged, the FC model) and
+    /// run the conv forward for the whole group batch.
+    pub fn conv_forward(
+        &self,
+        rt: &Runtime,
+        images: &HostTensor,
+        labels: &[i32],
+        fc: &FcServer,
+    ) -> Result<ConvFwdState> {
+        let snapshot = self.conv_ps.read();
+        // Unmerged FC: the group reads the FC model at iteration start
+        // (it will compute the FC phase itself, against this stale copy).
+        let fc_snapshot =
+            if fc.is_merged() { None } else { Some(fc.param_server().read()) };
+        let param_lits: Vec<xla::Literal> =
+            snapshot.params.iter().map(to_literal).collect::<Result<_>>()?;
+        let images_lit = to_literal(images)?;
+        let mut lits: Vec<&xla::Literal> = vec![&images_lit];
+        lits.extend(param_lits.iter());
+        let outs = rt.execute_refs(&self.conv_fwd_artifact, &lits)?;
+        anyhow::ensure!(outs.len() == 1, "conv_fwd arity");
+        let activations = from_literal(&outs[0])?;
+        Ok(ConvFwdState {
+            snapshot,
+            fc_snapshot,
+            activations,
+            labels: labels.to_vec(),
+            param_lits,
+            images_lit,
+        })
+    }
+
+    /// Phase 2 is the FC server's job (see engine); Phase 3: conv
+    /// backward + publish of the group's single summed gradient.
+    pub fn conv_backward_publish(
+        &self,
+        rt: &Runtime,
+        state: &ConvFwdState,
+        g_act: &HostTensor,
+    ) -> Result<u64> {
+        let g_lit = to_literal(g_act)?;
+        let mut lits: Vec<&xla::Literal> = vec![&state.images_lit];
+        lits.extend(state.param_lits.iter());
+        lits.push(&g_lit);
+        let outs = rt.execute_refs(&self.conv_bwd_artifact, &lits)?;
+        let grads: Vec<HostTensor> =
+            outs.iter().map(from_literal).collect::<Result<_>>()?;
+        self.conv_ps.publish(&grads, state.snapshot.version)
+    }
+
+    /// Convenience: one whole iteration (read → conv fwd → FC step →
+    /// conv bwd → publish). The simulated-time engine drives the phases
+    /// individually instead, to interleave groups at the FC queue.
+    pub fn step(
+        &self,
+        rt: &Runtime,
+        fc: &FcServer,
+        images: &HostTensor,
+        labels: &[i32],
+    ) -> Result<StepOutput> {
+        let state = self.conv_forward(rt, images, labels, fc)?;
+        let fc_out =
+            fc.step(rt, &state.activations, &state.labels, state.fc_snapshot.clone())?;
+        let conv_staleness = self.conv_backward_publish(rt, &state, &fc_out.g_act)?;
+        Ok(StepOutput {
+            loss: fc_out.loss,
+            acc: fc_out.acc,
+            conv_staleness,
+            fc_staleness: fc_out.staleness,
+        })
+    }
+}

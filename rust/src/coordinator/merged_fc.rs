@@ -1,0 +1,104 @@
+//! The FC server in both physical mappings of paper §V-A / Fig 16.
+//!
+//! * **Merged** (Omnivore's default, after Project Adam): FC compute and
+//!   FC model live on one machine; the server processes one batch at a
+//!   time, so the FC model has *zero staleness* and the FC model never
+//!   crosses the network. The whole read→compute→update is one critical
+//!   section here, which is exactly the paper's semantics.
+//! * **Unmerged** (Fig 16a, the MXNet/DistBelief map): each compute group
+//!   runs FC compute itself against a snapshot of the FC model from a
+//!   parameter server, so the FC model sees the same staleness as the
+//!   conv model and 2× its size crosses the network each iteration.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::param_server::ParamServer;
+use crate::config::Hyper;
+use crate::runtime::{from_literal, labels_literal, to_literal, Runtime};
+use crate::tensor::HostTensor;
+
+/// Result of one FC-phase step for a group's batch.
+#[derive(Clone, Debug)]
+pub struct FcStepOutput {
+    pub loss: f32,
+    pub acc: f32,
+    /// Gradient w.r.t. the activations, to be sent back to the group.
+    pub g_act: HostTensor,
+    /// Staleness of the FC model used (always 0 when merged).
+    pub staleness: u64,
+}
+
+/// The FC phase server.
+pub struct FcServer {
+    ps: Arc<ParamServer>,
+    merged: bool,
+    artifact: String,
+    /// Merged mode processes one batch at a time (it is one machine);
+    /// this lock enforces that under the threaded engine as well.
+    serial: std::sync::Mutex<()>,
+}
+
+impl FcServer {
+    pub fn new(fc_params: Vec<HostTensor>, hyper: Hyper, merged: bool, artifact: String) -> Self {
+        Self {
+            ps: Arc::new(ParamServer::new(fc_params, hyper)),
+            merged,
+            artifact,
+            serial: std::sync::Mutex::new(()),
+        }
+    }
+
+    pub fn is_merged(&self) -> bool {
+        self.merged
+    }
+
+    pub fn param_server(&self) -> &Arc<ParamServer> {
+        &self.ps
+    }
+
+    /// Serve one group's batch: FC forward + backward + model update.
+    ///
+    /// In merged mode the read and the update are adjacent in program
+    /// order and the engine serializes FC service (it is one machine), so
+    /// staleness is structurally zero. In unmerged mode the caller passes
+    /// a snapshot taken at the *start* of the group's iteration
+    /// (`stale_read`), modeling FC compute on the group's machines.
+    pub fn step(
+        &self,
+        rt: &Runtime,
+        act: &HostTensor,
+        labels: &[i32],
+        stale_read: Option<super::param_server::ModelSnapshot>,
+    ) -> Result<FcStepOutput> {
+        let _serial = if self.merged { Some(self.serial.lock().unwrap()) } else { None };
+        let snap = match (&self.merged, stale_read) {
+            (true, _) | (false, None) => self.ps.read(),
+            (false, Some(s)) => s,
+        };
+        // inputs: act, labels, wf1, bf1, wf2, bf2
+        let mut lits = vec![to_literal(act)?, labels_literal(labels)?];
+        for p in &snap.params {
+            lits.push(to_literal(p)?);
+        }
+        let outs = rt.execute_literals(&self.artifact, &lits)?;
+        // outputs: loss, acc, g_act, gwf1, gbf1, gwf2, gbf2
+        anyhow::ensure!(outs.len() == 3 + snap.params.len(), "fc_step arity");
+        let loss = from_literal(&outs[0])?.scalar()?;
+        let acc = from_literal(&outs[1])?.scalar()?;
+        let g_act = from_literal(&outs[2])?;
+        let grads: Vec<HostTensor> =
+            outs[3..].iter().map(from_literal).collect::<Result<_>>()?;
+        let staleness = self.ps.publish(&grads, snap.version)?;
+        Ok(FcStepOutput { loss, acc, g_act, staleness })
+    }
+
+    pub fn set_hyper(&self, hyper: Hyper) {
+        self.ps.set_hyper(hyper);
+    }
+
+    pub fn params(&self) -> Vec<HostTensor> {
+        self.ps.read().params
+    }
+}

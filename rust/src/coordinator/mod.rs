@@ -1,0 +1,92 @@
+//! L3 coordinator: the paper's distributed-training architecture.
+//!
+//! * [`ParamServer`] — versioned model store + momentum SGD (eq. (3)–(4))
+//!   with staleness accounting.
+//! * [`FcServer`] — the FC phase in merged (Omnivore/Adam) or unmerged
+//!   (MXNet/DistBelief) physical mapping.
+//! * [`ComputeGroup`] — k workers, one batch per iteration, intra-group
+//!   data parallelism, summed gradient publish.
+//! * [`Topology`] — assembles g groups × k workers over a cluster spec
+//!   from a [`TrainConfig`], picking the right AOT artifacts.
+
+mod compute_group;
+mod merged_fc;
+mod param_server;
+
+pub use compute_group::{ComputeGroup, ConvFwdState, StepOutput};
+pub use merged_fc::{FcServer, FcStepOutput};
+pub use param_server::{ModelSnapshot, ParamServer, StalenessStats};
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{FcMapping, TrainConfig};
+use crate::model::ParamSet;
+use crate::runtime::Runtime;
+
+/// The assembled training topology for one run.
+pub struct Topology {
+    pub groups: Vec<ComputeGroup>,
+    pub conv_ps: Arc<ParamServer>,
+    pub fc: Arc<FcServer>,
+    /// Microbatch actually used per worker (snapped to available AOT
+    /// batch sizes).
+    pub microbatch: usize,
+    /// Workers per group.
+    pub k: usize,
+}
+
+impl Topology {
+    /// Build a topology from config + runtime + initial parameters.
+    ///
+    /// Numerics run at the full group batch (one conv call per phase —
+    /// identical to the k-microbatch sum by linearity; see
+    /// compute_group.rs §Perf note); `k = N/g` parameterizes the timing
+    /// model only.
+    pub fn build(cfg: &TrainConfig, rt: &Runtime, init: ParamSet) -> Result<Self> {
+        let m = rt.manifest();
+        let g = cfg.groups();
+        let k = cfg.group_size();
+        let fwd_entry = m
+            .phase_artifact(&cfg.arch, &cfg.variant, "conv_fwd", cfg.batch)
+            .with_context(|| format!("conv_fwd artifact at batch {}", cfg.batch))?;
+        let bwd_entry = m
+            .phase_artifact(&cfg.arch, &cfg.variant, "conv_bwd", cfg.batch)
+            .with_context(|| format!("conv_bwd artifact at batch {}", cfg.batch))?;
+        let fc_entry = m
+            .phase_artifact(&cfg.arch, &cfg.variant, "fc_step", cfg.batch)
+            .with_context(|| format!("fc_step artifact at batch {}", cfg.batch))?;
+
+        let hyper = cfg.hyper;
+        let (conv_params, fc_params) = init.split();
+        let conv_ps = Arc::new(ParamServer::new(conv_params, hyper));
+        let fc = Arc::new(FcServer::new(
+            fc_params,
+            hyper,
+            cfg.fc_mapping == FcMapping::Merged,
+            fc_entry.name.clone(),
+        ));
+        let fwd = fwd_entry.name.clone();
+        let bwd = bwd_entry.name.clone();
+        let groups = (0..g)
+            .map(|id| ComputeGroup::new(id, k, fwd.clone(), bwd.clone(), conv_ps.clone()))
+            .collect();
+        Ok(Self { groups, conv_ps, fc, microbatch: cfg.batch, k })
+    }
+
+    /// Update hyperparameters on both servers (optimizer epoch boundary).
+    pub fn set_hyper(&self, hyper: crate::config::Hyper) {
+        self.conv_ps.set_hyper(hyper);
+        self.fc.set_hyper(hyper);
+    }
+
+    /// Current full model (conv ++ fc) as a ParamSet.
+    pub fn current_params(&self) -> ParamSet {
+        let conv = self.conv_ps.read().params;
+        let n_conv = conv.len();
+        let mut all = conv;
+        all.extend(self.fc.params());
+        ParamSet::from_tensors(all, n_conv).expect("schema preserved")
+    }
+}

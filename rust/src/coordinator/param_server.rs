@@ -1,0 +1,240 @@
+//! The (conv or FC) model server: versioned parameter store with the
+//! momentum-SGD update of paper eq. (3)–(4) and per-publish staleness
+//! accounting (paper §IV-A / Appendix D-A2).
+//!
+//! Staleness of a publish = number of model updates between the worker's
+//! `read()` and its `publish()`. With g groups in round-robin steady
+//! state this converges to S = g − 1, which the tests assert.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::config::Hyper;
+use crate::tensor::{axpy, HostTensor};
+
+/// Read handle: a consistent snapshot of the model plus its version.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    pub params: Vec<HostTensor>,
+    pub version: u64,
+}
+
+/// Aggregate staleness statistics.
+#[derive(Clone, Debug, Default)]
+pub struct StalenessStats {
+    pub publishes: u64,
+    pub total_staleness: u64,
+    pub max_staleness: u64,
+    /// histogram[s] = publishes with staleness exactly s (capped).
+    pub histogram: Vec<u64>,
+}
+
+impl StalenessStats {
+    pub fn mean(&self) -> f64 {
+        if self.publishes == 0 {
+            0.0
+        } else {
+            self.total_staleness as f64 / self.publishes as f64
+        }
+    }
+}
+
+struct Inner {
+    params: Vec<HostTensor>,
+    velocity: Vec<HostTensor>,
+    version: u64,
+    hyper: Hyper,
+    stats: StalenessStats,
+}
+
+/// A parameter server for one model phase (conv or FC).
+pub struct ParamServer {
+    inner: Mutex<Inner>,
+}
+
+impl ParamServer {
+    pub fn new(params: Vec<HostTensor>, hyper: Hyper) -> Self {
+        let velocity = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+        Self {
+            inner: Mutex::new(Inner {
+                params,
+                velocity,
+                version: 0,
+                hyper,
+                stats: StalenessStats::default(),
+            }),
+        }
+    }
+
+    /// Snapshot the model (the worker's "read the model" step).
+    pub fn read(&self) -> ModelSnapshot {
+        let inner = self.inner.lock().unwrap();
+        ModelSnapshot { params: inner.params.clone(), version: inner.version }
+    }
+
+    /// Publish a gradient computed against `read_version`. Applies paper
+    /// eq. (4): `V <- mu V - eta (grad + lambda W)`, then eq. (3):
+    /// `W <- W + V`. Returns the staleness of this publish.
+    pub fn publish(&self, grads: &[HostTensor], read_version: u64) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        ensure!(
+            grads.len() == inner.params.len(),
+            "publish with {} grads for {} params",
+            grads.len(),
+            inner.params.len()
+        );
+        let Inner { params, velocity, hyper, .. } = &mut *inner;
+        let (mu, eta, lambda) = (hyper.momentum, hyper.lr, hyper.lambda);
+        for ((w, v), g) in params.iter_mut().zip(velocity.iter_mut()).zip(grads) {
+            ensure!(g.shape() == w.shape(), "grad shape {:?} != param {:?}", g.shape(), w.shape());
+            let (wd, vd, gd) = (w.data_mut(), v.data_mut(), g.data());
+            // V <- mu V - eta (g + lambda W); W <- W + V   (fused, in place)
+            for i in 0..wd.len() {
+                vd[i] = mu * vd[i] - eta * (gd[i] + lambda * wd[i]);
+                wd[i] += vd[i];
+            }
+        }
+        let staleness = inner.version - read_version;
+        inner.version += 1;
+        inner.stats.publishes += 1;
+        inner.stats.total_staleness += staleness;
+        inner.stats.max_staleness = inner.stats.max_staleness.max(staleness);
+        let s = staleness.min(255) as usize;
+        if inner.stats.histogram.len() <= s {
+            inner.stats.histogram.resize(s + 1, 0);
+        }
+        inner.stats.histogram[s] += 1;
+        Ok(staleness)
+    }
+
+    /// Replace the hyperparameters (the optimizer retunes between epochs;
+    /// velocity is preserved like the paper's continued runs).
+    pub fn set_hyper(&self, hyper: Hyper) {
+        self.inner.lock().unwrap().hyper = hyper;
+    }
+
+    pub fn hyper(&self) -> Hyper {
+        self.inner.lock().unwrap().hyper
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    pub fn staleness_stats(&self) -> StalenessStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Reset velocity (used when a tuning probe would otherwise inherit a
+    /// velocity computed under different hyperparameters).
+    pub fn reset_velocity(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for v in inner.velocity.iter_mut() {
+            v.data_mut().fill(0.0);
+        }
+    }
+
+    /// Overwrite parameters (checkpoint restore) and reset bookkeeping.
+    pub fn restore(&self, params: Vec<HostTensor>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.velocity = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+        inner.params = params;
+        inner.version = 0;
+        inner.stats = StalenessStats::default();
+    }
+
+    /// Diagnostic: L2 norm of the full parameter vector.
+    pub fn param_norm(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .params
+            .iter()
+            .map(|t| crate::tensor::dot(t.data(), t.data()))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Apply a raw additive delta (test hook / model-averaging support).
+    pub fn apply_delta(&self, deltas: &[HostTensor], scale: f32) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        ensure!(deltas.len() == inner.params.len(), "delta arity mismatch");
+        for (w, d) in inner.params.iter_mut().zip(deltas) {
+            axpy(scale, d.data(), w.data_mut());
+        }
+        inner.version += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ps(mu: f32, eta: f32, lambda: f32) -> ParamServer {
+        let params = vec![HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap()];
+        ParamServer::new(params, Hyper { lr: eta, momentum: mu, lambda })
+    }
+
+    #[test]
+    fn sgd_update_matches_eq34() {
+        let ps = tiny_ps(0.5, 0.1, 0.0);
+        let g = vec![HostTensor::new(vec![2], vec![1.0, -1.0]).unwrap()];
+        let snap = ps.read();
+        ps.publish(&g, snap.version).unwrap();
+        // V = -0.1*g = [-0.1, 0.1]; W = [0.9, 2.1]
+        let p = ps.read().params;
+        assert!((p[0].data()[0] - 0.9).abs() < 1e-6);
+        assert!((p[0].data()[1] - 2.1).abs() < 1e-6);
+        // second step: V = 0.5*V - 0.1*g = [-0.15, 0.15]; W = [0.75, 2.25]
+        ps.publish(&g, ps.read().version).unwrap();
+        let p = ps.read().params;
+        assert!((p[0].data()[0] - 0.75).abs() < 1e-6);
+        assert!((p[0].data()[1] - 2.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_applied() {
+        let ps = tiny_ps(0.0, 0.1, 0.1);
+        let g = vec![HostTensor::zeros(&[2])];
+        ps.publish(&g, 0).unwrap();
+        // V = -0.1*(0 + 0.1*W) = [-0.01, -0.02]; W = [0.99, 1.98]
+        let p = ps.read().params;
+        assert!((p[0].data()[0] - 0.99).abs() < 1e-6);
+        assert!((p[0].data()[1] - 1.98).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staleness_counts_intervening_updates() {
+        let ps = tiny_ps(0.0, 0.01, 0.0);
+        let g = vec![HostTensor::zeros(&[2])];
+        let s0 = ps.read();
+        let s1 = ps.read();
+        assert_eq!(ps.publish(&g, s0.version).unwrap(), 0);
+        // s1 was read before that publish -> staleness 1
+        assert_eq!(ps.publish(&g, s1.version).unwrap(), 1);
+        let stats = ps.staleness_stats();
+        assert_eq!(stats.publishes, 2);
+        assert_eq!(stats.total_staleness, 1);
+        assert_eq!(stats.histogram, vec![1, 1]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let ps = tiny_ps(0.0, 0.01, 0.0);
+        let bad = vec![HostTensor::zeros(&[3])];
+        assert!(ps.publish(&bad, 0).is_err());
+        assert!(ps.publish(&[], 0).is_err());
+    }
+
+    #[test]
+    fn restore_resets() {
+        let ps = tiny_ps(0.9, 0.1, 0.0);
+        let g = vec![HostTensor::new(vec![2], vec![1.0, 1.0]).unwrap()];
+        ps.publish(&g, 0).unwrap();
+        ps.restore(vec![HostTensor::zeros(&[2])]);
+        assert_eq!(ps.version(), 0);
+        assert_eq!(ps.read().params[0].data(), &[0.0, 0.0]);
+        assert_eq!(ps.staleness_stats().publishes, 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Model averaging — the SparkNet/DL4J combining strategy of paper
+//! Table II / Appendix D-B3, as an alternative to the parameter server.
+//!
+//! Each of the g groups holds a FULL local model replica and trains
+//! `tau` iterations locally (using the single-device full_step
+//! artifact); every round the replicas are averaged (reduce) and
+//! re-broadcast (map). `tau = 1` with one group degenerates to
+//! synchronous SGD; large `tau` trades communication for replica drift —
+//! SparkNet's staleness analogue. The paper: "the choice of the tau
+//! parameter is similar to the tradeoff of multiple groups of varying
+//! size".
+
+use anyhow::Result;
+
+use super::report::{IterRecord, TrainReport};
+use crate::config::TrainConfig;
+use crate::data::SyntheticDataset;
+use crate::model::ParamSet;
+use crate::optimizer::he_model::HeParams;
+use crate::runtime::{from_literal, labels_literal, to_literal, Runtime};
+use crate::tensor::{axpy, scale, HostTensor};
+
+/// Model-averaging trainer.
+pub struct AveragingEngine<'a> {
+    rt: &'a Runtime,
+    cfg: TrainConfig,
+    /// Local iterations between averaging rounds (SparkNet's tau).
+    pub tau: usize,
+    /// HE parameters for the virtual clock (communication costing).
+    pub he: HeParams,
+}
+
+impl<'a> AveragingEngine<'a> {
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig, tau: usize, he: HeParams) -> Self {
+        Self { rt, cfg, tau: tau.max(1), he }
+    }
+
+    /// Run `cfg.steps` TOTAL iterations (across groups) of model-averaged
+    /// training from `init`.
+    pub fn run(&self, init: ParamSet) -> Result<TrainReport> {
+        let wall0 = std::time::Instant::now();
+        let g = self.cfg.groups();
+        let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
+        let artifact = format!(
+            "{}_{}_full_step_b{}",
+            self.cfg.arch, self.cfg.variant, self.cfg.batch
+        );
+        let hyper = self.cfg.hyper;
+        let n_conv = init.n_conv();
+        let mut replicas: Vec<Vec<HostTensor>> =
+            (0..g).map(|_| init.tensors().to_vec()).collect();
+        let mut velocities: Vec<Vec<HostTensor>> = (0..g)
+            .map(|_| init.tensors().iter().map(|t| HostTensor::zeros(t.shape())).collect())
+            .collect();
+        let mut report = TrainReport { groups: g, group_size: self.cfg.group_size(), ..Default::default() };
+        let mut batch_counter = self.cfg.seed << 20;
+        let mut completed = 0u64;
+        let mut vtime = 0.0f64;
+        // Per local iteration each group computes a full fwd+bwd on its
+        // own machines: t_conv(k) + t_fc (no shared FC server here — the
+        // model-averaging architectures replicate everything).
+        let k = self.cfg.group_size();
+        let t_local = self.he.t_conv(k) + self.he.t_fc;
+
+        'outer: loop {
+            // One round: every group trains tau local iterations (in
+            // parallel across groups -> round time = tau * t_local).
+            for local in 0..self.tau {
+                for (gi, (w, v)) in replicas.iter_mut().zip(velocities.iter_mut()).enumerate() {
+                    if completed >= self.cfg.steps as u64 {
+                        break 'outer;
+                    }
+                    let batch = data.batch(batch_counter, self.cfg.batch);
+                    batch_counter += 1;
+                    let mut lits =
+                        vec![to_literal(&batch.images)?, labels_literal(&batch.labels)?];
+                    for t in w.iter() {
+                        lits.push(to_literal(t)?);
+                    }
+                    let outs = self.rt.execute_literals(&artifact, &lits)?;
+                    let loss = from_literal(&outs[0])?.scalar()?;
+                    let acc = from_literal(&outs[1])?.scalar()?;
+                    for ((wi, vi), go) in w.iter_mut().zip(v.iter_mut()).zip(&outs[2..]) {
+                        let gt = from_literal(go)?;
+                        let (wd, vd, gd) = (wi.data_mut(), vi.data_mut(), gt.data());
+                        for i in 0..wd.len() {
+                            vd[i] = hyper.momentum * vd[i]
+                                - hyper.lr * (gd[i] + hyper.lambda * wd[i]);
+                            wd[i] += vd[i];
+                        }
+                    }
+                    report.records.push(IterRecord {
+                        seq: completed,
+                        group: gi,
+                        vtime: vtime + (local + 1) as f64 * t_local,
+                        loss,
+                        acc,
+                        conv_staleness: (self.tau * (g - 1)) as u64, // replica drift proxy
+                        fc_staleness: (self.tau * (g - 1)) as u64,
+                    });
+                    completed += 1;
+                    if !loss.is_finite() || loss > 1e4 {
+                        break 'outer;
+                    }
+                }
+            }
+            vtime += self.tau as f64 * t_local;
+            // Reduce + map: average replicas; network cost = one full
+            // model each way per group over the shared link.
+            let model_bytes: usize =
+                replicas[0].iter().map(|t| t.len() * 4).sum();
+            vtime += self.cfg.cluster.link_seconds(2 * model_bytes * g);
+            let avg = average(&replicas);
+            for w in replicas.iter_mut() {
+                w.clone_from(&avg);
+            }
+            report.virtual_time = vtime;
+        }
+        report.virtual_time = report.records.last().map(|r| r.vtime).unwrap_or(vtime);
+        report.wallclock_secs = wall0.elapsed().as_secs_f64();
+        report.runtime_stats = self.rt.stats();
+        let _ = n_conv;
+        Ok(report)
+    }
+}
+
+fn average(replicas: &[Vec<HostTensor>]) -> Vec<HostTensor> {
+    let g = replicas.len() as f32;
+    let mut out: Vec<HostTensor> =
+        replicas[0].iter().map(|t| HostTensor::zeros(t.shape())).collect();
+    for rep in replicas {
+        for (o, t) in out.iter_mut().zip(rep) {
+            axpy(1.0, t.data(), o.data_mut());
+        }
+    }
+    for o in out.iter_mut() {
+        scale(1.0 / g, o.data_mut());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::average;
+    use crate::tensor::HostTensor;
+
+    #[test]
+    fn average_of_replicas() {
+        let a = vec![HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap()];
+        let b = vec![HostTensor::new(vec![2], vec![3.0, 6.0]).unwrap()];
+        let avg = average(&[a, b]);
+        assert_eq!(avg[0].data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn average_identity_single_replica() {
+        let a = vec![HostTensor::new(vec![3], vec![1.0, -1.0, 0.5]).unwrap()];
+        let avg = average(&[a.clone()]);
+        assert_eq!(avg[0], a[0]);
+    }
+}

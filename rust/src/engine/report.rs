@@ -1,0 +1,188 @@
+//! Training run reports: the raw material for every paper figure.
+
+use crate::coordinator::StalenessStats;
+use crate::runtime::RuntimeStats;
+
+/// One completed group iteration.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    /// Global completion index (order of publish).
+    pub seq: u64,
+    pub group: usize,
+    /// Virtual time of completion (seconds on the modeled cluster).
+    pub vtime: f64,
+    pub loss: f32,
+    pub acc: f32,
+    pub conv_staleness: u64,
+    pub fc_staleness: u64,
+}
+
+/// Periodic held-out evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub seq: u64,
+    pub vtime: f64,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Everything measured during one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub records: Vec<IterRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub conv_staleness: StalenessStats,
+    pub fc_staleness: StalenessStats,
+    /// Virtual time at the end of the run.
+    pub virtual_time: f64,
+    /// Real wall-clock seconds the run took on this box.
+    pub wallclock_secs: f64,
+    pub runtime_stats: RuntimeStats,
+    /// Projection of the conv parameters onto a fixed random direction,
+    /// per publish — the trajectory Fig 6's momentum fit runs on.
+    pub proj_trace: Vec<f64>,
+    pub groups: usize,
+    pub group_size: usize,
+}
+
+impl TrainReport {
+    /// Mean training loss over the last `w` iterations (smoothed final
+    /// loss — the grid search's selection criterion).
+    pub fn final_loss(&self, w: usize) -> f32 {
+        let n = self.records.len();
+        if n == 0 {
+            return f32::INFINITY;
+        }
+        let lo = n.saturating_sub(w.max(1));
+        let tail = &self.records[lo..];
+        let s: f32 = tail.iter().map(|r| r.loss).sum();
+        let mean = s / tail.len() as f32;
+        if mean.is_finite() {
+            mean
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Mean training accuracy over the last `w` iterations.
+    pub fn final_acc(&self, w: usize) -> f32 {
+        let n = self.records.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let lo = n.saturating_sub(w.max(1));
+        let tail = &self.records[lo..];
+        tail.iter().map(|r| r.acc).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Number of iterations until the smoothed (window `w`) training
+    /// accuracy first reaches `target` — statistical efficiency.
+    pub fn iters_to_accuracy(&self, target: f32, w: usize) -> Option<u64> {
+        self.index_at_accuracy(target, w).map(|i| self.records[i].seq + 1)
+    }
+
+    /// Virtual time until the smoothed training accuracy reaches
+    /// `target` — the paper's wall-clock-to-accuracy metric.
+    pub fn time_to_accuracy(&self, target: f32, w: usize) -> Option<f64> {
+        self.index_at_accuracy(target, w).map(|i| self.records[i].vtime)
+    }
+
+    fn index_at_accuracy(&self, target: f32, w: usize) -> Option<usize> {
+        let w = w.max(1);
+        let mut sum = 0.0f32;
+        for (i, r) in self.records.iter().enumerate() {
+            sum += r.acc;
+            if i >= w {
+                sum -= self.records[i - w].acc;
+            }
+            let count = (i + 1).min(w) as f32;
+            if i + 1 >= w && sum / count >= target {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Mean virtual time per iteration — hardware efficiency.
+    pub fn mean_iter_time(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.virtual_time / self.records.len() as f64
+    }
+
+    /// Whether training diverged (non-finite or exploding loss).
+    pub fn diverged(&self) -> bool {
+        self.records
+            .iter()
+            .rev()
+            .take(16)
+            .any(|r| !r.loss.is_finite() || r.loss > 1e4)
+    }
+
+    /// Dump iteration records as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("seq,group,vtime,loss,acc,conv_staleness,fc_staleness\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.4},{},{}\n",
+                r.seq, r.group, r.vtime, r.loss, r.acc, r.conv_staleness, r.fc_staleness
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, vtime: f64, loss: f32, acc: f32) -> IterRecord {
+        IterRecord { seq, group: 0, vtime, loss, acc, conv_staleness: 0, fc_staleness: 0 }
+    }
+
+    fn report(accs: &[f32]) -> TrainReport {
+        TrainReport {
+            records: accs
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| rec(i as u64, i as f64, 1.0 - a, a))
+                .collect(),
+            virtual_time: accs.len() as f64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn final_loss_windows() {
+        let r = report(&[0.0, 0.5, 1.0]);
+        assert!((r.final_loss(1) - 0.0).abs() < 1e-6);
+        assert!((r.final_loss(2) - 0.25).abs() < 1e-6);
+        assert_eq!(TrainReport::default().final_loss(5), f32::INFINITY);
+    }
+
+    #[test]
+    fn iters_to_accuracy_smoothed() {
+        let r = report(&[0.0, 0.9, 0.9, 0.9]);
+        // window 2: mean hits 0.9 at index 2 (0.9,0.9) -> seq 2 -> 3 iters
+        assert_eq!(r.iters_to_accuracy(0.9, 2), Some(3));
+        assert_eq!(r.iters_to_accuracy(0.99, 2), None);
+        assert_eq!(r.time_to_accuracy(0.9, 2), Some(2.0));
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut r = report(&[0.5; 4]);
+        assert!(!r.diverged());
+        r.records.push(rec(4, 4.0, f32::NAN, 0.0));
+        assert!(r.diverged());
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = report(&[0.1, 0.2]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("seq,group,vtime"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,315 @@
+//! The simulated-time training engine.
+//!
+//! A discrete-event loop advances a virtual clock over the modeled
+//! cluster (paper Fig 9 specs) while every gradient is computed for real
+//! via the PJRT artifacts. Events per group iteration:
+//!
+//! ```text
+//! StartIter ──t_conv_fwd──▶ FcArrive ──(FIFO queue)── FcDone
+//!      ▲                                                │ t_conv_bwd
+//!      └────────────────── BwdDone ◀────────────────────┘
+//! ```
+//!
+//! Model reads happen at `StartIter` processing time and publishes at
+//! `FcDone`/`BwdDone` processing time; because events are processed in
+//! virtual-time order, the staleness pattern is *exactly* what the
+//! modeled cluster would produce (merged FC staleness ≡ 0 falls out of
+//! FIFO service, and conv staleness → g−1 in steady state).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::host_xent;
+use super::report::{EvalRecord, IterRecord, TrainReport};
+use crate::config::TrainConfig;
+use crate::coordinator::{ConvFwdState, Topology};
+use crate::data::SyntheticDataset;
+use crate::model::ParamSet;
+use crate::optimizer::he_model::HeParams;
+use crate::runtime::{to_literal, Runtime};
+use crate::sim::{ServiceDist, TimingModel};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// Engine knobs beyond the train config.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Evaluate on the held-out batch every this many iterations (0 = never).
+    pub eval_every: usize,
+    /// Assumed device utilization for the HE derivation (paper Fig 3 ~0.5).
+    pub utilization: f64,
+    /// Service-time noise model.
+    pub dist: ServiceDist,
+    /// Record the parameter projection trace for momentum fitting.
+    pub record_proj: bool,
+    /// Stop early once smoothed (window 32) train accuracy reaches this.
+    pub stop_at_train_acc: Option<f32>,
+    /// Stop after this much virtual time (seconds), if set.
+    pub max_virtual_time: Option<f64>,
+    /// Override the derived HE parameters (measured-timing runs).
+    pub he_override: Option<HeParams>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            eval_every: 0,
+            utilization: 0.5,
+            dist: ServiceDist::Lognormal { cv: 0.06 },
+            record_proj: false,
+            stop_at_train_acc: None,
+            max_virtual_time: None,
+            he_override: None,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EventKind {
+    StartIter,
+    FcArrive,
+    FcDone,
+    BwdDone,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    group: usize,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Default)]
+struct GroupState {
+    fwd: Option<ConvFwdState>,
+    g_act: Option<HostTensor>,
+    fc_loss: f32,
+    fc_acc: f32,
+    fc_staleness: u64,
+}
+
+/// The simulated-time engine.
+pub struct SimTimeEngine<'a> {
+    rt: &'a Runtime,
+    cfg: TrainConfig,
+    opts: EngineOptions,
+}
+
+impl<'a> SimTimeEngine<'a> {
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig, opts: EngineOptions) -> Self {
+        Self { rt, cfg, opts }
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// HE/timing model this run will use.
+    pub fn timing(&self) -> Result<TimingModel> {
+        let arch = self.rt.manifest().arch(&self.cfg.arch)?;
+        let he = self.opts.he_override.unwrap_or_else(|| {
+            HeParams::derive(&self.cfg.cluster, arch, self.cfg.batch, self.opts.utilization)
+        });
+        Ok(TimingModel::new(he, self.opts.dist))
+    }
+
+    /// Train for `cfg.steps` group iterations starting from `init`.
+    pub fn run(&self, init: ParamSet) -> Result<TrainReport> {
+        Ok(self.run_with_params(init)?.0)
+    }
+
+    /// Train and also return the final parameters (Algorithm 1 epochs
+    /// continue from the same model across grid-search probes).
+    pub fn run_with_params(&self, init: ParamSet) -> Result<(TrainReport, ParamSet)> {
+        let topo = Topology::build(&self.cfg, self.rt, init)?;
+        let report = self.run_topology(&topo)?;
+        Ok((report, topo.current_params()))
+    }
+
+    /// The event loop proper, over a pre-built topology.
+    pub fn run_topology(&self, topo: &Topology) -> Result<TrainReport> {
+        let wall0 = Instant::now();
+        let timing = self.timing()?;
+        let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
+        let g = topo.groups.len();
+        let k = topo.k;
+        let mut rng = Rng::seed_from_u64(self.cfg.seed ^ 0x00e7_617e);
+        // Fixed ±1 projection direction for the momentum trace.
+        let proj_dir: Vec<f32> = {
+            let mut r = Rng::seed_from_u64(0x9a07);
+            let n: usize = topo.conv_ps.read().params.iter().map(|t| t.len()).sum();
+            (0..n).map(|_| if r.bool() { 1.0 } else { -1.0 }).collect()
+        };
+
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        macro_rules! push {
+            ($time:expr, $group:expr, $kind:expr) => {{
+                heap.push(Reverse(Event { time: $time, seq, group: $group, kind: $kind }));
+                seq += 1;
+            }};
+        }
+        for gi in 0..g {
+            push!(0.0, gi, EventKind::StartIter);
+        }
+        let mut states: Vec<GroupState> = (0..g).map(|_| GroupState::default()).collect();
+        let mut fc_free = 0.0f64;
+        let mut batch_counter = self.cfg.seed << 20; // distinct data stream per seed
+        let mut completed = 0u64;
+        let mut report = TrainReport { groups: g, group_size: k, ..Default::default() };
+        let mut acc_window: Vec<f32> = vec![];
+        let mut stop = false;
+
+        while let Some(Reverse(ev)) = heap.pop() {
+            if stop && ev.kind == EventKind::StartIter {
+                continue;
+            }
+            let gi = ev.group;
+            match ev.kind {
+                EventKind::StartIter => {
+                    // Read models NOW (virtual-time ordered) + conv fwd.
+                    let batch = data.batch(batch_counter, self.cfg.batch);
+                    batch_counter += 1;
+                    let st = topo.groups[gi].conv_forward(
+                        self.rt,
+                        &batch.images,
+                        &batch.labels,
+                        &topo.fc,
+                    )?;
+                    states[gi].fwd = Some(st);
+                    let d = timing.sample_conv_fwd_group(k, &mut rng);
+                    push!(ev.time + d, gi, EventKind::FcArrive);
+                }
+                EventKind::FcArrive => {
+                    // FIFO FC queue (the merged FC server is one machine).
+                    let fc_start = fc_free.max(ev.time);
+                    let d = timing.sample_fc(&mut rng);
+                    fc_free = fc_start + d;
+                    push!(fc_free, gi, EventKind::FcDone);
+                }
+                EventKind::FcDone => {
+                    let st = states[gi].fwd.as_ref().expect("fwd state set at StartIter");
+                    let out = topo.fc.step(
+                        self.rt,
+                        &st.activations,
+                        &st.labels,
+                        st.fc_snapshot.clone(),
+                    )?;
+                    states[gi].fc_loss = out.loss;
+                    states[gi].fc_acc = out.acc;
+                    states[gi].fc_staleness = out.staleness;
+                    states[gi].g_act = Some(out.g_act);
+                    let d = timing.sample_conv_bwd_group(k, &mut rng);
+                    push!(ev.time + d, gi, EventKind::BwdDone);
+                }
+                EventKind::BwdDone => {
+                    let st = states[gi].fwd.take().expect("fwd state");
+                    let g_act = states[gi].g_act.take().expect("g_act");
+                    let conv_staleness =
+                        topo.groups[gi].conv_backward_publish(self.rt, &st, &g_act)?;
+                    report.records.push(IterRecord {
+                        seq: completed,
+                        group: gi,
+                        vtime: ev.time,
+                        loss: states[gi].fc_loss,
+                        acc: states[gi].fc_acc,
+                        conv_staleness,
+                        fc_staleness: states[gi].fc_staleness,
+                    });
+                    report.virtual_time = ev.time;
+                    completed += 1;
+                    if self.opts.record_proj {
+                        report.proj_trace.push(project(&topo, &proj_dir));
+                    }
+                    if self.opts.eval_every > 0
+                        && completed % self.opts.eval_every as u64 == 0
+                    {
+                        let (l, a) = self.evaluate(topo, &data)?;
+                        report.evals.push(EvalRecord {
+                            seq: completed,
+                            vtime: ev.time,
+                            loss: l,
+                            acc: a,
+                        });
+                    }
+                    if let Some(target) = self.opts.stop_at_train_acc {
+                        acc_window.push(states[gi].fc_acc);
+                        let w = 32.min(acc_window.len());
+                        let m: f32 = acc_window[acc_window.len() - w..]
+                            .iter()
+                            .sum::<f32>()
+                            / w as f32;
+                        if acc_window.len() >= 32 && m >= target {
+                            stop = true;
+                        }
+                    }
+                    if !states[gi].fc_loss.is_finite() || states[gi].fc_loss > 1e4 {
+                        stop = true; // diverged: stop scheduling new work
+                    }
+                    if let Some(tmax) = self.opts.max_virtual_time {
+                        if ev.time >= tmax {
+                            stop = true;
+                        }
+                    }
+                    if completed < self.cfg.steps as u64 && !stop {
+                        push!(ev.time, gi, EventKind::StartIter);
+                    }
+                }
+            }
+        }
+
+        report.conv_staleness = topo.conv_ps.staleness_stats();
+        report.fc_staleness = topo.fc.param_server().staleness_stats();
+        report.wallclock_secs = wall0.elapsed().as_secs_f64();
+        report.runtime_stats = self.rt.stats();
+        Ok(report)
+    }
+
+    fn evaluate(&self, topo: &Topology, data: &SyntheticDataset) -> Result<(f32, f32)> {
+        let eval = data.eval_batch(self.cfg.batch);
+        let params = topo.current_params();
+        let name =
+            format!("{}_{}_infer_b{}", self.cfg.arch, self.cfg.variant, self.cfg.batch);
+        let mut lits = vec![to_literal(&eval.images)?];
+        for t in params.tensors() {
+            lits.push(to_literal(t)?);
+        }
+        let outs = self.rt.execute_literals(&name, &lits)?;
+        let logits = crate::runtime::from_literal(&outs[0])?;
+        Ok(host_xent(&logits, &eval.labels))
+    }
+}
+
+fn project(topo: &Topology, dir: &[f32]) -> f64 {
+    let snap = topo.conv_ps.read();
+    let mut dot = 0.0f64;
+    let mut off = 0;
+    for t in &snap.params {
+        for (x, s) in t.data().iter().zip(&dir[off..off + t.len()]) {
+            dot += (*x as f64) * (*s as f64);
+        }
+        off += t.len();
+    }
+    dot
+}

@@ -1,0 +1,109 @@
+//! Real-thread engine: one OS thread per compute group, genuinely racing
+//! on the shared parameter servers — the wall-clock demonstration that
+//! the coordinator's semantics (staleness, merged-FC serialization) hold
+//! outside the simulated clock. PJRT CPU execution is thread-safe (see
+//! runtime/mod.rs); the merged FC server serializes itself internally.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::report::{IterRecord, TrainReport};
+use crate::config::TrainConfig;
+use crate::coordinator::Topology;
+use crate::data::SyntheticDataset;
+use crate::model::ParamSet;
+use crate::runtime::Runtime;
+
+/// Real-thread training engine.
+pub struct ThreadedEngine<'a> {
+    rt: &'a Runtime,
+    cfg: TrainConfig,
+}
+
+impl<'a> ThreadedEngine<'a> {
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig) -> Self {
+        Self { rt, cfg }
+    }
+
+    /// Run `cfg.steps` iterations across `g` concurrent group threads.
+    pub fn run(&self, init: ParamSet) -> Result<TrainReport> {
+        let topo = Topology::build(&self.cfg, self.rt, init)?;
+        let g = topo.groups.len();
+        let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
+        let wall0 = Instant::now();
+        let batch_counter = AtomicU64::new(self.cfg.seed << 20);
+        let completed = AtomicU64::new(0);
+        let failed = AtomicBool::new(false);
+        let records: Mutex<Vec<IterRecord>> = Mutex::new(vec![]);
+        let steps = self.cfg.steps as u64;
+
+        std::thread::scope(|scope| {
+            for group in &topo.groups {
+                let rt = self.rt;
+                let fc = &topo.fc;
+                let data = &data;
+                let batch_counter = &batch_counter;
+                let completed = &completed;
+                let failed = &failed;
+                let records = &records;
+                let cfg = &self.cfg;
+                scope.spawn(move || {
+                    loop {
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // Claim an iteration slot.
+                        let slot = completed.fetch_add(1, Ordering::Relaxed);
+                        if slot >= steps {
+                            break;
+                        }
+                        let bi = batch_counter.fetch_add(1, Ordering::Relaxed);
+                        let batch = data.batch(bi, cfg.batch);
+                        match group.step(rt, fc, &batch.images, &batch.labels) {
+                            Ok(out) => {
+                                let mut recs = records.lock().unwrap();
+                                let seq = recs.len() as u64;
+                                recs.push(IterRecord {
+                                    seq,
+                                    group: group.id,
+                                    vtime: wall0.elapsed().as_secs_f64(),
+                                    loss: out.loss,
+                                    acc: out.acc,
+                                    conv_staleness: out.conv_staleness,
+                                    fc_staleness: out.fc_staleness,
+                                });
+                            }
+                            Err(_) => {
+                                failed.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        anyhow::ensure!(!failed.load(Ordering::Relaxed), "a group thread failed");
+        let mut records = records.into_inner().unwrap();
+        records.sort_by(|a, b| a.vtime.total_cmp(&b.vtime));
+        for (i, r) in records.iter_mut().enumerate() {
+            r.seq = i as u64;
+        }
+        let virtual_time = records.last().map(|r| r.vtime).unwrap_or(0.0);
+        Ok(TrainReport {
+            records,
+            evals: vec![],
+            conv_staleness: topo.conv_ps.staleness_stats(),
+            fc_staleness: topo.fc.param_server().staleness_stats(),
+            virtual_time,
+            wallclock_secs: wall0.elapsed().as_secs_f64(),
+            runtime_stats: self.rt.stats(),
+            proj_trace: vec![],
+            groups: g,
+            group_size: topo.k,
+        })
+    }
+}

@@ -1,0 +1,41 @@
+//! # Omnivore — a reproduction of Hadjis et al. (2016)
+//!
+//! *"Omnivore: An Optimizer for Multi-device Deep Learning on CPUs and
+//! GPUs"* rebuilt as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (Pallas, build time): lowering + batched-GEMM convolution with
+//!   the `b_p` knob — the paper's single-device contribution.
+//! * **L2** (JAX, build time): the two-phase CNN (conv phase / FC phase)
+//!   lowered to HLO-text artifacts in `artifacts/`.
+//! * **L3** (this crate, request path): compute groups, conv/FC parameter
+//!   servers with merged-FC physical mapping, asynchronous execution with
+//!   measured staleness, the analytic hardware-efficiency model, the
+//!   implicit-momentum statistical-efficiency model (Theorem 1), and the
+//!   automatic optimizer (Algorithm 1) plus a Bayesian baseline.
+//!
+//! Python never runs on the training path: the Rust binary loads the AOT
+//! artifacts via the PJRT C API (`xla` crate) and owns the entire
+//! training loop, parameter updates (momentum SGD, paper eq. (3)–(4)),
+//! scheduling, and optimization.
+//!
+//! Entry points: [`engine::SimTimeEngine`] (deterministic simulated-time
+//! async trainer), [`engine::ThreadedEngine`] (real OS-thread groups),
+//! [`optimizer::algorithm1::AutoOptimizer`] (the paper's Algorithm 1),
+//! and the `omnivore` CLI (`rust/src/main.rs`).
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod optimizer;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+pub use config::{ClusterSpec, Hyper, Strategy, TrainConfig};
+pub use engine::{SimTimeEngine, TrainReport};
+pub use runtime::Runtime;

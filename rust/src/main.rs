@@ -1,0 +1,317 @@
+//! `omnivore` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//! * `train`    — one training run at an explicit strategy.
+//! * `optimize` — the full automatic optimizer (Algorithm 1).
+//! * `sweep`    — HE/SE/total-time tradeoff across group counts (Fig 7).
+//! * `simulate` — timing-only cluster simulation (Fig 5b predicted vs
+//!   measured).
+//! * `bayesian` — compare Algorithm 1 against the GP-EI baseline.
+//! * `info`     — artifact/manifest inventory.
+//!
+//! Flag parsing is the in-repo `util::cli` (offline build, see DESIGN.md).
+
+use anyhow::Result;
+
+use omnivore::baselines::BaselineSystem;
+use omnivore::config::{cluster, FcMapping, Hyper, Strategy, TrainConfig};
+use omnivore::engine::{EngineOptions, SimTimeEngine, ThreadedEngine};
+use omnivore::metrics::{fmt_secs, Table};
+use omnivore::model::ParamSet;
+use omnivore::optimizer::bayesian::BayesianOptimizer;
+use omnivore::optimizer::{se_model, AutoOptimizer, EngineTrainer, HeParams};
+use omnivore::runtime::Runtime;
+use omnivore::sim::{predicted_vs_measured, ServiceDist};
+use omnivore::util::cli::Args;
+
+const USAGE: &str = "usage: omnivore [--artifacts DIR] <train|optimize|sweep|simulate|bayesian|info> [flags]
+  train:    --arch A --variant V --cluster C --groups G(-1=async,0=sync) --lr F --momentum F
+            --steps N --seed S [--unmerged-fc] [--threaded] [--baseline NAME] [--csv PATH] [--config FILE]
+  optimize: --arch A --variant V --cluster C --epochs N --epoch-steps N --seed S
+  sweep:    --arch A --variant V --cluster C --steps N --target-acc F --seed S
+  simulate: --arch A --cluster C --iters N
+  bayesian: --arch A --variant V --cluster C --configs N --seed S
+  info";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args.str("artifacts", "artifacts");
+    let Some(cmd) = args.subcommand.clone() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rt = Runtime::load(&artifacts)?;
+    match cmd.as_str() {
+        "train" => train(&rt, &args),
+        "optimize" => optimize(&rt, &args),
+        "sweep" => sweep(&rt, &args),
+        "simulate" => simulate(&rt, &args),
+        "bayesian" => bayesian(&rt, &args),
+        "info" => info(&rt, &args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cluster_arg(args: &Args, default: &str) -> Result<omnivore::config::ClusterSpec> {
+    let name = args.str("cluster", default);
+    cluster::preset(&name).ok_or_else(|| anyhow::anyhow!("unknown cluster preset {name:?}"))
+}
+
+fn train(rt: &Runtime, args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.opt_str("config") {
+        TrainConfig::from_json_file(&path)?
+    } else {
+        TrainConfig {
+            arch: args.str("arch", "caffenet8"),
+            variant: args.str("variant", "jnp"),
+            cluster: cluster_arg(args, "cpu-s")?,
+            strategy: match args.get("groups", 0i64)? {
+                0 => Strategy::Sync,
+                -1 => Strategy::Async,
+                g => Strategy::Groups(g as usize),
+            },
+            hyper: Hyper {
+                lr: args.get("lr", 0.01f32)?,
+                momentum: args.get("momentum", 0.9f32)?,
+                ..Hyper::default()
+            },
+            steps: args.get("steps", 256usize)?,
+            seed: args.get("seed", 0u64)?,
+            fc_mapping: if args.switch("unmerged-fc") {
+                FcMapping::Unmerged
+            } else {
+                FcMapping::Merged
+            },
+            ..TrainConfig::default()
+        }
+    };
+    if let Some(b) = args.opt_str("baseline") {
+        let system = match b.as_str() {
+            "mxnet-sync" => BaselineSystem::MxnetSync,
+            "mxnet-async" => BaselineSystem::MxnetAsync,
+            "caffe" => BaselineSystem::CaffeSingle,
+            "omnivore" => BaselineSystem::Omnivore,
+            other => anyhow::bail!("unknown baseline {other:?}"),
+        };
+        cfg = system.config(&cfg);
+    }
+    let threaded = args.switch("threaded");
+    let csv = args.opt_str("csv");
+    args.finish()?;
+
+    let arch_info = rt.manifest().arch(&cfg.arch)?;
+    let init = ParamSet::init(arch_info, cfg.seed);
+    let report = if threaded {
+        ThreadedEngine::new(rt, cfg.clone()).run(init)?
+    } else {
+        let opts = EngineOptions { eval_every: 64, ..Default::default() };
+        SimTimeEngine::new(rt, cfg.clone(), opts).run(init)?
+    };
+    println!(
+        "run: g={} k={} steps={} | final loss {:.4} acc {:.3} | {} virtual ({} wall) | staleness conv {:.2} fc {:.2}",
+        report.groups,
+        report.group_size,
+        report.records.len(),
+        report.final_loss(32),
+        report.final_acc(32),
+        fmt_secs(report.virtual_time),
+        fmt_secs(report.wallclock_secs),
+        report.conv_staleness.mean(),
+        report.fc_staleness.mean(),
+    );
+    let stats = report.runtime_stats;
+    println!(
+        "runtime: {} executions, {} in XLA, {} compiling",
+        stats.executions,
+        fmt_secs(stats.execute_secs),
+        fmt_secs(stats.compile_secs)
+    );
+    if let Some(path) = csv {
+        std::fs::write(&path, report.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
+    let arch = args.str("arch", "caffenet8");
+    let base = TrainConfig {
+        arch: arch.clone(),
+        variant: args.str("variant", "jnp"),
+        cluster: cluster_arg(args, "cpu-l")?,
+        seed: args.get("seed", 0u64)?,
+        ..TrainConfig::default()
+    };
+    let epochs = args.get("epochs", 2usize)?;
+    let epoch_steps = args.get("epoch-steps", 256usize)?;
+    args.finish()?;
+
+    let arch_info = rt.manifest().arch(&arch)?;
+    let he = HeParams::derive(&base.cluster, arch_info, base.batch, 0.5);
+    println!(
+        "HE model: t_cc={} t_nc={} t_fc={} | FC saturates at g={}",
+        fmt_secs(he.t_cc),
+        fmt_secs(he.t_nc),
+        fmt_secs(he.t_fc),
+        he.smallest_saturating_g(base.conv_machines())
+    );
+    let init = ParamSet::init(arch_info, base.seed);
+    let mut trainer = EngineTrainer { rt, base, opts: EngineOptions::default() };
+    let opt = AutoOptimizer { epochs, epoch_steps, ..Default::default() };
+    let (trace, _params) = opt.run(&mut trainer, init, &he)?;
+    if let Some(h) = trace.cold_start_hyper {
+        println!("cold start: eta={} mu={}", h.lr, h.momentum);
+    }
+    let mut t = Table::new(&["epoch", "g", "mu", "eta", "loss", "acc"]);
+    for e in &trace.epochs {
+        t.row(&[
+            e.epoch.to_string(),
+            e.g.to_string(),
+            format!("{:.2}", e.hyper.momentum),
+            format!("{:.5}", e.hyper.lr),
+            format!("{:.4}", e.final_loss),
+            format!("{:.3}", e.final_acc),
+        ]);
+    }
+    t.print();
+    println!("probe overhead: {} iterations", trace.probe_overhead_iters);
+    Ok(())
+}
+
+fn sweep(rt: &Runtime, args: &Args) -> Result<()> {
+    let arch = args.str("arch", "caffenet8");
+    let variant = args.str("variant", "jnp");
+    let cluster = cluster_arg(args, "cpu-l")?;
+    let steps = args.get("steps", 192usize)?;
+    let target_acc = args.get("target-acc", 0.85f32)?;
+    let seed = args.get("seed", 0u64)?;
+    args.finish()?;
+
+    let n = cluster.machines - 1;
+    let arch_info = rt.manifest().arch(&arch)?;
+    let mut t =
+        Table::new(&["g", "mu*", "time/iter", "iters->acc", "time->acc", "staleness"]);
+    let mut g = 1;
+    while g <= n {
+        let cfg = TrainConfig {
+            arch: arch.clone(),
+            variant: variant.clone(),
+            cluster: cluster.clone(),
+            strategy: Strategy::Groups(g),
+            hyper: Hyper {
+                lr: 0.01,
+                momentum: se_model::compensated_momentum(0.9, g) as f32,
+                ..Hyper::default()
+            },
+            steps,
+            seed,
+            ..TrainConfig::default()
+        };
+        let init = ParamSet::init(arch_info, seed);
+        let report = SimTimeEngine::new(rt, cfg.clone(), EngineOptions::default()).run(init)?;
+        t.row(&[
+            g.to_string(),
+            format!("{:.2}", cfg.hyper.momentum),
+            fmt_secs(report.mean_iter_time()),
+            report
+                .iters_to_accuracy(target_acc, 32)
+                .map(|i| i.to_string())
+                .unwrap_or_else(|| "-".into()),
+            report
+                .time_to_accuracy(target_acc, 32)
+                .map(fmt_secs)
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.2}", report.conv_staleness.mean()),
+        ]);
+        g *= 2;
+    }
+    t.print();
+    Ok(())
+}
+
+fn simulate(rt: &Runtime, args: &Args) -> Result<()> {
+    let arch = args.str("arch", "caffenet8");
+    let cluster = cluster_arg(args, "cpu-l")?;
+    let iters = args.get("iters", 400u64)?;
+    args.finish()?;
+
+    let arch_info = rt.manifest().arch(&arch)?;
+    let he = HeParams::derive(&cluster, arch_info, 32, 0.5);
+    let rows = predicted_vs_measured(
+        &he,
+        cluster.machines - 1,
+        ServiceDist::Lognormal { cv: 0.06 },
+        iters,
+        0,
+    );
+    let mut t = Table::new(&["g", "k", "predicted", "simulated", "ratio"]);
+    for (g, pred, meas) in rows {
+        t.row(&[
+            g.to_string(),
+            ((cluster.machines - 1) / g).to_string(),
+            fmt_secs(pred),
+            fmt_secs(meas),
+            format!("{:.3}", meas / pred),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn bayesian(rt: &Runtime, args: &Args) -> Result<()> {
+    let arch = args.str("arch", "caffenet8");
+    let base = TrainConfig {
+        arch: arch.clone(),
+        variant: args.str("variant", "jnp"),
+        cluster: cluster_arg(args, "cpu-s")?,
+        seed: args.get("seed", 0u64)?,
+        ..TrainConfig::default()
+    };
+    let configs = args.get("configs", 12usize)?;
+    args.finish()?;
+
+    let arch_info = rt.manifest().arch(&arch)?;
+    let he = HeParams::derive(&base.cluster, arch_info, base.batch, 0.5);
+    let init = ParamSet::init(arch_info, base.seed);
+
+    // Omnivore's optimizer first (its loss is the reference).
+    let mut trainer =
+        EngineTrainer { rt, base: base.clone(), opts: EngineOptions::default() };
+    let opt = AutoOptimizer { epochs: 1, epoch_steps: 128, ..Default::default() };
+    let (trace, _) = opt.run(&mut trainer, init.clone(), &he)?;
+    let reference = trace.epochs.last().map(|e| e.final_loss).unwrap_or(f32::INFINITY);
+    println!(
+        "omnivore: loss {reference:.4} in {} probes + 1 epoch",
+        trace.epochs.iter().map(|e| e.grid_probes).sum::<usize>()
+    );
+
+    let bo = BayesianOptimizer { max_configs: configs, ..Default::default() };
+    let bo_trace = bo.run(&mut trainer, &init, reference, 0.01)?;
+    println!(
+        "bayesian: best loss {:.4} in {} configs; within 1% of omnivore at config {}",
+        bo_trace.best.loss,
+        bo_trace.probes.len(),
+        bo_trace
+            .configs_to_near_optimal
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| "never".into()),
+    );
+    Ok(())
+}
+
+fn info(rt: &Runtime, args: &Args) -> Result<()> {
+    args.finish()?;
+    let m = rt.manifest();
+    println!("group batch: {}", m.group_batch);
+    for (name, a) in &m.archs {
+        println!(
+            "arch {name}: input {:?} ncls {} feat {} conv {} B fc {} B",
+            a.input, a.ncls, a.feat, a.conv_bytes, a.fc_bytes
+        );
+    }
+    println!("{} artifacts", m.artifacts.len());
+    Ok(())
+}

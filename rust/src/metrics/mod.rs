@@ -1,0 +1,154 @@
+//! Result series + table formatting shared by the CLI, examples, and
+//! benches: every paper figure regenerator prints through these so the
+//! output rows are uniform and machine-parseable.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A named (x, y) series — one curve of a paper figure.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.into(), points: vec![] }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// y at the largest x (the "final" value).
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    /// Smallest x at which y >= threshold (time-to-accuracy style).
+    pub fn first_x_reaching(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.1 >= threshold).map(|p| p.0)
+    }
+}
+
+/// Write multiple series as long-format CSV (series,x,y).
+pub fn series_to_csv(series: &[Series]) -> String {
+    let mut s = String::from("series,x,y\n");
+    for sr in series {
+        for (x, y) in &sr.points {
+            let _ = writeln!(s, "{},{},{}", sr.name, x, y);
+        }
+    }
+    s
+}
+
+/// Persist CSV next to the bench outputs.
+pub fn write_csv(series: &[Series], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, series_to_csv(series))?;
+    Ok(())
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(line, "{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format seconds compactly.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_queries() {
+        let mut s = Series::new("a");
+        s.push(0.0, 0.1);
+        s.push(1.0, 0.5);
+        s.push(2.0, 0.9);
+        assert_eq!(s.last_y(), Some(0.9));
+        assert_eq!(s.first_x_reaching(0.5), Some(1.0));
+        assert_eq!(s.first_x_reaching(0.95), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut s = Series::new("curve");
+        s.push(1.0, 2.0);
+        let csv = series_to_csv(&[s]);
+        assert_eq!(csv, "series,x,y\ncurve,1,2\n");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["g", "time"]);
+        t.row(&["1".into(), "10.0".into()]);
+        t.row(&["32".into(), "1.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("g"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.5), "500ms");
+        assert_eq!(fmt_secs(5.0), "5.00s");
+        assert_eq!(fmt_secs(300.0), "5.0min");
+    }
+}

@@ -1,0 +1,97 @@
+//! Checkpoint format: a tiny self-describing binary container
+//! (magic, n_conv, tensor count, then per tensor: rank, dims, f32 data).
+//! Written at every optimizer epoch boundary (Algorithm 1 line 8).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ParamSet;
+use crate::tensor::HostTensor;
+
+const MAGIC: &[u8; 8] = b"OMNIVCK1";
+
+/// Serialize a ParamSet to `path`.
+pub fn save_checkpoint(params: &ParamSet, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating checkpoint {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.n_conv() as u64).to_le_bytes())?;
+    f.write_all(&(params.tensors().len() as u64).to_le_bytes())?;
+    for t in params.tensors() {
+        f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Load a ParamSet from `path`.
+pub fn load_checkpoint(path: &Path) -> Result<ParamSet> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an omnivore checkpoint", path.display());
+    }
+    let n_conv = read_u64(&mut f)? as usize;
+    let n_tensors = read_u64(&mut f)? as usize;
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let rank = read_u64(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push(HostTensor::new(shape, data)?);
+    }
+    ParamSet::from_tensors(tensors, n_conv)
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t1 = HostTensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]).unwrap();
+        let t2 = HostTensor::new(vec![3], vec![9.0, 8.0, 7.0]).unwrap();
+        let p = ParamSet::from_tensors(vec![t1, t2], 1).unwrap();
+        let dir = crate::util::temp_dir("ckpt").unwrap();
+        let path = dir.join("ck.bin");
+        save_checkpoint(&p, &path).unwrap();
+        let p2 = load_checkpoint(&path).unwrap();
+        assert_eq!(p, p2);
+        assert_eq!(p2.n_conv(), 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::temp_dir("ckpt-bad").unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"notacheckpointfile").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

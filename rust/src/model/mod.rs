@@ -1,0 +1,163 @@
+//! Model parameter schema: the CNN's weights W = {W_conv, W_fc} as host
+//! tensors, split along the paper's two-phase boundary (conv phase models
+//! are small, FC phase models are large — Fig 1 / §II-C). Initialization
+//! matches the experiment setup in Appendix F-B (Gaussian 0/0.01 weights,
+//! zero biases). Checkpointing is the optimizer's epoch boundary
+//! (Algorithm 1 line 8: "the model is checkpointed").
+
+mod checkpoint;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+
+use anyhow::Result;
+
+use crate::runtime::ArchInfo;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// All parameters of a two-phase CNN, conv phase first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    tensors: Vec<HostTensor>,
+    n_conv: usize,
+}
+
+impl ParamSet {
+    /// Gaussian init std. The paper uses 0.01 for full-size CaffeNet; at
+    /// this repo's scaled dimensions 0.05 approximates He fan-in scaling
+    /// and avoids a needlessly long cold-start plateau (see DESIGN.md).
+    /// Must match python model.INIT_STD.
+    pub const INIT_STD: f32 = 0.05;
+
+    /// Paper-protocol init: weights ~ N(0, INIT_STD), biases 0.
+    pub fn init(arch: &ArchInfo, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let tensors = arch
+            .params
+            .iter()
+            .map(|p| {
+                if p.name.starts_with('w') {
+                    HostTensor::randn(&p.shape, Self::INIT_STD, &mut rng)
+                } else {
+                    HostTensor::zeros(&p.shape)
+                }
+            })
+            .collect();
+        Self { tensors, n_conv: arch.n_conv_params }
+    }
+
+    /// Zeros with the same schema (velocity / gradient accumulators).
+    pub fn zeros_like(other: &ParamSet) -> Self {
+        Self {
+            tensors: other.tensors.iter().map(|t| HostTensor::zeros(t.shape())).collect(),
+            n_conv: other.n_conv,
+        }
+    }
+
+    pub fn from_tensors(tensors: Vec<HostTensor>, n_conv: usize) -> Result<Self> {
+        anyhow::ensure!(n_conv <= tensors.len(), "n_conv out of range");
+        Ok(Self { tensors, n_conv })
+    }
+
+    pub fn tensors(&self) -> &[HostTensor] {
+        &self.tensors
+    }
+
+    pub fn tensors_mut(&mut self) -> &mut [HostTensor] {
+        &mut self.tensors
+    }
+
+    pub fn n_conv(&self) -> usize {
+        self.n_conv
+    }
+
+    /// Conv-phase parameters (small model, goes over the network).
+    pub fn conv(&self) -> &[HostTensor] {
+        &self.tensors[..self.n_conv]
+    }
+
+    /// FC-phase parameters (large model, pinned to the merged FC server).
+    pub fn fc(&self) -> &[HostTensor] {
+        &self.tensors[self.n_conv..]
+    }
+
+    /// Split into (conv, fc) halves, consuming self.
+    pub fn split(mut self) -> (Vec<HostTensor>, Vec<HostTensor>) {
+        let fc = self.tensors.split_off(self.n_conv);
+        (self.tensors, fc)
+    }
+
+    /// Total scalar parameter count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Flattened view for norm/diagnostic computations.
+    pub fn flat_iter(&self) -> impl Iterator<Item = f32> + '_ {
+        self.tensors.iter().flat_map(|t| t.data().iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn tiny_arch() -> ArchInfo {
+        ArchInfo::from_json(
+            &crate::util::json::Json::parse(
+                r#"{"input":[8,8,1],"ncls":2,"feat":32,"k":3,
+                "params":[{"name":"wc1","shape":[3,3,1,4]},{"name":"bc1","shape":[4]},
+                          {"name":"wf1","shape":[32,2]},{"name":"bf1","shape":[2]}],
+                "n_conv_params":2,"conv_bytes":160,"fc_bytes":264}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_schema() {
+        let arch = tiny_arch();
+        let p = ParamSet::init(&arch, 7);
+        assert_eq!(p.tensors().len(), 4);
+        assert_eq!(p.conv().len(), 2);
+        assert_eq!(p.fc().len(), 2);
+        assert_eq!(p.num_params(), 36 + 4 + 64 + 2);
+        // biases zero, weights not all zero
+        assert!(p.tensors()[1].data().iter().all(|&x| x == 0.0));
+        assert!(p.tensors()[0].data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let arch = tiny_arch();
+        assert_eq!(ParamSet::init(&arch, 3), ParamSet::init(&arch, 3));
+        assert_ne!(ParamSet::init(&arch, 3), ParamSet::init(&arch, 4));
+    }
+
+    #[test]
+    fn zeros_like_matches() {
+        let arch = tiny_arch();
+        let p = ParamSet::init(&arch, 0);
+        let z = ParamSet::zeros_like(&p);
+        assert_eq!(z.num_params(), p.num_params());
+        assert!(z.flat_iter().all(|x| x == 0.0));
+    }
+
+    #[test]
+    fn split_halves() {
+        let arch = tiny_arch();
+        let p = ParamSet::init(&arch, 0);
+        let (c, f) = p.split();
+        assert_eq!(c.len(), 2);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn param_spec_shapes_flow_through() {
+        let arch = tiny_arch();
+        assert_eq!(arch.params[0].shape, vec![3, 3, 1, 4]);
+        assert_eq!(arch.params[0].name, "wc1");
+    }
+}

@@ -1,0 +1,346 @@
+//! Bayesian-optimization baseline (paper §VI-C2, after Snoek et al.):
+//! a Gaussian-process surrogate with an RBF kernel and expected-
+//! improvement acquisition over the (η, µ, g) space — the same search
+//! space as the paper's comparison. Used to reproduce the finding that
+//! the simple asynchrony-aware optimizer needs ~6× fewer epochs.
+
+use anyhow::Result;
+
+use super::Trainer;
+use crate::util::rng::Rng;
+use crate::config::Hyper;
+use crate::model::ParamSet;
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct BoProbe {
+    pub hyper: Hyper,
+    pub g: usize,
+    pub loss: f32,
+}
+
+/// Bayesian optimizer outcome.
+#[derive(Clone, Debug)]
+pub struct BoTrace {
+    pub probes: Vec<BoProbe>,
+    pub best: BoProbe,
+    /// Index (1-based config count) at which the run first came within
+    /// `tolerance` of `reference_loss` (None if never).
+    pub configs_to_near_optimal: Option<usize>,
+}
+
+/// GP + EI Bayesian optimizer.
+pub struct BayesianOptimizer {
+    pub n_init: usize,
+    pub max_configs: usize,
+    pub probe_steps: usize,
+    pub lambda: f32,
+    pub seed: u64,
+    /// RBF length scale in the normalized [0,1]^3 space.
+    pub length_scale: f64,
+    pub noise: f64,
+}
+
+impl Default for BayesianOptimizer {
+    fn default() -> Self {
+        Self {
+            n_init: 3,
+            max_configs: 16,
+            probe_steps: 48,
+            lambda: 5e-4,
+            seed: 0,
+            length_scale: 0.3,
+            noise: 1e-4,
+        }
+    }
+}
+
+impl BayesianOptimizer {
+    /// Run BO; `reference_loss` is the loss Omnivore's optimizer reached
+    /// (the paper measures #configs for BO to get within 1%).
+    pub fn run<T: Trainer>(
+        &self,
+        trainer: &mut T,
+        from: &ParamSet,
+        reference_loss: f32,
+        tolerance: f32,
+    ) -> Result<BoTrace> {
+        let n = trainer.n_machines();
+        let gmax_exp = (n as f64).log2().floor() as u32;
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0xbae5);
+        let mut xs: Vec<[f64; 3]> = vec![];
+        let mut ys: Vec<f64> = vec![];
+        let mut probes: Vec<BoProbe> = vec![];
+        let mut near_at = None;
+
+        let evaluate = |x: [f64; 3],
+                            trainer: &mut T,
+                            probes: &mut Vec<BoProbe>,
+                            near_at: &mut Option<usize>|
+         -> Result<f64> {
+            let (hyper, g) = decode(x, gmax_exp, self.lambda);
+            let (report, _) = trainer.train(g, hyper, self.probe_steps, from)?;
+            let loss = if report.diverged() { f32::INFINITY } else { report.final_loss(16) };
+            probes.push(BoProbe { hyper, g, loss });
+            if near_at.is_none() && loss <= reference_loss * (1.0 + tolerance) {
+                *near_at = Some(probes.len());
+            }
+            // Cap for GP stability; +inf (divergence) becomes a large loss.
+            Ok(loss.min(1e3) as f64)
+        };
+
+        // Initial random design.
+        for _ in 0..self.n_init.min(self.max_configs) {
+            let x = [rng.f64(), rng.f64(), rng.f64()];
+            let y = evaluate(x, trainer, &mut probes, &mut near_at)?;
+            xs.push(x);
+            ys.push(y);
+        }
+
+        while probes.len() < self.max_configs {
+            // Normalize targets for the GP.
+            let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+            let std = (ys.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / ys.len() as f64)
+                .sqrt()
+                .max(1e-9);
+            let yn: Vec<f64> = ys.iter().map(|y| (y - mean) / std).collect();
+            let gp = Gp::fit(&xs, &yn, self.length_scale, self.noise);
+            let y_best = yn.iter().cloned().fold(f64::INFINITY, f64::min);
+
+            // EI over a random candidate pool.
+            let mut best_x = [rng.f64(), rng.f64(), rng.f64()];
+            let mut best_ei = -1.0;
+            for _ in 0..256 {
+                let c = [rng.f64(), rng.f64(), rng.f64()];
+                let (m, v) = gp.predict(&c);
+                let ei = expected_improvement(y_best, m, v.sqrt());
+                if ei > best_ei {
+                    best_ei = ei;
+                    best_x = c;
+                }
+            }
+            let y = evaluate(best_x, trainer, &mut probes, &mut near_at)?;
+            xs.push(best_x);
+            ys.push(y);
+        }
+
+        let best = probes
+            .iter()
+            .min_by(|a, b| a.loss.total_cmp(&b.loss))
+            .expect("at least one probe")
+            .clone();
+        Ok(BoTrace { probes, best, configs_to_near_optimal: near_at })
+    }
+}
+
+/// Decode a normalized point to (Hyper, g): η log-uniform in [1e-5, 1e-1],
+/// µ in [0, 0.95], g a power of two in [1, n].
+fn decode(x: [f64; 3], gmax_exp: u32, lambda: f32) -> (Hyper, usize) {
+    let eta = 10f64.powf(-5.0 + 4.0 * x[0].clamp(0.0, 1.0)) as f32;
+    let mu = (0.95 * x[1].clamp(0.0, 1.0)) as f32;
+    let gexp = (x[2].clamp(0.0, 1.0) * gmax_exp as f64).round() as u32;
+    (Hyper { lr: eta, momentum: mu, lambda }, 1usize << gexp)
+}
+
+/// Minimal GP with RBF kernel (small n: direct Cholesky).
+struct Gp {
+    xs: Vec<[f64; 3]>,
+    chol: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    l2: f64,
+}
+
+impl Gp {
+    fn fit(xs: &[[f64; 3]], ys: &[f64], length_scale: f64, noise: f64) -> Self {
+        let n = xs.len();
+        let l2 = length_scale * length_scale;
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i][j] = rbf(&xs[i], &xs[j], l2);
+            }
+            k[i][i] += noise;
+        }
+        let chol = cholesky(&k);
+        let alpha = chol_solve(&chol, ys);
+        Self { xs: xs.to_vec(), chol, alpha, l2 }
+    }
+
+    /// Posterior mean and variance at a point.
+    fn predict(&self, x: &[f64; 3]) -> (f64, f64) {
+        let kx: Vec<f64> = self.xs.iter().map(|xi| rbf(xi, x, self.l2)).collect();
+        let mean: f64 = kx.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        let v = forward_sub(&self.chol, &kx);
+        let var = (1.0 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var)
+    }
+}
+
+fn rbf(a: &[f64; 3], b: &[f64; 3], l2: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (-d2 / (2.0 * l2)).exp()
+}
+
+/// Lower-triangular Cholesky factor of a PD matrix.
+fn cholesky(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let n = a.len();
+    let mut l = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                l[i][j] = s.max(1e-12).sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    l
+}
+
+fn forward_sub(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    y
+}
+
+fn back_sub(l: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    let n = y.len();
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+/// Solve (L L^T) x = b.
+fn chol_solve(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    back_sub(l, &forward_sub(l, b))
+}
+
+/// EI for minimization.
+fn expected_improvement(y_best: f64, mean: f64, std: f64) -> f64 {
+    if std < 1e-12 {
+        return (y_best - mean).max(0.0);
+    }
+    let z = (y_best - mean) / std;
+    (y_best - mean) * phi(z) + std * pdf(z)
+}
+
+fn pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via erf approximation (Abramowitz-Stegun 7.1.26).
+fn phi(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{IterRecord, TrainReport};
+
+    #[test]
+    fn cholesky_solves() {
+        // A = [[4,2],[2,3]], b = [1, 2] -> x = [-1/8, 3/4]
+        let a = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let l = cholesky(&a);
+        let x = chol_solve(&l, &[1.0, 2.0]);
+        assert!((x[0] + 0.125).abs() < 1e-9);
+        assert!((x[1] - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-4);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let xs = vec![[0.1, 0.1, 0.1], [0.9, 0.9, 0.9], [0.5, 0.2, 0.8]];
+        let ys = vec![1.0, -1.0, 0.3];
+        let gp = Gp::fit(&xs, &ys, 0.3, 1e-6);
+        for (x, y) in xs.iter().zip(&ys) {
+            let (m, v) = gp.predict(x);
+            assert!((m - y).abs() < 1e-2, "mean {m} vs {y}");
+            assert!(v < 1e-2);
+        }
+    }
+
+    #[test]
+    fn ei_positive_when_uncertain() {
+        assert!(expected_improvement(0.0, 0.0, 1.0) > 0.0);
+        assert!(expected_improvement(0.0, 5.0, 1e-13) == 0.0);
+    }
+
+    struct Quadratic;
+    impl Trainer for Quadratic {
+        fn train(
+            &mut self,
+            g: usize,
+            hyper: Hyper,
+            steps: usize,
+            from: &ParamSet,
+        ) -> Result<(TrainReport, ParamSet)> {
+            let loss = (hyper.lr.log10() + 2.0).powi(2)
+                + (hyper.momentum - 0.6).powi(2)
+                + ((g as f32).log2() - 2.0).powi(2) * 0.1;
+            let mut report = TrainReport::default();
+            for i in 0..steps as u64 {
+                report.records.push(IterRecord {
+                    seq: i,
+                    group: 0,
+                    vtime: i as f64,
+                    loss,
+                    acc: 0.0,
+                    conv_staleness: 0,
+                    fc_staleness: 0,
+                });
+            }
+            Ok((report, from.clone()))
+        }
+        fn n_machines(&self) -> usize {
+            32
+        }
+    }
+
+    #[test]
+    fn bo_improves_over_random_init() {
+        let bo = BayesianOptimizer { max_configs: 12, ..Default::default() };
+        let from = ParamSet::from_tensors(vec![], 0).unwrap();
+        let trace = bo.run(&mut Quadratic, &from, 0.0, 0.5).unwrap();
+        assert_eq!(trace.probes.len(), 12);
+        let init_best =
+            trace.probes[..3].iter().map(|p| p.loss).fold(f32::INFINITY, f32::min);
+        assert!(trace.best.loss <= init_best);
+    }
+}

@@ -1,0 +1,130 @@
+//! The cold-start controller (paper §IV-C "Cold-start" + Appendix E-D).
+//!
+//! The model "needs a few iterations to set the appropriate scale of the
+//! parameters", so the optimizer starts synchronously: a learning-rate
+//! line search at µ = 0.9 (standard for sync, no implicit momentum at
+//! S = 0), then a short synchronous warm-up. Only afterwards does
+//! Algorithm 1 open up asynchrony.
+
+use anyhow::Result;
+
+use super::{Trainer};
+use crate::config::Hyper;
+use crate::model::ParamSet;
+
+/// Cold-start outcome: warmed-up parameters + the sync-optimal η.
+#[derive(Debug)]
+pub struct ColdStart {
+    pub hyper: Hyper,
+    pub probes: Vec<(f32, f32)>, // (eta, loss)
+}
+
+/// η line search (highest to lowest, early-stop when loss worsens —
+/// Appendix E-D's procedure), then return the winner at µ = 0.9.
+pub fn eta_line_search<T: Trainer>(
+    trainer: &mut T,
+    from: &ParamSet,
+    etas: &[f32],
+    probe_steps: usize,
+    lambda: f32,
+) -> Result<ColdStart> {
+    let mut probes = vec![];
+    let mut best = (etas[0], f32::INFINITY);
+    let mut prev_loss = f32::INFINITY;
+    for &eta in etas {
+        let hyper = Hyper { lr: eta, momentum: 0.9, lambda };
+        let (report, _) = trainer.train(1, hyper, probe_steps, from)?;
+        let loss =
+            if report.diverged() { f32::INFINITY } else { report.final_loss(16) };
+        probes.push((eta, loss));
+        if loss < best.1 {
+            best = (eta, loss);
+        }
+        // Early stop: once a finite loss gets worse than the previous
+        // one, smaller η will not win either (paper's stop rule).
+        if loss.is_finite() && prev_loss.is_finite() && loss > prev_loss {
+            break;
+        }
+        prev_loss = loss;
+    }
+    Ok(ColdStart { hyper: Hyper { lr: best.0, momentum: 0.9, lambda }, probes })
+}
+
+/// Full cold start: η search + synchronous warm-up for `warmup_steps`.
+/// Returns the warmed parameters and the sync hyperparameters found.
+pub fn cold_start<T: Trainer>(
+    trainer: &mut T,
+    init: ParamSet,
+    warmup_steps: usize,
+    lambda: f32,
+) -> Result<(ParamSet, Hyper, ColdStart)> {
+    let etas = [0.1f32, 0.01, 0.001, 0.0001, 0.00001];
+    let cs = eta_line_search(trainer, &init, &etas, 32, lambda)?;
+    let (_, warmed) = trainer.train(1, cs.hyper, warmup_steps, &init)?;
+    Ok((warmed, cs.hyper, cs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{IterRecord, TrainReport};
+
+    /// Loss is |log10(eta) - log10(eta*)|; diverges above 0.05.
+    struct FakeTrainer {
+        eta_star: f32,
+        calls: Vec<f32>,
+    }
+
+    impl Trainer for FakeTrainer {
+        fn train(
+            &mut self,
+            _g: usize,
+            hyper: Hyper,
+            steps: usize,
+            from: &ParamSet,
+        ) -> Result<(TrainReport, ParamSet)> {
+            self.calls.push(hyper.lr);
+            let loss = if hyper.lr > 0.05 {
+                f32::INFINITY
+            } else {
+                (hyper.lr.log10() - self.eta_star.log10()).abs()
+            };
+            let mut report = TrainReport::default();
+            for i in 0..steps as u64 {
+                report.records.push(IterRecord {
+                    seq: i,
+                    group: 0,
+                    vtime: i as f64,
+                    loss,
+                    acc: 0.0,
+                    conv_staleness: 0,
+                    fc_staleness: 0,
+                });
+            }
+            Ok((report, from.clone()))
+        }
+
+        fn n_machines(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn finds_best_eta_with_early_stop() {
+        let mut t = FakeTrainer { eta_star: 0.01, calls: vec![] };
+        let init = ParamSet::from_tensors(vec![], 0).unwrap();
+        let (_, hyper, cs) = cold_start(&mut t, init, 4, 0.0).unwrap();
+        assert_eq!(hyper.lr, 0.01);
+        assert_eq!(hyper.momentum, 0.9);
+        // 0.1 diverges, 0.01 best, 0.001 worse -> stop (3 probes + warmup)
+        assert_eq!(cs.probes.len(), 3);
+    }
+
+    #[test]
+    fn survives_all_diverging_head() {
+        let mut t = FakeTrainer { eta_star: 0.00001, calls: vec![] };
+        let init = ParamSet::from_tensors(vec![], 0).unwrap();
+        let (_, hyper, _) = cold_start(&mut t, init, 2, 0.0).unwrap();
+        assert_eq!(hyper.lr, 0.00001);
+    }
+}

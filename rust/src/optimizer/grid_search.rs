@@ -1,0 +1,240 @@
+//! The (µ, η) adaptive grid search of Algorithm 1 / Appendix E-C.
+//!
+//! Probes run for a fixed short budget from the *current* model and are
+//! discarded; only the winning configuration's training is kept by the
+//! caller. Pruning rules from the paper:
+//! * search µ ∈ {0.0, 0.3, 0.6, 0.9}, η ∈ {η_last, η_last/10};
+//! * do not search µ > µ_last at η = η_last (optimal total momentum
+//!   decreases as the run progresses);
+//! * if the winner has µ* = 0, refine with µ ∈ {0.1, 0.2} — only if 0
+//!   still wins does the caller reduce g (Algorithm 1 line 4).
+
+use anyhow::Result;
+
+use super::Trainer;
+use crate::config::Hyper;
+use crate::model::ParamSet;
+
+/// Grid-search space and budget.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub momenta: Vec<f32>,
+    pub etas: Vec<f32>,
+    pub probe_steps: usize,
+    /// Smoothing window for the probe's final loss.
+    pub loss_window: usize,
+    /// Prune µ > µ_last at η = η_last (None disables).
+    pub mu_last: Option<f32>,
+    /// η_last for the pruning rule (defaults to etas[0]).
+    pub eta_last: Option<f32>,
+    pub lambda: f32,
+}
+
+impl GridSpec {
+    /// The paper's standard epoch search around the previous winner.
+    pub fn around(prev: Hyper) -> Self {
+        Self {
+            momenta: vec![0.0, 0.3, 0.6, 0.9],
+            etas: vec![prev.lr, prev.lr / 10.0],
+            probe_steps: 48,
+            loss_window: 16,
+            mu_last: Some(prev.momentum),
+            eta_last: Some(prev.lr),
+            lambda: prev.lambda,
+        }
+    }
+}
+
+/// Result of one grid search.
+#[derive(Clone, Debug)]
+pub struct GridOutcome {
+    pub best: Hyper,
+    pub best_loss: f32,
+    /// (hyper, loss) for every probe that ran.
+    pub probes: Vec<(Hyper, f32)>,
+}
+
+/// Run the grid search at a fixed number of compute groups `g`, starting
+/// every probe from `from`. Returns the winner by smoothed final loss
+/// (diverged probes lose automatically: loss = +inf).
+pub fn grid_search<T: Trainer>(
+    trainer: &mut T,
+    from: &ParamSet,
+    g: usize,
+    spec: &GridSpec,
+) -> Result<GridOutcome> {
+    let mut probes: Vec<(Hyper, f32)> = vec![];
+    for &eta in &spec.etas {
+        for &mu in &spec.momenta {
+            // Pruning rule: at η = η_last don't revisit µ above µ_last.
+            if let (Some(mu_last), Some(eta_last)) = (spec.mu_last, spec.eta_last) {
+                if (eta - eta_last).abs() < f32::EPSILON && mu > mu_last + 1e-6 {
+                    continue;
+                }
+            }
+            let hyper = Hyper { lr: eta, momentum: mu, lambda: spec.lambda };
+            let (report, _) = trainer.train(g, hyper, spec.probe_steps, from)?;
+            let loss = if report.diverged() {
+                f32::INFINITY
+            } else {
+                report.final_loss(spec.loss_window)
+            };
+            probes.push((hyper, loss));
+        }
+    }
+    let (mut best, mut best_loss) = pick_best(&probes);
+
+    // µ* = 0 refinement: try 0.1 and 0.2 before concluding that the
+    // implicit momentum is already too high (Appendix E-C).
+    if best.momentum == 0.0 {
+        for mu in [0.1f32, 0.2] {
+            let hyper = Hyper { lr: best.lr, momentum: mu, lambda: spec.lambda };
+            let (report, _) = trainer.train(g, hyper, spec.probe_steps, from)?;
+            let loss = if report.diverged() {
+                f32::INFINITY
+            } else {
+                report.final_loss(spec.loss_window)
+            };
+            probes.push((hyper, loss));
+            if loss < best_loss {
+                best = hyper;
+                best_loss = loss;
+            }
+        }
+    }
+    Ok(GridOutcome { best, best_loss, probes })
+}
+
+fn pick_best(probes: &[(Hyper, f32)]) -> (Hyper, f32) {
+    probes
+        .iter()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(h, l)| (*h, *l))
+        .expect("at least one probe ran")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{IterRecord, TrainReport};
+
+    /// Synthetic trainer whose loss landscape is minimized at a known
+    /// (µ*, η*); loss = (µ-µ*)² + (log10 η - log10 η*)².
+    struct FakeTrainer {
+        mu_star: f32,
+        eta_star: f32,
+        calls: usize,
+        diverge_above_eta: f32,
+    }
+
+    impl Trainer for FakeTrainer {
+        fn train(
+            &mut self,
+            _g: usize,
+            hyper: Hyper,
+            steps: usize,
+            from: &ParamSet,
+        ) -> Result<(TrainReport, ParamSet)> {
+            self.calls += 1;
+            let loss = if hyper.lr > self.diverge_above_eta {
+                f32::NAN
+            } else {
+                (hyper.momentum - self.mu_star).powi(2)
+                    + (hyper.lr.log10() - self.eta_star.log10()).powi(2)
+            };
+            let mut report = TrainReport::default();
+            for i in 0..steps as u64 {
+                report.records.push(IterRecord {
+                    seq: i,
+                    group: 0,
+                    vtime: i as f64,
+                    loss,
+                    acc: 0.0,
+                    conv_staleness: 0,
+                    fc_staleness: 0,
+                });
+            }
+            report.virtual_time = steps as f64;
+            Ok((report, from.clone()))
+        }
+
+        fn n_machines(&self) -> usize {
+            32
+        }
+    }
+
+    fn empty_params() -> ParamSet {
+        ParamSet::from_tensors(vec![], 0).unwrap()
+    }
+
+    #[test]
+    fn finds_known_optimum() {
+        let mut t = FakeTrainer { mu_star: 0.6, eta_star: 0.01, calls: 0, diverge_above_eta: 1.0 };
+        let spec = GridSpec {
+            momenta: vec![0.0, 0.3, 0.6, 0.9],
+            etas: vec![0.01, 0.001],
+            probe_steps: 4,
+            loss_window: 2,
+            mu_last: None,
+            eta_last: None,
+            lambda: 0.0,
+        };
+        let out = grid_search(&mut t, &empty_params(), 4, &spec).unwrap();
+        assert_eq!(out.best.momentum, 0.6);
+        assert_eq!(out.best.lr, 0.01);
+        assert_eq!(out.probes.len(), 8);
+    }
+
+    #[test]
+    fn pruning_skips_high_momentum_at_eta_last() {
+        let mut t = FakeTrainer { mu_star: 0.0, eta_star: 0.01, calls: 0, diverge_above_eta: 1.0 };
+        let spec = GridSpec {
+            momenta: vec![0.0, 0.3, 0.6, 0.9],
+            etas: vec![0.01, 0.001],
+            probe_steps: 2,
+            loss_window: 1,
+            mu_last: Some(0.3),
+            eta_last: Some(0.01),
+            lambda: 0.0,
+        };
+        let out = grid_search(&mut t, &empty_params(), 4, &spec).unwrap();
+        // at eta 0.01: mu in {0, .3} only (2 probes); at 0.001: all 4;
+        // winner mu=0 triggers refinement probes {0.1, 0.2}: total 8.
+        assert_eq!(out.probes.len(), 8);
+        assert_eq!(out.best.momentum, 0.0);
+    }
+
+    #[test]
+    fn diverged_probes_never_win() {
+        let mut t = FakeTrainer { mu_star: 0.9, eta_star: 0.1, calls: 0, diverge_above_eta: 0.05 };
+        let spec = GridSpec {
+            momenta: vec![0.9],
+            etas: vec![0.1, 0.01], // 0.1 diverges even though it's "optimal"
+            probe_steps: 2,
+            loss_window: 1,
+            mu_last: None,
+            eta_last: None,
+            lambda: 0.0,
+        };
+        let out = grid_search(&mut t, &empty_params(), 1, &spec).unwrap();
+        assert_eq!(out.best.lr, 0.01);
+        assert!(out.best_loss.is_finite());
+    }
+
+    #[test]
+    fn zero_momentum_winner_gets_refined() {
+        // µ* = 0.15: coarse grid picks 0.0 or 0.3, refinement should land 0.1/0.2.
+        let mut t = FakeTrainer { mu_star: 0.15, eta_star: 0.01, calls: 0, diverge_above_eta: 1.0 };
+        let spec = GridSpec {
+            momenta: vec![0.0, 0.3, 0.6, 0.9],
+            etas: vec![0.01],
+            probe_steps: 2,
+            loss_window: 1,
+            mu_last: None,
+            eta_last: None,
+            lambda: 0.0,
+        };
+        let out = grid_search(&mut t, &empty_params(), 4, &spec).unwrap();
+        assert!(out.best.momentum == 0.1 || out.best.momentum == 0.2);
+    }
+}

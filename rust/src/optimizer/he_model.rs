@@ -1,0 +1,226 @@
+//! The paper's analytic hardware-efficiency model (§IV-B, Appendix D-D).
+//!
+//! With N conv machines in g groups of k = N/g:
+//!
+//! ```text
+//! t_conv(k) = max(T_cc / k, T_nc * k)          (compute vs network)
+//! HE(g)     = max(t_fc, (t_conv(k) + t_fc) / g)
+//! FC saturates  <=>  t_conv(k) + t_fc < g * t_fc
+//! ```
+//!
+//! Parameters are obtained the way the paper prescribes: T_cc and t_fc
+//! from FLOP counts at an assumed device utilization (or measured once,
+//! k = 1), T_nc from the conv-model bytes over the link speed.
+
+use crate::config::ClusterSpec;
+use crate::runtime::ArchInfo;
+
+/// Measured-or-derived primitive times (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct HeParams {
+    /// Conv phase compute time for one group batch on ONE machine.
+    pub t_cc: f64,
+    /// Network time for one copy of the conv model + gradients.
+    pub t_nc: f64,
+    /// FC server service time per group request (compute + act transfer).
+    pub t_fc: f64,
+}
+
+/// Conv-phase GFLOP for one image, from the parameter schema: each conv
+/// weight [k,k,cin,cout] costs 2*h_i*w_i*k^2*cin*cout at its resolution,
+/// halved per pooling stage (the repo's two-stage convention).
+pub fn conv_gflop_per_image(arch: &ArchInfo) -> f64 {
+    let (mut h, mut w) = (arch.input[0] as f64, arch.input[1] as f64);
+    let mut total = 0.0;
+    for p in arch.conv_params() {
+        match p.shape.len() {
+            4 => {
+                let (k1, k2, cin, cout) = (
+                    p.shape[0] as f64,
+                    p.shape[1] as f64,
+                    p.shape[2] as f64,
+                    p.shape[3] as f64,
+                );
+                total += 2.0 * h * w * k1 * k2 * cin * cout;
+                h /= 2.0;
+                w /= 2.0;
+            }
+            // Recurrent weight [in, hidden]: one GEMM per timestep
+            // (T = input[0]) — the RNN "conv phase" (rnn.py).
+            2 => {
+                total += 2.0
+                    * arch.input[0] as f64
+                    * p.shape[0] as f64
+                    * p.shape[1] as f64;
+            }
+            _ => {}
+        }
+    }
+    total / 1e9
+}
+
+/// FC-phase GFLOP for one image: 2 * sum of weight-matrix sizes.
+pub fn fc_gflop_per_image(arch: &ArchInfo) -> f64 {
+    arch.fc_params()
+        .iter()
+        .filter(|p| p.shape.len() == 2)
+        .map(|p| 2.0 * (p.shape[0] * p.shape[1]) as f64)
+        .sum::<f64>()
+        / 1e9
+}
+
+/// Backward/forward FLOP ratio: BW recomputes fwd (recompute-vjp) and
+/// runs two GEMMs per layer where FW runs one (paper Appendix B: "two
+/// GEMMs in the backward pass for each layer").
+pub const BWD_FLOP_MULT: f64 = 2.0;
+
+impl HeParams {
+    /// Derive from the cluster spec + architecture (the paper's
+    /// "calculated from node throughput and network speed" path).
+    /// `utilization`: fraction of peak the conv/FC kernels achieve
+    /// (paper Fig 3: ~0.5 for Omnivore).
+    pub fn derive(cluster: &ClusterSpec, arch: &ArchInfo, batch: usize, utilization: f64) -> Self {
+        let conv_gf = conv_gflop_per_image(arch) * batch as f64 * (1.0 + BWD_FLOP_MULT);
+        let fc_gf = fc_gflop_per_image(arch) * batch as f64 * (1.0 + BWD_FLOP_MULT);
+        let t_cc = cluster.compute_seconds(conv_gf, utilization);
+        // FC service includes moving activations + their gradients.
+        let act_bytes = 2 * batch * arch.feat * 4;
+        let t_fc = cluster.compute_seconds(fc_gf, utilization)
+            + if cluster.machines > 1 { cluster.link_seconds(act_bytes) } else { 0.0 };
+        // Conv model + gradient both cross the network each iteration.
+        let t_nc = if cluster.machines > 1 {
+            cluster.link_seconds(2 * arch.conv_bytes)
+        } else {
+            0.0
+        };
+        Self { t_cc, t_nc, t_fc }
+    }
+
+    /// From direct measurements (the optimizer's cold-start path).
+    pub fn measured(t_cc: f64, t_nc: f64, t_fc: f64) -> Self {
+        Self { t_cc, t_nc, t_fc }
+    }
+
+    /// t_conv(k): compute shrinks with k, network congestion grows with k
+    /// (model + grads to/from k workers simultaneously); they overlap, so
+    /// take the max (Appendix D-D1).
+    pub fn t_conv(&self, k: usize) -> f64 {
+        let k = k.max(1) as f64;
+        (self.t_cc / k).max(self.t_nc * k)
+    }
+
+    /// Predicted time per iteration with g groups over n conv machines.
+    pub fn iteration_time(&self, g: usize, n: usize) -> f64 {
+        let g = g.clamp(1, n.max(1));
+        let k = (n / g).max(1);
+        self.t_fc.max((self.t_conv(k) + self.t_fc) / g as f64)
+    }
+
+    /// Is the FC server saturated at g groups? (Appendix D-D1 boundary.)
+    pub fn fc_saturated(&self, g: usize, n: usize) -> bool {
+        let k = (n / g.max(1)).max(1);
+        self.t_conv(k) + self.t_fc < g as f64 * self.t_fc
+    }
+
+    /// Smallest power-of-two group count that saturates the FC server —
+    /// Algorithm 1's short-circuit starting point (Appendix E-C1). Falls
+    /// back to n (fully async) when FC never saturates.
+    pub fn smallest_saturating_g(&self, n: usize) -> usize {
+        let mut g = 1;
+        while g <= n {
+            if self.fc_saturated(g, n) {
+                return g;
+            }
+            g *= 2;
+        }
+        n
+    }
+
+    /// HE penalty P_HE(S) = HE(S)/HE(0), the paper's Fig 20 quantity.
+    pub fn penalty(&self, g: usize, n: usize) -> f64 {
+        self.iteration_time(g, n) / self.iteration_time(1, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::preset;
+
+    fn test_arch() -> ArchInfo {
+        ArchInfo::from_json(&crate::util::json::Json::parse(
+            r#"{"input":[32,32,3],"ncls":8,"feat":4096,"k":5,
+                "params":[{"name":"wc1","shape":[5,5,3,32]},{"name":"bc1","shape":[32]},
+                          {"name":"wc2","shape":[5,5,32,64]},{"name":"bc2","shape":[64]},
+                          {"name":"wf1","shape":[4096,256]},{"name":"bf1","shape":[256]},
+                          {"name":"wf2","shape":[256,8]},{"name":"bf2","shape":[8]}],
+                "n_conv_params":4,"conv_bytes":214656,"fc_bytes":4204576}"#,
+        )
+        .unwrap())
+        .unwrap()
+    }
+
+    #[test]
+    fn gflop_counts() {
+        let a = test_arch();
+        // conv1: 2*32*32*25*3*32 = 4.915M; conv2: 2*16*16*25*32*64 = 26.2M
+        let gf = conv_gflop_per_image(&a);
+        assert!((gf - (4.9152e6 + 26.2144e6) / 1e9).abs() < 1e-6, "{gf}");
+        // fc: 2*(4096*256 + 256*8) = 2.101M
+        let ff = fc_gflop_per_image(&a);
+        assert!((ff - 2.101248e-3).abs() < 1e-8, "{ff}");
+        // paper's shape: conv phase dominates FLOPs ~15x
+        assert!(gf / ff > 10.0);
+    }
+
+    #[test]
+    fn iteration_time_monotone_nonincreasing_in_g() {
+        let he = HeParams::derive(&preset("cpu-l").unwrap(), &test_arch(), 32, 0.5);
+        let n = 32;
+        let mut prev = f64::INFINITY;
+        for g in [1, 2, 4, 8, 16, 32] {
+            let t = he.iteration_time(g, n);
+            assert!(t <= prev + 1e-12, "HE({g}) = {t} > HE(prev) = {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn saturation_boundary_consistent() {
+        let he = HeParams::measured(1.0, 0.001, 0.1);
+        let n = 32;
+        for g in [1, 2, 4, 8, 16, 32] {
+            let k = n / g;
+            let lhs = he.t_conv(k) + he.t_fc;
+            let sat = he.fc_saturated(g, n);
+            assert_eq!(sat, lhs < g as f64 * he.t_fc);
+            if sat {
+                // saturated -> iteration time == t_fc
+                assert!((he.iteration_time(g, n) - he.t_fc).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_g_found() {
+        // t_cc=1s, t_fc=0.1s: saturation when (1/k + 0.1)/g < ... around g=4.
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let g = he.smallest_saturating_g(32);
+        assert!(he.fc_saturated(g, 32));
+        assert!(g > 1 && !he.fc_saturated(g / 2, 32));
+    }
+
+    #[test]
+    fn never_saturates_falls_back_to_n() {
+        let he = HeParams::measured(1.0, 0.0, 0.0);
+        assert_eq!(he.smallest_saturating_g(8), 8);
+    }
+
+    #[test]
+    fn network_congestion_dominates_large_k() {
+        let he = HeParams::measured(1.0, 0.01, 0.1);
+        // k=32: network 0.32 > compute 1/32.
+        assert!((he.t_conv(32) - 0.32).abs() < 1e-12);
+        assert!((he.t_conv(1) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,70 @@
+//! The distributed optimizer (paper §V): hardware- and statistical-
+//! efficiency models, the (µ, η) grid search, the cold-start controller,
+//! the end-to-end Algorithm 1, and the Bayesian-optimization baseline it
+//! is compared against in §VI-C2.
+//!
+//! Everything here is generic over a [`Trainer`] so the optimizer logic
+//! is unit-testable against synthetic loss landscapes and runs unchanged
+//! on the real PJRT-backed engine.
+
+pub mod algorithm1;
+pub mod bayesian;
+pub mod cold_start;
+pub mod grid_search;
+pub mod he_model;
+pub mod quadratic;
+pub mod se_model;
+
+pub use algorithm1::{AutoOptimizer, EpochLog, OptimizerTrace};
+pub use grid_search::{grid_search, GridOutcome, GridSpec};
+pub use he_model::HeParams;
+
+use anyhow::Result;
+
+use crate::config::Hyper;
+use crate::engine::TrainReport;
+use crate::model::ParamSet;
+
+/// Abstraction of "run training for `steps` iterations at strategy g with
+/// hyperparameters h, starting from `from`" — implemented by the PJRT
+/// engine ([`EngineTrainer`]) and by synthetic models in tests.
+pub trait Trainer {
+    fn train(
+        &mut self,
+        g: usize,
+        hyper: Hyper,
+        steps: usize,
+        from: &ParamSet,
+    ) -> Result<(TrainReport, ParamSet)>;
+
+    /// Number of conv machines (defines the strategy space).
+    fn n_machines(&self) -> usize;
+}
+
+/// The real trainer: wraps the simulated-time engine over a base config.
+pub struct EngineTrainer<'a> {
+    pub rt: &'a crate::runtime::Runtime,
+    pub base: crate::config::TrainConfig,
+    pub opts: crate::engine::EngineOptions,
+}
+
+impl<'a> Trainer for EngineTrainer<'a> {
+    fn train(
+        &mut self,
+        g: usize,
+        hyper: Hyper,
+        steps: usize,
+        from: &ParamSet,
+    ) -> Result<(TrainReport, ParamSet)> {
+        let mut cfg = self.base.clone();
+        cfg.strategy = crate::config::Strategy::Groups(g);
+        cfg.hyper = hyper;
+        cfg.steps = steps;
+        let engine = crate::engine::SimTimeEngine::new(self.rt, cfg, self.opts.clone());
+        engine.run_with_params(from.clone())
+    }
+
+    fn n_machines(&self) -> usize {
+        self.base.conv_machines()
+    }
+}

@@ -1,0 +1,190 @@
+//! Statistical efficiency: the implicit-momentum theory (paper §IV-C,
+//! Theorem 1 of the companion paper "Asynchrony begets momentum").
+//!
+//! With g asynchronous groups and explicit momentum 0, the expected
+//! update behaves like momentum SGD with implicit momentum 1 − 1/g. The
+//! optimizer compensates: total momentum = implicit ∘ explicit, so the
+//! explicit momentum that realizes a target total is
+//! `mu_explicit = 1 - (1 - mu_total) / (1 - mu_implicit)` clamped at 0 —
+//! once implicit exceeds the target, the run pays an SE penalty (the
+//! paper's "momentum drops to zero" signal that g is too high).
+//!
+//! Also provides the AR(1) momentum-modulus estimator used to *measure*
+//! momentum from a parameter trajectory (Fig 6's "measured" series).
+
+/// Implicit momentum induced by g asynchronous groups (Theorem 1).
+pub fn implicit_momentum(g: usize) -> f64 {
+    1.0 - 1.0 / g.max(1) as f64
+}
+
+/// Explicit momentum to hit `target_total` momentum at g groups.
+/// Composition model: (1 - total) = (1 - implicit) * (1 - explicit).
+pub fn compensated_momentum(target_total: f64, g: usize) -> f64 {
+    let imp = implicit_momentum(g);
+    (1.0 - (1.0 - target_total) / (1.0 - imp).max(1e-12)).max(0.0)
+}
+
+/// True when asynchrony at g groups costs statistical efficiency: the
+/// implicit momentum already exceeds the problem's optimal momentum.
+pub fn se_penalty_expected(optimal_total_momentum: f64, g: usize) -> bool {
+    implicit_momentum(g) > optimal_total_momentum + 1e-9
+}
+
+/// Fit the AR(1) "momentum modulus" of a scalar trajectory x_t:
+/// with updates V_t = x_t − x_{t−1}, returns
+/// `argmin_mu Σ (V_{t+1} − mu V_t)^2  =  Σ V_{t+1} V_t / Σ V_t^2`.
+///
+/// Applied to a projection of the parameter vector during training, this
+/// recovers the effective (implicit + explicit) momentum (Fig 6).
+pub fn fit_ar1(xs: &[f64]) -> Option<f64> {
+    if xs.len() < 3 {
+        return None;
+    }
+    let v: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+    // Center the update series: with a constant gradient drift the updates
+    // converge to a non-zero fixed point V* = -eta g/(1-mu), and deviations
+    // from V* follow the pure momentum recursion dV_{t+1} = mu dV_t. The
+    // uncentered regression would be biased toward 1 by the drift term.
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for w in v.windows(2) {
+        num += (w[1] - mean) * (w[0] - mean);
+        den += (w[0] - mean) * (w[0] - mean);
+    }
+    if den <= 1e-30 {
+        None
+    } else {
+        Some(num / den)
+    }
+}
+
+/// Fit the momentum modulus of the full Theorem-1 recursion
+/// `V_{t+1} = mu V_t - c x_t` from a (possibly averaged) trajectory of a
+/// quadratic problem. Plain AR(1) on a converging trajectory confounds
+/// curvature decay (1 - eta*h) with momentum; regressing V_{t+1} on BOTH
+/// V_t and x_t separates them: for pure SGD V_{t+1} = -eta h x_t gives
+/// mu = 0, while momentum dynamics give mu. Per-coordinate 2x2 least
+/// squares, aggregated by update-energy weight.
+pub fn fit_momentum_dynamics(series: &[Vec<f64>]) -> Option<f64> {
+    if series.len() < 4 {
+        return None;
+    }
+    let dim = series[0].len();
+    let mut mu_weighted = 0.0;
+    let mut weight = 0.0;
+    for d in 0..dim {
+        let xs: Vec<f64> = series.iter().map(|s| s[d]).collect();
+        let v: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+        // rows: predict v[t+1] from (v[t], xs[t+1]) — x at the time of
+        // the gradient evaluation driving v[t+1].
+        let (mut svv, mut svx, mut sxx, mut svy, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for t in 0..v.len() - 1 {
+            let (vt, xt, y) = (v[t], xs[t + 1], v[t + 1]);
+            svv += vt * vt;
+            svx += vt * xt;
+            sxx += xt * xt;
+            svy += vt * y;
+            sxy += xt * y;
+        }
+        let det = svv * sxx - svx * svx;
+        if det.abs() < 1e-24 {
+            continue;
+        }
+        let mu = (svy * sxx - sxy * svx) / det;
+        mu_weighted += mu * svv;
+        weight += svv;
+    }
+    if weight <= 1e-30 {
+        None
+    } else {
+        Some(mu_weighted / weight)
+    }
+}
+
+/// Fit momentum from a *multivariate* trajectory by averaging per-
+/// coordinate AR(1) statistics (more robust than a single projection).
+pub fn fit_momentum_multi(series: &[Vec<f64>]) -> Option<f64> {
+    // series[t] is the parameter snapshot at step t (possibly projected).
+    if series.len() < 3 {
+        return None;
+    }
+    let dim = series[0].len();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for d in 0..dim {
+        let xs: Vec<f64> = series.iter().map(|s| s[d]).collect();
+        let v: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        for w in v.windows(2) {
+            num += (w[1] - mean) * (w[0] - mean);
+            den += (w[0] - mean) * (w[0] - mean);
+        }
+    }
+    if den <= 1e-30 {
+        None
+    } else {
+        Some(num / den)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn implicit_momentum_theorem1() {
+        assert_eq!(implicit_momentum(1), 0.0);
+        assert!((implicit_momentum(2) - 0.5).abs() < 1e-12);
+        assert!((implicit_momentum(4) - 0.75).abs() < 1e-12);
+        assert!((implicit_momentum(32) - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compensation_matches_composition() {
+        // target 0.9 at g=2 (implicit 0.5): (1-0.9) = 0.5*(1-mu) -> mu=0.8
+        assert!((compensated_momentum(0.9, 2) - 0.8).abs() < 1e-12);
+        // implicit exceeds target -> clamp to 0
+        assert_eq!(compensated_momentum(0.5, 4), 0.0);
+        // sync: explicit = target
+        assert!((compensated_momentum(0.9, 1) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn penalty_boundary() {
+        assert!(!se_penalty_expected(0.9, 4)); // implicit .75 < .9
+        assert!(se_penalty_expected(0.9, 16)); // implicit .9375 > .9
+    }
+
+    #[test]
+    fn ar1_recovers_known_momentum() {
+        // Simulate x_{t+1} = x_t + V_{t+1}, V_{t+1} = mu V_t - c.
+        let mu = 0.7;
+        let mut x = 0.0;
+        let mut v = 1.0;
+        let mut xs = vec![x];
+        for _ in 0..200 {
+            v = mu * v - 0.001;
+            x += v;
+            xs.push(x);
+        }
+        let fit = fit_ar1(&xs).unwrap();
+        assert!((fit - mu).abs() < 0.02, "fit {fit}");
+    }
+
+    #[test]
+    fn ar1_degenerate_cases() {
+        assert!(fit_ar1(&[]).is_none());
+        assert!(fit_ar1(&[1.0, 1.0]).is_none());
+        assert!(fit_ar1(&[1.0, 1.0, 1.0, 1.0]).is_none()); // zero updates
+    }
+
+    #[test]
+    fn multi_matches_single_on_1d() {
+        let xs: Vec<f64> = (0..50).map(|t| (t as f64 * 0.3).sin()).collect();
+        let single = fit_ar1(&xs).unwrap();
+        let multi =
+            fit_momentum_multi(&xs.iter().map(|&x| vec![x]).collect::<Vec<_>>()).unwrap();
+        assert!((single - multi).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,69 @@
+//! HostTensor <-> xla::Literal conversion.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::HostTensor;
+
+/// f32 HostTensor -> Literal.
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = bytemuck_cast_f32(t.data());
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes,
+    )?)
+}
+
+/// i32 labels -> Literal (rank-1).
+pub fn labels_literal(labels: &[i32]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(labels.as_ptr() as *const u8, labels.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[labels.len()],
+        bytes,
+    )?)
+}
+
+/// Literal -> f32 HostTensor (element type must be F32).
+pub fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l.shape()?;
+    let dims: Vec<usize> = match &shape {
+        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+        other => bail!("expected array literal, got {other:?}"),
+    };
+    let data = l.to_vec::<f32>()?;
+    HostTensor::new(dims, data)
+}
+
+fn bytemuck_cast_f32(data: &[f32]) -> &[u8] {
+    // f32 -> u8 reinterpretation is always valid (no alignment increase).
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let l = to_literal(&t).unwrap();
+        let t2 = from_literal(&l).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn labels_shape() {
+        let l = labels_literal(&[1, 2, 3]).unwrap();
+        let shape = l.shape().unwrap();
+        match shape {
+            xla::Shape::Array(a) => {
+                assert_eq!(a.dims(), &[3]);
+                assert_eq!(a.ty(), xla::ElementType::S32);
+            }
+            _ => panic!("not an array"),
+        }
+    }
+}

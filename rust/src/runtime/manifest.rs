@@ -1,0 +1,268 @@
+//! `artifacts/manifest.json` — the contract between the AOT compile path
+//! (python/compile/aot.py) and the Rust runtime. Describes every HLO-text
+//! artifact (shapes, kind, batch) and every architecture's parameter
+//! schema. Parsed with the in-repo JSON layer (util::json).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor's shape/dtype as recorded by aot.py.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT artifact: a lowered, flattened-output XLA computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub arch: Option<String>,
+    pub variant: Option<String>,
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub b_p: Option<usize>,
+    pub n: Option<usize>,
+    pub gflops: Option<f64>,
+    pub lowered_bytes: Option<usize>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            file: v.get("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            arch: v.opt("arch").map(|x| x.as_str().map(String::from)).transpose()?,
+            variant: v.opt("variant").map(|x| x.as_str().map(String::from)).transpose()?,
+            kind: v.get("kind")?.as_str()?.to_string(),
+            batch: v.opt("batch").map(|x| x.as_usize()).transpose()?,
+            b_p: v.opt("b_p").map(|x| x.as_usize()).transpose()?,
+            n: v.opt("n").map(|x| x.as_usize()).transpose()?,
+            gflops: v.opt("gflops").map(|x| x.as_f64()).transpose()?,
+            lowered_bytes: v.opt("lowered_bytes").map(|x| x.as_usize()).transpose()?,
+        })
+    }
+}
+
+/// Parameter schema row for an architecture.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Architecture description (two-phase CNN, paper Fig 1).
+#[derive(Clone, Debug)]
+pub struct ArchInfo {
+    pub input: Vec<usize>,
+    pub ncls: usize,
+    pub feat: usize,
+    pub k: usize,
+    pub params: Vec<ParamSpec>,
+    /// How many leading entries of `params` belong to the conv phase.
+    pub n_conv_params: usize,
+    /// f32 bytes of the conv-phase model (drives network-time estimates).
+    pub conv_bytes: usize,
+    /// f32 bytes of the FC-phase model.
+    pub fc_bytes: usize,
+}
+
+impl ArchInfo {
+    pub fn conv_params(&self) -> &[ParamSpec] {
+        &self.params[..self.n_conv_params]
+    }
+
+    pub fn fc_params(&self) -> &[ParamSpec] {
+        &self.params[self.n_conv_params..]
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            input: v.get("input")?.as_usize_vec()?,
+            ncls: v.get("ncls")?.as_usize()?,
+            feat: v.get("feat")?.as_usize()?,
+            k: v.get("k")?.as_usize()?,
+            params: v
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.as_usize_vec()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            n_conv_params: v.get("n_conv_params")?.as_usize()?,
+            conv_bytes: v.get("conv_bytes")?.as_usize()?,
+            fc_bytes: v.get("fc_bytes")?.as_usize()?,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub group_batch: usize,
+    pub archs: HashMap<String, ArchInfo>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let archs = v
+            .get("archs")?
+            .as_obj()?
+            .iter()
+            .map(|(k, a)| Ok((k.clone(), ArchInfo::from_json(a)?)))
+            .collect::<Result<HashMap<_, _>>>()?;
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { group_batch: v.get("group_batch")?.as_usize()?, archs, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchInfo> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown arch {name:?} in manifest"))
+    }
+
+    /// Find an artifact by exact name.
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Conventional artifact name for a model-phase computation.
+    pub fn phase_artifact(
+        &self,
+        arch: &str,
+        variant: &str,
+        kind: &str,
+        batch: usize,
+    ) -> Result<&ArtifactEntry> {
+        let name = format!("{arch}_{variant}_{kind}_b{batch}");
+        self.entry(&name)
+    }
+
+    /// Batch sizes available for a given (arch, variant, kind).
+    pub fn batches_for(&self, arch: &str, variant: &str, kind: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.arch.as_deref() == Some(arch)
+                    && a.variant.as_deref() == Some(variant)
+                    && a.kind == kind
+            })
+            .filter_map(|a| a.batch)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Smallest available batch >= `want`, or the largest available.
+    pub fn pick_batch(&self, arch: &str, variant: &str, kind: &str, want: usize) -> Option<usize> {
+        let all = self.batches_for(arch, variant, kind);
+        all.iter().copied().find(|&b| b >= want).or(all.last().copied())
+    }
+
+    /// All artifacts of a kind (bench lookups).
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "group_batch": 32,
+      "archs": {
+        "lenet": {"input": [28,28,1], "ncls": 10, "feat": 1568, "k": 5,
+          "params": [{"name":"wc1","shape":[5,5,1,16]},{"name":"bc1","shape":[16]},
+                     {"name":"wf1","shape":[1568,128]},{"name":"bf1","shape":[128]}],
+          "n_conv_params": 2, "conv_bytes": 1664, "fc_bytes": 803328}
+      },
+      "artifacts": [
+        {"name":"lenet_jnp_conv_fwd_b4","file":"x.hlo.txt","kind":"conv_fwd",
+         "arch":"lenet","variant":"jnp","batch":4,
+         "inputs":[{"shape":[4,28,28,1],"dtype":"float32"}],
+         "outputs":[{"shape":[4,1568],"dtype":"float32"}]},
+        {"name":"lenet_jnp_conv_fwd_b16","file":"y.hlo.txt","kind":"conv_fwd",
+         "arch":"lenet","variant":"jnp","batch":16,
+         "inputs":[{"shape":[16,28,28,1],"dtype":"float32"}],
+         "outputs":[{"shape":[16,1568],"dtype":"float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.group_batch, 32);
+        let arch = m.arch("lenet").unwrap();
+        assert_eq!(arch.conv_params().len(), 2);
+        assert_eq!(arch.fc_params()[0].name, "wf1");
+        assert!(m.arch("nope").is_err());
+        let e = m.phase_artifact("lenet", "jnp", "conv_fwd", 4).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![4, 28, 28, 1]);
+        assert_eq!(m.by_kind("conv_fwd").len(), 2);
+    }
+
+    #[test]
+    fn batch_picking() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batches_for("lenet", "jnp", "conv_fwd"), vec![4, 16]);
+        assert_eq!(m.pick_batch("lenet", "jnp", "conv_fwd", 4), Some(4));
+        assert_eq!(m.pick_batch("lenet", "jnp", "conv_fwd", 5), Some(16));
+        assert_eq!(m.pick_batch("lenet", "jnp", "conv_fwd", 99), Some(16));
+        assert_eq!(m.pick_batch("lenet", "jnp", "conv_bwd", 4), None);
+    }
+
+    #[test]
+    fn tensor_numel() {
+        let t = TensorSpec { shape: vec![4, 28, 28, 1], dtype: "float32".into() };
+        assert_eq!(t.numel(), 3136);
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! This is the only place Rust touches XLA. Artifacts are the HLO text
+//! files emitted by `python/compile/aot.py` (text, not serialized proto —
+//! see that file's docstring for the 64-bit-id incompatibility). Each
+//! artifact is compiled lazily on first use and cached for the lifetime
+//! of the process; the hot path is `execute()` only.
+
+mod literal;
+mod manifest;
+
+pub use literal::{from_literal, labels_literal, to_literal};
+pub use manifest::{ArchInfo, ArtifactEntry, Manifest, ParamSpec, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::HostTensor;
+
+/// Counters for the L3 perf story: how much time goes to XLA execution
+/// vs. everything else the coordinator does.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// The process-wide PJRT runtime.
+///
+/// # Thread safety
+/// `xla::PjRtClient` / `PjRtLoadedExecutable` wrap raw pointers and are
+/// not marked Send/Sync by the crate, but the underlying PJRT CPU client
+/// (TfrtCpuClient) is thread-safe by the PJRT contract: concurrent
+/// `Execute` calls are supported and internally synchronized. Compiled
+/// executables live for the whole process (they are intentionally leaked
+/// into `&'static` so `execute` runs without holding the cache lock).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    exes: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
+    executions: AtomicU64,
+    execute_nanos: AtomicU64,
+    compile_nanos: AtomicU64,
+}
+
+// SAFETY: see "Thread safety" above — PJRT CPU execution is thread-safe;
+// all mutable Rust-side state is behind the Mutex / atomics.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifacts directory, parse the manifest, create the PJRT
+    /// CPU client. No artifact is compiled yet.
+    pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            executions: AtomicU64::new(0),
+            execute_nanos: AtomicU64::new(0),
+            compile_nanos: AtomicU64::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) an artifact by manifest name; returns the
+    /// process-lifetime executable handle.
+    pub fn compile(&self, name: &str) -> Result<&'static xla::PjRtLoadedExecutable> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe);
+        }
+        let entry = self.manifest.entry(name)?;
+        let path = self.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.compile_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
+        let mut map = self.exes.lock().unwrap();
+        Ok(map.entry(name.to_string()).or_insert(leaked))
+    }
+
+    /// Execute an artifact. Inputs are f32 tensors and/or i32 label
+    /// literals (pre-converted); outputs are the flattened result tuple.
+    pub fn execute_literals(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.compile(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let outs = tuple.to_tuple()?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.execute_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(outs)
+    }
+
+    /// Execute with pre-converted literal references (hot path: callers
+    /// cache input literals across calls instead of re-converting).
+    pub fn execute_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.compile(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let outs = tuple.to_tuple()?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.execute_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(outs)
+    }
+
+    /// Execute with f32 host tensors only.
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let outs = self.execute_literals(name, &lits)?;
+        outs.iter().map(from_literal).collect()
+    }
+
+    /// Current execution counters.
+    pub fn stats(&self) -> RuntimeStats {
+        RuntimeStats {
+            executions: self.executions.load(Ordering::Relaxed),
+            execute_secs: self.execute_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            compile_secs: self.compile_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+
+    /// Names of currently compiled artifacts.
+    pub fn compiled(&self) -> Vec<String> {
+        let map = self.exes.lock().unwrap();
+        let mut v: Vec<String> = map.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

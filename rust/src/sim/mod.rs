@@ -1,0 +1,195 @@
+//! Discrete-event cluster simulation substrate.
+//!
+//! Two consumers:
+//! * [`crate::engine::SimTimeEngine`] uses [`TimingModel`] to advance a
+//!   *virtual clock* while running real numerics, so a 33-machine paper
+//!   cluster's asynchrony pattern is reproduced exactly on one box.
+//! * [`ClusterSim`] runs timing-only simulations (no numerics) for the
+//!   pure hardware-efficiency experiments (Fig 5b, 20, 22) where only
+//!   iteration times matter.
+//!
+//! Service-time distributions: the paper observes ~6% coefficient of
+//! variation on dense CNN iterations (Fig 22) and its Theorem 1 assumes
+//! exponential service times; both are provided.
+
+mod timing;
+
+pub use timing::{ServiceDist, TimingModel};
+
+use crate::optimizer::he_model::HeParams;
+use crate::util::rng::Rng;
+
+/// Result of a timing-only simulation at one strategy point.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub groups: usize,
+    pub group_size: usize,
+    pub iterations: u64,
+    pub total_time: f64,
+    pub mean_iter_time: f64,
+    /// Std-dev of per-iteration completion gaps (Fig 22's variance).
+    pub iter_time_std: f64,
+    /// Fraction of time the FC server was busy.
+    pub fc_utilization: f64,
+}
+
+/// Pure-timing cluster simulator: g groups of k machines sharing one
+/// (merged) FC server, per-machine service-time variation, linear network
+/// congestion in k. Matches the structure of paper Fig 21's Gantt chart.
+pub struct ClusterSim {
+    pub timing: TimingModel,
+    pub n_machines: usize,
+}
+
+impl ClusterSim {
+    pub fn new(timing: TimingModel, n_machines: usize) -> Self {
+        Self { timing, n_machines }
+    }
+
+    /// Simulate `iters` total iterations at `g` groups; returns measured
+    /// hardware efficiency (mean time per iteration across the system).
+    pub fn run(&self, g: usize, iters: u64, seed: u64) -> SimResult {
+        let g = g.clamp(1, self.n_machines);
+        let k = (self.n_machines / g).max(1);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xc10c);
+        // Per-group pipeline state.
+        let mut ready: Vec<f64> = vec![0.0; g];
+        let mut fc_free = 0.0f64;
+        let mut fc_busy = 0.0f64;
+        let mut completions: Vec<f64> = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            // Next group to start its conv fwd is the earliest-ready one.
+            let (gi, _) = ready
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .expect("g >= 1");
+            let t0 = ready[gi];
+            // Intra-group barrier: k machines each sample a fwd time;
+            // the group advances at the slowest (paper Observation 1).
+            let fwd = self.timing.sample_conv_fwd_group(k, &mut rng);
+            let arrive = t0 + fwd;
+            let fc_start = fc_free.max(arrive);
+            let fc_t = self.timing.sample_fc(&mut rng);
+            fc_free = fc_start + fc_t;
+            fc_busy += fc_t;
+            let bwd = self.timing.sample_conv_bwd_group(k, &mut rng);
+            let done = fc_free + bwd;
+            ready[gi] = done;
+            completions.push(done);
+        }
+        completions.sort_by(|a, b| a.total_cmp(b));
+        let total_time = *completions.last().unwrap_or(&0.0);
+        let mean = total_time / iters.max(1) as f64;
+        // Completion-gap variance in steady state (skip warmup half).
+        let tail = &completions[completions.len() / 2..];
+        let gaps: Vec<f64> = tail.windows(2).map(|w| w[1] - w[0]).collect();
+        let gmean = gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
+        let var = gaps.iter().map(|x| (x - gmean).powi(2)).sum::<f64>()
+            / gaps.len().max(1) as f64;
+        SimResult {
+            groups: g,
+            group_size: k,
+            iterations: iters,
+            total_time,
+            mean_iter_time: mean,
+            iter_time_std: var.sqrt(),
+            fc_utilization: if total_time > 0.0 { fc_busy / total_time } else { 0.0 },
+        }
+    }
+
+    /// Measured HE curve across group counts (powers of two up to N).
+    pub fn he_curve(&self, iters: u64, seed: u64) -> Vec<SimResult> {
+        let mut out = vec![];
+        let mut g = 1;
+        while g <= self.n_machines {
+            out.push(self.run(g, iters, seed));
+            g *= 2;
+        }
+        out
+    }
+}
+
+/// Convenience: predicted-vs-simulated iteration time table (Fig 5b).
+pub fn predicted_vs_measured(
+    he: &HeParams,
+    n_machines: usize,
+    dist: ServiceDist,
+    iters: u64,
+    seed: u64,
+) -> Vec<(usize, f64, f64)> {
+    let sim = ClusterSim::new(TimingModel::new(*he, dist), n_machines);
+    sim.he_curve(iters, seed)
+        .into_iter()
+        .map(|r| (r.groups, he.iteration_time(r.groups, n_machines), r.mean_iter_time))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn he() -> HeParams {
+        HeParams::measured(1.0, 0.002, 0.05)
+    }
+
+    #[test]
+    fn sync_iteration_time_matches_model() {
+        let sim = ClusterSim::new(TimingModel::new(he(), ServiceDist::Deterministic), 32);
+        let r = sim.run(1, 200, 0);
+        let predicted = he().iteration_time(1, 32);
+        assert!(
+            (r.mean_iter_time - predicted).abs() / predicted < 0.05,
+            "measured {} vs predicted {predicted}",
+            r.mean_iter_time
+        );
+    }
+
+    #[test]
+    fn async_faster_than_sync() {
+        let sim = ClusterSim::new(TimingModel::new(he(), ServiceDist::Lognormal { cv: 0.06 }), 32);
+        let sync = sim.run(1, 300, 1);
+        let async_ = sim.run(32, 300, 1);
+        // HE(1) = max(t_fc, t_conv(32)+t_fc) = 0.114; HE(32) = t_fc = 0.05.
+        assert!(
+            async_.mean_iter_time < sync.mean_iter_time / 2.0,
+            "async {} sync {}",
+            async_.mean_iter_time,
+            sync.mean_iter_time
+        );
+    }
+
+    #[test]
+    fn fc_saturation_floors_iteration_time() {
+        // Huge g -> iteration time ~ t_fc.
+        let sim = ClusterSim::new(TimingModel::new(he(), ServiceDist::Deterministic), 32);
+        let r = sim.run(32, 500, 2);
+        let t_fc = he().t_fc;
+        assert!(
+            r.mean_iter_time >= t_fc * 0.95 && r.mean_iter_time < t_fc * 1.3,
+            "mean {} vs t_fc {t_fc}",
+            r.mean_iter_time
+        );
+        assert!(r.fc_utilization > 0.9);
+    }
+
+    #[test]
+    fn deterministic_reproducible() {
+        let sim = ClusterSim::new(TimingModel::new(he(), ServiceDist::Lognormal { cv: 0.06 }), 16);
+        let a = sim.run(4, 100, 42);
+        let b = sim.run(4, 100, 42);
+        assert_eq!(a.total_time, b.total_time);
+    }
+
+    #[test]
+    fn predicted_close_to_measured_everywhere() {
+        let rows = predicted_vs_measured(&he(), 32, ServiceDist::Lognormal { cv: 0.06 }, 400, 7);
+        for (g, pred, meas) in rows {
+            let ratio = meas / pred;
+            assert!(
+                (0.8..1.45).contains(&ratio),
+                "g={g}: measured/predicted = {ratio}"
+            );
+        }
+    }
+}

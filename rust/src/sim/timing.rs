@@ -1,0 +1,115 @@
+//! Service-time sampling on top of the analytic HE parameters.
+
+use crate::optimizer::he_model::HeParams;
+use crate::util::rng::Rng;
+
+/// Iteration-time noise model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServiceDist {
+    /// No variance (model-exact; for validating HE(g) analytically).
+    Deterministic,
+    /// Lognormal with the given coefficient of variation — the paper
+    /// measures ~6% CV on dense CNN iterations (Fig 22).
+    Lognormal { cv: f64 },
+    /// Exponential service times — Theorem 1's assumption (A2).
+    Exponential,
+}
+
+/// Fraction of conv-phase time spent in the forward pass. The paper's
+/// Appendix B FLOP accounting: one GEMM forward, two GEMMs backward per
+/// conv layer, so fwd is ~1/3 of the conv phase.
+pub const CONV_FWD_FRACTION: f64 = 1.0 / 3.0;
+
+/// Samples conv/FC service times consistent with an [`HeParams`] model.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingModel {
+    pub he: HeParams,
+    pub dist: ServiceDist,
+}
+
+impl TimingModel {
+    pub fn new(he: HeParams, dist: ServiceDist) -> Self {
+        Self { he, dist }
+    }
+
+    fn noise(&self, rng: &mut Rng) -> f64 {
+        match self.dist {
+            ServiceDist::Deterministic => 1.0,
+            ServiceDist::Lognormal { cv } => rng.lognormal_unit_mean(cv),
+            ServiceDist::Exponential => rng.exponential(1.0),
+        }
+    }
+
+    /// One machine's conv forward time for its microbatch, in a group of
+    /// size k (compute 1/k of the batch, network grows with k).
+    pub fn sample_conv_fwd(&self, k: usize, rng: &mut Rng) -> f64 {
+        self.he.t_conv(k) * CONV_FWD_FRACTION * self.noise(rng)
+    }
+
+    /// Group-level conv forward: barrier over k machines (max of k draws).
+    pub fn sample_conv_fwd_group(&self, k: usize, rng: &mut Rng) -> f64 {
+        (0..k).map(|_| self.sample_conv_fwd(k, rng)).fold(0.0, f64::max)
+    }
+
+    pub fn sample_conv_bwd(&self, k: usize, rng: &mut Rng) -> f64 {
+        self.he.t_conv(k) * (1.0 - CONV_FWD_FRACTION) * self.noise(rng)
+    }
+
+    pub fn sample_conv_bwd_group(&self, k: usize, rng: &mut Rng) -> f64 {
+        (0..k).map(|_| self.sample_conv_bwd(k, rng)).fold(0.0, f64::max)
+    }
+
+    /// FC server service time for one group request.
+    pub fn sample_fc(&self, rng: &mut Rng) -> f64 {
+        self.he.t_fc * self.noise(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tm(dist: ServiceDist) -> TimingModel {
+        TimingModel::new(HeParams::measured(1.0, 0.001, 0.1), dist)
+    }
+
+    #[test]
+    fn deterministic_is_exact() {
+        let mut rng = Rng::seed_from_u64(0);
+        let t = tm(ServiceDist::Deterministic);
+        let fwd = t.sample_conv_fwd(1, &mut rng);
+        assert!((fwd - CONV_FWD_FRACTION).abs() < 1e-12);
+        let total = fwd + t.sample_conv_bwd(1, &mut rng);
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lognormal_mean_matches_t_fc() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = tm(ServiceDist::Lognormal { cv: 0.06 });
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| t.sample_fc(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() < 0.002, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_t_fc() {
+        let mut rng = Rng::seed_from_u64(2);
+        let t = tm(ServiceDist::Exponential);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| t.sample_fc(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn group_barrier_slower_than_single() {
+        let mut rng = Rng::seed_from_u64(3);
+        let t = tm(ServiceDist::Lognormal { cv: 0.2 });
+        let n = 2000;
+        let single: f64 =
+            (0..n).map(|_| t.sample_conv_fwd(4, &mut rng)).sum::<f64>() / n as f64;
+        let group: f64 =
+            (0..n).map(|_| t.sample_conv_fwd_group(4, &mut rng)).sum::<f64>() / n as f64;
+        assert!(group > single, "barrier must cost: {group} <= {single}");
+    }
+}

@@ -1,0 +1,159 @@
+//! A dense row-major f32 tensor living in host memory.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Build from shape + data; checks the element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Gaussian(0, std) init (paper Appendix F-B uses std 0.01).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_ms(0.0, std as f64) as f32).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar view of a rank-0/size-1 tensor.
+    pub fn scalar(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("scalar() on tensor of {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Concatenate along axis 0. All tensors must share trailing dims.
+    pub fn concat0(parts: &[HostTensor]) -> Result<HostTensor> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty concat"))?;
+        let trailing = &first.shape[1..];
+        let mut rows = 0;
+        for p in parts {
+            if &p.shape[1..] != trailing {
+                bail!("concat0 trailing dims mismatch: {:?} vs {:?}", p.shape, first.shape);
+            }
+            rows += p.shape[0];
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(trailing);
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        HostTensor::new(shape, data)
+    }
+
+    /// Split along axis 0 into `n` equal chunks.
+    pub fn split0(&self, n: usize) -> Result<Vec<HostTensor>> {
+        let rows = self.shape[0];
+        if rows % n != 0 {
+            bail!("cannot split {} rows into {} chunks", rows, n);
+        }
+        let chunk_rows = rows / n;
+        let stride: usize = self.shape[1..].iter().product();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut shape = self.shape.clone();
+            shape[0] = chunk_rows;
+            let lo = i * chunk_rows * stride;
+            let hi = lo + chunk_rows * stride;
+            out.push(HostTensor::new(shape, self.data[lo..hi].to_vec())?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_count() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(&[4, 2]);
+        assert_eq!(t.len(), 8);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn randn_stats() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(5);
+        let t = HostTensor::randn(&[64, 64], 0.01, &mut rng);
+        assert_eq!(t.shape(), &[64, 64]);
+        let mean: f32 = t.data().iter().sum::<f32>() / t.len() as f32;
+        let var: f32 =
+            t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < 0.001, "mean {mean}");
+        assert!((var.sqrt() - 0.01).abs() < 0.002, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let a = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let b = HostTensor::new(vec![2, 3], (6..12).map(|x| x as f32).collect()).unwrap();
+        let c = HostTensor::concat0(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(c.shape(), &[4, 3]);
+        let parts = c.split0(2).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn split_uneven_errors() {
+        let t = HostTensor::zeros(&[5, 2]);
+        assert!(t.split0(2).is_err());
+    }
+
+    #[test]
+    fn scalar_view() {
+        let t = HostTensor::new(vec![1], vec![3.5]).unwrap();
+        assert_eq!(t.scalar().unwrap(), 3.5);
+        assert!(HostTensor::zeros(&[2]).scalar().is_err());
+    }
+}

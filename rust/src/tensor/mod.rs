@@ -1,0 +1,10 @@
+//! Host-side f32 tensors: the coordinator's in-memory model/gradient
+//! representation. Deliberately minimal — all heavy math happens inside
+//! the AOT-compiled XLA artifacts; the host only needs shape bookkeeping,
+//! axpy-style SGD updates, and (de)serialization.
+
+mod host;
+mod ops;
+
+pub use host::HostTensor;
+pub use ops::{axpy, dot, l2_norm, scale, sub_into};

@@ -1,0 +1,73 @@
+//! Allocation-free vector math for the parameter-server hot loop.
+//!
+//! The momentum-SGD update (paper eq. (3)–(4)) is a handful of axpy-style
+//! passes over flat f32 slices; keeping them branchless and in-place keeps
+//! the L3 coordinator off the profile (DESIGN.md §Perf L3 target).
+
+/// y += alpha * x (slices must be the same length).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// x *= alpha.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = a - b, in place into `out`.
+pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, ai), bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// L2 norm.
+pub fn l2_norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 21.0]);
+    }
+
+    #[test]
+    fn scale_basic() {
+        let mut x = [2.0, -4.0];
+        scale(0.25, &mut x);
+        assert_eq!(x, [0.5, -1.0]);
+    }
+
+    #[test]
+    fn sub_into_basic() {
+        let mut out = [0.0; 2];
+        sub_into(&[3.0, 5.0], &[1.0, 1.0], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

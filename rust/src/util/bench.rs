@@ -1,0 +1,88 @@
+//! Micro-benchmark harness (criterion replacement for the offline
+//! build): warmup + timed repetitions with mean / stddev / min, plus a
+//! result registry each `benches/*.rs` regenerator prints through.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub reps: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, units: f64) -> f64 {
+        units / self.mean_secs
+    }
+}
+
+/// Time `f` with `warmup` unrecorded and `reps` recorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var =
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchStats {
+        name: name.to_string(),
+        reps: times.len(),
+        mean_secs: mean,
+        std_secs: var.sqrt(),
+        min_secs: min,
+    }
+}
+
+/// Render one stats row (used by the bench binaries' tables).
+pub fn row(s: &BenchStats) -> String {
+    format!(
+        "{:<36} {:>10.3} ms ±{:>8.3} ms  (min {:>10.3} ms, n={})",
+        s.name,
+        s.mean_secs * 1e3,
+        s.std_secs * 1e3,
+        s.min_secs * 1e3,
+        s.reps
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let s = bench("noop", 1, 5, || { std::hint::black_box(1 + 1); });
+        assert_eq!(s.reps, 5);
+        assert!(s.mean_secs >= 0.0);
+        assert!(s.min_secs <= s.mean_secs + 1e-12);
+    }
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let s = bench("sleep", 0, 3, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.mean_secs >= 0.004, "mean {}", s.mean_secs);
+    }
+
+    #[test]
+    fn throughput_inverse_of_time() {
+        let s = BenchStats {
+            name: "x".into(),
+            reps: 1,
+            mean_secs: 0.5,
+            std_secs: 0.0,
+            min_secs: 0.5,
+        };
+        assert_eq!(s.throughput(10.0), 20.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI flag parser (clap replacement for the offline build).
+//!
+//! Supports `subcommand --flag value --switch` grammar with typed
+//! accessors and defaults; unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: one optional subcommand + flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            // --flag=value or --flag value or --switch
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    /// String flag with default.
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.mark(name);
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().with_context(|| format!("parsing --{name} {v:?}")),
+        }
+    }
+
+    /// Boolean switch (present or absent).
+    pub fn switch(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on any flag that no accessor asked about (typo guard);
+    /// call after all accessors.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !consumed.iter().any(|c| c == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for k in &self.switches {
+            if !consumed.iter().any(|c| c == k) {
+                bail!("unknown switch --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --lr 0.01 --steps=100 --threaded");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("lr", 0.0f32).unwrap(), 0.01);
+        assert_eq!(a.get("steps", 0usize).unwrap(), 100);
+        assert!(a.switch("threaded"));
+        assert!(!a.switch("absent"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("train");
+        assert_eq!(a.str("arch", "caffenet8"), "caffenet8");
+        assert_eq!(a.get("seed", 7u64).unwrap(), 7);
+        assert_eq!(a.opt_str("csv"), None);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("train --tpyo 3");
+        let _ = a.get("lr", 0.0f32);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("x --steps abc");
+        assert!(a.get("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--lr 1.0");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get("lr", 0.0f32).unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! From-scratch substrates for an offline build: JSON, deterministic RNG
+//! with the distributions the simulator needs, a CLI flag parser, a tiny
+//! bench harness, and a seeded property-testing helper. See DESIGN.md
+//! §Substitutions — the only third-party crates available in this
+//! environment are `xla` and `anyhow`, so everything a framework would
+//! normally pull from crates.io is implemented (and tested) here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Create a unique temporary directory (tempfile-crate replacement).
+pub fn temp_dir(tag: &str) -> std::io::Result<std::path::PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("omnivore-{tag}-{pid}-{n}"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn temp_dirs_unique() {
+        let a = super::temp_dir("t").unwrap();
+        let b = super::temp_dir("t").unwrap();
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        let _ = std::fs::remove_dir_all(a);
+        let _ = std::fs::remove_dir_all(b);
+    }
+}

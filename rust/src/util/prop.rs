@@ -1,0 +1,64 @@
+//! Seeded property-testing helper (proptest replacement for the offline
+//! build): run a predicate over `n` pseudo-random cases; on failure,
+//! report the seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `check` over `n` seeded RNGs; panic with the failing seed.
+pub fn for_all_seeds(n: u64, base_seed: u64, check: impl Fn(&mut Rng, u64)) {
+    for i in 0..n {
+        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        // The check panics on failure; wrap to attach the seed.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng, seed)
+        }));
+        if let Err(e) = result {
+            panic!("property failed for seed {seed:#x} (case {i}): {e:?}");
+        }
+    }
+}
+
+/// Draw a random shape with `rank` dims in [1, max_dim].
+pub fn arb_shape(rng: &mut Rng, rank: usize, max_dim: usize) -> Vec<usize> {
+    (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+}
+
+/// Draw a random f32 vector of length n in [-scale, scale].
+pub fn arb_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0u64;
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        for_all_seeds(25, 1, |_rng, _seed| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        count += counter.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed for seed")]
+    fn reports_failing_seed() {
+        for_all_seeds(10, 2, |rng, _seed| {
+            assert!(rng.f64() < 0.95, "intentional failure");
+        });
+    }
+
+    #[test]
+    fn arb_helpers_in_bounds() {
+        let mut rng = Rng::seed_from_u64(3);
+        let shape = arb_shape(&mut rng, 4, 8);
+        assert_eq!(shape.len(), 4);
+        assert!(shape.iter().all(|&d| (1..=8).contains(&d)));
+        let v = arb_vec(&mut rng, 100, 2.0);
+        assert!(v.iter().all(|&x| (-2.0..=2.0).contains(&x)));
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared test fixtures: one PJRT runtime per test binary.
+
+use std::sync::OnceLock;
+
+use omnivore::runtime::Runtime;
+
+static RT: OnceLock<Runtime> = OnceLock::new();
+
+/// Process-wide runtime over the repo's artifacts directory.
+pub fn runtime() -> &'static Runtime {
+    RT.get_or_init(|| {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::load(dir).expect("artifacts built? run `make artifacts`")
+    })
+}

@@ -1,0 +1,168 @@
+//! Property tests (seeded, replayable — util::prop) over coordinator
+//! invariants: the parameter server's accounting, the HE model's
+//! structure, the FLOPS partitioner, and dataset determinism.
+
+mod common;
+
+use omnivore::baselines::flops_proportional_split;
+use omnivore::config::Hyper;
+use omnivore::coordinator::ParamServer;
+use omnivore::data::SyntheticDataset;
+use omnivore::optimizer::se_model;
+use omnivore::optimizer::HeParams;
+use omnivore::tensor::HostTensor;
+use omnivore::util::prop::{arb_vec, for_all_seeds};
+
+#[test]
+fn param_server_accounting_any_interleaving() {
+    // Under arbitrary read/publish interleavings: version == publishes,
+    // staleness histogram sums to publishes, staleness <= outstanding.
+    for_all_seeds(30, 0xabc, |rng, _seed| {
+        let ps = ParamServer::new(
+            vec![HostTensor::zeros(&[8])],
+            Hyper { lr: 0.01, momentum: 0.5, lambda: 0.0 },
+        );
+        let mut outstanding = vec![];
+        let mut publishes = 0u64;
+        for _ in 0..60 {
+            if rng.bool() || outstanding.is_empty() {
+                outstanding.push(ps.read());
+            } else {
+                let snap = outstanding.remove(rng.below(outstanding.len()));
+                let g = vec![HostTensor::new(vec![8], arb_vec(rng, 8, 1.0)).unwrap()];
+                let s = ps.publish(&g, snap.version).unwrap();
+                publishes += 1;
+                assert!(s <= 60, "staleness bounded by total ops");
+            }
+        }
+        let stats = ps.staleness_stats();
+        assert_eq!(stats.publishes, publishes);
+        assert_eq!(ps.version(), publishes);
+        assert_eq!(stats.histogram.iter().sum::<u64>(), publishes);
+        assert!(stats.max_staleness as f64 >= stats.mean());
+    });
+}
+
+#[test]
+fn sgd_with_zero_lr_never_moves() {
+    for_all_seeds(10, 0xdef, |rng, _| {
+        let w0 = arb_vec(rng, 16, 2.0);
+        let ps = ParamServer::new(
+            vec![HostTensor::new(vec![16], w0.clone()).unwrap()],
+            Hyper { lr: 0.0, momentum: 0.9, lambda: 0.0 },
+        );
+        for _ in 0..5 {
+            let g = vec![HostTensor::new(vec![16], arb_vec(rng, 16, 1.0)).unwrap()];
+            ps.publish(&g, ps.version()).unwrap();
+        }
+        assert_eq!(ps.read().params[0].data(), &w0[..]);
+    });
+}
+
+#[test]
+fn he_model_structural_invariants() {
+    for_all_seeds(40, 0x11e, |rng, seed| {
+        let he = HeParams::measured(
+            0.01 + rng.f64() * 10.0,
+            rng.f64() * 0.1,
+            0.001 + rng.f64(),
+        );
+        let n = 1 << (1 + rng.below(6)); // 2..64
+        let mut prev = f64::INFINITY;
+        let mut g = 1;
+        while g <= n {
+            let t = he.iteration_time(g, n);
+            assert!(t > 0.0);
+            assert!(
+                t <= prev + 1e-12,
+                "seed {seed:#x}: HE must be non-increasing in g (n={n}, g={g})"
+            );
+            // Saturated => iteration time is exactly t_fc.
+            if he.fc_saturated(g, n) {
+                assert!((t - he.t_fc).abs() < 1e-12);
+            }
+            prev = t;
+            g *= 2;
+        }
+        // The short-circuit start always saturates (or falls back to n).
+        let g0 = he.smallest_saturating_g(n);
+        assert!(g0 <= n);
+        if g0 < n {
+            assert!(he.fc_saturated(g0, n));
+        }
+    });
+}
+
+#[test]
+fn implicit_momentum_monotone_and_bounded() {
+    for g in 1..=64 {
+        let m = se_model::implicit_momentum(g);
+        assert!((0.0..1.0).contains(&m));
+        if g > 1 {
+            assert!(m > se_model::implicit_momentum(g - 1));
+        }
+        // compensation inverts composition exactly when feasible
+        let target = 0.95;
+        let mu = se_model::compensated_momentum(target, g);
+        if mu > 0.0 {
+            let total = 1.0 - (1.0 - m) * (1.0 - mu);
+            assert!((total - target).abs() < 1e-9, "g={g}");
+        }
+    }
+}
+
+#[test]
+fn flops_split_properties() {
+    for_all_seeds(40, 0xf10, |rng, seed| {
+        let n_dev = 1 + rng.below(5);
+        let tflops: Vec<f64> = (0..n_dev).map(|_| 0.1 + rng.f64() * 10.0).collect();
+        let batch = 1 + rng.below(512);
+        let split = flops_proportional_split(batch, &tflops);
+        assert_eq!(split.len(), n_dev);
+        assert_eq!(split.iter().sum::<usize>(), batch, "seed {seed:#x}");
+        // Each share within 1 image + proportional bound.
+        let total: f64 = tflops.iter().sum();
+        for (s, t) in split.iter().zip(&tflops) {
+            let ideal = batch as f64 * t / total;
+            assert!(
+                (*s as f64 - ideal).abs() <= n_dev as f64,
+                "seed {seed:#x}: share {s} vs ideal {ideal}"
+            );
+        }
+    });
+}
+
+#[test]
+fn dataset_batches_deterministic_and_labeled() {
+    for_all_seeds(10, 0xda7, |rng, _| {
+        let seed = rng.next_u64();
+        let ds = SyntheticDataset::for_arch("cifar", seed);
+        let idx = rng.next_u64() % 1000;
+        let a = ds.batch(idx, 16);
+        let b = ds.batch(idx, 16);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        assert!(a.labels.iter().all(|&l| (0..10).contains(&l)));
+        assert_eq!(a.images.shape(), &[16, 32, 32, 3]);
+    });
+}
+
+#[test]
+fn ar1_fit_recovers_momentum_under_noise() {
+    for_all_seeds(20, 0xa21, |rng, seed| {
+        let mu = 0.1 + 0.8 * rng.f64();
+        let mut x = 0.0;
+        let mut v = 0.5;
+        let mut xs = vec![x];
+        for _ in 0..400 {
+            v = mu * v - 0.01 + 0.0005 * rng.normal();
+            x += v;
+            xs.push(x);
+        }
+        let fit = omnivore::optimizer::se_model::fit_ar1(&xs).unwrap();
+        assert!(
+            (fit - mu).abs() < 0.1,
+            "seed {seed:#x}: fit {fit:.3} vs true {mu:.3}"
+        );
+    });
+}

@@ -1,0 +1,140 @@
+//! Integration: HLO-text artifacts load, compile, and execute through the
+//! PJRT runtime with the shapes the manifest promises, deterministically.
+
+mod common;
+
+use common::runtime;
+use omnivore::model::ParamSet;
+use omnivore::runtime::{labels_literal, to_literal};
+use omnivore::tensor::HostTensor;
+use omnivore::util::rng::Rng;
+
+fn rand_tensor(shape: &[usize], seed: u64) -> HostTensor {
+    let mut rng = Rng::seed_from_u64(seed);
+    HostTensor::randn(shape, 1.0, &mut rng)
+}
+
+#[test]
+fn manifest_inventory_sane() {
+    let m = runtime().manifest();
+    assert_eq!(m.group_batch, 32);
+    for arch in ["lenet", "cifar", "caffenet8"] {
+        let a = m.arch(arch).unwrap();
+        assert_eq!(a.params.len(), 8);
+        assert_eq!(a.n_conv_params, 4);
+        for variant in ["jnp", "pallas"] {
+            assert_eq!(m.batches_for(arch, variant, "conv_fwd"), vec![4, 8, 16, 32]);
+            assert!(m.phase_artifact(arch, variant, "fc_step", 32).is_ok());
+            assert!(m.phase_artifact(arch, variant, "full_step", 32).is_ok());
+            assert!(m.phase_artifact(arch, variant, "infer", 32).is_ok());
+        }
+    }
+}
+
+#[test]
+fn infer_executes_with_promised_shapes() {
+    let rt = runtime();
+    let arch = rt.manifest().arch("lenet").unwrap();
+    let params = ParamSet::init(arch, 0);
+    let x = rand_tensor(&[32, 28, 28, 1], 1);
+    let mut inputs = vec![&x];
+    inputs.extend(params.tensors().iter());
+    let outs = rt.execute("lenet_jnp_infer_b32", &inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape(), &[32, 10]);
+    assert!(outs[0].data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn full_step_returns_finite_loss_and_grads() {
+    let rt = runtime();
+    let arch = rt.manifest().arch("lenet").unwrap();
+    let params = ParamSet::init(arch, 0);
+    let x = rand_tensor(&[32, 28, 28, 1], 2);
+    let labels: Vec<i32> = (0..32).map(|i| i % 10).collect();
+    let mut lits = vec![to_literal(&x).unwrap(), labels_literal(&labels).unwrap()];
+    for t in params.tensors() {
+        lits.push(to_literal(t).unwrap());
+    }
+    let outs = rt.execute_literals("lenet_jnp_full_step_b32", &lits).unwrap();
+    assert_eq!(outs.len(), 2 + 8);
+    let loss = omnivore::runtime::from_literal(&outs[0]).unwrap().scalar().unwrap();
+    let acc = omnivore::runtime::from_literal(&outs[1]).unwrap().scalar().unwrap();
+    // Fresh init, 10 classes: loss ~ ln(10), acc ~ 10%.
+    assert!((loss - 10f32.ln()).abs() < 0.2, "loss {loss}");
+    assert!((0.0..=1.0).contains(&acc));
+    for (o, p) in outs[2..].iter().zip(params.tensors()) {
+        let g = omnivore::runtime::from_literal(o).unwrap();
+        assert_eq!(g.shape(), p.shape());
+        assert!(g.data().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let rt = runtime();
+    let arch = rt.manifest().arch("lenet").unwrap();
+    let params = ParamSet::init(arch, 3);
+    let x = rand_tensor(&[32, 28, 28, 1], 4);
+    let mut inputs = vec![&x];
+    inputs.extend(params.tensors().iter());
+    let a = rt.execute("lenet_jnp_infer_b32", &inputs).unwrap();
+    let b = rt.execute("lenet_jnp_infer_b32", &inputs).unwrap();
+    assert_eq!(a[0], b[0]);
+}
+
+#[test]
+fn conv_fwd_microbatch_composition() {
+    // conv_fwd(b=8) == concat(conv_fwd(b=4) x 2): the artifact family is
+    // batch-consistent, which Topology's microbatching relies on.
+    let rt = runtime();
+    let arch = rt.manifest().arch("lenet").unwrap();
+    let params = ParamSet::init(arch, 5);
+    let x = rand_tensor(&[8, 28, 28, 1], 6);
+    let mut inputs = vec![&x];
+    inputs.extend(params.conv().iter());
+    let whole = rt.execute("lenet_jnp_conv_fwd_b8", &inputs).unwrap();
+    let halves = x.split0(2).unwrap();
+    let mut parts = vec![];
+    for h in &halves {
+        let mut inp = vec![h];
+        inp.extend(params.conv().iter());
+        parts.push(rt.execute("lenet_jnp_conv_fwd_b4", &inp).unwrap().remove(0));
+    }
+    let cat = HostTensor::concat0(&parts).unwrap();
+    assert_eq!(cat.shape(), whole[0].shape());
+    for (a, b) in cat.data().iter().zip(whole[0].data()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pallas_and_jnp_variants_agree() {
+    let rt = runtime();
+    let arch = rt.manifest().arch("lenet").unwrap();
+    let params = ParamSet::init(arch, 7);
+    let x = rand_tensor(&[32, 28, 28, 1], 8);
+    let mut inputs = vec![&x];
+    inputs.extend(params.tensors().iter());
+    let a = rt.execute("lenet_jnp_infer_b32", &inputs).unwrap();
+    let b = rt.execute("lenet_pallas_infer_b32", &inputs).unwrap();
+    for (x, y) in a[0].data().iter().zip(b[0].data()) {
+        assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let rt = runtime();
+    assert!(rt.execute("does_not_exist", &[]).is_err());
+}
+
+#[test]
+fn compile_cache_reused() {
+    let rt = runtime();
+    rt.compile("lenet_jnp_infer_b32").unwrap();
+    let before = rt.stats().compile_secs;
+    rt.compile("lenet_jnp_infer_b32").unwrap();
+    let after = rt.stats().compile_secs;
+    assert_eq!(before, after, "second compile must hit the cache");
+}
