@@ -2,6 +2,15 @@
 //! coordinator must not be the bottleneck — parameter-server updates,
 //! literal conversions, event-loop overhead, and the fraction of a
 //! training run spent outside XLA execution.
+//!
+//! Headline rows (the PR acceptance numbers):
+//! * `param_server publish` scalars/s at the caffenet8 conv-model size —
+//!   the fused eq. (3)–(4) loop behind sharded locks, with the O(1) COW
+//!   `read()` no longer deep-cloning inside the loop;
+//! * `param_server read` (COW snapshot) latency — Arc bumps instead of
+//!   an O(scalars) clone under the lock;
+//! * sharded parallel publish scaling on a large (1M+ scalar) model;
+//! * version-keyed literal-cache hit vs. full reconversion.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -11,7 +20,7 @@ use omnivore::coordinator::ParamServer;
 use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::Table;
 use omnivore::model::ParamSet;
-use omnivore::runtime::to_literal;
+use omnivore::runtime::{to_literal, LiteralCache};
 use omnivore::tensor::HostTensor;
 use omnivore::util::bench::{bench, row};
 use omnivore::util::rng::Rng;
@@ -35,10 +44,36 @@ fn main() {
     });
     println!("{}  [{:.1} M scalars/s]", row(&s), n_scalars as f64 / s.mean_secs / 1e6);
 
-    let s2 = bench("param_server read (snapshot clone)", 10, 200, || {
+    let s2 = bench("param_server read (COW snapshot)", 10, 200, || {
         std::hint::black_box(ps.read());
     });
     println!("{}", row(&s2));
+
+    // 1b. Sharded parallel publish on a model above the scoped-thread
+    // threshold (DESIGN.md §Perf): 8 x [512,512] ≈ 2.1M scalars.
+    let big: Vec<HostTensor> = (0..8)
+        .map(|_| HostTensor::randn(&[512, 512], 0.01, &mut rng))
+        .collect();
+    let big_scalars: usize = big.iter().map(|t| t.len()).sum();
+    let big_grads: Vec<HostTensor> =
+        big.iter().map(|t| HostTensor::randn(t.shape(), 0.01, &mut rng)).collect();
+    let ps1 = ParamServer::with_shards(big.clone(), Hyper::default(), 1);
+    let sb1 = bench("publish 2.1M scalars (1 shard)", 5, 60, || {
+        let v = ps1.version();
+        ps1.publish(&big_grads, v).unwrap();
+    });
+    println!("{}  [{:.1} M scalars/s]", row(&sb1), big_scalars as f64 / sb1.mean_secs / 1e6);
+    let ps8 = ParamServer::with_shards(big, Hyper::default(), 8);
+    let sb8 = bench("publish 2.1M scalars (8 shards)", 5, 60, || {
+        let v = ps8.version();
+        ps8.publish(&big_grads, v).unwrap();
+    });
+    println!(
+        "{}  [{:.1} M scalars/s, {:.2}x vs 1 shard]",
+        row(&sb8),
+        big_scalars as f64 / sb8.mean_secs / 1e6,
+        sb1.mean_secs / sb8.mean_secs
+    );
 
     // 2. Literal conversion (host -> XLA) for a batch of images.
     let x = HostTensor::randn(&[32, 32, 32, 3], 1.0, &mut rng);
@@ -46,6 +81,28 @@ fn main() {
         std::hint::black_box(to_literal(&x).unwrap());
     });
     println!("{}  [{:.2} GB/s]", row(&s3), x.len() as f64 * 4.0 / s3.mean_secs / 1e9);
+
+    // 2b. Version-keyed literal cache: hit vs. full reconversion of the
+    // conv snapshot (what every group iteration used to pay).
+    let snap = ps.read();
+    let s4 = bench("snapshot -> literals (uncached)", 10, 200, || {
+        for t in &snap.params {
+            std::hint::black_box(to_literal(t).unwrap());
+        }
+    });
+    println!("{}", row(&s4));
+    let cache = LiteralCache::new();
+    cache.get_or_convert(snap.content_id, &snap.params).unwrap();
+    let s5 = bench("snapshot -> literals (cache hit)", 10, 200, || {
+        std::hint::black_box(
+            cache.get_or_convert(snap.content_id, &snap.params).unwrap(),
+        );
+    });
+    println!(
+        "{}  [{:.1}x faster than reconversion]",
+        row(&s5),
+        s4.mean_secs / s5.mean_secs
+    );
 
     // 3. End-to-end share: coordinator vs XLA in a real run.
     let cfg = support::cfg(
@@ -67,10 +124,20 @@ fn main() {
     t.row(&["XLA execute time".into(), format!("{xla:.2}s")]);
     t.row(&["coordinator overhead".into(), format!("{coord:.2}s ({:.1}%)", coord / wall * 100.0)]);
     t.row(&["iterations".into(), report.records.len().to_string()]);
+    t.row(&[
+        "literal cache".into(),
+        format!("{} hits / {} misses", report.lit_cache_hits, report.lit_cache_misses),
+    ]);
     t.print();
     println!("target (DESIGN.md §Perf): coordinator overhead < 10% of wall time.");
     let mut csv = String::from("metric,value\n");
     csv.push_str(&format!("publish_scalars_per_sec,{}\n", n_scalars as f64 / s.mean_secs));
+    csv.push_str(&format!("read_snapshot_secs,{}\n", s2.mean_secs));
+    csv.push_str(&format!(
+        "publish_sharded_speedup,{}\n",
+        sb1.mean_secs / sb8.mean_secs
+    ));
+    csv.push_str(&format!("lit_cache_hit_speedup,{}\n", s4.mean_secs / s5.mean_secs));
     csv.push_str(&format!("to_literal_gb_per_sec,{}\n", x.len() as f64 * 4.0 / s3.mean_secs / 1e9));
     csv.push_str(&format!("coordinator_overhead_frac,{}\n", coord / wall));
     support::write_results("l3_hotpath.csv", &csv);

@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use super::merged_fc::FcServer;
 use super::param_server::{ModelSnapshot, ParamServer};
-use crate::runtime::{from_literal, to_literal, Runtime};
+use crate::runtime::{from_literal, to_literal, LiteralCache, LiteralSet, Runtime};
 use crate::tensor::HostTensor;
 
 /// Everything observable about one group iteration.
@@ -35,15 +35,17 @@ pub struct StepOutput {
 /// Intermediate state between conv-fwd and fc (the engine splits the
 /// iteration into events at the FC queue boundary).
 ///
-/// Perf (EXPERIMENTS.md §Perf L3): the conv-model snapshot and batch
-/// images are converted to XLA literals ONCE and reused by the forward
-/// and backward calls.
+/// Perf (DESIGN.md §Perf L3): the conv-model snapshot literals come from
+/// the version-keyed cache shared by every group on this conv server —
+/// converted once per model version, reused by the forward call, the
+/// backward call, and any other group reading the same version — and
+/// the batch images are converted ONCE for forward + backward.
 pub struct ConvFwdState {
     pub snapshot: ModelSnapshot,
     pub fc_snapshot: Option<ModelSnapshot>,
     pub activations: HostTensor,
     pub labels: Vec<i32>,
-    param_lits: Vec<xla::Literal>,
+    param_lits: Arc<LiteralSet>,
     images_lit: xla::Literal,
 }
 
@@ -54,6 +56,9 @@ pub struct ComputeGroup {
     conv_fwd_artifact: String,
     conv_bwd_artifact: String,
     conv_ps: Arc<ParamServer>,
+    /// Conv-snapshot literal cache, shared across the groups of one
+    /// topology (keyed by snapshot content id, so sharing is safe).
+    lit_cache: Arc<LiteralCache>,
 }
 
 impl ComputeGroup {
@@ -63,8 +68,9 @@ impl ComputeGroup {
         conv_fwd_artifact: String,
         conv_bwd_artifact: String,
         conv_ps: Arc<ParamServer>,
+        lit_cache: Arc<LiteralCache>,
     ) -> Self {
-        Self { id, k, conv_fwd_artifact, conv_bwd_artifact, conv_ps }
+        Self { id, k, conv_fwd_artifact, conv_bwd_artifact, conv_ps, lit_cache }
     }
 
     pub fn conv_ps(&self) -> &Arc<ParamServer> {
@@ -85,11 +91,11 @@ impl ComputeGroup {
         // (it will compute the FC phase itself, against this stale copy).
         let fc_snapshot =
             if fc.is_merged() { None } else { Some(fc.param_server().read()) };
-        let param_lits: Vec<xla::Literal> =
-            snapshot.params.iter().map(to_literal).collect::<Result<_>>()?;
+        let param_lits =
+            self.lit_cache.get_or_convert(snapshot.content_id, &snapshot.params)?;
         let images_lit = to_literal(images)?;
         let mut lits: Vec<&xla::Literal> = vec![&images_lit];
-        lits.extend(param_lits.iter());
+        lits.extend(param_lits.literals().iter());
         let outs = rt.execute_refs(&self.conv_fwd_artifact, &lits)?;
         anyhow::ensure!(outs.len() == 1, "conv_fwd arity");
         let activations = from_literal(&outs[0])?;
@@ -113,7 +119,7 @@ impl ComputeGroup {
     ) -> Result<u64> {
         let g_lit = to_literal(g_act)?;
         let mut lits: Vec<&xla::Literal> = vec![&state.images_lit];
-        lits.extend(state.param_lits.iter());
+        lits.extend(state.param_lits.literals().iter());
         lits.push(&g_lit);
         let outs = rt.execute_refs(&self.conv_bwd_artifact, &lits)?;
         let grads: Vec<HostTensor> =

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use super::param_server::ParamServer;
 use crate::config::Hyper;
-use crate::runtime::{from_literal, labels_literal, to_literal, Runtime};
+use crate::runtime::{from_literal, labels_literal, to_literal, LiteralCache, Runtime};
 use crate::tensor::HostTensor;
 
 /// Result of one FC-phase step for a group's batch.
@@ -38,6 +38,9 @@ pub struct FcServer {
     /// Merged mode processes one batch at a time (it is one machine);
     /// this lock enforces that under the threaded engine as well.
     serial: std::sync::Mutex<()>,
+    /// Version-keyed cache of the FC parameter literals (DESIGN.md
+    /// §Perf): reused whenever the FC model is unchanged between steps.
+    lit_cache: LiteralCache,
 }
 
 impl FcServer {
@@ -47,6 +50,7 @@ impl FcServer {
             merged,
             artifact,
             serial: std::sync::Mutex::new(()),
+            lit_cache: LiteralCache::new(),
         }
     }
 
@@ -56,6 +60,10 @@ impl FcServer {
 
     pub fn param_server(&self) -> &Arc<ParamServer> {
         &self.ps
+    }
+
+    pub fn lit_cache(&self) -> &LiteralCache {
+        &self.lit_cache
     }
 
     /// Serve one group's batch: FC forward + backward + model update.
@@ -78,11 +86,12 @@ impl FcServer {
             (false, Some(s)) => s,
         };
         // inputs: act, labels, wf1, bf1, wf2, bf2
-        let mut lits = vec![to_literal(act)?, labels_literal(labels)?];
-        for p in &snap.params {
-            lits.push(to_literal(p)?);
-        }
-        let outs = rt.execute_literals(&self.artifact, &lits)?;
+        let act_lit = to_literal(act)?;
+        let labels_lit = labels_literal(labels)?;
+        let param_lits = self.lit_cache.get_or_convert(snap.content_id, &snap.params)?;
+        let mut lits: Vec<&xla::Literal> = vec![&act_lit, &labels_lit];
+        lits.extend(param_lits.literals().iter());
+        let outs = rt.execute_refs(&self.artifact, &lits)?;
         // outputs: loss, acc, g_act, gwf1, gbf1, gwf2, gbf2
         anyhow::ensure!(outs.len() == 3 + snap.params.len(), "fc_step arity");
         let loss = from_literal(&outs[0])?.scalar()?;

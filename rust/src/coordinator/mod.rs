@@ -1,35 +1,50 @@
 //! L3 coordinator: the paper's distributed-training architecture.
 //!
-//! * [`ParamServer`] — versioned model store + momentum SGD (eq. (3)–(4))
-//!   with staleness accounting.
+//! * [`ParamServer`] — sharded, versioned model store + momentum SGD
+//!   (eq. (3)–(4)) with staleness accounting and COW snapshots.
 //! * [`FcServer`] — the FC phase in merged (Omnivore/Adam) or unmerged
 //!   (MXNet/DistBelief) physical mapping.
 //! * [`ComputeGroup`] — k workers, one batch per iteration, intra-group
 //!   data parallelism, summed gradient publish.
 //! * [`Topology`] — assembles g groups × k workers over a cluster spec
-//!   from a [`TrainConfig`], picking the right AOT artifacts.
+//!   from a [`TrainConfig`], picking the right AOT artifacts and wiring
+//!   the shared conv-snapshot literal cache.
 
+#[cfg(feature = "xla")]
 mod compute_group;
+#[cfg(feature = "xla")]
 mod merged_fc;
 mod param_server;
 
+#[cfg(feature = "xla")]
 pub use compute_group::{ComputeGroup, ConvFwdState, StepOutput};
+#[cfg(feature = "xla")]
 pub use merged_fc::{FcServer, FcStepOutput};
 pub use param_server::{ModelSnapshot, ParamServer, StalenessStats};
 
+#[cfg(feature = "xla")]
 use std::sync::Arc;
 
+#[cfg(feature = "xla")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "xla")]
 use crate::config::{FcMapping, TrainConfig};
+#[cfg(feature = "xla")]
 use crate::model::ParamSet;
-use crate::runtime::Runtime;
+#[cfg(feature = "xla")]
+use crate::runtime::{LiteralCache, Runtime};
 
 /// The assembled training topology for one run.
+#[cfg(feature = "xla")]
 pub struct Topology {
     pub groups: Vec<ComputeGroup>,
     pub conv_ps: Arc<ParamServer>,
     pub fc: Arc<FcServer>,
+    /// Conv-snapshot literal cache shared by all groups (DESIGN.md
+    /// §Perf): groups reading the same model version share one
+    /// HostTensor -> Literal conversion.
+    pub conv_lits: Arc<LiteralCache>,
     /// Microbatch actually used per worker (snapped to available AOT
     /// batch sizes).
     pub microbatch: usize,
@@ -37,6 +52,7 @@ pub struct Topology {
     pub k: usize,
 }
 
+#[cfg(feature = "xla")]
 impl Topology {
     /// Build a topology from config + runtime + initial parameters.
     ///
@@ -67,18 +83,35 @@ impl Topology {
             cfg.fc_mapping == FcMapping::Merged,
             fc_entry.name.clone(),
         ));
+        let conv_lits = Arc::new(LiteralCache::new());
         let fwd = fwd_entry.name.clone();
         let bwd = bwd_entry.name.clone();
         let groups = (0..g)
-            .map(|id| ComputeGroup::new(id, k, fwd.clone(), bwd.clone(), conv_ps.clone()))
+            .map(|id| {
+                ComputeGroup::new(
+                    id,
+                    k,
+                    fwd.clone(),
+                    bwd.clone(),
+                    conv_ps.clone(),
+                    conv_lits.clone(),
+                )
+            })
             .collect();
-        Ok(Self { groups, conv_ps, fc, microbatch: cfg.batch, k })
+        Ok(Self { groups, conv_ps, fc, conv_lits, microbatch: cfg.batch, k })
     }
 
     /// Update hyperparameters on both servers (optimizer epoch boundary).
     pub fn set_hyper(&self, hyper: crate::config::Hyper) {
         self.conv_ps.set_hyper(hyper);
         self.fc.set_hyper(hyper);
+    }
+
+    /// Aggregate literal-cache counters (conv + fc) as (hits, misses).
+    pub fn lit_cache_stats(&self) -> (u64, u64) {
+        let (ch, cm) = self.conv_lits.stats();
+        let (fh, fm) = self.fc.lit_cache().stats();
+        (ch + fh, cm + fm)
     }
 
     /// Current full model (conv ++ fc) as a ParamSet.

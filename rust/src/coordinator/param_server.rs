@@ -5,19 +5,69 @@
 //! Staleness of a publish = number of model updates between the worker's
 //! `read()` and its `publish()`. With g groups in round-robin steady
 //! state this converges to S = g − 1, which the tests assert.
+//!
+//! # Sharding (DESIGN.md §Perf)
+//!
+//! The flat parameter vector is partitioned at tensor granularity into N
+//! independently-locked shards (LPT-balanced by scalar count), so:
+//!
+//! * concurrent `publish` calls from different groups pipeline across
+//!   disjoint shards instead of serializing behind one model mutex;
+//! * one large `publish` fans the fused eq. (3)–(4) update out across
+//!   shards with scoped threads (only above a size threshold — thread
+//!   spawn would cost more than it saves on small conv models);
+//! * `read()` returns a consistent snapshot in O(tensor-count) Arc
+//!   bumps: it takes the layout write lock, which publishers hold shared
+//!   for the duration of a publish, so a snapshot can never observe a
+//!   torn (partially applied) update.
+//!
+//! Version/staleness accounting stays globally consistent through one
+//! O(1) `meta` critical section per operation: under any single-threaded
+//! interleaving the observable behavior (versions, staleness histogram,
+//! parameter values) is bit-identical to the historical single-lock
+//! server regardless of shard count. Under true concurrency, each shard
+//! applies every publish exactly once, in some per-shard order; for the
+//! associative-commutative part of the update this matches the serial
+//! result up to fp reduction order (asserted by `it_shards.rs`).
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use anyhow::{ensure, Result};
 
 use crate::config::Hyper;
-use crate::tensor::{axpy, HostTensor};
+use crate::tensor::{axpy, momentum_sgd_step, HostTensor};
+
+/// A publish fans out across scoped threads only when at least two
+/// shards carry this many scalars: spawning a thread (~10µs) must be
+/// cheaper than the fused update it offloads, and a partition dominated
+/// by one giant tensor (the merged-FC weight matrix) gains nothing from
+/// fan-out. caffenet8's conv phase (~54K scalars total) stays serial;
+/// models with several large tensors fan out.
+const PARALLEL_SHARD_MIN_SCALARS: usize = 1 << 16;
+
+/// Process-wide snapshot-identity source. Every parameter mutation on
+/// any server stamps a fresh id, so a version-keyed literal cache can
+/// never alias two different parameter contents — not across servers,
+/// and not across `restore()` (which resets `version` to 0 but NOT the
+/// content id).
+static NEXT_CONTENT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_content_id() -> u64 {
+    NEXT_CONTENT_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Read handle: a consistent snapshot of the model plus its version.
+///
+/// Snapshot tensors share storage with the live model copy-on-write, so
+/// holding one is cheap and never blocks publishers.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
     pub params: Vec<HostTensor>,
     pub version: u64,
+    /// Globally-unique identity of this parameter content; the key for
+    /// the version-keyed literal cache (compute_group / merged_fc).
+    pub content_id: u64,
 }
 
 /// Aggregate staleness statistics.
@@ -40,131 +90,294 @@ impl StalenessStats {
     }
 }
 
-struct Inner {
+/// One shard's slice of the model: the tensors it owns plus their
+/// velocity accumulators, behind this shard's own lock.
+struct ShardData {
     params: Vec<HostTensor>,
     velocity: Vec<HostTensor>,
+}
+
+struct Shard {
+    /// Global tensor indices owned by this shard, ascending; slot `j`
+    /// of `ShardData` holds global tensor `idx[j]`.
+    idx: Vec<usize>,
+    /// Scalar count owned by this shard (parallel fan-out gate).
+    scalars: usize,
+    data: Mutex<ShardData>,
+}
+
+/// The shard partition. Publishers hold the enclosing RwLock shared (so
+/// they pipeline across shard mutexes); snapshots and maintenance ops
+/// hold it exclusive, which both drains in-flight publishes and gives
+/// lock-free `get_mut` access to every shard.
+struct Layout {
+    shards: Vec<Shard>,
+    /// tensor i lives at shards[loc[i].0] slot loc[i].1.
+    loc: Vec<(usize, usize)>,
+    /// Immutable shapes, for lock-free publish validation.
+    shapes: Vec<Vec<usize>>,
+    /// Shard count requested at construction (restore() re-partitions
+    /// a possibly different tensor set with the same target).
+    want_shards: usize,
+}
+
+impl Layout {
+    fn build(params: Vec<HostTensor>, want_shards: usize) -> Layout {
+        let shapes: Vec<Vec<usize>> = params.iter().map(|t| t.shape().to_vec()).collect();
+        let n_shards = want_shards.clamp(1, params.len().max(1));
+
+        // LPT balance: biggest tensors first, each onto the currently
+        // lightest shard (ties -> lowest shard id; deterministic).
+        let mut order: Vec<usize> = (0..params.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(params[i].len()), i));
+        let mut assign: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        let mut load = vec![0usize; n_shards];
+        for i in order {
+            let s = (0..n_shards).min_by_key(|&s| load[s]).unwrap();
+            assign[s].push(i);
+            load[s] += params[i].len();
+        }
+        for a in assign.iter_mut() {
+            a.sort_unstable();
+        }
+
+        let mut loc = vec![(0usize, 0usize); params.len()];
+        let mut take: Vec<Option<HostTensor>> = params.into_iter().map(Some).collect();
+        let shards = assign
+            .into_iter()
+            .enumerate()
+            .map(|(si, idx)| {
+                let params: Vec<HostTensor> =
+                    idx.iter().map(|&i| take[i].take().expect("each tensor once")).collect();
+                let velocity =
+                    params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+                for (slot, &i) in idx.iter().enumerate() {
+                    loc[i] = (si, slot);
+                }
+                Shard { idx, scalars: load[si], data: Mutex::new(ShardData { params, velocity }) }
+            })
+            .collect();
+        Layout { shards, loc, shapes, want_shards }
+    }
+}
+
+/// O(1) bookkeeping shared by all shards.
+struct Meta {
     version: u64,
+    content_id: u64,
     hyper: Hyper,
     stats: StalenessStats,
 }
 
-/// A parameter server for one model phase (conv or FC).
+/// A sharded parameter server for one model phase (conv or FC).
 pub struct ParamServer {
-    inner: Mutex<Inner>,
+    layout: RwLock<Layout>,
+    meta: Mutex<Meta>,
 }
 
 impl ParamServer {
+    /// Server with the default shard count (one per available core, at
+    /// most 8 — shard count never affects results, only contention).
     pub fn new(params: Vec<HostTensor>, hyper: Hyper) -> Self {
-        let velocity = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+        Self::with_shards(params, hyper, default_shard_count())
+    }
+
+    /// Server with an explicit shard count (clamped to the tensor
+    /// count); `with_shards(.., 1)` is the serial single-lock reference.
+    pub fn with_shards(params: Vec<HostTensor>, hyper: Hyper, n_shards: usize) -> Self {
         Self {
-            inner: Mutex::new(Inner {
-                params,
-                velocity,
+            layout: RwLock::new(Layout::build(params, n_shards)),
+            meta: Mutex::new(Meta {
                 version: 0,
+                content_id: fresh_content_id(),
                 hyper,
                 stats: StalenessStats::default(),
             }),
         }
     }
 
+    pub fn num_shards(&self) -> usize {
+        self.layout.read().unwrap().shards.len()
+    }
+
     /// Snapshot the model (the worker's "read the model" step).
+    ///
+    /// Taking the layout lock exclusively drains in-flight publishes, so
+    /// the snapshot is consistent; assembling it is O(tensor-count) Arc
+    /// bumps thanks to COW storage.
     pub fn read(&self) -> ModelSnapshot {
-        let inner = self.inner.lock().unwrap();
-        ModelSnapshot { params: inner.params.clone(), version: inner.version }
+        let mut layout = self.layout.write().unwrap();
+        let (version, content_id) = {
+            let meta = self.meta.lock().unwrap();
+            (meta.version, meta.content_id)
+        };
+        let Layout { shards, loc, .. } = &mut *layout;
+        let mut params: Vec<Option<HostTensor>> = vec![None; loc.len()];
+        for shard in shards.iter_mut() {
+            let data = shard.data.get_mut().unwrap();
+            for (slot, &ti) in shard.idx.iter().enumerate() {
+                params[ti] = Some(data.params[slot].clone());
+            }
+        }
+        ModelSnapshot {
+            params: params.into_iter().map(|t| t.expect("layout covers every tensor")).collect(),
+            version,
+            content_id,
+        }
     }
 
     /// Publish a gradient computed against `read_version`. Applies paper
     /// eq. (4): `V <- mu V - eta (grad + lambda W)`, then eq. (3):
     /// `W <- W + V`. Returns the staleness of this publish.
+    ///
+    /// Holds the layout lock shared: publishes from different groups
+    /// run concurrently, serializing only per shard.
     pub fn publish(&self, grads: &[HostTensor], read_version: u64) -> Result<u64> {
-        let mut inner = self.inner.lock().unwrap();
+        let layout = self.layout.read().unwrap();
         ensure!(
-            grads.len() == inner.params.len(),
+            grads.len() == layout.shapes.len(),
             "publish with {} grads for {} params",
             grads.len(),
-            inner.params.len()
+            layout.shapes.len()
         );
-        let Inner { params, velocity, hyper, .. } = &mut *inner;
-        let (mu, eta, lambda) = (hyper.momentum, hyper.lr, hyper.lambda);
-        for ((w, v), g) in params.iter_mut().zip(velocity.iter_mut()).zip(grads) {
-            ensure!(g.shape() == w.shape(), "grad shape {:?} != param {:?}", g.shape(), w.shape());
-            let (wd, vd, gd) = (w.data_mut(), v.data_mut(), g.data());
-            // V <- mu V - eta (g + lambda W); W <- W + V   (fused, in place)
-            for i in 0..wd.len() {
-                vd[i] = mu * vd[i] - eta * (gd[i] + lambda * wd[i]);
-                wd[i] += vd[i];
+        for (g, shape) in grads.iter().zip(&layout.shapes) {
+            ensure!(
+                g.shape() == &shape[..],
+                "grad shape {:?} != param {:?}",
+                g.shape(),
+                shape
+            );
+        }
+        let (mu, eta, lambda) = {
+            let meta = self.meta.lock().unwrap();
+            (meta.hyper.momentum, meta.hyper.lr, meta.hyper.lambda)
+        };
+        let apply = |shard: &Shard| {
+            let mut data = shard.data.lock().unwrap();
+            let ShardData { params, velocity } = &mut *data;
+            for (slot, &ti) in shard.idx.iter().enumerate() {
+                momentum_sgd_step(
+                    params[slot].data_mut(),
+                    velocity[slot].data_mut(),
+                    grads[ti].data(),
+                    mu,
+                    eta,
+                    lambda,
+                );
+            }
+        };
+        let (heavy, light): (Vec<&Shard>, Vec<&Shard>) = layout
+            .shards
+            .iter()
+            .partition(|s| s.scalars >= PARALLEL_SHARD_MIN_SCALARS);
+        if heavy.len() >= 2 {
+            // Spawn only for heavy shards; light shards ride on the
+            // calling thread — a spawn costs more than their update.
+            let apply = &apply;
+            std::thread::scope(|scope| {
+                for &shard in &heavy[1..] {
+                    scope.spawn(move || apply(shard));
+                }
+                apply(heavy[0]);
+                for &shard in &light {
+                    apply(shard);
+                }
+            });
+        } else {
+            for shard in &layout.shards {
+                apply(shard);
             }
         }
-        let staleness = inner.version - read_version;
-        inner.version += 1;
-        inner.stats.publishes += 1;
-        inner.stats.total_staleness += staleness;
-        inner.stats.max_staleness = inner.stats.max_staleness.max(staleness);
+        let mut meta = self.meta.lock().unwrap();
+        let staleness = meta.version - read_version;
+        meta.version += 1;
+        meta.content_id = fresh_content_id();
+        meta.stats.publishes += 1;
+        meta.stats.total_staleness += staleness;
+        meta.stats.max_staleness = meta.stats.max_staleness.max(staleness);
         let s = staleness.min(255) as usize;
-        if inner.stats.histogram.len() <= s {
-            inner.stats.histogram.resize(s + 1, 0);
+        if meta.stats.histogram.len() <= s {
+            meta.stats.histogram.resize(s + 1, 0);
         }
-        inner.stats.histogram[s] += 1;
+        meta.stats.histogram[s] += 1;
         Ok(staleness)
     }
 
     /// Replace the hyperparameters (the optimizer retunes between epochs;
     /// velocity is preserved like the paper's continued runs).
     pub fn set_hyper(&self, hyper: Hyper) {
-        self.inner.lock().unwrap().hyper = hyper;
+        self.meta.lock().unwrap().hyper = hyper;
     }
 
     pub fn hyper(&self) -> Hyper {
-        self.inner.lock().unwrap().hyper
+        self.meta.lock().unwrap().hyper
     }
 
     pub fn version(&self) -> u64 {
-        self.inner.lock().unwrap().version
+        self.meta.lock().unwrap().version
     }
 
     pub fn staleness_stats(&self) -> StalenessStats {
-        self.inner.lock().unwrap().stats.clone()
+        self.meta.lock().unwrap().stats.clone()
     }
 
     /// Reset velocity (used when a tuning probe would otherwise inherit a
     /// velocity computed under different hyperparameters).
     pub fn reset_velocity(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        for v in inner.velocity.iter_mut() {
-            v.data_mut().fill(0.0);
+        let mut layout = self.layout.write().unwrap();
+        for shard in layout.shards.iter_mut() {
+            let data = shard.data.get_mut().unwrap();
+            for v in data.velocity.iter_mut() {
+                v.data_mut().fill(0.0);
+            }
         }
     }
 
     /// Overwrite parameters (checkpoint restore) and reset bookkeeping.
+    /// The schema may change, so the shard partition is rebuilt; the
+    /// content id moves FORWARD so stale cache entries cannot alias.
     pub fn restore(&self, params: Vec<HostTensor>) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.velocity = params.iter().map(|t| HostTensor::zeros(t.shape())).collect();
-        inner.params = params;
-        inner.version = 0;
-        inner.stats = StalenessStats::default();
+        let mut layout = self.layout.write().unwrap();
+        let want = layout.want_shards;
+        *layout = Layout::build(params, want);
+        let mut meta = self.meta.lock().unwrap();
+        meta.version = 0;
+        meta.content_id = fresh_content_id();
+        meta.stats = StalenessStats::default();
     }
 
     /// Diagnostic: L2 norm of the full parameter vector.
     pub fn param_norm(&self) -> f64 {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .params
-            .iter()
-            .map(|t| crate::tensor::dot(t.data(), t.data()))
-            .sum::<f64>()
-            .sqrt()
+        let mut layout = self.layout.write().unwrap();
+        let mut sum = 0.0f64;
+        for shard in layout.shards.iter_mut() {
+            let data = shard.data.get_mut().unwrap();
+            for t in &data.params {
+                sum += crate::tensor::dot(t.data(), t.data());
+            }
+        }
+        sum.sqrt()
     }
 
     /// Apply a raw additive delta (test hook / model-averaging support).
     pub fn apply_delta(&self, deltas: &[HostTensor], scale: f32) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        ensure!(deltas.len() == inner.params.len(), "delta arity mismatch");
-        for (w, d) in inner.params.iter_mut().zip(deltas) {
-            axpy(scale, d.data(), w.data_mut());
+        let layout = self.layout.read().unwrap();
+        ensure!(deltas.len() == layout.shapes.len(), "delta arity mismatch");
+        for shard in &layout.shards {
+            let mut data = shard.data.lock().unwrap();
+            for (slot, &ti) in shard.idx.iter().enumerate() {
+                axpy(scale, deltas[ti].data(), data.params[slot].data_mut());
+            }
         }
-        inner.version += 1;
+        let mut meta = self.meta.lock().unwrap();
+        meta.version += 1;
+        meta.content_id = fresh_content_id();
         Ok(())
     }
+}
+
+fn default_shard_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 8)
 }
 
 #[cfg(test)]
@@ -236,5 +449,96 @@ mod tests {
         assert_eq!(ps.version(), 0);
         assert_eq!(ps.read().params[0].data(), &[0.0, 0.0]);
         assert_eq!(ps.staleness_stats().publishes, 0);
+    }
+
+    fn ladder_params() -> Vec<HostTensor> {
+        // Deliberately unbalanced sizes to exercise the LPT partition.
+        [48usize, 3, 17, 96, 8, 5]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                HostTensor::new(vec![n], (0..n).map(|j| (i * 100 + j) as f32 * 0.01).collect())
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_count_never_changes_results() {
+        let hyper = Hyper { lr: 0.05, momentum: 0.7, lambda: 1e-3 };
+        let mut rng = crate::util::rng::Rng::seed_from_u64(11);
+        let grads: Vec<Vec<HostTensor>> = (0..10)
+            .map(|_| {
+                ladder_params()
+                    .iter()
+                    .map(|t| HostTensor::randn(t.shape(), 1.0, &mut rng))
+                    .collect()
+            })
+            .collect();
+        let reference = ParamServer::with_shards(ladder_params(), hyper, 1);
+        for g in &grads {
+            reference.publish(g, reference.version()).unwrap();
+        }
+        let expect = reference.read().params;
+        for n_shards in [2usize, 3, 5, 16] {
+            let ps = ParamServer::with_shards(ladder_params(), hyper, n_shards);
+            assert_eq!(ps.num_shards(), n_shards.min(6), "clamped to tensor count");
+            for g in &grads {
+                ps.publish(g, ps.version()).unwrap();
+            }
+            for (x, y) in ps.read().params.iter().zip(expect.iter()) {
+                assert_eq!(x.shape(), y.shape());
+                assert_eq!(x.data(), y.data(), "bit-identical across shard counts");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshots_are_isolated_and_cheap() {
+        let ps = tiny_ps(0.5, 0.1, 0.0);
+        let s1 = ps.read();
+        let s2 = ps.read();
+        // Unchanged model: snapshots alias the same storage (COW).
+        assert!(s1.params[0].shares_storage(&s2.params[0]));
+        assert_eq!(s1.content_id, s2.content_id);
+        let g = vec![HostTensor::new(vec![2], vec![1.0, -1.0]).unwrap()];
+        ps.publish(&g, s1.version).unwrap();
+        // The live snapshot is untouched by the publish.
+        assert_eq!(s1.params[0].data(), &[1.0, 2.0]);
+        let s3 = ps.read();
+        assert!(!s3.params[0].shares_storage(&s1.params[0]));
+        assert_ne!(s3.content_id, s1.content_id);
+    }
+
+    #[test]
+    fn content_id_survives_restore() {
+        let ps = tiny_ps(0.0, 0.1, 0.0);
+        let before = ps.read().content_id;
+        ps.restore(vec![HostTensor::zeros(&[2])]);
+        let after = ps.read();
+        assert_eq!(after.version, 0, "version resets on restore");
+        assert_ne!(after.content_id, before, "content id must NOT reset");
+    }
+
+    #[test]
+    fn apply_delta_bumps_version_across_shards() {
+        let ps = ParamServer::with_shards(
+            ladder_params(),
+            Hyper { lr: 0.0, momentum: 0.0, lambda: 0.0 },
+            3,
+        );
+        let ones: Vec<HostTensor> = ladder_params()
+            .iter()
+            .map(|t| HostTensor::new(t.shape().to_vec(), vec![1.0; t.len()]).unwrap())
+            .collect();
+        let before = ps.read();
+        ps.apply_delta(&ones, 2.0).unwrap();
+        let after = ps.read();
+        assert_eq!(after.version, before.version + 1);
+        for (a, b) in after.params.iter().zip(before.params.iter()) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y - 2.0).abs() < 1e-6);
+            }
+        }
     }
 }

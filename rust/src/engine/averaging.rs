@@ -18,7 +18,7 @@ use crate::data::SyntheticDataset;
 use crate::model::ParamSet;
 use crate::optimizer::he_model::HeParams;
 use crate::runtime::{from_literal, labels_literal, to_literal, Runtime};
-use crate::tensor::{axpy, scale, HostTensor};
+use crate::tensor::{axpy, momentum_sgd_step, scale, HostTensor};
 
 /// Model-averaging trainer.
 pub struct AveragingEngine<'a> {
@@ -82,12 +82,14 @@ impl<'a> AveragingEngine<'a> {
                     let acc = from_literal(&outs[1])?.scalar()?;
                     for ((wi, vi), go) in w.iter_mut().zip(v.iter_mut()).zip(&outs[2..]) {
                         let gt = from_literal(go)?;
-                        let (wd, vd, gd) = (wi.data_mut(), vi.data_mut(), gt.data());
-                        for i in 0..wd.len() {
-                            vd[i] = hyper.momentum * vd[i]
-                                - hyper.lr * (gd[i] + hyper.lambda * wd[i]);
-                            wd[i] += vd[i];
-                        }
+                        momentum_sgd_step(
+                            wi.data_mut(),
+                            vi.data_mut(),
+                            gt.data(),
+                            hyper.momentum,
+                            hyper.lr,
+                            hyper.lambda,
+                        );
                     }
                     report.records.push(IterRecord {
                         seq: completed,

@@ -10,14 +10,20 @@
 //!   parameter servers, for wall-clock demonstrations of the same
 //!   semantics.
 
+#[cfg(feature = "xla")]
 mod averaging;
 mod report;
+#[cfg(feature = "xla")]
 mod sim_time;
+#[cfg(feature = "xla")]
 mod threaded;
 
+#[cfg(feature = "xla")]
 pub use averaging::AveragingEngine;
 pub use report::{EvalRecord, IterRecord, TrainReport};
+#[cfg(feature = "xla")]
 pub use sim_time::{EngineOptions, SimTimeEngine};
+#[cfg(feature = "xla")]
 pub use threaded::ThreadedEngine;
 
 use crate::tensor::HostTensor;

@@ -38,6 +38,11 @@ pub struct TrainReport {
     /// Real wall-clock seconds the run took on this box.
     pub wallclock_secs: f64,
     pub runtime_stats: RuntimeStats,
+    /// Version-keyed literal cache hits/misses across the run's conv and
+    /// FC servers (DESIGN.md §Perf) — how many snapshot->literal
+    /// conversions were skipped.
+    pub lit_cache_hits: u64,
+    pub lit_cache_misses: u64,
     /// Projection of the conv parameters onto a fixed random direction,
     /// per publish — the trajectory Fig 6's momentum fit runs on.
     pub proj_trace: Vec<f64>,

@@ -178,6 +178,7 @@ impl<'a> SimTimeEngine<'a> {
         let mut batch_counter = self.cfg.seed << 20; // distinct data stream per seed
         let mut completed = 0u64;
         let mut report = TrainReport { groups: g, group_size: k, ..Default::default() };
+        report.records.reserve(self.cfg.steps);
         let mut acc_window: Vec<f32> = vec![];
         let mut stop = false;
 
@@ -283,6 +284,9 @@ impl<'a> SimTimeEngine<'a> {
         report.fc_staleness = topo.fc.param_server().staleness_stats();
         report.wallclock_secs = wall0.elapsed().as_secs_f64();
         report.runtime_stats = self.rt.stats();
+        let (hits, misses) = topo.lit_cache_stats();
+        report.lit_cache_hits = hits;
+        report.lit_cache_misses = misses;
         Ok(report)
     }
 

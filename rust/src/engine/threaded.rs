@@ -3,6 +3,13 @@
 //! the coordinator's semantics (staleness, merged-FC serialization) hold
 //! outside the simulated clock. PJRT CPU execution is thread-safe (see
 //! runtime/mod.rs); the merged FC server serializes itself internally.
+//!
+//! Perf (DESIGN.md §Perf): iteration records are accumulated in
+//! per-thread vectors (pre-reserved to the per-group share of
+//! `cfg.steps`) and merged once after the scope ends — the historical
+//! global records mutex put one more contended lock on every iteration
+//! of every group, exactly where the sharded parameter server had just
+//! removed one.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -35,64 +42,76 @@ impl<'a> ThreadedEngine<'a> {
         let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
         let wall0 = Instant::now();
         let batch_counter = AtomicU64::new(self.cfg.seed << 20);
-        let completed = AtomicU64::new(0);
+        let claimed = AtomicU64::new(0);
         let failed = AtomicBool::new(false);
-        let records: Mutex<Vec<IterRecord>> = Mutex::new(vec![]);
+        // First step error, preserved for the caller (cold path only).
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let steps = self.cfg.steps as u64;
 
+        let mut records: Vec<IterRecord> = Vec::with_capacity(self.cfg.steps);
         std::thread::scope(|scope| {
-            for group in &topo.groups {
-                let rt = self.rt;
-                let fc = &topo.fc;
-                let data = &data;
-                let batch_counter = &batch_counter;
-                let completed = &completed;
-                let failed = &failed;
-                let records = &records;
-                let cfg = &self.cfg;
-                scope.spawn(move || {
-                    loop {
-                        if failed.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        // Claim an iteration slot.
-                        let slot = completed.fetch_add(1, Ordering::Relaxed);
-                        if slot >= steps {
-                            break;
-                        }
-                        let bi = batch_counter.fetch_add(1, Ordering::Relaxed);
-                        let batch = data.batch(bi, cfg.batch);
-                        match group.step(rt, fc, &batch.images, &batch.labels) {
-                            Ok(out) => {
-                                let mut recs = records.lock().unwrap();
-                                let seq = recs.len() as u64;
-                                recs.push(IterRecord {
-                                    seq,
+            let handles: Vec<_> = topo
+                .groups
+                .iter()
+                .map(|group| {
+                    let rt = self.rt;
+                    let fc = &topo.fc;
+                    let data = &data;
+                    let batch_counter = &batch_counter;
+                    let claimed = &claimed;
+                    let failed = &failed;
+                    let first_err = &first_err;
+                    let cfg = &self.cfg;
+                    scope.spawn(move || {
+                        let mut local: Vec<IterRecord> =
+                            Vec::with_capacity(cfg.steps / g + 2);
+                        loop {
+                            if failed.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // Claim an iteration slot.
+                            let slot = claimed.fetch_add(1, Ordering::Relaxed);
+                            if slot >= steps {
+                                break;
+                            }
+                            let bi = batch_counter.fetch_add(1, Ordering::Relaxed);
+                            let batch = data.batch(bi, cfg.batch);
+                            match group.step(rt, fc, &batch.images, &batch.labels) {
+                                Ok(out) => local.push(IterRecord {
+                                    seq: 0, // assigned after the vtime merge sort
                                     group: group.id,
                                     vtime: wall0.elapsed().as_secs_f64(),
                                     loss: out.loss,
                                     acc: out.acc,
                                     conv_staleness: out.conv_staleness,
                                     fc_staleness: out.fc_staleness,
-                                });
-                            }
-                            Err(_) => {
-                                failed.store(true, Ordering::Relaxed);
-                                break;
+                                }),
+                                Err(e) => {
+                                    failed.store(true, Ordering::Relaxed);
+                                    first_err.lock().unwrap().get_or_insert(e);
+                                    break;
+                                }
                             }
                         }
-                    }
-                });
+                        local
+                    })
+                })
+                .collect();
+            for handle in handles {
+                records.extend(handle.join().expect("group thread panicked"));
             }
         });
 
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e.context(format!("group thread failed (run aborted at {} records)", records.len())));
+        }
         anyhow::ensure!(!failed.load(Ordering::Relaxed), "a group thread failed");
-        let mut records = records.into_inner().unwrap();
         records.sort_by(|a, b| a.vtime.total_cmp(&b.vtime));
         for (i, r) in records.iter_mut().enumerate() {
             r.seq = i as u64;
         }
         let virtual_time = records.last().map(|r| r.vtime).unwrap_or(0.0);
+        let (lit_cache_hits, lit_cache_misses) = topo.lit_cache_stats();
         Ok(TrainReport {
             records,
             evals: vec![],
@@ -101,6 +120,8 @@ impl<'a> ThreadedEngine<'a> {
             virtual_time,
             wallclock_secs: wall0.elapsed().as_secs_f64(),
             runtime_stats: self.rt.stats(),
+            lit_cache_hits,
+            lit_cache_misses,
             proj_trace: vec![],
             groups: g,
             group_size: topo.k,

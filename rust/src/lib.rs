@@ -7,8 +7,10 @@
 //!   the `b_p` knob — the paper's single-device contribution.
 //! * **L2** (JAX, build time): the two-phase CNN (conv phase / FC phase)
 //!   lowered to HLO-text artifacts in `artifacts/`.
-//! * **L3** (this crate, request path): compute groups, conv/FC parameter
-//!   servers with merged-FC physical mapping, asynchronous execution with
+//! * **L3** (this crate, request path): compute groups, sharded conv/FC
+//!   parameter servers (COW snapshots, per-shard locks, version-keyed
+//!   literal caching — DESIGN.md §Perf) with merged-FC physical mapping,
+//!   asynchronous execution with
 //!   measured staleness, the analytic hardware-efficiency model, the
 //!   implicit-momentum statistical-efficiency model (Theorem 1), and the
 //!   automatic optimizer (Algorithm 1) plus a Bayesian baseline.
@@ -37,5 +39,8 @@ pub mod tensor;
 pub mod util;
 
 pub use config::{ClusterSpec, Hyper, Strategy, TrainConfig};
-pub use engine::{SimTimeEngine, TrainReport};
+pub use engine::TrainReport;
+#[cfg(feature = "xla")]
+pub use engine::SimTimeEngine;
+#[cfg(feature = "xla")]
 pub use runtime::Runtime;

@@ -42,12 +42,14 @@ pub trait Trainer {
 }
 
 /// The real trainer: wraps the simulated-time engine over a base config.
+#[cfg(feature = "xla")]
 pub struct EngineTrainer<'a> {
     pub rt: &'a crate::runtime::Runtime,
     pub base: crate::config::TrainConfig,
     pub opts: crate::engine::EngineOptions,
 }
 
+#[cfg(feature = "xla")]
 impl<'a> Trainer for EngineTrainer<'a> {
     fn train(
         &mut self,

@@ -1,0 +1,130 @@
+//! Version-keyed cache of HostTensor -> xla::Literal conversions
+//! (DESIGN.md §Perf).
+//!
+//! A compute group re-converts its whole parameter snapshot to XLA
+//! literals every iteration; whenever the snapshot is unchanged since
+//! the last conversion — repeated reads between publishes, several
+//! groups reading the same version in the same scheduling burst, probe
+//! restarts — that work is pure waste. The cache keys one converted
+//! literal set by the snapshot's `content_id` (globally unique per
+//! parameter content, monotone across `restore()`, so an entry can
+//! never alias different values) and hands out `Arc` references, so a
+//! hit is a pointer bump.
+//!
+//! Capacity is one entry: the invariant callers rely on is "the
+//! PREVIOUS conversion is reusable", which bounds memory to one extra
+//! literal set per cache regardless of how many versions flow through.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::to_literal;
+use crate::tensor::HostTensor;
+
+/// An immutable, shareable set of converted literals.
+pub struct LiteralSet(Vec<xla::Literal>);
+
+// SAFETY: a converted literal is a plain host buffer that is only ever
+// read after construction (execute borrows it immutably); the Vec is
+// never mutated once wrapped. Sharing read-only across threads is safe
+// even when the underlying literal type is a raw-pointer wrapper.
+unsafe impl Send for LiteralSet {}
+unsafe impl Sync for LiteralSet {}
+
+impl LiteralSet {
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.0
+    }
+}
+
+/// Single-entry literal cache keyed by snapshot content id.
+#[derive(Default)]
+pub struct LiteralCache {
+    slot: Mutex<Option<(u64, Arc<LiteralSet>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl LiteralCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the literal set for `key`, converting `tensors` only on a
+    /// miss. Conversion runs outside the lock: two threads racing on the
+    /// same fresh key may both convert (the later store wins), which
+    /// wastes work but never blocks one group's conversion behind
+    /// another's.
+    pub fn get_or_convert(&self, key: u64, tensors: &[HostTensor]) -> Result<Arc<LiteralSet>> {
+        if let Some((k, set)) = &*self.slot.lock().unwrap() {
+            if *k == key {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(set.clone());
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            tensors.iter().map(to_literal).collect::<Result<_>>()?;
+        let set = Arc::new(LiteralSet(lits));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Content ids are monotone, so never let a slow in-flight
+        // conversion of an OLDER snapshot evict a fresher entry.
+        let mut slot = self.slot.lock().unwrap();
+        let fresher = match &*slot {
+            Some((resident, _)) => key > *resident,
+            None => true,
+        };
+        if fresher {
+            *slot = Some((key, set.clone()));
+        }
+        Ok(set)
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensors() -> Vec<HostTensor> {
+        vec![
+            HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            HostTensor::new(vec![3], vec![5.0, 6.0, 7.0]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn hit_returns_same_set() {
+        let cache = LiteralCache::new();
+        let a = cache.get_or_convert(7, &tensors()).unwrap();
+        let b = cache.get_or_convert(7, &tensors()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must share the conversion");
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(a.literals().len(), 2);
+    }
+
+    #[test]
+    fn key_change_invalidates() {
+        let cache = LiteralCache::new();
+        let a = cache.get_or_convert(1, &tensors()).unwrap();
+        let b = cache.get_or_convert(2, &tensors()).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        // Returning to an evicted key reconverts (capacity is 1).
+        let c = cache.get_or_convert(1, &tensors()).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.stats(), (0, 3));
+    }
+
+    #[test]
+    fn converted_values_roundtrip() {
+        let cache = LiteralCache::new();
+        let set = cache.get_or_convert(3, &tensors()).unwrap();
+        let back = super::super::from_literal(&set.literals()[0]).unwrap();
+        assert_eq!(back.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -5,21 +5,41 @@
 //! see that file's docstring for the 64-bit-id incompatibility). Each
 //! artifact is compiled lazily on first use and cached for the lifetime
 //! of the process; the hot path is `execute()` only.
+//!
+//! The manifest layer (schema/inventory) is always available; everything
+//! that needs the `xla` crate sits behind the `xla` feature so the pure
+//! layers (tensors, sharded parameter server, optimizer math) build and
+//! test without a PJRT backend (DESIGN.md §Offline builds).
 
-mod literal;
 mod manifest;
 
-pub use literal::{from_literal, labels_literal, to_literal};
+#[cfg(feature = "xla")]
+mod literal;
+#[cfg(feature = "xla")]
+mod literal_cache;
+
 pub use manifest::{ArchInfo, ArtifactEntry, Manifest, ParamSpec, TensorSpec};
 
+#[cfg(feature = "xla")]
+pub use literal::{from_literal, labels_literal, to_literal};
+#[cfg(feature = "xla")]
+pub use literal_cache::{LiteralCache, LiteralSet};
+
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::path::PathBuf;
+#[cfg(feature = "xla")]
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
+#[cfg(feature = "xla")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "xla")]
 use crate::tensor::HostTensor;
 
 /// Counters for the L3 perf story: how much time goes to XLA execution
@@ -31,6 +51,12 @@ pub struct RuntimeStats {
     pub compile_secs: f64,
 }
 
+/// Per-artifact compile cell: the cell's own lock serializes compilation
+/// of ONE name (so a racing thread waits instead of duplicating the
+/// compile and leaking the loser) while other names compile in parallel.
+#[cfg(feature = "xla")]
+type ExeCell = Arc<Mutex<Option<&'static xla::PjRtLoadedExecutable>>>;
+
 /// The process-wide PJRT runtime.
 ///
 /// # Thread safety
@@ -39,22 +65,26 @@ pub struct RuntimeStats {
 /// (TfrtCpuClient) is thread-safe by the PJRT contract: concurrent
 /// `Execute` calls are supported and internally synchronized. Compiled
 /// executables live for the whole process (they are intentionally leaked
-/// into `&'static` so `execute` runs without holding the cache lock).
+/// into `&'static` so `execute` runs without holding any cache lock).
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    exes: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
+    exes: Mutex<HashMap<String, ExeCell>>,
     executions: AtomicU64,
     execute_nanos: AtomicU64,
     compile_nanos: AtomicU64,
 }
 
 // SAFETY: see "Thread safety" above — PJRT CPU execution is thread-safe;
-// all mutable Rust-side state is behind the Mutex / atomics.
+// all mutable Rust-side state is behind the Mutexes / atomics.
+#[cfg(feature = "xla")]
 unsafe impl Send for Runtime {}
+#[cfg(feature = "xla")]
 unsafe impl Sync for Runtime {}
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Open the artifacts directory, parse the manifest, create the PJRT
     /// CPU client. No artifact is compiled yet.
@@ -79,8 +109,22 @@ impl Runtime {
 
     /// Compile (and cache) an artifact by manifest name; returns the
     /// process-lifetime executable handle.
+    ///
+    /// The global map lock is held only for the cell lookup; the
+    /// per-name cell lock is held across the (slow) compile, so two
+    /// threads racing on the same artifact produce exactly one
+    /// executable — the historical version dropped the lock between
+    /// lookup and insert, compiling twice and leaking the loser forever.
     pub fn compile(&self, name: &str) -> Result<&'static xla::PjRtLoadedExecutable> {
-        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+        let cell: ExeCell = self
+            .exes
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone();
+        let mut slot = cell.lock().unwrap();
+        if let Some(exe) = *slot {
             return Ok(exe);
         }
         let entry = self.manifest.entry(name)?;
@@ -96,8 +140,8 @@ impl Runtime {
         self.compile_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
-        let mut map = self.exes.lock().unwrap();
-        Ok(map.entry(name.to_string()).or_insert(leaked))
+        *slot = Some(leaked);
+        Ok(leaked)
     }
 
     /// Execute an artifact. Inputs are f32 tensors and/or i32 label
@@ -157,10 +201,19 @@ impl Runtime {
         }
     }
 
-    /// Names of currently compiled artifacts.
+    /// Names of currently compiled artifacts. Waits for any in-flight
+    /// compiles (cells are cloned out first, so the map lock is never
+    /// held while blocking on a cell).
     pub fn compiled(&self) -> Vec<String> {
-        let map = self.exes.lock().unwrap();
-        let mut v: Vec<String> = map.keys().cloned().collect();
+        let cells: Vec<(String, ExeCell)> = {
+            let map = self.exes.lock().unwrap();
+            map.iter().map(|(k, c)| (k.clone(), c.clone())).collect()
+        };
+        let mut v: Vec<String> = cells
+            .into_iter()
+            .filter(|(_, cell)| cell.lock().unwrap().is_some())
+            .map(|(k, _)| k)
+            .collect();
         v.sort();
         v
     }

@@ -1,12 +1,22 @@
 //! A dense row-major f32 tensor living in host memory.
+//!
+//! Storage is `Arc`-backed copy-on-write (DESIGN.md §Perf): `clone()` is
+//! an O(1) refcount bump, so a `ParamServer::read()` snapshot of a whole
+//! model costs a handful of pointer bumps instead of an O(scalars) deep
+//! copy under the server lock. The first `data_mut()` after a snapshot
+//! was taken copies the buffer (`Arc::make_mut`), so writers can never
+//! disturb a live snapshot; unshared tensors mutate in place with no
+//! copy at all.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-/// Dense row-major f32 tensor.
+/// Dense row-major f32 tensor with copy-on-write storage.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl HostTensor {
@@ -16,20 +26,20 @@ impl HostTensor {
         if n != data.len() {
             bail!("shape {shape:?} wants {n} elements, got {}", data.len());
         }
-        Ok(Self { shape, data })
+        Ok(Self { shape, data: Arc::new(data) })
     }
 
     /// All-zeros tensor.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+        Self { shape: shape.to_vec(), data: Arc::new(vec![0.0; n]) }
     }
 
     /// Gaussian(0, std) init (paper Appendix F-B uses std 0.01).
     pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Self {
         let n: usize = shape.iter().product();
         let data = (0..n).map(|_| rng.normal_ms(0.0, std as f64) as f32).collect();
-        Self { shape: shape.to_vec(), data }
+        Self { shape: shape.to_vec(), data: Arc::new(data) }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -45,15 +55,23 @@ impl HostTensor {
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
+    /// Mutable view; copy-on-write if the buffer is shared with a
+    /// snapshot (cheap no-op when this tensor is the sole owner).
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data).as_mut_slice()
     }
 
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| shared.as_ref().clone())
+    }
+
+    /// Whether two tensors alias the same buffer (COW not yet triggered).
+    /// Snapshot-isolation tests and pointer-keyed caches use this.
+    pub fn shares_storage(&self, other: &HostTensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Scalar view of a rank-0/size-1 tensor.
@@ -79,7 +97,7 @@ impl HostTensor {
         shape.extend_from_slice(trailing);
         let mut data = Vec::with_capacity(shape.iter().product());
         for p in parts {
-            data.extend_from_slice(&p.data);
+            data.extend_from_slice(p.data());
         }
         HostTensor::new(shape, data)
     }
@@ -131,6 +149,33 @@ mod tests {
             t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.len() as f32;
         assert!(mean.abs() < 0.001, "mean {mean}");
         assert!((var.sqrt() - 0.01).abs() < 0.002, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn clone_shares_until_write() {
+        let a = HostTensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let mut b = a.clone();
+        assert!(a.shares_storage(&b), "clone must be a refcount bump");
+        b.data_mut()[0] = 9.0;
+        assert!(!a.shares_storage(&b), "first write must copy");
+        assert_eq!(a.data(), &[1.0, 2.0, 3.0], "original untouched by COW");
+        assert_eq!(b.data(), &[9.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn unshared_write_keeps_storage() {
+        let mut a = HostTensor::zeros(&[4]);
+        let p0 = a.data().as_ptr();
+        a.data_mut()[1] = 1.0;
+        assert_eq!(a.data().as_ptr(), p0, "sole owner mutates in place");
+    }
+
+    #[test]
+    fn into_data_handles_sharing() {
+        let a = HostTensor::new(vec![2], vec![5.0, 6.0]).unwrap();
+        let b = a.clone();
+        assert_eq!(a.into_data(), vec![5.0, 6.0]); // shared: copies
+        assert_eq!(b.into_data(), vec![5.0, 6.0]); // sole owner: moves
     }
 
     #[test]

@@ -28,6 +28,24 @@ pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Fused momentum-SGD update of paper eq. (3)–(4), in place:
+/// `v <- mu v - eta (g + lambda w); w <- w + v`.
+///
+/// Written as one zipped pass so the compiler can elide bounds checks
+/// and autovectorize: this is the publish hot loop of the sharded
+/// parameter server and must run at memory bandwidth (DESIGN.md §Perf
+/// L3 target). The arithmetic order matches the historical per-index
+/// loop exactly, so trajectories are bit-identical.
+pub fn momentum_sgd_step(w: &mut [f32], v: &mut [f32], g: &[f32], mu: f32, eta: f32, lambda: f32) {
+    debug_assert_eq!(w.len(), v.len());
+    debug_assert_eq!(w.len(), g.len());
+    for ((wi, vi), gi) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+        let nv = mu * *vi - eta * (*gi + lambda * *wi);
+        *vi = nv;
+        *wi += nv;
+    }
+}
+
 /// Dot product.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -63,6 +81,29 @@ mod tests {
         let mut out = [0.0; 2];
         sub_into(&[3.0, 5.0], &[1.0, 1.0], &mut out);
         assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn momentum_sgd_step_matches_eq34() {
+        // Same numbers as the param-server unit test: mu=0.5, eta=0.1.
+        let mut w = [1.0, 2.0];
+        let mut v = [0.0, 0.0];
+        let g = [1.0, -1.0];
+        momentum_sgd_step(&mut w, &mut v, &g, 0.5, 0.1, 0.0);
+        assert!((v[0] + 0.1).abs() < 1e-6 && (v[1] - 0.1).abs() < 1e-6);
+        assert!((w[0] - 0.9).abs() < 1e-6 && (w[1] - 2.1).abs() < 1e-6);
+        momentum_sgd_step(&mut w, &mut v, &g, 0.5, 0.1, 0.0);
+        assert!((w[0] - 0.75).abs() < 1e-6);
+        assert!((w[1] - 2.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_sgd_step_weight_decay() {
+        let mut w = [1.0, 2.0];
+        let mut v = [0.0, 0.0];
+        momentum_sgd_step(&mut w, &mut v, &[0.0, 0.0], 0.0, 0.1, 0.1);
+        assert!((w[0] - 0.99).abs() < 1e-6);
+        assert!((w[1] - 1.98).abs() < 1e-6);
     }
 
     #[test]

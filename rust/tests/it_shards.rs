@@ -1,0 +1,226 @@
+//! Integration/property tests for the SHARDED parameter server
+//! (DESIGN.md §Perf): concurrent sharded publishes must agree with the
+//! serial single-lock path up to fp reduction order, staleness
+//! accounting must stay exact (S = g − 1 under round-robin groups), and
+//! COW snapshots must be consistent under racing publishers.
+//!
+//! Everything here is xla-free, so this suite runs even without the
+//! PJRT backend.
+
+use omnivore::config::Hyper;
+use omnivore::coordinator::{ModelSnapshot, ParamServer};
+use omnivore::tensor::HostTensor;
+use omnivore::util::prop::{arb_vec, for_all_seeds};
+use omnivore::util::rng::Rng;
+
+const SHAPES: [&[usize]; 5] = [&[64, 8], &[96], &[32, 16], &[40], &[8]];
+
+fn init_params(rng: &mut Rng) -> Vec<HostTensor> {
+    SHAPES
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            HostTensor::new(s.to_vec(), arb_vec(rng, n, 1.0)).unwrap()
+        })
+        .collect()
+}
+
+fn grad_set(rng: &mut Rng) -> Vec<HostTensor> {
+    SHAPES
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            HostTensor::new(s.to_vec(), arb_vec(rng, n, 1.0)).unwrap()
+        })
+        .collect()
+}
+
+/// Concurrent sharded publishes of a commutative update (mu = lambda =
+/// 0, so the final model is W0 − eta·Σg in ANY order) must match the
+/// serial single-lock path up to fp reduction order.
+#[test]
+fn concurrent_sharded_publish_matches_serial() {
+    for_all_seeds(6, 0x5a4d, |rng, seed| {
+        let hyper = Hyper { lr: 0.05, momentum: 0.0, lambda: 0.0 };
+        let init = init_params(rng);
+        let n_threads = 4usize;
+        let per_thread = 12usize;
+        let grads: Vec<Vec<Vec<HostTensor>>> = (0..n_threads)
+            .map(|_| (0..per_thread).map(|_| grad_set(rng)).collect())
+            .collect();
+
+        let sharded = ParamServer::with_shards(init.clone(), hyper, 4);
+        std::thread::scope(|scope| {
+            for thread_grads in &grads {
+                let ps = &sharded;
+                scope.spawn(move || {
+                    for g in thread_grads {
+                        let v = ps.read().version;
+                        ps.publish(g, v).unwrap();
+                    }
+                });
+            }
+        });
+
+        let serial = ParamServer::with_shards(init, hyper, 1);
+        for thread_grads in &grads {
+            for g in thread_grads {
+                serial.publish(g, serial.version()).unwrap();
+            }
+        }
+
+        let a = sharded.read();
+        let b = serial.read();
+        let total = (n_threads * per_thread) as u64;
+        assert_eq!(a.version, total, "seed {seed:#x}: every publish counted");
+        for (x, y) in a.params.iter().zip(&b.params) {
+            assert_eq!(x.shape(), y.shape());
+            for (xa, ya) in x.data().iter().zip(y.data()) {
+                assert!(
+                    (xa - ya).abs() < 1e-4,
+                    "seed {seed:#x}: {xa} vs {ya} beyond fp reduction order"
+                );
+            }
+        }
+    });
+}
+
+/// Single-threaded, any shard count: the sharded server is BIT-identical
+/// to the single-lock path, including with momentum and weight decay
+/// (each tensor's update sequence is independent of the partition).
+#[test]
+fn sharded_momentum_sequence_bitwise_exact() {
+    for_all_seeds(10, 0xb17, |rng, seed| {
+        let hyper = Hyper { lr: 0.02, momentum: 0.85, lambda: 5e-4 };
+        let init = init_params(rng);
+        let steps: Vec<Vec<HostTensor>> = (0..15).map(|_| grad_set(rng)).collect();
+        let reference = ParamServer::with_shards(init.clone(), hyper, 1);
+        for g in &steps {
+            reference.publish(g, reference.version()).unwrap();
+        }
+        let expect = reference.read().params;
+        for shards in [2usize, 3, 5] {
+            let ps = ParamServer::with_shards(init.clone(), hyper, shards);
+            for g in &steps {
+                ps.publish(g, ps.version()).unwrap();
+            }
+            for (x, y) in ps.read().params.iter().zip(&expect) {
+                assert_eq!(x.data(), y.data(), "seed {seed:#x} shards {shards}");
+            }
+        }
+    });
+}
+
+/// Round-robin groups: after the warmup ramp, every publish has
+/// staleness exactly g − 1, so the mean converges to g − 1 (paper
+/// §IV-A) — sharding must not perturb the accounting.
+#[test]
+fn round_robin_staleness_converges_to_g_minus_1() {
+    for g in [1usize, 2, 4, 8] {
+        let ps = ParamServer::with_shards(
+            vec![HostTensor::zeros(&[16]), HostTensor::zeros(&[4])],
+            Hyper { lr: 0.01, momentum: 0.9, lambda: 0.0 },
+            2,
+        );
+        let grad = vec![HostTensor::zeros(&[16]), HostTensor::zeros(&[4])];
+        let mut snaps: Vec<ModelSnapshot> = (0..g).map(|_| ps.read()).collect();
+        let total = g * 25;
+        for t in 0..total {
+            let gi = t % g;
+            let s = ps.publish(&grad, snaps[gi].version).unwrap();
+            if t >= g {
+                assert_eq!(s, (g - 1) as u64, "steady state staleness at t={t}");
+            }
+            snaps[gi] = ps.read();
+        }
+        let stats = ps.staleness_stats();
+        assert_eq!(stats.publishes, total as u64);
+        assert_eq!(stats.max_staleness, (g - 1) as u64);
+        assert!(
+            (stats.mean() - (g as f64 - 1.0)).abs() < 0.5,
+            "g={g}: mean staleness {}",
+            stats.mean()
+        );
+        assert_eq!(stats.histogram.iter().sum::<u64>(), total as u64);
+    }
+}
+
+/// Racing readers and publishers: accounting stays exact (version ==
+/// publishes, histogram sums) and every snapshot is internally
+/// consistent — never a torn (partially applied) publish.
+#[test]
+fn concurrent_accounting_and_snapshot_consistency() {
+    // Parameters engineered so a consistent model state is recognizable:
+    // every publish adds exactly +1 to EVERY scalar of both tensors
+    // (lr=1, grad=-1, no momentum/decay), so any untorn snapshot has all
+    // scalars equal.
+    let hyper = Hyper { lr: 1.0, momentum: 0.0, lambda: 0.0 };
+    let params = vec![HostTensor::zeros(&[64]), HostTensor::zeros(&[48]), HostTensor::zeros(&[32])];
+    let ps = ParamServer::with_shards(params, hyper, 3);
+    let minus_one: Vec<HostTensor> = [64usize, 48, 32]
+        .iter()
+        .map(|&n| HostTensor::new(vec![n], vec![-1.0; n]).unwrap())
+        .collect();
+    let n_pub_threads = 4usize;
+    let per_thread = 50usize;
+    std::thread::scope(|scope| {
+        for _ in 0..n_pub_threads {
+            let ps = &ps;
+            let g = &minus_one;
+            scope.spawn(move || {
+                for _ in 0..per_thread {
+                    let v = ps.read().version;
+                    ps.publish(g, v).unwrap();
+                }
+            });
+        }
+        for _ in 0..2 {
+            let ps = &ps;
+            scope.spawn(move || {
+                for _ in 0..200 {
+                    let snap = ps.read();
+                    let first = snap.params[0].data()[0];
+                    for t in &snap.params {
+                        for &x in t.data() {
+                            assert_eq!(x, first, "torn snapshot: {x} vs {first}");
+                        }
+                    }
+                    assert_eq!(
+                        first as u64, snap.version,
+                        "snapshot value must equal the publishes it contains"
+                    );
+                }
+            });
+        }
+    });
+    let total = (n_pub_threads * per_thread) as u64;
+    let stats = ps.staleness_stats();
+    assert_eq!(ps.version(), total);
+    assert_eq!(stats.publishes, total);
+    assert_eq!(stats.histogram.iter().sum::<u64>(), total);
+    let final_snap = ps.read();
+    assert_eq!(final_snap.params[0].data()[0] as u64, total);
+}
+
+/// Snapshots taken while publishers race are COW-isolated: what a
+/// snapshot shows never changes after the fact.
+#[test]
+fn snapshots_frozen_under_racing_publishes() {
+    let hyper = Hyper { lr: 0.1, momentum: 0.5, lambda: 0.0 };
+    let ps = ParamServer::with_shards(vec![HostTensor::zeros(&[32])], hyper, 1);
+    let grad = vec![HostTensor::new(vec![32], vec![1.0; 32]).unwrap()];
+    let snap = ps.read();
+    let frozen: Vec<f32> = snap.params[0].data().to_vec();
+    std::thread::scope(|scope| {
+        let ps = &ps;
+        let g = &grad;
+        scope.spawn(move || {
+            for _ in 0..20 {
+                let v = ps.version();
+                ps.publish(g, v).unwrap();
+            }
+        });
+    });
+    assert_eq!(snap.params[0].data(), &frozen[..], "snapshot mutated by publishes");
+    assert_ne!(ps.read().params[0].data(), &frozen[..], "model did move");
+}

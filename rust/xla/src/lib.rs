@@ -1,0 +1,285 @@
+//! Offline stub of the PJRT/XLA crate surface the omnivore runtime uses.
+//!
+//! The container this repo builds in has no network access and no
+//! prebuilt PJRT plugin, so the real `xla` crate cannot be linked. This
+//! stub keeps the whole workspace compiling and lets every layer that
+//! does not execute HLO — literals, the literal cache, the sharded
+//! parameter server, engines' plumbing — build and unit-test offline.
+//!
+//! * `Literal` is fully functional: it really stores typed host buffers,
+//!   so `to_literal`/`from_literal` round-trips and the version-keyed
+//!   literal cache are exercised for real.
+//! * `PjRtClient::compile` succeeds (it only records the artifact), but
+//!   `PjRtLoadedExecutable::execute` returns an error: executing HLO
+//!   requires the real PJRT backend. Swap this path dependency for the
+//!   real crate in the workspace `Cargo.toml` to run artifacts; the API
+//!   below matches the subset omnivore calls.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stub error type (the real crate wraps XLA status codes).
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element dtype of an array literal (subset omnivore uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Native Rust types that map onto an [`ElementType`].
+pub trait ArrayElement: Copy {
+    const TY: ElementType;
+    fn from_ne_chunk(bytes: &[u8]) -> Self;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne_chunk(b: &[u8]) -> Self {
+        f32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne_chunk(b: &[u8]) -> Self {
+        i32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// Shape of a dense array literal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// An XLA shape: a dense array or a tuple of shapes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host-side typed buffer — genuinely functional in the stub.
+#[derive(Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build a dense literal from a dtype, dims, and raw bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.byte_size() != data.len() {
+            return Err(Error::new(format!(
+                "literal dims {dims:?} want {} bytes, got {}",
+                n * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.tuple {
+            Some(parts) => Ok(Shape::Tuple(
+                parts.iter().map(|p| p.shape()).collect::<Result<_>>()?,
+            )),
+            None => Ok(Shape::Array(ArrayShape { ty: self.ty, dims: self.dims.clone() })),
+        }
+    }
+
+    /// Copy the buffer out as native values of type `T`.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::new("to_vec on a tuple literal"));
+        }
+        if self.ty != T::TY {
+            return Err(Error::new(format!(
+                "element type mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.ty.byte_size())
+            .map(T::from_ne_chunk)
+            .collect())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| Error::new("to_tuple on a non-tuple literal"))
+    }
+}
+
+/// Parsed HLO module text (the stub only checks the file is readable).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    bytes: usize,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading {}: {e}", path.display())))?;
+        Ok(Self { bytes: text.len() })
+    }
+}
+
+/// A computation handle built from an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _bytes: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { _bytes: proto.bytes }
+    }
+}
+
+/// Stub PJRT client: creation and compilation succeed (so cache-warming
+/// and inventory paths work); only execution requires the real backend.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { _priv: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { _priv: () })
+    }
+}
+
+/// A compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(
+            "stub backend cannot execute HLO; link the real PJRT-backed `xla` \
+             crate in Cargo.toml (DESIGN.md §Offline builds)",
+        ))
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new("stub backend has no device buffers"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+            .unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vals);
+        match l.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[3]);
+                assert_eq!(a.ty(), ElementType::F32);
+            }
+            other => panic!("unexpected shape {other:?}"),
+        }
+    }
+
+    #[test]
+    fn literal_size_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2, 2],
+            &[0u8; 15]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[0; 4])
+            .unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn execute_is_a_clear_error() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { bytes: 0 });
+        let exe = client.compile(&comp).unwrap();
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
