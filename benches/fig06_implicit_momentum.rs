@@ -51,11 +51,11 @@ fn main() {
     // Probes start from a lightly-warmed checkpoint, like the paper's
     // epoch grid searches (Appendix E-C).
     let warm = support::warm_params(&rt, "lenet", &support::preset("cpu-s"), 20);
-    let mut trainer = EngineTrainer {
-        rt: &rt,
+    let mut trainer = EngineTrainer::new(
+        &rt,
         base,
-        opts: EngineOptions { dist: ServiceDist::Exponential, ..Default::default() },
-    };
+        EngineOptions { dist: ServiceDist::Exponential, ..Default::default() },
+    );
     let mut t2 = Table::new(&["groups g", "tuned explicit mu*", "compensation model"]);
     let mut tuned = vec![];
     for g in [1usize, 2, 4, 8] {

@@ -60,7 +60,7 @@ fn main() {
     // Omnivore with the automatic optimizer (cold start included; its
     // probe overhead counts against it, like the paper's 10%).
     let he = HeParams::derive(&cl, arch, base.batch, 0.5);
-    let mut trainer = EngineTrainer { rt: &rt, base, opts: EngineOptions::default() };
+    let mut trainer = EngineTrainer::new(&rt, base, EngineOptions::default());
     let opt = AutoOptimizer {
         epochs: 2,
         epoch_steps: steps / 2,

@@ -64,7 +64,7 @@ fn main() {
         seed: 0,
         ..TrainConfig::default()
     };
-    let mut trainer = EngineTrainer { rt: &rt, base, opts: EngineOptions::default() };
+    let mut trainer = EngineTrainer::new(&rt, base, EngineOptions::default());
     let opt = AutoOptimizer {
         epochs: 3,
         epoch_steps: total_steps / 3,

@@ -33,7 +33,7 @@ fn main() {
 
     // Omnivore's optimizer.
     let mut trainer =
-        EngineTrainer { rt: &rt, base: base.clone(), opts: EngineOptions::default() };
+        EngineTrainer::new(&rt, base.clone(), EngineOptions::default());
     let opt = AutoOptimizer {
         epochs: 1,
         epoch_steps: support::scaled(128),

@@ -23,11 +23,11 @@ fn main() {
         for s in [0usize, 7, 31] {
             let g = s + 1;
             let cl = support::preset("cpu-l"); // 32 conv machines: g up to 32
-            let mut trainer = EngineTrainer {
-                rt: &rt,
-                base: support::cfg(arch_name, cl, g, Hyper::default(), 0),
-                opts: EngineOptions::default(),
-            };
+            let mut trainer = EngineTrainer::new(
+                &rt,
+                support::cfg(arch_name, cl, g, Hyper::default(), 0),
+                EngineOptions::default(),
+            );
             let spec = GridSpec {
                 momenta: vec![0.0, 0.3, 0.6, 0.9],
                 etas: vec![0.04, 0.02, 0.01],

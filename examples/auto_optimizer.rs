@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         // Omnivore: automatic optimizer.
         let he = HeParams::derive(&cl, arch, base.batch, 0.5);
         let mut trainer =
-            EngineTrainer { rt: &rt, base: base.clone(), opts: EngineOptions::default() };
+            EngineTrainer::new(&rt, base.clone(), EngineOptions::default());
         let opt = AutoOptimizer {
             epochs: 1,
             epoch_steps: 200,

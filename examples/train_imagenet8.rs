@@ -42,11 +42,11 @@ fn main() -> anyhow::Result<()> {
         he.smallest_saturating_g(n)
     );
 
-    let mut trainer = EngineTrainer {
-        rt: &rt,
+    let mut trainer = EngineTrainer::new(
+        &rt,
         base,
-        opts: EngineOptions { eval_every: 64, ..Default::default() },
-    };
+        EngineOptions { eval_every: 64, ..Default::default() },
+    );
     let opt = AutoOptimizer {
         epochs: 3,
         epoch_steps: 200,

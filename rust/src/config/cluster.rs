@@ -19,7 +19,7 @@ pub enum DeviceKind {
 }
 
 impl DeviceKind {
-    fn name(&self) -> &'static str {
+    pub fn name(&self) -> &'static str {
         match self {
             DeviceKind::Cpu => "cpu",
             DeviceKind::Gpu => "gpu",
@@ -37,8 +37,88 @@ impl DeviceKind {
     }
 }
 
-/// A homogeneous cluster: `machines` nodes of `tflops_per_machine`,
-/// connected by `network_gbits` links (paper Fig 9).
+/// Relative speed of one compute group's machines, for heterogeneous
+/// clusters (mixed CPU+GPU fleets, straggler groups — the OmniLearn /
+/// Heterogeneous-SGD scenarios the paper's Fig 9 clusters motivate but
+/// treat as homogeneous). Multipliers are relative to the cluster's
+/// baseline machine (`tflops_per_machine`): service time divides by the
+/// multiplier, so 2.0 means the group finishes its phase twice as fast.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub kind: DeviceKind,
+    /// Conv-phase speed multiplier (conv layers are the GPU's sweet
+    /// spot, paper Fig 3).
+    pub conv_speed: f64,
+    /// FC/GEMM-phase speed multiplier.
+    pub fc_speed: f64,
+}
+
+impl DeviceProfile {
+    /// The cluster's own baseline machine (homogeneous default).
+    pub fn baseline(kind: DeviceKind) -> Self {
+        Self { kind, conv_speed: 1.0, fc_speed: 1.0 }
+    }
+
+    /// Profile for a device kind relative to a CPU baseline, from the
+    /// paper's Fig 9 per-machine throughputs (c4.4xlarge 0.74 TFLOPS vs
+    /// g2.8xlarge 4.89 TFLOPS ≈ 6.6x) and Fig 3's observation that the
+    /// GPU advantage is largest on the conv phase; the FC phase (one
+    /// large GEMM + softmax, memory-bound tail) gains less. Hybrid is
+    /// CPU+GPU FLOPS-proportional data parallelism (Appendix C-D): the
+    /// throughputs add.
+    pub fn from_kind(kind: DeviceKind) -> Self {
+        match kind {
+            DeviceKind::Cpu => Self { kind, conv_speed: 1.0, fc_speed: 1.0 },
+            DeviceKind::Gpu => Self { kind, conv_speed: 6.6, fc_speed: 4.0 },
+            DeviceKind::Hybrid => Self { kind, conv_speed: 7.6, fc_speed: 4.5 },
+        }
+    }
+
+    /// A uniformly slowed-down group (contended node, thermal throttle):
+    /// `slowdown` > 1 means this group takes `slowdown`x longer.
+    pub fn straggler(kind: DeviceKind, slowdown: f64) -> Self {
+        let s = slowdown.max(1e-9);
+        Self { kind, conv_speed: 1.0 / s, fc_speed: 1.0 / s }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.name().into())),
+            ("conv_speed", Json::Num(self.conv_speed)),
+            ("fc_speed", Json::Num(self.fc_speed)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        // Accept a bare kind string ("gpu") as shorthand for from_kind.
+        if let Json::Str(s) = v {
+            return Ok(Self::from_kind(DeviceKind::parse(s)?));
+        }
+        let conv_speed = v.get("conv_speed")?.as_f64()?;
+        let fc_speed = v.get("fc_speed")?.as_f64()?;
+        // Speeds are divisors in the timing model: a zero, negative, or
+        // non-finite multiplier would schedule events at inf/NaN vtime.
+        anyhow::ensure!(
+            conv_speed.is_finite() && conv_speed > 0.0,
+            "conv_speed must be finite and > 0, got {conv_speed}"
+        );
+        anyhow::ensure!(
+            fc_speed.is_finite() && fc_speed > 0.0,
+            "fc_speed must be finite and > 0, got {fc_speed}"
+        );
+        Ok(Self { kind: DeviceKind::parse(v.get("kind")?.as_str()?)?, conv_speed, fc_speed })
+    }
+}
+
+/// A cluster: `machines` nodes of `tflops_per_machine` baseline
+/// throughput, connected by `network_gbits` links (paper Fig 9).
+///
+/// `group_profiles` makes the cluster heterogeneous: compute group `i`
+/// runs on machines with `group_profiles[i % len]`'s relative speed
+/// (empty = homogeneous, every group at the baseline). Profiles are
+/// per *group* — the unit the timing model schedules — matching how a
+/// mixed fleet is actually partitioned (same-speed machines grouped
+/// together so the intra-group barrier wastes nothing).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterSpec {
     pub name: String,
@@ -46,6 +126,7 @@ pub struct ClusterSpec {
     pub tflops_per_machine: f64,
     pub network_gbits: f64,
     pub device: DeviceKind,
+    pub group_profiles: Vec<DeviceProfile>,
 }
 
 impl ClusterSpec {
@@ -62,7 +143,31 @@ impl ClusterSpec {
             tflops_per_machine: tflops,
             network_gbits: gbits,
             device,
+            group_profiles: vec![],
         }
+    }
+
+    /// Attach per-group device profiles (heterogeneous cluster).
+    pub fn with_group_profiles(mut self, profiles: Vec<DeviceProfile>) -> Self {
+        self.group_profiles = profiles;
+        self
+    }
+
+    /// Device profile of compute group `g` (baseline when homogeneous;
+    /// cycles when there are more groups than declared profiles).
+    pub fn profile_for(&self, g: usize) -> DeviceProfile {
+        if self.group_profiles.is_empty() {
+            DeviceProfile::baseline(self.device)
+        } else {
+            self.group_profiles[g % self.group_profiles.len()]
+        }
+    }
+
+    /// Whether any group deviates from the baseline machine.
+    pub fn is_heterogeneous(&self) -> bool {
+        self.group_profiles
+            .iter()
+            .any(|p| p.conv_speed != 1.0 || p.fc_speed != 1.0)
     }
 
     /// Total cluster TFLOPS (Fig 9 column).
@@ -86,13 +191,20 @@ impl ClusterSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("machines", Json::Num(self.machines as f64)),
             ("tflops_per_machine", Json::Num(self.tflops_per_machine)),
             ("network_gbits", Json::Num(self.network_gbits)),
             ("device", Json::Str(self.device.name().into())),
-        ])
+        ];
+        if !self.group_profiles.is_empty() {
+            fields.push((
+                "group_profiles",
+                Json::Arr(self.group_profiles.iter().map(|p| p.to_json()).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -101,12 +213,20 @@ impl ClusterSpec {
             return preset(name)
                 .ok_or_else(|| anyhow::anyhow!("unknown cluster preset {name:?}"));
         }
+        let group_profiles = match v.opt("group_profiles") {
+            Some(Json::Arr(items)) => {
+                items.iter().map(DeviceProfile::from_json).collect::<Result<Vec<_>>>()?
+            }
+            Some(other) => anyhow::bail!("group_profiles must be an array, got {other:?}"),
+            None => vec![],
+        };
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
             machines: v.get("machines")?.as_usize()?,
             tflops_per_machine: v.get("tflops_per_machine")?.as_f64()?,
             network_gbits: v.get("network_gbits")?.as_f64()?,
             device: DeviceKind::parse(v.get("device")?.as_str()?)?,
+            group_profiles,
         })
     }
 }
@@ -124,12 +244,45 @@ pub const CLUSTER_PRESETS: &[(&str, usize, f64, f64, DeviceKind)] = &[
     ("gpu-s", 9, 4.89, 10.0, DeviceKind::Gpu),
 ];
 
-/// Look up a preset by name.
+/// Look up a preset by name. Beyond the paper's homogeneous Fig 9 table
+/// there are two heterogeneous presets (new scenario class, see
+/// DESIGN.md §Engines):
+/// * `hetero-s` — the cpu-s fabric with one GPU-profile group and three
+///   CPU-profile groups (a mixed CPU+GPU fleet);
+/// * `straggler-s` — cpu-s with one group running at half speed (a
+///   contended/throttled node).
 pub fn preset(name: &str) -> Option<ClusterSpec> {
-    CLUSTER_PRESETS
+    if let Some(spec) = CLUSTER_PRESETS
         .iter()
         .find(|(n, ..)| *n == name)
         .map(|&(n, m, t, g, d)| ClusterSpec::new(n, m, t, g, d))
+    {
+        return Some(spec);
+    }
+    match name {
+        "hetero-s" => {
+            let mut c = preset("cpu-s")?;
+            c.name = "hetero-s".into();
+            c.device = DeviceKind::Hybrid;
+            Some(c.with_group_profiles(vec![
+                DeviceProfile::from_kind(DeviceKind::Gpu),
+                DeviceProfile::from_kind(DeviceKind::Cpu),
+                DeviceProfile::from_kind(DeviceKind::Cpu),
+                DeviceProfile::from_kind(DeviceKind::Cpu),
+            ]))
+        }
+        "straggler-s" => {
+            let mut c = preset("cpu-s")?;
+            c.name = "straggler-s".into();
+            Some(c.with_group_profiles(vec![
+                DeviceProfile::straggler(DeviceKind::Cpu, 2.0),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+            ]))
+        }
+        _ => None,
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +319,67 @@ mod tests {
     #[test]
     fn unknown_preset_none() {
         assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn homogeneous_profile_is_baseline() {
+        let c = preset("cpu-s").unwrap();
+        assert!(!c.is_heterogeneous());
+        for g in 0..8 {
+            assert_eq!(c.profile_for(g), DeviceProfile::baseline(DeviceKind::Cpu));
+        }
+    }
+
+    #[test]
+    fn hetero_preset_mixes_profiles() {
+        let c = preset("hetero-s").unwrap();
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.profile_for(0).kind, DeviceKind::Gpu);
+        assert!(c.profile_for(0).conv_speed > c.profile_for(1).conv_speed);
+        assert_eq!(c.profile_for(1).kind, DeviceKind::Cpu);
+        // Profiles cycle past the declared list.
+        assert_eq!(c.profile_for(4), c.profile_for(0));
+    }
+
+    #[test]
+    fn straggler_profile_slows_group() {
+        let c = preset("straggler-s").unwrap();
+        assert!(c.is_heterogeneous());
+        assert!((c.profile_for(0).conv_speed - 0.5).abs() < 1e-12);
+        assert_eq!(c.profile_for(1).conv_speed, 1.0);
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let p = DeviceProfile::from_kind(DeviceKind::Gpu);
+        let j = p.to_json().dump();
+        let p2 = DeviceProfile::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(p, p2);
+        // Bare-kind shorthand.
+        let p3 = DeviceProfile::from_json(&Json::Str("gpu".into())).unwrap();
+        assert_eq!(p, p3);
+    }
+
+    #[test]
+    fn profile_json_rejects_bad_speeds() {
+        for bad in ["0.0", "-1.0", "1e999"] {
+            let j = format!(r#"{{"kind":"cpu","conv_speed":{bad},"fc_speed":1.0}}"#);
+            assert!(
+                DeviceProfile::from_json(&Json::parse(&j).unwrap()).is_err(),
+                "conv_speed {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_cluster_json_roundtrip() {
+        let c = preset("hetero-s").unwrap();
+        let j = c.to_json().dump();
+        let c2 = ClusterSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, c2);
+        // Preset-name shorthand resolves the same spec.
+        let c3 = ClusterSpec::from_json(&Json::Str("hetero-s".into())).unwrap();
+        assert_eq!(c, c3);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 pub mod cluster;
 
-pub use cluster::{ClusterSpec, DeviceKind, CLUSTER_PRESETS};
+pub use cluster::{ClusterSpec, DeviceKind, DeviceProfile, CLUSTER_PRESETS};
 
 use anyhow::{Context, Result};
 

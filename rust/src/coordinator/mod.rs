@@ -107,6 +107,13 @@ impl Topology {
         self.fc.set_hyper(hyper);
     }
 
+    /// Staleness counters of both servers as (conv, fc) — one accessor
+    /// for the engine driver instead of each scheduler reaching into
+    /// the servers separately.
+    pub fn staleness(&self) -> (StalenessStats, StalenessStats) {
+        (self.conv_ps.staleness_stats(), self.fc.param_server().staleness_stats())
+    }
+
     /// Aggregate literal-cache counters (conv + fc) as (hits, misses).
     pub fn lit_cache_stats(&self) -> (u64, u64) {
         let (ch, cm) = self.conv_lits.stats();

@@ -9,78 +9,111 @@
 //! SparkNet's staleness analogue. The paper: "the choice of the tau
 //! parameter is similar to the tradeoff of multiple groups of varying
 //! size".
+//!
+//! Through the unified driver (DESIGN.md §Engines) this scheduler now
+//! honors eval cadence, early stopping, and the projection trace like
+//! the others; the "current model" used for eval/projection is the
+//! replica mean. Heterogeneous clusters: each group's local-iteration
+//! time is scaled by its device profile, and the averaging barrier
+//! waits for the slowest replica — the straggler effect model averaging
+//! is known to suffer from.
 
 use anyhow::Result;
 
-use super::report::{IterRecord, TrainReport};
+use super::driver::{
+    run_scheduler, Completion, EngineOptions, ParamSource, Scheduler, TrainSession,
+};
 use crate::config::TrainConfig;
-use crate::data::SyntheticDataset;
 use crate::model::ParamSet;
 use crate::optimizer::he_model::HeParams;
 use crate::runtime::{from_literal, labels_literal, to_literal, Runtime};
 use crate::tensor::{axpy, momentum_sgd_step, scale, HostTensor};
 
-/// Model-averaging trainer.
-pub struct AveragingEngine<'a> {
-    rt: &'a Runtime,
-    cfg: TrainConfig,
-    /// Local iterations between averaging rounds (SparkNet's tau).
-    pub tau: usize,
-    /// HE parameters for the virtual clock (communication costing).
-    pub he: HeParams,
+/// The full model replicas, one per group — the averaging scheduler's
+/// execution substrate and its [`ParamSource`] (eval at the mean).
+struct ReplicaSet {
+    replicas: Vec<Vec<HostTensor>>,
+    n_conv: usize,
 }
 
-impl<'a> AveragingEngine<'a> {
-    pub fn new(rt: &'a Runtime, cfg: TrainConfig, tau: usize, he: HeParams) -> Self {
-        Self { rt, cfg, tau: tau.max(1), he }
+impl ParamSource for ReplicaSet {
+    /// The replica mean, materialized — O(g × model) per call, so eval
+    /// cadence and `record_proj` pay a full averaging pass per use on
+    /// this scheduler. Accepted: "the current model" of an averaging
+    /// architecture IS the mean, and these options are off by default.
+    fn current_params(&self) -> ParamSet {
+        ParamSet::from_tensors(average(&self.replicas), self.n_conv)
+            .expect("schema preserved")
+    }
+}
+
+/// The tau-round map/reduce scheduler.
+pub struct AveragingRounds {
+    /// Local iterations between averaging rounds (SparkNet's tau).
+    pub tau: usize,
+}
+
+impl Scheduler for AveragingRounds {
+    fn name(&self) -> &'static str {
+        "averaging-rounds"
     }
 
-    /// Run `cfg.steps` TOTAL iterations (across groups) of model-averaged
-    /// training from `init`.
-    pub fn run(&self, init: ParamSet) -> Result<TrainReport> {
-        let wall0 = std::time::Instant::now();
-        let g = self.cfg.groups();
-        let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
-        let artifact = format!(
-            "{}_{}_full_step_b{}",
-            self.cfg.arch, self.cfg.variant, self.cfg.batch
-        );
-        let hyper = self.cfg.hyper;
-        let n_conv = init.n_conv();
-        let mut replicas: Vec<Vec<HostTensor>> =
-            (0..g).map(|_| init.tensors().to_vec()).collect();
+    fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet> {
+        let cfg = session.config();
+        let rt = session.rt();
+        let tau = self.tau.max(1);
+        let g = cfg.groups();
+        let k = cfg.group_size();
+        let artifact =
+            format!("{}_{}_full_step_b{}", cfg.arch, cfg.variant, cfg.batch);
+        let hyper = cfg.hyper;
+        let he: HeParams = session.timing()?.he;
+        // Per local iteration each group computes a full fwd+bwd on its
+        // own machines: t_conv(k) + t_fc (no shared FC server here — the
+        // model-averaging architectures replicate everything), scaled by
+        // the group's device profile.
+        let t_local: Vec<f64> = (0..g)
+            .map(|gi| {
+                let p = cfg.cluster.profile_for(gi);
+                he.t_conv(k) / p.conv_speed + he.t_fc / p.fc_speed
+            })
+            .collect();
+        // The reduce step is a barrier: the round takes as long as the
+        // slowest replica's tau local iterations.
+        let t_round = tau as f64 * t_local.iter().fold(0.0f64, |a, &b| a.max(b));
+
+        let mut rs = ReplicaSet {
+            replicas: (0..g).map(|_| init.tensors().to_vec()).collect(),
+            n_conv: init.n_conv(),
+        };
         let mut velocities: Vec<Vec<HostTensor>> = (0..g)
             .map(|_| init.tensors().iter().map(|t| HostTensor::zeros(t.shape())).collect())
             .collect();
-        let mut report = TrainReport { groups: g, group_size: self.cfg.group_size(), ..Default::default() };
-        let mut batch_counter = self.cfg.seed << 20;
-        let mut completed = 0u64;
+        let mut local_index = vec![0u64; g];
         let mut vtime = 0.0f64;
-        // Per local iteration each group computes a full fwd+bwd on its
-        // own machines: t_conv(k) + t_fc (no shared FC server here — the
-        // model-averaging architectures replicate everything).
-        let k = self.cfg.group_size();
-        let t_local = self.he.t_conv(k) + self.he.t_fc;
 
         'outer: loop {
             // One round: every group trains tau local iterations (in
-            // parallel across groups -> round time = tau * t_local).
-            for local in 0..self.tau {
-                for (gi, (w, v)) in replicas.iter_mut().zip(velocities.iter_mut()).enumerate() {
-                    if completed >= self.cfg.steps as u64 {
+            // parallel across groups -> round time = tau * max t_local).
+            for local in 0..tau {
+                for gi in 0..g {
+                    if session.try_claim().is_none() {
                         break 'outer;
                     }
-                    let batch = data.batch(batch_counter, self.cfg.batch);
-                    batch_counter += 1;
+                    let batch = session.next_batch();
                     let mut lits =
                         vec![to_literal(&batch.images)?, labels_literal(&batch.labels)?];
-                    for t in w.iter() {
+                    for t in rs.replicas[gi].iter() {
                         lits.push(to_literal(t)?);
                     }
-                    let outs = self.rt.execute_literals(&artifact, &lits)?;
+                    let outs = rt.execute_literals(&artifact, &lits)?;
                     let loss = from_literal(&outs[0])?.scalar()?;
                     let acc = from_literal(&outs[1])?.scalar()?;
-                    for ((wi, vi), go) in w.iter_mut().zip(v.iter_mut()).zip(&outs[2..]) {
+                    for ((wi, vi), go) in rs.replicas[gi]
+                        .iter_mut()
+                        .zip(velocities[gi].iter_mut())
+                        .zip(&outs[2..])
+                    {
                         let gt = from_literal(go)?;
                         momentum_sgd_step(
                             wi.data_mut(),
@@ -91,37 +124,78 @@ impl<'a> AveragingEngine<'a> {
                             hyper.lambda,
                         );
                     }
-                    report.records.push(IterRecord {
-                        seq: completed,
-                        group: gi,
-                        vtime: vtime + (local + 1) as f64 * t_local,
-                        loss,
-                        acc,
-                        conv_staleness: (self.tau * (g - 1)) as u64, // replica drift proxy
-                        fc_staleness: (self.tau * (g - 1)) as u64,
-                    });
-                    completed += 1;
-                    if !loss.is_finite() || loss > 1e4 {
+                    let li = local_index[gi];
+                    local_index[gi] += 1;
+                    session.complete(
+                        Completion {
+                            group: gi,
+                            local_index: li,
+                            vtime: vtime + (local + 1) as f64 * t_local[gi],
+                            loss,
+                            acc,
+                            // Replica drift proxy: tau local steps against
+                            // g-1 other diverging replicas.
+                            conv_staleness: (tau * (g - 1)) as u64,
+                            fc_staleness: (tau * (g - 1)) as u64,
+                        },
+                        &rs,
+                    )?;
+                    if session.stopped() {
                         break 'outer;
                     }
                 }
             }
-            vtime += self.tau as f64 * t_local;
+            vtime += t_round;
             // Reduce + map: average replicas; network cost = one full
             // model each way per group over the shared link.
-            let model_bytes: usize =
-                replicas[0].iter().map(|t| t.len() * 4).sum();
-            vtime += self.cfg.cluster.link_seconds(2 * model_bytes * g);
-            let avg = average(&replicas);
-            for w in replicas.iter_mut() {
+            let model_bytes: usize = rs.replicas[0].iter().map(|t| t.len() * 4).sum();
+            vtime += cfg.cluster.link_seconds(2 * model_bytes * g);
+            let avg = average(&rs.replicas);
+            for w in rs.replicas.iter_mut() {
                 w.clone_from(&avg);
             }
-            report.virtual_time = vtime;
         }
-        report.virtual_time = report.records.last().map(|r| r.vtime).unwrap_or(vtime);
-        report.wallclock_secs = wall0.elapsed().as_secs_f64();
-        report.runtime_stats = self.rt.stats();
-        let _ = n_conv;
+        Ok(rs.current_params())
+    }
+}
+
+/// Model-averaging trainer: a thin constructor over the unified driver
+/// with the [`AveragingRounds`] scheduler.
+pub struct AveragingEngine<'a> {
+    rt: &'a Runtime,
+    cfg: TrainConfig,
+    opts: EngineOptions,
+    /// Local iterations between averaging rounds (SparkNet's tau).
+    pub tau: usize,
+}
+
+impl<'a> AveragingEngine<'a> {
+    /// `he` supplies the virtual clock (communication costing) — it is
+    /// installed as the session's HE override.
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig, tau: usize, he: HeParams) -> Self {
+        let opts = EngineOptions { he_override: Some(he), ..EngineOptions::default() };
+        Self::with_options(rt, cfg, tau, opts)
+    }
+
+    pub fn with_options(
+        rt: &'a Runtime,
+        cfg: TrainConfig,
+        tau: usize,
+        opts: EngineOptions,
+    ) -> Self {
+        Self { rt, cfg, opts, tau: tau.max(1) }
+    }
+
+    /// Run `cfg.steps` TOTAL iterations (across groups) of model-averaged
+    /// training from `init`.
+    pub fn run(&self, init: ParamSet) -> Result<super::TrainReport> {
+        let (report, _params) = run_scheduler(
+            self.rt,
+            self.cfg.clone(),
+            self.opts.clone(),
+            &AveragingRounds { tau: self.tau },
+            init,
+        )?;
         Ok(report)
     }
 }

@@ -1,0 +1,530 @@
+//! The unified training driver (DESIGN.md §Engines).
+//!
+//! Historically each engine (simulated clock, OS threads, model
+//! averaging) hand-rolled its own training loop, so eval cadence, early
+//! stopping, time budgets, and the projection trace only worked on the
+//! simulated-time engine. The driver splits the loop into:
+//!
+//! * [`TrainSession`] — everything scheduler-independent: the dataset
+//!   and global batch sequence, the stop rules from [`EngineOptions`]
+//!   (target accuracy, divergence, virtual-time budget, step budget),
+//!   eval cadence, the momentum projection trace, and report assembly.
+//! * [`Scheduler`] — everything about *when* iterations run and what
+//!   virtual time they complete at: [`SimClock`](super::SimClock) (the
+//!   discrete-event heap), [`OsThreads`](super::OsThreads) (real racing
+//!   threads), [`AveragingRounds`](super::AveragingRounds) (tau-round
+//!   map/reduce over model replicas).
+//!
+//! A scheduler claims iteration slots with [`TrainSession::try_claim`],
+//! pulls batches with [`TrainSession::next_batch`], and reports each
+//! finished iteration through [`TrainSession::complete`] — which is
+//! where every `EngineOptions` field is honored, identically for all
+//! schedulers.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::host_xent;
+use super::report::{sort_records, EvalRecord, IterRecord, TrainReport};
+use crate::config::TrainConfig;
+use crate::coordinator::{StalenessStats, Topology};
+use crate::data::{Batch, BatchSequence, SyntheticDataset};
+use crate::model::ParamSet;
+use crate::optimizer::he_model::HeParams;
+use crate::runtime::{from_literal, to_literal, Runtime};
+use crate::sim::{ServiceDist, TimingModel};
+use crate::util::rng::Rng;
+
+/// Engine knobs beyond the train config — honored by every scheduler.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Evaluate on the held-out batch every this many iterations (0 = never).
+    pub eval_every: usize,
+    /// Assumed device utilization for the HE derivation (paper Fig 3 ~0.5).
+    pub utilization: f64,
+    /// Service-time noise model.
+    pub dist: ServiceDist,
+    /// Record the parameter projection trace for momentum fitting.
+    pub record_proj: bool,
+    /// Stop early once smoothed (window 32) train accuracy reaches this.
+    pub stop_at_train_acc: Option<f32>,
+    /// Stop after this much virtual time (seconds), if set.
+    pub max_virtual_time: Option<f64>,
+    /// Override the derived HE parameters (measured-timing runs).
+    pub he_override: Option<HeParams>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            eval_every: 0,
+            utilization: 0.5,
+            dist: ServiceDist::Lognormal { cv: 0.06 },
+            record_proj: false,
+            stop_at_train_acc: None,
+            max_virtual_time: None,
+            he_override: None,
+        }
+    }
+}
+
+/// Scheduler selection by name — how the CLI and the optimizer pick an
+/// execution engine without hard-coding one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Discrete-event virtual clock (deterministic, the default).
+    SimClock,
+    /// One OS thread per compute group, racing on the shared servers.
+    OsThreads,
+    /// SparkNet-style model averaging every `tau` local iterations.
+    AveragingRounds { tau: usize },
+}
+
+impl SchedulerKind {
+    /// Parse a scheduler name: `sim`/`sim-clock`, `threads`/`threaded`/
+    /// `os-threads`, `averaging` or `averaging:TAU`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" | "sim-clock" | "simclock" => Ok(SchedulerKind::SimClock),
+            "threads" | "threaded" | "os-threads" => Ok(SchedulerKind::OsThreads),
+            "averaging" => Ok(SchedulerKind::AveragingRounds { tau: 1 }),
+            other => {
+                if let Some(tau) = other.strip_prefix("averaging:") {
+                    let tau: usize = tau
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad averaging tau {tau:?}"))?;
+                    Ok(SchedulerKind::AveragingRounds { tau: tau.max(1) })
+                } else {
+                    anyhow::bail!(
+                        "unknown scheduler {other:?} (sim | threads | averaging[:TAU])"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::SimClock => "sim-clock",
+            SchedulerKind::OsThreads => "os-threads",
+            SchedulerKind::AveragingRounds { .. } => "averaging-rounds",
+        }
+    }
+
+    /// Run one full training session under this scheduler.
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        cfg: TrainConfig,
+        opts: EngineOptions,
+        init: ParamSet,
+    ) -> Result<(TrainReport, ParamSet)> {
+        match self {
+            SchedulerKind::SimClock => {
+                run_scheduler(rt, cfg, opts, &super::sim_time::SimClock, init)
+            }
+            SchedulerKind::OsThreads => {
+                run_scheduler(rt, cfg, opts, &super::threaded::OsThreads, init)
+            }
+            SchedulerKind::AveragingRounds { tau } => run_scheduler(
+                rt,
+                cfg,
+                opts,
+                &super::averaging::AveragingRounds { tau: *tau },
+                init,
+            ),
+        }
+    }
+}
+
+/// How the driver assigns the global `seq` order at finalization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecordOrder {
+    /// Records arrived in completion order (deterministic schedulers);
+    /// `seq` was assigned as they were pushed.
+    Completion,
+    /// Wall-clock schedulers: records from racing threads are sorted by
+    /// `(vtime, group, local_index)` — the tie-break makes `seq`
+    /// deterministic when coarse timers collide.
+    SortByTime,
+}
+
+/// Source of the current full model, for eval and the projection trace.
+/// Parameter-server schedulers hand in the [`Topology`]; the averaging
+/// scheduler hands in its replica set (evaluated at the replica mean).
+pub trait ParamSource {
+    fn current_params(&self) -> ParamSet;
+}
+
+impl ParamSource for Topology {
+    fn current_params(&self) -> ParamSet {
+        Topology::current_params(self)
+    }
+}
+
+/// One completed iteration, as a scheduler reports it.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub group: usize,
+    /// Per-group monotone completion index (tie-break for record sorts).
+    pub local_index: u64,
+    /// Virtual time of completion under this scheduler's clock.
+    pub vtime: f64,
+    pub loss: f32,
+    pub acc: f32,
+    pub conv_staleness: u64,
+    pub fc_staleness: u64,
+}
+
+/// Server-side counters a scheduler hands back before finalization.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub conv_staleness: StalenessStats,
+    pub fc_staleness: StalenessStats,
+    pub lit_cache_hits: u64,
+    pub lit_cache_misses: u64,
+}
+
+impl ServerStats {
+    pub fn from_topology(topo: &Topology) -> Self {
+        let (conv_staleness, fc_staleness) = topo.staleness();
+        let (lit_cache_hits, lit_cache_misses) = topo.lit_cache_stats();
+        Self { conv_staleness, fc_staleness, lit_cache_hits, lit_cache_misses }
+    }
+}
+
+/// Mutable session state, behind one mutex so OS-thread schedulers can
+/// share the session. Single-threaded schedulers pay one uncontended
+/// lock per iteration.
+/// One projection sample, keyed like a record so wall-clock schedulers
+/// can realign the trace deterministically at finalization.
+struct ProjSample {
+    vtime: f64,
+    group: usize,
+    local_index: u64,
+    dot: f64,
+}
+
+#[derive(Default)]
+struct SessionState {
+    records: Vec<IterRecord>,
+    evals: Vec<EvalRecord>,
+    proj_trace: Vec<ProjSample>,
+    acc_window: Vec<f32>,
+    completed: u64,
+    virtual_time: f64,
+    server: ServerStats,
+}
+
+/// The scheduler-independent core of one training run.
+pub struct TrainSession<'a> {
+    rt: &'a Runtime,
+    cfg: TrainConfig,
+    opts: EngineOptions,
+    data: SyntheticDataset,
+    batches: BatchSequence,
+    claimed: AtomicU64,
+    stopped: AtomicBool,
+    state: Mutex<SessionState>,
+    /// Fixed ±1 projection direction, initialized on first use — outside
+    /// the state mutex so projecting never serializes other completions.
+    proj_dir: std::sync::OnceLock<Vec<f32>>,
+    wall0: Instant,
+}
+
+impl<'a> TrainSession<'a> {
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig, opts: EngineOptions) -> Self {
+        let data = SyntheticDataset::for_arch(&cfg.arch, cfg.seed);
+        let batches = BatchSequence::for_seed(cfg.seed);
+        let mut state = SessionState::default();
+        state.records.reserve(cfg.steps);
+        Self {
+            rt,
+            cfg,
+            opts,
+            data,
+            batches,
+            claimed: AtomicU64::new(0),
+            stopped: AtomicBool::new(false),
+            state: Mutex::new(state),
+            proj_dir: std::sync::OnceLock::new(),
+            wall0: Instant::now(),
+        }
+    }
+
+    pub fn rt(&self) -> &'a Runtime {
+        self.rt
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn options(&self) -> &EngineOptions {
+        &self.opts
+    }
+
+    /// HE/timing model for this run, with the cluster's per-group device
+    /// profiles attached.
+    pub fn timing(&self) -> Result<TimingModel> {
+        timing_model(self.rt, &self.cfg, &self.opts)
+    }
+
+    /// Claim the next iteration slot — `None` once the step budget is
+    /// spent or a stop rule has fired. Thread-safe: exactly `cfg.steps`
+    /// claims succeed across all callers (fewer if stopped early).
+    pub fn try_claim(&self) -> Option<u64> {
+        if self.stopped.load(Ordering::Relaxed) {
+            return None;
+        }
+        let slot = self.claimed.fetch_add(1, Ordering::Relaxed);
+        if slot < self.cfg.steps as u64 {
+            Some(slot)
+        } else {
+            None
+        }
+    }
+
+    /// Whether a stop rule has fired (schedulers drain in-flight work
+    /// but schedule nothing new).
+    pub fn stopped(&self) -> bool {
+        self.stopped.load(Ordering::Relaxed)
+    }
+
+    /// Scheduler-side abort (e.g. a worker thread failed).
+    pub fn request_stop(&self) {
+        self.stopped.store(true, Ordering::Relaxed);
+    }
+
+    /// Iterations completed so far.
+    pub fn completed(&self) -> u64 {
+        self.state.lock().unwrap().completed
+    }
+
+    /// Next training batch from the global sequence shared by all groups.
+    pub fn next_batch(&self) -> Batch {
+        self.data.batch(self.batches.next(), self.cfg.batch)
+    }
+
+    /// Record one completed iteration. This is where every
+    /// [`EngineOptions`] stop rule and cadence lives, so all schedulers
+    /// honor them identically: eval every `eval_every` completions, the
+    /// projection trace, smoothed-accuracy early stop, divergence stop,
+    /// and the virtual-time budget.
+    ///
+    /// Locking discipline (DESIGN.md §Perf): only O(1) bookkeeping runs
+    /// under the state mutex — the expensive model reads (projection,
+    /// held-out eval) happen after the lock is dropped, so racing OS
+    /// threads never serialize on an XLA call.
+    pub fn complete(&self, c: Completion, params: &dyn ParamSource) -> Result<()> {
+        let completed = {
+            let mut st = self.state.lock().unwrap();
+            let seq = st.completed;
+            st.records.push(IterRecord {
+                seq,
+                group: c.group,
+                local_index: c.local_index,
+                vtime: c.vtime,
+                loss: c.loss,
+                acc: c.acc,
+                conv_staleness: c.conv_staleness,
+                fc_staleness: c.fc_staleness,
+            });
+            st.completed += 1;
+            st.virtual_time = st.virtual_time.max(c.vtime);
+            if let Some(target) = self.opts.stop_at_train_acc {
+                st.acc_window.push(c.acc);
+                let w = 32.min(st.acc_window.len());
+                let m: f32 = st.acc_window[st.acc_window.len() - w..].iter().sum::<f32>()
+                    / w as f32;
+                if st.acc_window.len() >= 32 && m >= target {
+                    self.request_stop();
+                }
+            }
+            st.completed
+        };
+        if !c.loss.is_finite() || c.loss > 1e4 {
+            self.request_stop(); // diverged: stop scheduling new work
+        }
+        if let Some(tmax) = self.opts.max_virtual_time {
+            if c.vtime >= tmax {
+                self.request_stop();
+            }
+        }
+        if self.opts.record_proj {
+            let p = params.current_params();
+            let dir = self.proj_dir.get_or_init(|| {
+                // Fixed ±1 direction over the conv parameters (seed is
+                // independent of the run seed, as the momentum fit needs
+                // comparable projections across runs).
+                let mut r = Rng::seed_from_u64(0x9a07);
+                let n: usize = p.conv().iter().map(|t| t.len()).sum();
+                (0..n).map(|_| if r.bool() { 1.0 } else { -1.0 }).collect()
+            });
+            let dot = project_conv(&p, dir);
+            self.state.lock().unwrap().proj_trace.push(ProjSample {
+                vtime: c.vtime,
+                group: c.group,
+                local_index: c.local_index,
+                dot,
+            });
+        }
+        if self.opts.eval_every > 0 && completed % self.opts.eval_every as u64 == 0 {
+            let (loss, acc) = self.evaluate(params)?;
+            let mut st = self.state.lock().unwrap();
+            st.evals.push(EvalRecord { seq: completed, vtime: c.vtime, loss, acc });
+        }
+        Ok(())
+    }
+
+    /// Held-out evaluation of the current model through the inference
+    /// artifact.
+    fn evaluate(&self, params: &dyn ParamSource) -> Result<(f32, f32)> {
+        let eval = self.data.eval_batch(self.cfg.batch);
+        let p = params.current_params();
+        let name =
+            format!("{}_{}_infer_b{}", self.cfg.arch, self.cfg.variant, self.cfg.batch);
+        let mut lits = vec![to_literal(&eval.images)?];
+        for t in p.tensors() {
+            lits.push(to_literal(t)?);
+        }
+        let outs = self.rt.execute_literals(&name, &lits)?;
+        let logits = from_literal(&outs[0])?;
+        Ok(host_xent(&logits, &eval.labels))
+    }
+
+    /// Scheduler hand-off of server-side counters before finalization.
+    pub fn set_server_stats(&self, stats: ServerStats) {
+        self.state.lock().unwrap().server = stats;
+    }
+
+    /// Assemble the final report.
+    pub fn finalize(&self, order: RecordOrder) -> TrainReport {
+        let mut st = self.state.lock().unwrap();
+        let mut records = std::mem::take(&mut st.records);
+        let mut evals = std::mem::take(&mut st.evals);
+        let mut proj = std::mem::take(&mut st.proj_trace);
+        if order == RecordOrder::SortByTime {
+            sort_records(&mut records);
+            for (i, r) in records.iter_mut().enumerate() {
+                r.seq = i as u64;
+            }
+            // Evals and projections were captured in arrival order;
+            // realign everything to the sorted timeline (same tie-break
+            // as the records) so eval.seq counts the records completed
+            // by eval.vtime and the projection trace is an ordered,
+            // deterministic series.
+            evals.sort_by(|a, b| a.vtime.total_cmp(&b.vtime));
+            for e in evals.iter_mut() {
+                e.seq = records.partition_point(|r| r.vtime <= e.vtime) as u64;
+            }
+            proj.sort_by(|a, b| {
+                a.vtime
+                    .total_cmp(&b.vtime)
+                    .then(a.group.cmp(&b.group))
+                    .then(a.local_index.cmp(&b.local_index))
+            });
+        }
+        let g = self.cfg.groups();
+        let devices: Vec<String> = (0..g)
+            .map(|gi| self.cfg.cluster.profile_for(gi).kind.name().to_string())
+            .collect();
+        let server = std::mem::take(&mut st.server);
+        let mut report = TrainReport {
+            records,
+            evals,
+            conv_staleness: server.conv_staleness,
+            fc_staleness: server.fc_staleness,
+            virtual_time: st.virtual_time,
+            wallclock_secs: self.wall0.elapsed().as_secs_f64(),
+            runtime_stats: self.rt.stats(),
+            lit_cache_hits: server.lit_cache_hits,
+            lit_cache_misses: server.lit_cache_misses,
+            proj_trace: proj.into_iter().map(|s| s.dot).collect(),
+            groups: g,
+            group_size: self.cfg.group_size(),
+            group_stats: vec![],
+        };
+        report.recompute_group_stats(&devices);
+        report
+    }
+}
+
+/// HE/timing model for a config: the `he_override` if given, otherwise
+/// derived from the cluster + architecture. The cluster's declared
+/// per-group profile list is handed through verbatim — `TimingModel`
+/// cycles it exactly like [`crate::config::ClusterSpec::profile_for`],
+/// so the two lookups can never disagree.
+pub fn timing_model(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<TimingModel> {
+    let arch = rt.manifest().arch(&cfg.arch)?;
+    let he = opts
+        .he_override
+        .unwrap_or_else(|| HeParams::derive(&cfg.cluster, arch, cfg.batch, opts.utilization));
+    Ok(TimingModel::with_profiles(he, opts.dist, cfg.cluster.group_profiles.clone()))
+}
+
+fn project_conv(p: &ParamSet, dir: &[f32]) -> f64 {
+    let mut dot = 0.0f64;
+    let mut off = 0;
+    for t in p.conv() {
+        for (x, s) in t.data().iter().zip(&dir[off..off + t.len()]) {
+            dot += (*x as f64) * (*s as f64);
+        }
+        off += t.len();
+    }
+    dot
+}
+
+/// A scheduling policy over the shared session: builds its execution
+/// substrate from `init`, drives iterations to completion (claiming
+/// slots and reporting completions through the session), and returns
+/// the final parameters.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// How the session should order records at finalization.
+    fn record_order(&self) -> RecordOrder {
+        RecordOrder::Completion
+    }
+
+    fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet>;
+}
+
+/// Run one full training session under `sched`.
+pub fn run_scheduler<S: Scheduler + ?Sized>(
+    rt: &Runtime,
+    cfg: TrainConfig,
+    opts: EngineOptions,
+    sched: &S,
+    init: ParamSet,
+) -> Result<(TrainReport, ParamSet)> {
+    let session = TrainSession::new(rt, cfg, opts);
+    let params = sched.run(&session, init)?;
+    Ok((session.finalize(sched.record_order()), params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_kind_parses_names() {
+        assert_eq!(SchedulerKind::parse("sim").unwrap(), SchedulerKind::SimClock);
+        assert_eq!(SchedulerKind::parse("sim-clock").unwrap(), SchedulerKind::SimClock);
+        assert_eq!(SchedulerKind::parse("threaded").unwrap(), SchedulerKind::OsThreads);
+        assert_eq!(SchedulerKind::parse("threads").unwrap(), SchedulerKind::OsThreads);
+        assert_eq!(
+            SchedulerKind::parse("averaging").unwrap(),
+            SchedulerKind::AveragingRounds { tau: 1 }
+        );
+        assert_eq!(
+            SchedulerKind::parse("averaging:8").unwrap(),
+            SchedulerKind::AveragingRounds { tau: 8 }
+        );
+        assert!(SchedulerKind::parse("averaging:x").is_err());
+        assert!(SchedulerKind::parse("nope").is_err());
+    }
+}

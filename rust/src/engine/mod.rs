@@ -1,17 +1,32 @@
 //! Training engines: drive compute groups against the parameter servers.
 //!
-//! * [`SimTimeEngine`] — the default: a discrete-event loop advances a
-//!   **virtual clock** sampled from the paper's hardware-efficiency
-//!   model while all numerics run for real through the PJRT artifacts.
-//!   The asynchrony pattern (who reads/publishes when, FC queueing) is
-//!   exactly the paper's 9/33-machine clusters'; determinism makes every
-//!   experiment reproducible bit-for-bit.
-//! * [`ThreadedEngine`] — real OS threads per compute group sharing the
-//!   parameter servers, for wall-clock demonstrations of the same
-//!   semantics.
+//! All engines are thin constructors over ONE unified driver
+//! (`driver.rs`, DESIGN.md §Engines): a [`TrainSession`] owning the
+//! dataset, batch sequencing, stop rules, eval cadence, and report
+//! assembly, plus a pluggable [`Scheduler`] deciding when iterations
+//! run and at what virtual time they complete:
+//!
+//! * [`SimClock`] / [`SimTimeEngine`] — the default: a discrete-event
+//!   loop advances a **virtual clock** sampled from the paper's
+//!   hardware-efficiency model (with per-group heterogeneous device
+//!   profiles) while all numerics run for real through the PJRT
+//!   artifacts. The asynchrony pattern (who reads/publishes when, FC
+//!   queueing) is exactly the paper's 9/33-machine clusters';
+//!   determinism makes every experiment reproducible bit-for-bit.
+//! * [`OsThreads`] / [`ThreadedEngine`] — real OS threads per compute
+//!   group sharing the parameter servers, for wall-clock demonstrations
+//!   of the same semantics.
+//! * [`AveragingRounds`] / [`AveragingEngine`] — SparkNet-style model
+//!   averaging every tau local iterations.
+//!
+//! [`EngineOptions`] fields are honored identically by every scheduler;
+//! [`SchedulerKind`] selects one by name (CLI `--scheduler`, the
+//! optimizer's `EngineTrainer`).
 
 #[cfg(feature = "xla")]
 mod averaging;
+#[cfg(feature = "xla")]
+mod driver;
 mod report;
 #[cfg(feature = "xla")]
 mod sim_time;
@@ -19,12 +34,17 @@ mod sim_time;
 mod threaded;
 
 #[cfg(feature = "xla")]
-pub use averaging::AveragingEngine;
-pub use report::{EvalRecord, IterRecord, TrainReport};
+pub use averaging::{AveragingEngine, AveragingRounds};
 #[cfg(feature = "xla")]
-pub use sim_time::{EngineOptions, SimTimeEngine};
+pub use driver::{
+    run_scheduler, timing_model, Completion, EngineOptions, ParamSource, RecordOrder,
+    Scheduler, SchedulerKind, ServerStats, TrainSession,
+};
+pub use report::{sort_records, EvalRecord, GroupStats, IterRecord, TrainReport};
 #[cfg(feature = "xla")]
-pub use threaded::ThreadedEngine;
+pub use sim_time::{SimClock, SimTimeEngine};
+#[cfg(feature = "xla")]
+pub use threaded::{OsThreads, ThreadedEngine};
 
 use crate::tensor::HostTensor;
 

@@ -9,12 +9,46 @@ pub struct IterRecord {
     /// Global completion index (order of publish).
     pub seq: u64,
     pub group: usize,
+    /// Per-group completion index (0-based within the group) — the
+    /// deterministic tie-break when wall-clock schedulers sort records
+    /// whose timer-granularity `vtime`s collide.
+    pub local_index: u64,
     /// Virtual time of completion (seconds on the modeled cluster).
     pub vtime: f64,
     pub loss: f32,
     pub acc: f32,
     pub conv_staleness: u64,
     pub fc_staleness: u64,
+}
+
+/// Order records the way wall-clock schedulers need before assigning
+/// `seq`: by completion time, with `(group, local_index)` breaking ties
+/// so equal timestamps (coarse timers, simultaneous completions) order
+/// the same way on every run.
+pub fn sort_records(records: &mut [IterRecord]) {
+    records.sort_by(|a, b| {
+        a.vtime
+            .total_cmp(&b.vtime)
+            .then(a.group.cmp(&b.group))
+            .then(a.local_index.cmp(&b.local_index))
+    });
+}
+
+/// Per-group training summary — with heterogeneous device profiles the
+/// groups complete different iteration counts at different cadences, and
+/// this is where that shows up (`TrainReport::group_stats`).
+#[derive(Clone, Debug, Default)]
+pub struct GroupStats {
+    pub group: usize,
+    /// Device profile label ("cpu", "gpu", "hybrid").
+    pub device: String,
+    /// Iterations this group completed.
+    pub iters: u64,
+    pub mean_conv_staleness: f64,
+    pub mean_fc_staleness: f64,
+    /// Mean gap between this group's successive completions (virtual
+    /// seconds) — the group's effective iteration time.
+    pub mean_iter_gap: f64,
 }
 
 /// Periodic held-out evaluation.
@@ -48,6 +82,8 @@ pub struct TrainReport {
     pub proj_trace: Vec<f64>,
     pub groups: usize,
     pub group_size: usize,
+    /// Per-group staleness/timing breakdown (see [`GroupStats`]).
+    pub group_stats: Vec<GroupStats>,
 }
 
 impl TrainReport {
@@ -108,6 +144,48 @@ impl TrainReport {
         None
     }
 
+    /// Rebuild `group_stats` from the records. `devices[i]` labels group
+    /// `i`'s device profile (missing labels stay empty). Records must be
+    /// in completion order (per-group vtimes ascending), which every
+    /// scheduler guarantees by construction.
+    pub fn recompute_group_stats(&mut self, devices: &[String]) {
+        let g = self.groups.max(1);
+        let mut stats: Vec<GroupStats> = (0..g)
+            .map(|i| GroupStats {
+                group: i,
+                device: devices.get(i).cloned().unwrap_or_default(),
+                ..GroupStats::default()
+            })
+            .collect();
+        let mut last_vtime: Vec<Option<f64>> = vec![None; g];
+        let mut gap_sum = vec![0.0f64; g];
+        let mut gap_n = vec![0u64; g];
+        for r in &self.records {
+            if r.group >= g {
+                continue;
+            }
+            let s = &mut stats[r.group];
+            s.iters += 1;
+            s.mean_conv_staleness += r.conv_staleness as f64;
+            s.mean_fc_staleness += r.fc_staleness as f64;
+            if let Some(prev) = last_vtime[r.group] {
+                gap_sum[r.group] += r.vtime - prev;
+                gap_n[r.group] += 1;
+            }
+            last_vtime[r.group] = Some(r.vtime);
+        }
+        for (i, s) in stats.iter_mut().enumerate() {
+            if s.iters > 0 {
+                s.mean_conv_staleness /= s.iters as f64;
+                s.mean_fc_staleness /= s.iters as f64;
+            }
+            if gap_n[i] > 0 {
+                s.mean_iter_gap = gap_sum[i] / gap_n[i] as f64;
+            }
+        }
+        self.group_stats = stats;
+    }
+
     /// Mean virtual time per iteration — hardware efficiency.
     pub fn mean_iter_time(&self) -> f64 {
         if self.records.is_empty() {
@@ -143,7 +221,16 @@ mod tests {
     use super::*;
 
     fn rec(seq: u64, vtime: f64, loss: f32, acc: f32) -> IterRecord {
-        IterRecord { seq, group: 0, vtime, loss, acc, conv_staleness: 0, fc_staleness: 0 }
+        IterRecord {
+            seq,
+            group: 0,
+            local_index: seq,
+            vtime,
+            loss,
+            acc,
+            conv_staleness: 0,
+            fc_staleness: 0,
+        }
     }
 
     fn report(accs: &[f32]) -> TrainReport {
@@ -189,5 +276,61 @@ mod tests {
         let csv = r.to_csv();
         assert!(csv.starts_with("seq,group,vtime"));
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    fn grec(group: usize, local_index: u64, vtime: f64) -> IterRecord {
+        IterRecord {
+            seq: 0,
+            group,
+            local_index,
+            vtime,
+            loss: 1.0,
+            acc: 0.5,
+            conv_staleness: group as u64,
+            fc_staleness: 0,
+        }
+    }
+
+    #[test]
+    fn sort_breaks_vtime_ties_deterministically() {
+        // Three records at the same timestamp, inserted in two different
+        // arrival orders, must sort identically.
+        let a = vec![grec(1, 0, 0.5), grec(0, 1, 0.5), grec(0, 0, 0.5), grec(1, 1, 0.25)];
+        let b = vec![grec(0, 0, 0.5), grec(1, 1, 0.25), grec(1, 0, 0.5), grec(0, 1, 0.5)];
+        let (mut a, mut b) = (a, b);
+        sort_records(&mut a);
+        sort_records(&mut b);
+        let key = |r: &IterRecord| (r.group, r.local_index);
+        assert_eq!(a.iter().map(key).collect::<Vec<_>>(), b.iter().map(key).collect::<Vec<_>>());
+        assert_eq!(key(&a[0]), (1, 1)); // earliest vtime first
+        assert_eq!(key(&a[1]), (0, 0)); // ties: group asc, then local index
+        assert_eq!(key(&a[2]), (0, 1));
+        assert_eq!(key(&a[3]), (1, 0));
+    }
+
+    #[test]
+    fn group_stats_split_by_group() {
+        let mut r = TrainReport {
+            records: vec![
+                grec(0, 0, 1.0),
+                grec(1, 0, 2.0),
+                grec(0, 1, 3.0),
+                grec(1, 1, 6.0),
+                grec(0, 2, 5.0),
+            ],
+            groups: 2,
+            ..Default::default()
+        };
+        r.recompute_group_stats(&["gpu".into(), "cpu".into()]);
+        assert_eq!(r.group_stats.len(), 2);
+        let g0 = &r.group_stats[0];
+        let g1 = &r.group_stats[1];
+        assert_eq!((g0.iters, g0.device.as_str()), (3, "gpu"));
+        assert_eq!((g1.iters, g1.device.as_str()), (2, "cpu"));
+        // Group 0 gaps: (3-1), (5-3) -> mean 2; group 1: (6-2) -> 4.
+        assert!((g0.mean_iter_gap - 2.0).abs() < 1e-12);
+        assert!((g1.mean_iter_gap - 4.0).abs() < 1e-12);
+        assert!((g0.mean_conv_staleness - 0.0).abs() < 1e-12);
+        assert!((g1.mean_conv_staleness - 1.0).abs() < 1e-12);
     }
 }

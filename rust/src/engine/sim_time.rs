@@ -1,4 +1,4 @@
-//! The simulated-time training engine.
+//! The simulated-time scheduler ([`SimClock`]) and its engine facade.
 //!
 //! A discrete-event loop advances a virtual clock over the modeled
 //! cluster (paper Fig 9 specs) while every gradient is computed for real
@@ -15,57 +15,31 @@
 //! virtual-time order, the staleness pattern is *exactly* what the
 //! modeled cluster would produce (merged FC staleness ≡ 0 falls out of
 //! FIFO service, and conv staleness → g−1 in steady state).
+//!
+//! Heterogeneous clusters: each group's conv phases are scaled by its
+//! [`crate::config::DeviceProfile`], so a GPU group cycles back to the
+//! FC queue several times while a CPU group finishes one iteration —
+//! the mixed-fleet behavior of paper Fig 9's CPU+GPU clusters.
+//!
+//! Batching, eval cadence, stop rules, and report assembly live in the
+//! shared [`TrainSession`] (DESIGN.md §Engines).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::time::Instant;
 
 use anyhow::Result;
 
-use super::host_xent;
-use super::report::{EvalRecord, IterRecord, TrainReport};
-use crate::config::TrainConfig;
+use super::driver::{
+    run_scheduler, Completion, EngineOptions, RecordOrder, Scheduler, ServerStats,
+    TrainSession,
+};
+use crate::config::{FcMapping, TrainConfig};
 use crate::coordinator::{ConvFwdState, Topology};
-use crate::data::SyntheticDataset;
 use crate::model::ParamSet;
-use crate::optimizer::he_model::HeParams;
-use crate::runtime::{to_literal, Runtime};
-use crate::sim::{ServiceDist, TimingModel};
+use crate::runtime::Runtime;
+use crate::sim::TimingModel;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
-
-/// Engine knobs beyond the train config.
-#[derive(Clone, Debug)]
-pub struct EngineOptions {
-    /// Evaluate on the held-out batch every this many iterations (0 = never).
-    pub eval_every: usize,
-    /// Assumed device utilization for the HE derivation (paper Fig 3 ~0.5).
-    pub utilization: f64,
-    /// Service-time noise model.
-    pub dist: ServiceDist,
-    /// Record the parameter projection trace for momentum fitting.
-    pub record_proj: bool,
-    /// Stop early once smoothed (window 32) train accuracy reaches this.
-    pub stop_at_train_acc: Option<f32>,
-    /// Stop after this much virtual time (seconds), if set.
-    pub max_virtual_time: Option<f64>,
-    /// Override the derived HE parameters (measured-timing runs).
-    pub he_override: Option<HeParams>,
-}
-
-impl Default for EngineOptions {
-    fn default() -> Self {
-        Self {
-            eval_every: 0,
-            utilization: 0.5,
-            dist: ServiceDist::Lognormal { cv: 0.06 },
-            record_proj: false,
-            stop_at_train_acc: None,
-            max_virtual_time: None,
-            he_override: None,
-        }
-    }
-}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum EventKind {
@@ -109,7 +83,133 @@ struct GroupState {
     fc_staleness: u64,
 }
 
-/// The simulated-time engine.
+/// The discrete-event virtual-clock scheduler.
+pub struct SimClock;
+
+impl Scheduler for SimClock {
+    fn name(&self) -> &'static str {
+        "sim-clock"
+    }
+
+    fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet> {
+        let topo = Topology::build(session.config(), session.rt(), init)?;
+        run_events(session, &topo)?;
+        session.set_server_stats(ServerStats::from_topology(&topo));
+        Ok(topo.current_params())
+    }
+}
+
+/// The event loop proper, over a pre-built topology. Exposed at module
+/// level so [`SimTimeEngine::run_topology`] can reuse a caller's
+/// topology (Algorithm 1 epochs continue from the same model).
+fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
+    let timing: TimingModel = session.timing()?;
+    let cfg = session.config();
+    let g = topo.groups.len();
+    let k = topo.k;
+    let merged_fc = cfg.fc_mapping == FcMapping::Merged;
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x00e7_617e);
+
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    macro_rules! push {
+        ($time:expr, $group:expr, $kind:expr) => {{
+            heap.push(Reverse(Event { time: $time, seq, group: $group, kind: $kind }));
+            seq += 1;
+        }};
+    }
+    for gi in 0..g {
+        if session.try_claim().is_some() {
+            push!(0.0, gi, EventKind::StartIter);
+        }
+    }
+    let mut states: Vec<GroupState> = (0..g).map(|_| GroupState::default()).collect();
+    let mut local_index = vec![0u64; g];
+    let mut fc_free = 0.0f64;
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        // A stop rule fired after this StartIter was scheduled: drain
+        // in-flight iterations but start no new ones.
+        if session.stopped() && ev.kind == EventKind::StartIter {
+            continue;
+        }
+        let gi = ev.group;
+        match ev.kind {
+            EventKind::StartIter => {
+                // Read models NOW (virtual-time ordered) + conv fwd.
+                let batch = session.next_batch();
+                let st = topo.groups[gi].conv_forward(
+                    session.rt(),
+                    &batch.images,
+                    &batch.labels,
+                    &topo.fc,
+                )?;
+                states[gi].fwd = Some(st);
+                let d = timing.sample_conv_fwd_group_of(gi, k, &mut rng);
+                push!(ev.time + d, gi, EventKind::FcArrive);
+            }
+            EventKind::FcArrive => {
+                if merged_fc {
+                    // FIFO FC queue: the merged FC server is ONE machine
+                    // shared by every group (zero FC staleness falls out
+                    // of this serialization).
+                    let fc_start = fc_free.max(ev.time);
+                    let d = timing.sample_fc(&mut rng);
+                    fc_free = fc_start + d;
+                    push!(fc_free, gi, EventKind::FcDone);
+                } else {
+                    // Unmerged mapping: each group computes the FC phase
+                    // on its OWN machines (Fig 16a) — no shared queue,
+                    // and the group's device profile applies.
+                    let d = timing.sample_fc_of(gi, &mut rng);
+                    push!(ev.time + d, gi, EventKind::FcDone);
+                }
+            }
+            EventKind::FcDone => {
+                let st = states[gi].fwd.as_ref().expect("fwd state set at StartIter");
+                let out = topo.fc.step(
+                    session.rt(),
+                    &st.activations,
+                    &st.labels,
+                    st.fc_snapshot.clone(),
+                )?;
+                states[gi].fc_loss = out.loss;
+                states[gi].fc_acc = out.acc;
+                states[gi].fc_staleness = out.staleness;
+                states[gi].g_act = Some(out.g_act);
+                let d = timing.sample_conv_bwd_group_of(gi, k, &mut rng);
+                push!(ev.time + d, gi, EventKind::BwdDone);
+            }
+            EventKind::BwdDone => {
+                let st = states[gi].fwd.take().expect("fwd state");
+                let g_act = states[gi].g_act.take().expect("g_act");
+                let conv_staleness =
+                    topo.groups[gi].conv_backward_publish(session.rt(), &st, &g_act)?;
+                let li = local_index[gi];
+                local_index[gi] += 1;
+                session.complete(
+                    Completion {
+                        group: gi,
+                        local_index: li,
+                        vtime: ev.time,
+                        loss: states[gi].fc_loss,
+                        acc: states[gi].fc_acc,
+                        conv_staleness,
+                        fc_staleness: states[gi].fc_staleness,
+                    },
+                    topo,
+                )?;
+                if session.try_claim().is_some() {
+                    push!(ev.time, gi, EventKind::StartIter);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The simulated-time engine: a thin constructor over the unified
+/// driver with the [`SimClock`] scheduler.
 pub struct SimTimeEngine<'a> {
     rt: &'a Runtime,
     cfg: TrainConfig,
@@ -127,193 +227,28 @@ impl<'a> SimTimeEngine<'a> {
 
     /// HE/timing model this run will use.
     pub fn timing(&self) -> Result<TimingModel> {
-        let arch = self.rt.manifest().arch(&self.cfg.arch)?;
-        let he = self.opts.he_override.unwrap_or_else(|| {
-            HeParams::derive(&self.cfg.cluster, arch, self.cfg.batch, self.opts.utilization)
-        });
-        Ok(TimingModel::new(he, self.opts.dist))
+        super::driver::timing_model(self.rt, &self.cfg, &self.opts)
     }
 
     /// Train for `cfg.steps` group iterations starting from `init`.
-    pub fn run(&self, init: ParamSet) -> Result<TrainReport> {
+    pub fn run(&self, init: ParamSet) -> Result<super::TrainReport> {
         Ok(self.run_with_params(init)?.0)
     }
 
     /// Train and also return the final parameters (Algorithm 1 epochs
     /// continue from the same model across grid-search probes).
-    pub fn run_with_params(&self, init: ParamSet) -> Result<(TrainReport, ParamSet)> {
-        let topo = Topology::build(&self.cfg, self.rt, init)?;
-        let report = self.run_topology(&topo)?;
-        Ok((report, topo.current_params()))
+    pub fn run_with_params(
+        &self,
+        init: ParamSet,
+    ) -> Result<(super::TrainReport, ParamSet)> {
+        run_scheduler(self.rt, self.cfg.clone(), self.opts.clone(), &SimClock, init)
     }
 
-    /// The event loop proper, over a pre-built topology.
-    pub fn run_topology(&self, topo: &Topology) -> Result<TrainReport> {
-        let wall0 = Instant::now();
-        let timing = self.timing()?;
-        let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
-        let g = topo.groups.len();
-        let k = topo.k;
-        let mut rng = Rng::seed_from_u64(self.cfg.seed ^ 0x00e7_617e);
-        // Fixed ±1 projection direction for the momentum trace.
-        let proj_dir: Vec<f32> = {
-            let mut r = Rng::seed_from_u64(0x9a07);
-            let n: usize = topo.conv_ps.read().params.iter().map(|t| t.len()).sum();
-            (0..n).map(|_| if r.bool() { 1.0 } else { -1.0 }).collect()
-        };
-
-        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-        let mut seq = 0u64;
-        macro_rules! push {
-            ($time:expr, $group:expr, $kind:expr) => {{
-                heap.push(Reverse(Event { time: $time, seq, group: $group, kind: $kind }));
-                seq += 1;
-            }};
-        }
-        for gi in 0..g {
-            push!(0.0, gi, EventKind::StartIter);
-        }
-        let mut states: Vec<GroupState> = (0..g).map(|_| GroupState::default()).collect();
-        let mut fc_free = 0.0f64;
-        let mut batch_counter = self.cfg.seed << 20; // distinct data stream per seed
-        let mut completed = 0u64;
-        let mut report = TrainReport { groups: g, group_size: k, ..Default::default() };
-        report.records.reserve(self.cfg.steps);
-        let mut acc_window: Vec<f32> = vec![];
-        let mut stop = false;
-
-        while let Some(Reverse(ev)) = heap.pop() {
-            if stop && ev.kind == EventKind::StartIter {
-                continue;
-            }
-            let gi = ev.group;
-            match ev.kind {
-                EventKind::StartIter => {
-                    // Read models NOW (virtual-time ordered) + conv fwd.
-                    let batch = data.batch(batch_counter, self.cfg.batch);
-                    batch_counter += 1;
-                    let st = topo.groups[gi].conv_forward(
-                        self.rt,
-                        &batch.images,
-                        &batch.labels,
-                        &topo.fc,
-                    )?;
-                    states[gi].fwd = Some(st);
-                    let d = timing.sample_conv_fwd_group(k, &mut rng);
-                    push!(ev.time + d, gi, EventKind::FcArrive);
-                }
-                EventKind::FcArrive => {
-                    // FIFO FC queue (the merged FC server is one machine).
-                    let fc_start = fc_free.max(ev.time);
-                    let d = timing.sample_fc(&mut rng);
-                    fc_free = fc_start + d;
-                    push!(fc_free, gi, EventKind::FcDone);
-                }
-                EventKind::FcDone => {
-                    let st = states[gi].fwd.as_ref().expect("fwd state set at StartIter");
-                    let out = topo.fc.step(
-                        self.rt,
-                        &st.activations,
-                        &st.labels,
-                        st.fc_snapshot.clone(),
-                    )?;
-                    states[gi].fc_loss = out.loss;
-                    states[gi].fc_acc = out.acc;
-                    states[gi].fc_staleness = out.staleness;
-                    states[gi].g_act = Some(out.g_act);
-                    let d = timing.sample_conv_bwd_group(k, &mut rng);
-                    push!(ev.time + d, gi, EventKind::BwdDone);
-                }
-                EventKind::BwdDone => {
-                    let st = states[gi].fwd.take().expect("fwd state");
-                    let g_act = states[gi].g_act.take().expect("g_act");
-                    let conv_staleness =
-                        topo.groups[gi].conv_backward_publish(self.rt, &st, &g_act)?;
-                    report.records.push(IterRecord {
-                        seq: completed,
-                        group: gi,
-                        vtime: ev.time,
-                        loss: states[gi].fc_loss,
-                        acc: states[gi].fc_acc,
-                        conv_staleness,
-                        fc_staleness: states[gi].fc_staleness,
-                    });
-                    report.virtual_time = ev.time;
-                    completed += 1;
-                    if self.opts.record_proj {
-                        report.proj_trace.push(project(&topo, &proj_dir));
-                    }
-                    if self.opts.eval_every > 0
-                        && completed % self.opts.eval_every as u64 == 0
-                    {
-                        let (l, a) = self.evaluate(topo, &data)?;
-                        report.evals.push(EvalRecord {
-                            seq: completed,
-                            vtime: ev.time,
-                            loss: l,
-                            acc: a,
-                        });
-                    }
-                    if let Some(target) = self.opts.stop_at_train_acc {
-                        acc_window.push(states[gi].fc_acc);
-                        let w = 32.min(acc_window.len());
-                        let m: f32 = acc_window[acc_window.len() - w..]
-                            .iter()
-                            .sum::<f32>()
-                            / w as f32;
-                        if acc_window.len() >= 32 && m >= target {
-                            stop = true;
-                        }
-                    }
-                    if !states[gi].fc_loss.is_finite() || states[gi].fc_loss > 1e4 {
-                        stop = true; // diverged: stop scheduling new work
-                    }
-                    if let Some(tmax) = self.opts.max_virtual_time {
-                        if ev.time >= tmax {
-                            stop = true;
-                        }
-                    }
-                    if completed < self.cfg.steps as u64 && !stop {
-                        push!(ev.time, gi, EventKind::StartIter);
-                    }
-                }
-            }
-        }
-
-        report.conv_staleness = topo.conv_ps.staleness_stats();
-        report.fc_staleness = topo.fc.param_server().staleness_stats();
-        report.wallclock_secs = wall0.elapsed().as_secs_f64();
-        report.runtime_stats = self.rt.stats();
-        let (hits, misses) = topo.lit_cache_stats();
-        report.lit_cache_hits = hits;
-        report.lit_cache_misses = misses;
-        Ok(report)
+    /// The event loop over a pre-built topology.
+    pub fn run_topology(&self, topo: &Topology) -> Result<super::TrainReport> {
+        let session = TrainSession::new(self.rt, self.cfg.clone(), self.opts.clone());
+        run_events(&session, topo)?;
+        session.set_server_stats(ServerStats::from_topology(topo));
+        Ok(session.finalize(RecordOrder::Completion))
     }
-
-    fn evaluate(&self, topo: &Topology, data: &SyntheticDataset) -> Result<(f32, f32)> {
-        let eval = data.eval_batch(self.cfg.batch);
-        let params = topo.current_params();
-        let name =
-            format!("{}_{}_infer_b{}", self.cfg.arch, self.cfg.variant, self.cfg.batch);
-        let mut lits = vec![to_literal(&eval.images)?];
-        for t in params.tensors() {
-            lits.push(to_literal(t)?);
-        }
-        let outs = self.rt.execute_literals(&name, &lits)?;
-        let logits = crate::runtime::from_literal(&outs[0])?;
-        Ok(host_xent(&logits, &eval.labels))
-    }
-}
-
-fn project(topo: &Topology, dir: &[f32]) -> f64 {
-    let snap = topo.conv_ps.read();
-    let mut dot = 0.0f64;
-    let mut off = 0;
-    for t in &snap.params {
-        for (x, s) in t.data().iter().zip(&dir[off..off + t.len()]) {
-            dot += (*x as f64) * (*s as f64);
-        }
-        off += t.len();
-    }
-    dot
 }

@@ -1,130 +1,133 @@
-//! Real-thread engine: one OS thread per compute group, genuinely racing
-//! on the shared parameter servers — the wall-clock demonstration that
-//! the coordinator's semantics (staleness, merged-FC serialization) hold
-//! outside the simulated clock. PJRT CPU execution is thread-safe (see
-//! runtime/mod.rs); the merged FC server serializes itself internally.
+//! Real-thread scheduler: one OS thread per compute group, genuinely
+//! racing on the shared parameter servers — the wall-clock demonstration
+//! that the coordinator's semantics (staleness, merged-FC serialization)
+//! hold outside the simulated clock. PJRT CPU execution is thread-safe
+//! (see runtime/mod.rs); the merged FC server serializes itself
+//! internally.
 //!
-//! Perf (DESIGN.md §Perf): iteration records are accumulated in
-//! per-thread vectors (pre-reserved to the per-group share of
-//! `cfg.steps`) and merged once after the scope ends — the historical
-//! global records mutex put one more contended lock on every iteration
-//! of every group, exactly where the sharded parameter server had just
-//! removed one.
+//! Running through the unified driver (DESIGN.md §Engines) gives this
+//! scheduler eval cadence, early stopping, and the rest of
+//! [`EngineOptions`] for free — historically it silently ignored them.
+//! Record ordering: completions from racing threads are sorted by
+//! `(vtime, group, local_index)` at finalization, so `seq` assignment is
+//! deterministic even when the OS timer hands two completions the same
+//! timestamp.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::report::{IterRecord, TrainReport};
+use super::driver::{
+    run_scheduler, Completion, EngineOptions, RecordOrder, Scheduler, ServerStats,
+    TrainSession,
+};
 use crate::config::TrainConfig;
 use crate::coordinator::Topology;
-use crate::data::SyntheticDataset;
 use crate::model::ParamSet;
 use crate::runtime::Runtime;
 
-/// Real-thread training engine.
-pub struct ThreadedEngine<'a> {
-    rt: &'a Runtime,
-    cfg: TrainConfig,
-}
+/// The OS-thread race scheduler.
+pub struct OsThreads;
 
-impl<'a> ThreadedEngine<'a> {
-    pub fn new(rt: &'a Runtime, cfg: TrainConfig) -> Self {
-        Self { rt, cfg }
+impl Scheduler for OsThreads {
+    fn name(&self) -> &'static str {
+        "os-threads"
     }
 
-    /// Run `cfg.steps` iterations across `g` concurrent group threads.
-    pub fn run(&self, init: ParamSet) -> Result<TrainReport> {
-        let topo = Topology::build(&self.cfg, self.rt, init)?;
-        let g = topo.groups.len();
-        let data = SyntheticDataset::for_arch(&self.cfg.arch, self.cfg.seed);
+    fn record_order(&self) -> RecordOrder {
+        RecordOrder::SortByTime
+    }
+
+    fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet> {
+        let topo = Topology::build(session.config(), session.rt(), init)?;
         let wall0 = Instant::now();
-        let batch_counter = AtomicU64::new(self.cfg.seed << 20);
-        let claimed = AtomicU64::new(0);
         let failed = AtomicBool::new(false);
         // First step error, preserved for the caller (cold path only).
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        let steps = self.cfg.steps as u64;
 
-        let mut records: Vec<IterRecord> = Vec::with_capacity(self.cfg.steps);
         std::thread::scope(|scope| {
-            let handles: Vec<_> = topo
-                .groups
-                .iter()
-                .map(|group| {
-                    let rt = self.rt;
-                    let fc = &topo.fc;
-                    let data = &data;
-                    let batch_counter = &batch_counter;
-                    let claimed = &claimed;
-                    let failed = &failed;
-                    let first_err = &first_err;
-                    let cfg = &self.cfg;
-                    scope.spawn(move || {
-                        let mut local: Vec<IterRecord> =
-                            Vec::with_capacity(cfg.steps / g + 2);
-                        loop {
-                            if failed.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            // Claim an iteration slot.
-                            let slot = claimed.fetch_add(1, Ordering::Relaxed);
-                            if slot >= steps {
-                                break;
-                            }
-                            let bi = batch_counter.fetch_add(1, Ordering::Relaxed);
-                            let batch = data.batch(bi, cfg.batch);
-                            match group.step(rt, fc, &batch.images, &batch.labels) {
-                                Ok(out) => local.push(IterRecord {
-                                    seq: 0, // assigned after the vtime merge sort
+            for group in &topo.groups {
+                let topo = &topo;
+                let failed = &failed;
+                let first_err = &first_err;
+                scope.spawn(move || {
+                    let mut local_index = 0u64;
+                    loop {
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // Claim an iteration slot (stops also when an
+                        // EngineOptions stop rule fires mid-run).
+                        if session.try_claim().is_none() {
+                            break;
+                        }
+                        let batch = session.next_batch();
+                        let step = group
+                            .step(session.rt(), &topo.fc, &batch.images, &batch.labels)
+                            .and_then(|out| {
+                                let c = Completion {
                                     group: group.id,
+                                    local_index,
                                     vtime: wall0.elapsed().as_secs_f64(),
                                     loss: out.loss,
                                     acc: out.acc,
                                     conv_staleness: out.conv_staleness,
                                     fc_staleness: out.fc_staleness,
-                                }),
-                                Err(e) => {
-                                    failed.store(true, Ordering::Relaxed);
-                                    first_err.lock().unwrap().get_or_insert(e);
-                                    break;
-                                }
+                                };
+                                session.complete(c, topo)
+                            });
+                        match step {
+                            Ok(()) => local_index += 1,
+                            Err(e) => {
+                                failed.store(true, Ordering::Relaxed);
+                                first_err.lock().unwrap().get_or_insert(e);
+                                break;
                             }
                         }
-                        local
-                    })
-                })
-                .collect();
-            for handle in handles {
-                records.extend(handle.join().expect("group thread panicked"));
+                    }
+                });
             }
         });
 
         if let Some(e) = first_err.into_inner().unwrap() {
-            return Err(e.context(format!("group thread failed (run aborted at {} records)", records.len())));
+            return Err(e.context(format!(
+                "group thread failed (run aborted at {} records)",
+                session.completed()
+            )));
         }
         anyhow::ensure!(!failed.load(Ordering::Relaxed), "a group thread failed");
-        records.sort_by(|a, b| a.vtime.total_cmp(&b.vtime));
-        for (i, r) in records.iter_mut().enumerate() {
-            r.seq = i as u64;
-        }
-        let virtual_time = records.last().map(|r| r.vtime).unwrap_or(0.0);
-        let (lit_cache_hits, lit_cache_misses) = topo.lit_cache_stats();
-        Ok(TrainReport {
-            records,
-            evals: vec![],
-            conv_staleness: topo.conv_ps.staleness_stats(),
-            fc_staleness: topo.fc.param_server().staleness_stats(),
-            virtual_time,
-            wallclock_secs: wall0.elapsed().as_secs_f64(),
-            runtime_stats: self.rt.stats(),
-            lit_cache_hits,
-            lit_cache_misses,
-            proj_trace: vec![],
-            groups: g,
-            group_size: topo.k,
-        })
+        session.set_server_stats(ServerStats::from_topology(&topo));
+        Ok(topo.current_params())
+    }
+}
+
+/// Real-thread training engine: a thin constructor over the unified
+/// driver with the [`OsThreads`] scheduler.
+pub struct ThreadedEngine<'a> {
+    rt: &'a Runtime,
+    cfg: TrainConfig,
+    opts: EngineOptions,
+}
+
+impl<'a> ThreadedEngine<'a> {
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig) -> Self {
+        Self::with_options(rt, cfg, EngineOptions::default())
+    }
+
+    /// Engine options (eval cadence, early stop, ...) work here exactly
+    /// as on the simulated-time engine — `vtime` quantities are real
+    /// elapsed seconds under this scheduler.
+    pub fn with_options(rt: &'a Runtime, cfg: TrainConfig, opts: EngineOptions) -> Self {
+        Self { rt, cfg, opts }
+    }
+
+    /// Run up to `cfg.steps` iterations across `g` concurrent group
+    /// threads.
+    pub fn run(&self, init: ParamSet) -> Result<super::TrainReport> {
+        let (report, _params) =
+            run_scheduler(self.rt, self.cfg.clone(), self.opts.clone(), &OsThreads, init)?;
+        Ok(report)
     }
 }

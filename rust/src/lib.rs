@@ -20,10 +20,13 @@
 //! training loop, parameter updates (momentum SGD, paper eq. (3)–(4)),
 //! scheduling, and optimization.
 //!
-//! Entry points: [`engine::SimTimeEngine`] (deterministic simulated-time
-//! async trainer), [`engine::ThreadedEngine`] (real OS-thread groups),
-//! [`optimizer::algorithm1::AutoOptimizer`] (the paper's Algorithm 1),
-//! and the `omnivore` CLI (`rust/src/main.rs`).
+//! Entry points: the unified engine driver (`engine::TrainSession` +
+//! pluggable `engine::Scheduler`s — DESIGN.md §Engines) behind
+//! [`engine::SimTimeEngine`] (deterministic simulated-time async
+//! trainer, heterogeneous device profiles), [`engine::ThreadedEngine`]
+//! (real OS-thread groups), [`engine::AveragingEngine`] (SparkNet-style
+//! model averaging), [`optimizer::algorithm1::AutoOptimizer`] (the
+//! paper's Algorithm 1), and the `omnivore` CLI (`rust/src/main.rs`).
 
 pub mod baselines;
 pub mod config;

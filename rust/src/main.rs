@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use omnivore::baselines::BaselineSystem;
 use omnivore::config::{cluster, FcMapping, Hyper, Strategy, TrainConfig};
-use omnivore::engine::{EngineOptions, SimTimeEngine, ThreadedEngine};
+use omnivore::engine::{EngineOptions, SchedulerKind, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::bayesian::BayesianOptimizer;
@@ -26,8 +26,10 @@ use omnivore::util::cli::Args;
 
 const USAGE: &str = "usage: omnivore [--artifacts DIR] <train|optimize|sweep|simulate|bayesian|info> [flags]
   train:    --arch A --variant V --cluster C --groups G(-1=async,0=sync) --lr F --momentum F
-            --steps N --seed S [--unmerged-fc] [--threaded] [--baseline NAME] [--csv PATH] [--config FILE]
+            --steps N --seed S [--scheduler sim|threads|averaging[:TAU]] [--unmerged-fc]
+            [--threaded] [--baseline NAME] [--csv PATH] [--config FILE]
   optimize: --arch A --variant V --cluster C --epochs N --epoch-steps N --seed S
+            [--scheduler sim|threads|averaging[:TAU]]
   sweep:    --arch A --variant V --cluster C --steps N --target-acc F --seed S
   simulate: --arch A --cluster C --iters N
   bayesian: --arch A --variant V --cluster C --configs N --seed S
@@ -98,18 +100,22 @@ fn train(rt: &Runtime, args: &Args) -> Result<()> {
         };
         cfg = system.config(&cfg);
     }
-    let threaded = args.switch("threaded");
+    // `--threaded` is the historical spelling of `--scheduler threads`
+    // and wins when both are given.
+    let scheduler_flag = args.str("scheduler", "sim");
+    let scheduler = if args.switch("threaded") {
+        SchedulerKind::OsThreads
+    } else {
+        SchedulerKind::parse(&scheduler_flag)?
+    };
     let csv = args.opt_str("csv");
     args.finish()?;
 
     let arch_info = rt.manifest().arch(&cfg.arch)?;
     let init = ParamSet::init(arch_info, cfg.seed);
-    let report = if threaded {
-        ThreadedEngine::new(rt, cfg.clone()).run(init)?
-    } else {
-        let opts = EngineOptions { eval_every: 64, ..Default::default() };
-        SimTimeEngine::new(rt, cfg.clone(), opts).run(init)?
-    };
+    let opts = EngineOptions { eval_every: 64, ..Default::default() };
+    let (report, _params) = scheduler.run(rt, cfg.clone(), opts, init)?;
+    println!("scheduler: {}", scheduler.name());
     println!(
         "run: g={} k={} steps={} | final loss {:.4} acc {:.3} | {} virtual ({} wall) | staleness conv {:.2} fc {:.2}",
         report.groups,
@@ -122,6 +128,19 @@ fn train(rt: &Runtime, args: &Args) -> Result<()> {
         report.conv_staleness.mean(),
         report.fc_staleness.mean(),
     );
+    if cfg.cluster.is_heterogeneous() {
+        let mut t = Table::new(&["group", "device", "iters", "time/iter", "staleness"]);
+        for s in &report.group_stats {
+            t.row(&[
+                s.group.to_string(),
+                s.device.clone(),
+                s.iters.to_string(),
+                fmt_secs(s.mean_iter_gap),
+                format!("{:.2}", s.mean_conv_staleness),
+            ]);
+        }
+        t.print();
+    }
     let stats = report.runtime_stats;
     println!(
         "runtime: {} executions, {} in XLA, {} compiling",
@@ -147,6 +166,7 @@ fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
     };
     let epochs = args.get("epochs", 2usize)?;
     let epoch_steps = args.get("epoch-steps", 256usize)?;
+    let scheduler = SchedulerKind::parse(&args.str("scheduler", "sim"))?;
     args.finish()?;
 
     let arch_info = rt.manifest().arch(&arch)?;
@@ -159,7 +179,8 @@ fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
         he.smallest_saturating_g(base.conv_machines())
     );
     let init = ParamSet::init(arch_info, base.seed);
-    let mut trainer = EngineTrainer { rt, base, opts: EngineOptions::default() };
+    let mut trainer =
+        EngineTrainer::new(rt, base, EngineOptions::default()).with_scheduler(scheduler);
     let opt = AutoOptimizer { epochs, epoch_steps, ..Default::default() };
     let (trace, _params) = opt.run(&mut trainer, init, &he)?;
     if let Some(h) = trace.cold_start_hyper {
@@ -278,8 +299,7 @@ fn bayesian(rt: &Runtime, args: &Args) -> Result<()> {
     let init = ParamSet::init(arch_info, base.seed);
 
     // Omnivore's optimizer first (its loss is the reference).
-    let mut trainer =
-        EngineTrainer { rt, base: base.clone(), opts: EngineOptions::default() };
+    let mut trainer = EngineTrainer::new(rt, base.clone(), EngineOptions::default());
     let opt = AutoOptimizer { epochs: 1, epoch_steps: 128, ..Default::default() };
     let (trace, _) = opt.run(&mut trainer, init.clone(), &he)?;
     let reference = trace.epochs.last().map(|e| e.final_loss).unwrap_or(f32::INFINITY);

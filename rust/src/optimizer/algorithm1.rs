@@ -16,6 +16,12 @@
 //! The starting g is the hardware-efficiency short-circuit of Appendix
 //! E-C1: the smallest number of groups that saturates the FC server (no
 //! HE gain above it, only SE cost).
+//!
+//! The algorithm is generic over [`Trainer`]; on the real
+//! [`super::EngineTrainer`] every probe and committed epoch runs through
+//! the unified engine driver, so the execution scheduler (simulated
+//! clock, OS threads, model averaging) is a [`crate::engine::SchedulerKind`]
+//! choice on the trainer, not baked in here.
 
 use anyhow::Result;
 
@@ -170,6 +176,7 @@ mod tests {
                 report.records.push(IterRecord {
                     seq: i,
                     group: 0,
+                    local_index: i,
                     vtime: i as f64,
                     loss,
                     acc: 1.0 - loss,

@@ -319,6 +319,7 @@ mod tests {
                 report.records.push(IterRecord {
                     seq: i,
                     group: 0,
+                    local_index: i,
                     vtime: i as f64,
                     loss,
                     acc: 0.0,

@@ -41,12 +41,35 @@ pub trait Trainer {
     fn n_machines(&self) -> usize;
 }
 
-/// The real trainer: wraps the simulated-time engine over a base config.
+/// The real trainer: wraps the unified engine driver over a base
+/// config. The scheduler is selected by name ([`SchedulerKind`]) rather
+/// than hard-coding the simulated-time engine — Algorithm 1 runs
+/// unchanged over OS threads or model averaging.
+///
+/// [`SchedulerKind`]: crate::engine::SchedulerKind
 #[cfg(feature = "xla")]
 pub struct EngineTrainer<'a> {
     pub rt: &'a crate::runtime::Runtime,
     pub base: crate::config::TrainConfig,
     pub opts: crate::engine::EngineOptions,
+    pub scheduler: crate::engine::SchedulerKind,
+}
+
+#[cfg(feature = "xla")]
+impl<'a> EngineTrainer<'a> {
+    /// Trainer over the default (simulated-clock) scheduler.
+    pub fn new(
+        rt: &'a crate::runtime::Runtime,
+        base: crate::config::TrainConfig,
+        opts: crate::engine::EngineOptions,
+    ) -> Self {
+        Self { rt, base, opts, scheduler: crate::engine::SchedulerKind::SimClock }
+    }
+
+    pub fn with_scheduler(mut self, scheduler: crate::engine::SchedulerKind) -> Self {
+        self.scheduler = scheduler;
+        self
+    }
 }
 
 #[cfg(feature = "xla")]
@@ -62,8 +85,7 @@ impl<'a> Trainer for EngineTrainer<'a> {
         cfg.strategy = crate::config::Strategy::Groups(g);
         cfg.hyper = hyper;
         cfg.steps = steps;
-        let engine = crate::engine::SimTimeEngine::new(self.rt, cfg, self.opts.clone());
-        engine.run_with_params(from.clone())
+        self.scheduler.run(self.rt, cfg, self.opts.clone(), from.clone())
     }
 
     fn n_machines(&self) -> usize {

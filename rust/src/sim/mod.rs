@@ -67,13 +67,14 @@ impl ClusterSim {
             let t0 = ready[gi];
             // Intra-group barrier: k machines each sample a fwd time;
             // the group advances at the slowest (paper Observation 1).
-            let fwd = self.timing.sample_conv_fwd_group(k, &mut rng);
+            // Heterogeneous clusters scale each group by its profile.
+            let fwd = self.timing.sample_conv_fwd_group_of(gi, k, &mut rng);
             let arrive = t0 + fwd;
             let fc_start = fc_free.max(arrive);
             let fc_t = self.timing.sample_fc(&mut rng);
             fc_free = fc_start + fc_t;
             fc_busy += fc_t;
-            let bwd = self.timing.sample_conv_bwd_group(k, &mut rng);
+            let bwd = self.timing.sample_conv_bwd_group_of(gi, k, &mut rng);
             let done = fc_free + bwd;
             ready[gi] = done;
             completions.push(done);
@@ -179,6 +180,32 @@ mod tests {
         let a = sim.run(4, 100, 42);
         let b = sim.run(4, 100, 42);
         assert_eq!(a.total_time, b.total_time);
+    }
+
+    #[test]
+    fn straggler_group_stretches_timing_sim() {
+        use crate::config::{DeviceKind, DeviceProfile};
+        let hom = ClusterSim::new(TimingModel::new(he(), ServiceDist::Deterministic), 8);
+        let het = ClusterSim::new(
+            TimingModel::with_profiles(
+                he(),
+                ServiceDist::Deterministic,
+                vec![
+                    DeviceProfile::straggler(DeviceKind::Cpu, 4.0),
+                    DeviceProfile::baseline(DeviceKind::Cpu),
+                ],
+            ),
+            8,
+        );
+        // Sync (one group): the straggler IS the cluster -> 4x-ish slower.
+        let a = hom.run(1, 100, 5);
+        let b = het.run(1, 100, 5);
+        assert!(
+            b.mean_iter_time > a.mean_iter_time * 2.0,
+            "straggler {} vs baseline {}",
+            b.mean_iter_time,
+            a.mean_iter_time
+        );
     }
 
     #[test]

@@ -1,5 +1,13 @@
 //! Service-time sampling on top of the analytic HE parameters.
+//!
+//! The model is per-group heterogeneous: each compute group carries a
+//! [`DeviceProfile`] whose conv/FC speed multipliers scale the sampled
+//! service times (a GPU group finishes its conv phase ~6.6x sooner than
+//! a CPU group on the same fabric; a straggler group takes longer).
+//! With no profiles attached the model reduces exactly to the paper's
+//! homogeneous clusters.
 
+use crate::config::{DeviceKind, DeviceProfile};
 use crate::optimizer::he_model::HeParams;
 use crate::util::rng::Rng;
 
@@ -20,16 +28,35 @@ pub enum ServiceDist {
 /// conv layer, so fwd is ~1/3 of the conv phase.
 pub const CONV_FWD_FRACTION: f64 = 1.0 / 3.0;
 
-/// Samples conv/FC service times consistent with an [`HeParams`] model.
-#[derive(Clone, Copy, Debug)]
+/// Samples conv/FC service times consistent with an [`HeParams`] model,
+/// optionally scaled per compute group by a [`DeviceProfile`].
+#[derive(Clone, Debug)]
 pub struct TimingModel {
     pub he: HeParams,
     pub dist: ServiceDist,
+    /// Per-group device profiles; empty = homogeneous (all baseline).
+    profiles: Vec<DeviceProfile>,
 }
 
 impl TimingModel {
+    /// Homogeneous model: every group at the cluster baseline speed.
     pub fn new(he: HeParams, dist: ServiceDist) -> Self {
-        Self { he, dist }
+        Self { he, dist, profiles: vec![] }
+    }
+
+    /// Heterogeneous model with one profile per compute group (cycles
+    /// when there are more groups than profiles).
+    pub fn with_profiles(he: HeParams, dist: ServiceDist, profiles: Vec<DeviceProfile>) -> Self {
+        Self { he, dist, profiles }
+    }
+
+    /// Profile of compute group `g`.
+    pub fn profile(&self, g: usize) -> DeviceProfile {
+        if self.profiles.is_empty() {
+            DeviceProfile::baseline(DeviceKind::Cpu)
+        } else {
+            self.profiles[g % self.profiles.len()]
+        }
     }
 
     fn noise(&self, rng: &mut Rng) -> f64 {
@@ -51,6 +78,13 @@ impl TimingModel {
         (0..k).map(|_| self.sample_conv_fwd(k, rng)).fold(0.0, f64::max)
     }
 
+    /// Conv forward barrier of group `g`, scaled by its device profile.
+    /// Baseline profiles divide by exactly 1.0, so the homogeneous path
+    /// is bit-identical to [`Self::sample_conv_fwd_group`].
+    pub fn sample_conv_fwd_group_of(&self, g: usize, k: usize, rng: &mut Rng) -> f64 {
+        self.sample_conv_fwd_group(k, rng) / self.profile(g).conv_speed
+    }
+
     pub fn sample_conv_bwd(&self, k: usize, rng: &mut Rng) -> f64 {
         self.he.t_conv(k) * (1.0 - CONV_FWD_FRACTION) * self.noise(rng)
     }
@@ -59,9 +93,21 @@ impl TimingModel {
         (0..k).map(|_| self.sample_conv_bwd(k, rng)).fold(0.0, f64::max)
     }
 
-    /// FC server service time for one group request.
+    /// Conv backward barrier of group `g`, scaled by its device profile.
+    pub fn sample_conv_bwd_group_of(&self, g: usize, k: usize, rng: &mut Rng) -> f64 {
+        self.sample_conv_bwd_group(k, rng) / self.profile(g).conv_speed
+    }
+
+    /// FC server service time for one group request (the merged FC
+    /// server is one fixed machine, so no group profile applies).
     pub fn sample_fc(&self, rng: &mut Rng) -> f64 {
         self.he.t_fc * self.noise(rng)
+    }
+
+    /// FC service time when the FC phase runs on group `g`'s own
+    /// machines (the unmerged mapping), scaled by the group's FC speed.
+    pub fn sample_fc_of(&self, g: usize, rng: &mut Rng) -> f64 {
+        self.sample_fc(rng) / self.profile(g).fc_speed
     }
 }
 
@@ -99,6 +145,61 @@ mod tests {
         let n = 50_000;
         let mean: f64 = (0..n).map(|_| t.sample_fc(&mut rng)).sum::<f64>() / n as f64;
         assert!((mean - 0.1).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn baseline_profile_is_bit_identical() {
+        let he = HeParams::measured(1.0, 0.001, 0.1);
+        let hom = TimingModel::new(he, ServiceDist::Lognormal { cv: 0.06 });
+        let het = TimingModel::with_profiles(
+            he,
+            ServiceDist::Lognormal { cv: 0.06 },
+            vec![crate::config::DeviceProfile::baseline(crate::config::DeviceKind::Cpu)],
+        );
+        let mut r1 = Rng::seed_from_u64(9);
+        let mut r2 = Rng::seed_from_u64(9);
+        for _ in 0..64 {
+            assert_eq!(
+                hom.sample_conv_fwd_group(4, &mut r1),
+                het.sample_conv_fwd_group_of(0, 4, &mut r2)
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_profile_speeds_up_conv() {
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let t = TimingModel::with_profiles(
+            he,
+            ServiceDist::Deterministic,
+            vec![
+                crate::config::DeviceProfile::from_kind(crate::config::DeviceKind::Gpu),
+                crate::config::DeviceProfile::from_kind(crate::config::DeviceKind::Cpu),
+            ],
+        );
+        let mut rng = Rng::seed_from_u64(0);
+        let gpu = t.sample_conv_fwd_group_of(0, 1, &mut rng);
+        let cpu = t.sample_conv_fwd_group_of(1, 1, &mut rng);
+        assert!((cpu / gpu - 6.6).abs() < 1e-9, "gpu {gpu} cpu {cpu}");
+        // Profiles cycle: group 2 is the GPU group again.
+        assert_eq!(t.sample_conv_fwd_group_of(2, 1, &mut rng), gpu);
+        // Merged FC service ignores profiles; unmerged scales by fc_speed.
+        let fc = t.sample_fc(&mut rng);
+        assert!((fc / t.sample_fc_of(0, &mut rng) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_profile_slows_group() {
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let t = TimingModel::with_profiles(
+            he,
+            ServiceDist::Deterministic,
+            vec![crate::config::DeviceProfile::straggler(crate::config::DeviceKind::Cpu, 2.0)],
+        );
+        let mut rng = Rng::seed_from_u64(0);
+        let slow = t.sample_conv_bwd_group_of(0, 1, &mut rng);
+        let base = t.sample_conv_bwd_group(1, &mut rng);
+        assert!((slow / base - 2.0).abs() < 1e-9);
     }
 
     #[test]

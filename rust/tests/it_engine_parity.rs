@@ -1,0 +1,210 @@
+//! Integration: engine parity through the unified driver — all three
+//! schedulers run the same `TrainSession` core, so degenerate
+//! configurations must agree across them, `EngineOptions` must be
+//! honored everywhere, and heterogeneous device profiles must show up
+//! in the per-group report.
+
+mod common;
+
+use common::runtime;
+use omnivore::config::{cluster, Hyper, Strategy, TrainConfig};
+use omnivore::data::SyntheticDataset;
+use omnivore::engine::{
+    AveragingEngine, EngineOptions, SchedulerKind, SimTimeEngine, ThreadedEngine,
+};
+use omnivore::model::ParamSet;
+use omnivore::optimizer::HeParams;
+use omnivore::runtime::{from_literal, labels_literal, to_literal};
+use omnivore::sim::ServiceDist;
+use omnivore::tensor::{momentum_sgd_step, HostTensor};
+
+fn cfg(groups: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        arch: "lenet".into(),
+        variant: "jnp".into(),
+        cluster: cluster::preset("cpu-s").unwrap(),
+        strategy: Strategy::Groups(groups),
+        hyper: Hyper { lr: 0.03, momentum: 0.6, lambda: 5e-4 },
+        steps,
+        seed: 0,
+        ..TrainConfig::default()
+    }
+}
+
+fn init() -> ParamSet {
+    ParamSet::init(runtime().manifest().arch("lenet").unwrap(), 0)
+}
+
+#[test]
+fn scheduler_kind_selects_engines() {
+    // The by-name dispatch drives the same runs the engine facades do.
+    let (report, _params) = SchedulerKind::SimClock
+        .run(runtime(), cfg(1, 8), EngineOptions::default(), init())
+        .unwrap();
+    assert_eq!(report.records.len(), 8);
+    let (report, _params) = SchedulerKind::OsThreads
+        .run(runtime(), cfg(2, 8), EngineOptions::default(), init())
+        .unwrap();
+    assert_eq!(report.records.len(), 8);
+}
+
+#[test]
+fn sync_parity_sim_clock_vs_os_threads() {
+    // g = 1: one group, no races — the discrete-event scheduler and the
+    // OS-thread scheduler execute the identical sequence of artifact
+    // calls against the identical batch sequence, so the loss sequence
+    // must match bit-for-bit (only the clocks differ).
+    let c = cfg(1, 16);
+    let sim = SimTimeEngine::new(runtime(), c.clone(), EngineOptions::default())
+        .run(init())
+        .unwrap();
+    let thr = ThreadedEngine::new(runtime(), c).run(init()).unwrap();
+    assert_eq!(sim.records.len(), 16);
+    assert_eq!(thr.records.len(), 16);
+    for (a, b) in sim.records.iter().zip(&thr.records) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.loss, b.loss, "loss diverged at seq {}", a.seq);
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.conv_staleness, b.conv_staleness);
+    }
+}
+
+#[test]
+fn averaging_tau1_g1_matches_single_device_sgd() {
+    // One replica averaged with itself every iteration IS plain
+    // momentum SGD on the full_step artifact: replay it by hand and
+    // demand the same loss sequence.
+    let mut c = cfg(1, 12);
+    c.cluster = cluster::preset("1xcpu").unwrap();
+    let he = HeParams::measured(1.0, 0.0, 0.1);
+    let report =
+        AveragingEngine::new(runtime(), c.clone(), 1, he).run(init()).unwrap();
+    assert_eq!(report.records.len(), 12);
+
+    let data = SyntheticDataset::for_arch("lenet", c.seed);
+    let artifact = format!("{}_{}_full_step_b{}", c.arch, c.variant, c.batch);
+    let mut w: Vec<HostTensor> = init().tensors().to_vec();
+    let mut v: Vec<HostTensor> =
+        w.iter().map(|t| HostTensor::zeros(t.shape())).collect();
+    for (i, rec) in report.records.iter().enumerate() {
+        let batch = data.batch((c.seed << 20) + i as u64, c.batch);
+        let mut lits = vec![
+            to_literal(&batch.images).unwrap(),
+            labels_literal(&batch.labels).unwrap(),
+        ];
+        for t in &w {
+            lits.push(to_literal(t).unwrap());
+        }
+        let outs = runtime().execute_literals(&artifact, &lits).unwrap();
+        let loss = from_literal(&outs[0]).unwrap().scalar().unwrap();
+        assert_eq!(loss, rec.loss, "loss diverged at iteration {i}");
+        for ((wi, vi), go) in w.iter_mut().zip(v.iter_mut()).zip(&outs[2..]) {
+            let gt = from_literal(go).unwrap();
+            momentum_sgd_step(
+                wi.data_mut(),
+                vi.data_mut(),
+                gt.data(),
+                c.hyper.momentum,
+                c.hyper.lr,
+                c.hyper.lambda,
+            );
+        }
+    }
+}
+
+#[test]
+fn averaging_engine_honors_engine_options() {
+    // Eval cadence and early stopping used to be sim-engine-only.
+    let mut c = cfg(1, 2000);
+    c.cluster = cluster::preset("1xcpu").unwrap();
+    c.hyper = Hyper { lr: 0.03, momentum: 0.9, lambda: 5e-4 };
+    let he = HeParams::measured(1.0, 0.0, 0.1);
+    let opts = EngineOptions {
+        eval_every: 64,
+        stop_at_train_acc: Some(0.9),
+        he_override: Some(he),
+        ..Default::default()
+    };
+    let report =
+        AveragingEngine::with_options(runtime(), c, 1, opts).run(init()).unwrap();
+    assert!(
+        report.records.len() < 1500,
+        "averaging early stop did not fire: ran {}",
+        report.records.len()
+    );
+    assert!(!report.evals.is_empty(), "averaging produced no held-out evals");
+}
+
+#[test]
+fn heterogeneous_cluster_reports_per_group_timing() {
+    // One GPU-profile group + three CPU-profile groups (hetero-s): the
+    // GPU group must complete more iterations at a shorter cadence, and
+    // the report must say which group ran on what.
+    let mut c = cfg(4, 120);
+    c.cluster = cluster::preset("hetero-s").unwrap();
+    let opts = EngineOptions { dist: ServiceDist::Deterministic, ..Default::default() };
+    let report = SimTimeEngine::new(runtime(), c, opts).run(init()).unwrap();
+    assert_eq!(report.records.len(), 120);
+    assert_eq!(report.group_stats.len(), 4);
+    let gpu = &report.group_stats[0];
+    assert_eq!(gpu.device, "gpu");
+    for cpu in &report.group_stats[1..] {
+        assert_eq!(cpu.device, "cpu");
+        assert!(
+            gpu.iters > cpu.iters,
+            "gpu group {} iters vs cpu group {} iters {}",
+            gpu.iters,
+            cpu.group,
+            cpu.iters
+        );
+        assert!(
+            gpu.mean_iter_gap < cpu.mean_iter_gap,
+            "gpu gap {} vs cpu gap {}",
+            gpu.mean_iter_gap,
+            cpu.mean_iter_gap
+        );
+    }
+    // Staleness accounting still covers every group.
+    let total: u64 = report.group_stats.iter().map(|s| s.iters).sum();
+    assert_eq!(total, 120);
+}
+
+#[test]
+fn max_virtual_time_budget_stops_all_schedulers() {
+    // The same virtual-time budget option cuts off both clock-driven
+    // schedulers (threaded vtime is wall-clock, so budget it generously
+    // and only check the sim + averaging clocks here).
+    let opts = |tmax| EngineOptions {
+        dist: ServiceDist::Deterministic,
+        max_virtual_time: Some(tmax),
+        ..Default::default()
+    };
+    let unbounded = SimTimeEngine::new(runtime(), cfg(2, 64), opts(f64::INFINITY))
+        .run(init())
+        .unwrap();
+    let budget = unbounded.virtual_time / 4.0;
+    let bounded =
+        SimTimeEngine::new(runtime(), cfg(2, 64), opts(budget)).run(init()).unwrap();
+    assert!(
+        bounded.records.len() < unbounded.records.len(),
+        "sim: {} vs {}",
+        bounded.records.len(),
+        unbounded.records.len()
+    );
+
+    let he = HeParams::measured(1.0, 0.0, 0.1);
+    let mut c = cfg(1, 64);
+    c.cluster = cluster::preset("1xcpu").unwrap();
+    let avg_opts = EngineOptions {
+        max_virtual_time: Some(5.0 * 1.1), // ~5 local iterations at t_local=1.1
+        he_override: Some(he),
+        ..Default::default()
+    };
+    let report =
+        AveragingEngine::with_options(runtime(), c, 1, avg_opts).run(init()).unwrap();
+    assert!(
+        report.records.len() < 20,
+        "averaging time budget ignored: {} records",
+        report.records.len()
+    );
+}

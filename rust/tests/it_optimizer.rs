@@ -14,17 +14,17 @@ use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams, Trainer};
 use omnivore::sim::ServiceDist;
 
 fn trainer(seed: u64) -> EngineTrainer<'static> {
-    EngineTrainer {
-        rt: runtime(),
-        base: TrainConfig {
+    EngineTrainer::new(
+        runtime(),
+        TrainConfig {
             arch: "lenet".into(),
             variant: "jnp".into(),
             cluster: cluster::preset("cpu-s").unwrap(),
             seed,
             ..TrainConfig::default()
         },
-        opts: EngineOptions::default(),
-    }
+        EngineOptions::default(),
+    )
 }
 
 fn init() -> ParamSet {

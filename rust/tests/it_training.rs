@@ -157,9 +157,38 @@ fn divergence_stops_run() {
 fn threaded_engine_matches_semantics() {
     let report = ThreadedEngine::new(runtime(), cfg(4, 24)).run(init()).unwrap();
     assert_eq!(report.groups, 4);
-    assert!(report.records.len() >= 24);
+    assert_eq!(report.records.len(), 24); // claim-based budget: exactly cfg.steps
     assert_eq!(report.fc_staleness.total_staleness, 0); // merged FC serializes
     assert!(report.conv_staleness.mean() > 0.5); // real races produce staleness
+    // Records are globally ordered with deterministic seq assignment.
+    for (i, r) in report.records.iter().enumerate() {
+        assert_eq!(r.seq, i as u64);
+    }
+}
+
+#[test]
+fn threaded_engine_honors_eval_and_early_stop() {
+    // Pre-driver, the threaded engine silently ignored BOTH of these
+    // EngineOptions fields; the unified driver gives it them for free.
+    let mut c = cfg(2, 4000);
+    c.hyper = Hyper { lr: 0.03, momentum: 0.9, lambda: 5e-4 };
+    let opts = EngineOptions {
+        eval_every: 32,
+        stop_at_train_acc: Some(0.9),
+        ..Default::default()
+    };
+    let report = ThreadedEngine::with_options(runtime(), c, opts).run(init()).unwrap();
+    assert!(
+        report.records.len() < 3000,
+        "threaded early stop did not fire: ran {}",
+        report.records.len()
+    );
+    assert!(
+        !report.evals.is_empty(),
+        "threaded engine produced no held-out evals"
+    );
+    let last_eval = report.evals.last().unwrap();
+    assert!(last_eval.acc > 0.5, "eval acc {}", last_eval.acc);
 }
 
 #[test]
