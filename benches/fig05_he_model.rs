@@ -10,8 +10,8 @@
 mod support;
 
 use omnivore::metrics::{fmt_secs, Table};
-use omnivore::optimizer::HeParams;
-use omnivore::sim::{predicted_vs_measured, ServiceDist};
+use omnivore::optimizer::{HeParams, ProfiledHe};
+use omnivore::sim::{predicted_vs_measured, predicted_vs_measured_profiled, ServiceDist};
 
 fn main() {
     support::banner("Fig 5b", "predicted vs measured iteration time vs machines/group (CPU-L)");
@@ -52,4 +52,43 @@ fn main() {
         max_err * 100.0
     );
     support::write_results("fig05_he_model.csv", &csv);
+
+    // Heterogeneous rows: the profile-aware model against the same
+    // simulator carrying per-group device profiles (equal split and
+    // FLOPS-proportional shares). The homogeneous closed form is wrong
+    // exactly here; ProfiledHe's throughput sum is what the cluster
+    // measures.
+    println!();
+    support::banner("Fig 5b+", "profile-aware predicted vs measured (hetero presets)");
+    let mut hcsv = String::from("cluster,plan,g,predicted,measured\n");
+    for name in ["hetero-s", "straggler-s"] {
+        let cl = support::preset(name);
+        let n = cl.machines - 1;
+        for dynamic in [false, true] {
+            let phe = ProfiledHe::for_cluster(&cl, arch, 32, 0.5).with_dynamic_batch(dynamic);
+            let rows = predicted_vs_measured_profiled(
+                &phe,
+                &cl.group_profiles,
+                n,
+                ServiceDist::Lognormal { cv: 0.06 },
+                iters,
+                0,
+            );
+            let plan = if dynamic { "dynamic" } else { "equal" };
+            let mut table = Table::new(&["cluster", "plan", "g", "predicted", "measured", "ratio"]);
+            for (g, pred, meas) in &rows {
+                table.row(&[
+                    name.into(),
+                    plan.into(),
+                    g.to_string(),
+                    fmt_secs(*pred),
+                    fmt_secs(*meas),
+                    format!("{:.3}", meas / pred),
+                ]);
+                hcsv.push_str(&format!("{name},{plan},{g},{pred},{meas}\n"));
+            }
+            table.print();
+        }
+    }
+    support::write_results("fig05_he_model_hetero.csv", &hcsv);
 }

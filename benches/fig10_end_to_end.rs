@@ -62,6 +62,7 @@ fn main() {
     let he = HeParams::derive(&cl, arch, base.batch, 0.5);
     let mut trainer = EngineTrainer::new(&rt, base, EngineOptions::default());
     let opt = AutoOptimizer {
+        cold_probe_steps: 32,
         epochs: 2,
         epoch_steps: steps / 2,
         probe_steps: 20,

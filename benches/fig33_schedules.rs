@@ -66,6 +66,7 @@ fn main() {
     };
     let mut trainer = EngineTrainer::new(&rt, base, EngineOptions::default());
     let opt = AutoOptimizer {
+        cold_probe_steps: 32,
         epochs: 3,
         epoch_steps: total_steps / 3,
         probe_steps: 16,

@@ -35,6 +35,7 @@ fn main() {
     let mut trainer =
         EngineTrainer::new(&rt, base.clone(), EngineOptions::default());
     let opt = AutoOptimizer {
+        cold_probe_steps: 32,
         epochs: 1,
         epoch_steps: support::scaled(128),
         probe_steps,

@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         let mut trainer =
             EngineTrainer::new(&rt, base.clone(), EngineOptions::default());
         let opt = AutoOptimizer {
+            cold_probe_steps: 32,
             epochs: 1,
             epoch_steps: 200,
             probe_steps: 20,

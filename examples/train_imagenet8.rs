@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         EngineOptions { eval_every: 64, ..Default::default() },
     );
     let opt = AutoOptimizer {
+        cold_probe_steps: 32,
         epochs: 3,
         epoch_steps: 200,
         probe_steps: 24,

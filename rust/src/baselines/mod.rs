@@ -100,22 +100,39 @@ pub fn utilization(system: BaselineSystem) -> DeviceUtilization {
 }
 
 /// FLOPS-proportional partitioner (paper Appendix C-D): split a batch
-/// across devices proportionally to their TFLOPS. Returns per-device
-/// image counts summing to `batch`.
+/// across devices proportionally to their TFLOPS. Always returns one
+/// share per device, summing to `batch`.
+///
+/// Inputs are clamped defensively: negative, zero, or non-finite
+/// throughputs count as 0 (a device that can do no work gets no share),
+/// and when every throughput clamps to 0 the batch is split equally —
+/// so callers indexing per-device never see a wrong-length vector, and
+/// the floored shares can never exceed `batch` (which used to underflow
+/// the remainder subtraction when a negative entry inflated a share).
 pub fn flops_proportional_split(batch: usize, tflops: &[f64]) -> Vec<usize> {
-    let total: f64 = tflops.iter().sum();
-    if total <= 0.0 || tflops.is_empty() {
-        return vec![batch];
+    if tflops.is_empty() {
+        return vec![];
+    }
+    let n = tflops.len();
+    let clamped: Vec<f64> =
+        tflops.iter().map(|&t| if t.is_finite() && t > 0.0 { t } else { 0.0 }).collect();
+    let total: f64 = clamped.iter().sum();
+    if total <= 0.0 {
+        // No usable throughput signal: fall back to the equal split.
+        let base = batch / n;
+        return (0..n).map(|i| base + usize::from(i < batch % n)).collect();
     }
     let mut out: Vec<usize> =
-        tflops.iter().map(|t| ((batch as f64) * t / total).floor() as usize).collect();
-    // Distribute the remainder to the fastest devices.
-    let mut rem = batch - out.iter().sum::<usize>();
-    let mut order: Vec<usize> = (0..tflops.len()).collect();
-    order.sort_by(|&a, &b| tflops[b].total_cmp(&tflops[a]));
+        clamped.iter().map(|t| ((batch as f64) * t / total).floor() as usize).collect();
+    // Each share is at most batch * t / total with t/total in [0, 1] and
+    // the floors sum to at most `batch`; distribute the remainder to the
+    // fastest devices.
+    let mut rem = batch.saturating_sub(out.iter().sum::<usize>());
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| clamped[b].total_cmp(&clamped[a]));
     let mut i = 0;
     while rem > 0 {
-        out[order[i % order.len()]] += 1;
+        out[order[i % n]] += 1;
         rem -= 1;
         i += 1;
     }
@@ -159,6 +176,43 @@ mod tests {
         let s = flops_proportional_split(10, &[1.0, 1.0, 1.0]);
         assert_eq!(s.iter().sum::<usize>(), 10);
         assert!(s.iter().all(|&x| x >= 3));
+    }
+
+    #[test]
+    fn proportional_split_empty_devices() {
+        // No devices -> no shares (callers index per-device; a bogus
+        // one-element vec used to panic or silently mis-assign).
+        assert_eq!(flops_proportional_split(64, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn proportional_split_zero_total_falls_back_to_equal() {
+        let s = flops_proportional_split(10, &[0.0, 0.0, 0.0]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.iter().sum::<usize>(), 10);
+        assert!(s.iter().all(|&x| x == 3 || x == 4));
+    }
+
+    #[test]
+    fn proportional_split_clamps_negative_and_nonfinite() {
+        // A negative entry used to inflate the other floors past `batch`
+        // and underflow the usize remainder subtraction.
+        let s = flops_proportional_split(8, &[-3.0, 1.0]);
+        assert_eq!(s, vec![0, 8]);
+        let s = flops_proportional_split(8, &[f64::NAN, 1.0, f64::INFINITY]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.iter().sum::<usize>(), 8);
+        assert_eq!(s[0], 0);
+        assert_eq!(s[2], 0);
+        // All entries unusable -> equal split, correct length.
+        let s = flops_proportional_split(7, &[-1.0, f64::NAN]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn proportional_split_zero_batch() {
+        assert_eq!(flops_proportional_split(0, &[1.0, 2.0]), vec![0, 0]);
     }
 
     #[test]

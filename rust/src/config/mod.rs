@@ -130,6 +130,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Path to the artifacts directory.
     pub artifacts_dir: String,
+    /// FLOPS-proportional batch partitioning across unequal groups
+    /// (OmniLearn-style dynamic batching; no effect on homogeneous
+    /// clusters). See [`crate::data::BatchPlan`].
+    pub dynamic_batch: bool,
 }
 
 impl Default for TrainConfig {
@@ -145,6 +149,7 @@ impl Default for TrainConfig {
             steps: 100,
             seed: 0,
             artifacts_dir: "artifacts".into(),
+            dynamic_batch: false,
         }
     }
 }
@@ -171,6 +176,7 @@ impl TrainConfig {
             ("steps", Json::Num(self.steps as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+            ("dynamic_batch", Json::Bool(self.dynamic_batch)),
         ])
     }
 
@@ -194,6 +200,11 @@ impl TrainConfig {
                 .map(|s| s.as_str().map(String::from))
                 .transpose()?
                 .unwrap_or(d.artifacts_dir),
+            dynamic_batch: v
+                .opt("dynamic_batch")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(false),
         })
     }
 
@@ -226,6 +237,19 @@ impl TrainConfig {
     /// AOT batch sizes by the runtime.
     pub fn microbatch(&self) -> usize {
         (self.batch / self.group_size()).max(1)
+    }
+
+    /// The per-group batch partition this config implies:
+    /// FLOPS-proportional over the cluster's device profiles when
+    /// `dynamic_batch` is set on a heterogeneous cluster, the equal
+    /// split otherwise (see [`crate::data::BatchPlan`]).
+    pub fn batch_plan(&self) -> crate::data::BatchPlan {
+        crate::data::BatchPlan::for_cluster(
+            &self.cluster,
+            self.groups(),
+            self.batch,
+            self.dynamic_batch,
+        )
     }
 }
 
@@ -272,6 +296,28 @@ mod tests {
         assert_eq!(c.fc_mapping, c2.fc_mapping);
         assert_eq!(c.hyper, c2.hyper);
         assert_eq!(c.cluster, c2.cluster);
+    }
+
+    #[test]
+    fn dynamic_batch_roundtrip_and_plan() {
+        let mut c = TrainConfig::default();
+        c.cluster = cluster::preset("hetero-s").unwrap();
+        c.strategy = Strategy::Groups(4);
+        c.dynamic_batch = true;
+        let j = c.to_json().dump();
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(c2.dynamic_batch);
+        let plan = c2.batch_plan();
+        assert!(plan.is_proportional());
+        assert_eq!(plan.shares().iter().sum::<usize>(), c2.batch);
+        assert!(plan.share(0) > plan.share(1), "gpu group gets the bigger share");
+        // Absent field (pre-existing config files) defaults off;
+        // homogeneous clusters stay on the equal split.
+        let old = r#"{"arch":"caffenet8","variant":"jnp","batch":32,
+                      "strategy":"sync","cluster":"cpu-s","steps":10}"#;
+        let c3 = TrainConfig::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert!(!c3.dynamic_batch);
+        assert!(!c3.batch_plan().is_proportional());
     }
 
     #[test]

@@ -53,6 +53,10 @@ pub struct ConvFwdState {
 pub struct ComputeGroup {
     pub id: usize,
     pub k: usize,
+    /// Batch-plan gradient weight `share * g / batch` for this group's
+    /// publishes (1.0 on the equal split): unequal shares then still sum
+    /// to an unbiased full-batch gradient per round (data::BatchPlan).
+    grad_weight: f32,
     conv_fwd_artifact: String,
     conv_bwd_artifact: String,
     conv_ps: Arc<ParamServer>,
@@ -65,16 +69,22 @@ impl ComputeGroup {
     pub fn new(
         id: usize,
         k: usize,
+        grad_weight: f32,
         conv_fwd_artifact: String,
         conv_bwd_artifact: String,
         conv_ps: Arc<ParamServer>,
         lit_cache: Arc<LiteralCache>,
     ) -> Self {
-        Self { id, k, conv_fwd_artifact, conv_bwd_artifact, conv_ps, lit_cache }
+        Self { id, k, grad_weight, conv_fwd_artifact, conv_bwd_artifact, conv_ps, lit_cache }
     }
 
     pub fn conv_ps(&self) -> &Arc<ParamServer> {
         &self.conv_ps
+    }
+
+    /// This group's batch-plan gradient weight.
+    pub fn grad_weight(&self) -> f32 {
+        self.grad_weight
     }
 
     /// Phase 1: read the conv model (and, if unmerged, the FC model) and
@@ -124,7 +134,7 @@ impl ComputeGroup {
         let outs = rt.execute_refs(&self.conv_bwd_artifact, &lits)?;
         let grads: Vec<HostTensor> =
             outs.iter().map(from_literal).collect::<Result<_>>()?;
-        self.conv_ps.publish(&grads, state.snapshot.version)
+        self.conv_ps.publish_scaled(&grads, state.snapshot.version, self.grad_weight)
     }
 
     /// Convenience: one whole iteration (read → conv fwd → FC step →
@@ -138,8 +148,13 @@ impl ComputeGroup {
         labels: &[i32],
     ) -> Result<StepOutput> {
         let state = self.conv_forward(rt, images, labels, fc)?;
-        let fc_out =
-            fc.step(rt, &state.activations, &state.labels, state.fc_snapshot.clone())?;
+        let fc_out = fc.step(
+            rt,
+            &state.activations,
+            &state.labels,
+            state.fc_snapshot.clone(),
+            self.grad_weight,
+        )?;
         let conv_staleness = self.conv_backward_publish(rt, &state, &fc_out.g_act)?;
         Ok(StepOutput {
             loss: fc_out.loss,

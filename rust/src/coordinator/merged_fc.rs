@@ -73,12 +73,17 @@ impl FcServer {
     /// staleness is structurally zero. In unmerged mode the caller passes
     /// a snapshot taken at the *start* of the group's iteration
     /// (`stale_read`), modeling FC compute on the group's machines.
+    ///
+    /// `grad_scale` is the calling group's batch-plan gradient weight
+    /// (`BatchPlan::grad_weight`; 1.0 on the equal split — bit-identical
+    /// to the historical unweighted publish).
     pub fn step(
         &self,
         rt: &Runtime,
         act: &HostTensor,
         labels: &[i32],
         stale_read: Option<super::param_server::ModelSnapshot>,
+        grad_scale: f32,
     ) -> Result<FcStepOutput> {
         let _serial = if self.merged { Some(self.serial.lock().unwrap()) } else { None };
         let snap = match (&self.merged, stale_read) {
@@ -99,7 +104,7 @@ impl FcServer {
         let g_act = from_literal(&outs[2])?;
         let grads: Vec<HostTensor> =
             outs[3..].iter().map(from_literal).collect::<Result<_>>()?;
-        let staleness = self.ps.publish(&grads, snap.version)?;
+        let staleness = self.ps.publish_scaled(&grads, snap.version, grad_scale)?;
         Ok(FcStepOutput { loss, acc, g_act, staleness })
     }
 

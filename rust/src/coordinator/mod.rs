@@ -50,6 +50,11 @@ pub struct Topology {
     pub microbatch: usize,
     /// Workers per group.
     pub k: usize,
+    /// Per-group batch shares (FLOPS-proportional under
+    /// `cfg.dynamic_batch` on heterogeneous clusters; the equal split
+    /// otherwise). Slices each group's nominal claim of the global
+    /// batch and sets the groups' gradient weights.
+    pub plan: crate::data::BatchPlan,
 }
 
 #[cfg(feature = "xla")]
@@ -86,11 +91,13 @@ impl Topology {
         let conv_lits = Arc::new(LiteralCache::new());
         let fwd = fwd_entry.name.clone();
         let bwd = bwd_entry.name.clone();
+        let plan = cfg.batch_plan();
         let groups = (0..g)
             .map(|id| {
                 ComputeGroup::new(
                     id,
                     k,
+                    plan.grad_weight(id),
                     fwd.clone(),
                     bwd.clone(),
                     conv_ps.clone(),
@@ -98,7 +105,7 @@ impl Topology {
                 )
             })
             .collect();
-        Ok(Self { groups, conv_ps, fc, conv_lits, microbatch: cfg.batch, k })
+        Ok(Self { groups, conv_ps, fc, conv_lits, microbatch: cfg.batch, k, plan })
     }
 
     /// Update hyperparameters on both servers (optimizer epoch boundary).

@@ -36,7 +36,7 @@ use std::sync::{Mutex, RwLock};
 use anyhow::{ensure, Result};
 
 use crate::config::Hyper;
-use crate::tensor::{axpy, momentum_sgd_step, HostTensor};
+use crate::tensor::{axpy, momentum_sgd_step_scaled, HostTensor};
 
 /// A publish fans out across scoped threads only when at least two
 /// shards carry this many scalars: spawning a thread (~10µs) must be
@@ -229,10 +229,25 @@ impl ParamServer {
     /// Publish a gradient computed against `read_version`. Applies paper
     /// eq. (4): `V <- mu V - eta (grad + lambda W)`, then eq. (3):
     /// `W <- W + V`. Returns the staleness of this publish.
+    pub fn publish(&self, grads: &[HostTensor], read_version: u64) -> Result<u64> {
+        self.publish_scaled(grads, read_version, 1.0)
+    }
+
+    /// [`Self::publish`] with the gradient scaled by `grad_scale` inside
+    /// the fused update — the batch plan's per-group weight
+    /// `share * g / batch`, so a round of g unequal-share publishes
+    /// still sums to an unbiased full-batch gradient (see
+    /// `data::BatchPlan`). `grad_scale = 1.0` is bit-identical to
+    /// [`Self::publish`].
     ///
     /// Holds the layout lock shared: publishes from different groups
     /// run concurrently, serializing only per shard.
-    pub fn publish(&self, grads: &[HostTensor], read_version: u64) -> Result<u64> {
+    pub fn publish_scaled(
+        &self,
+        grads: &[HostTensor],
+        read_version: u64,
+        grad_scale: f32,
+    ) -> Result<u64> {
         let layout = self.layout.read().unwrap();
         ensure!(
             grads.len() == layout.shapes.len(),
@@ -256,10 +271,11 @@ impl ParamServer {
             let mut data = shard.data.lock().unwrap();
             let ShardData { params, velocity } = &mut *data;
             for (slot, &ti) in shard.idx.iter().enumerate() {
-                momentum_sgd_step(
+                momentum_sgd_step_scaled(
                     params[slot].data_mut(),
                     velocity[slot].data_mut(),
                     grads[ti].data(),
+                    grad_scale,
                     mu,
                     eta,
                     lambda,
@@ -430,6 +446,27 @@ mod tests {
         assert_eq!(stats.publishes, 2);
         assert_eq!(stats.total_staleness, 1);
         assert_eq!(stats.histogram, vec![1, 1]);
+    }
+
+    #[test]
+    fn scaled_publish_weights_gradient_only() {
+        // Scale hits the gradient, not the weight-decay term:
+        // V = -eta (s*g + lambda*W).
+        let ps = tiny_ps(0.0, 0.1, 0.1);
+        let g = vec![HostTensor::new(vec![2], vec![1.0, -1.0]).unwrap()];
+        ps.publish_scaled(&g, 0, 0.5).unwrap();
+        // V = -0.1*(0.5*g + 0.1*W) = [-0.06, 0.03]; W = [0.94, 2.03]
+        let p = ps.read().params;
+        assert!((p[0].data()[0] - 0.94).abs() < 1e-6);
+        assert!((p[0].data()[1] - 2.03).abs() < 1e-6);
+        // Unit scale is bit-identical to the plain publish.
+        let a = tiny_ps(0.5, 0.1, 1e-3);
+        let b = tiny_ps(0.5, 0.1, 1e-3);
+        for _ in 0..4 {
+            a.publish(&g, a.version()).unwrap();
+            b.publish_scaled(&g, b.version(), 1.0).unwrap();
+        }
+        assert_eq!(a.read().params[0].data(), b.read().params[0].data());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! FLOPS-proportional batch partitioning across compute groups — the
+//! OmniLearn-style dynamic batching knob (see DESIGN.md §Heterogeneity).
+//!
+//! On a heterogeneous cluster every group claiming an equal-size batch
+//! makes the slow groups the cadence floor: a CPU group takes ~6.6x
+//! longer per conv phase than a GPU group on the same fabric, so the
+//! staleness distribution skews and (under any barrier) the fast groups
+//! idle. A [`BatchPlan`] instead assigns each group a share of the
+//! global batch proportional to its [`DeviceProfile`] conv speed
+//! (generalizing [`crate::baselines::flops_proportional_split`] from
+//! the baselines table to the training path), which equalizes per-group
+//! iteration time: share_i / speed_i is constant across groups.
+//!
+//! Two things must stay consistent with a plan in force:
+//!
+//! * **Timing** — group `i`'s conv phase costs `work_fraction(i)` of the
+//!   equal-split conv time before its profile speed divides it
+//!   ([`crate::sim::TimingModel`]).
+//! * **Statistics** — group `i`'s published gradient is scaled by
+//!   [`BatchPlan::grad_weight`] `w_i = share_i * g / batch`, so one
+//!   round of g publishes contributes `sum_i w_i * E[grad] = g * E[grad]`
+//!   — exactly what g equal-share publishes contribute. Unequal shares
+//!   therefore still sum to an unbiased full-batch gradient (the fused
+//!   eq. (3)-(4) update sees the same expected step per round).
+//!
+//! The AOT artifacts are compiled at fixed batch shapes, so the numeric
+//! phase still executes the full-batch artifact (the §Perf L3 collapse:
+//! by gradient linearity a full-batch call is the same expected — and
+//! lower-variance — estimator as a share-sized call); the share drives
+//! the timing model and the gradient weight.
+//!
+//! [`DeviceProfile`]: crate::config::DeviceProfile
+
+use crate::baselines::flops_proportional_split;
+use crate::config::ClusterSpec;
+
+/// Per-group batch shares for one run, summing to the global batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    batch: usize,
+    shares: Vec<usize>,
+    /// Whether shares were FLOPS-proportional (false = the equal split,
+    /// whose timing/weighting path is exactly the historical one).
+    proportional: bool,
+}
+
+impl BatchPlan {
+    /// The equal split: every group claims `batch / groups` images
+    /// (remainder spread over the leading groups). Work fractions and
+    /// gradient weights are exactly 1.0 — this plan is the identity.
+    pub fn equal(batch: usize, groups: usize) -> Self {
+        let g = groups.max(1);
+        let base = batch / g;
+        let shares = (0..g).map(|i| base + usize::from(i < batch % g)).collect();
+        Self { batch, shares, proportional: false }
+    }
+
+    /// Shares proportional to per-group speeds (conv-phase multipliers),
+    /// floored at one image per group: a zero share would give the group
+    /// work fraction 0 (free conv phases in the timing model) and
+    /// gradient weight 0 (all its compute discarded). Degenerate speed
+    /// vectors clamp like [`flops_proportional_split`]; an empty one is
+    /// the equal split of one group, and a batch smaller than the group
+    /// count (no way to give everyone an image) falls back to the equal
+    /// split.
+    pub fn proportional(batch: usize, speeds: &[f64]) -> Self {
+        if speeds.is_empty() {
+            return Self::equal(batch, 1);
+        }
+        let n = speeds.len();
+        if batch < n {
+            return Self::equal(batch, n);
+        }
+        let mut shares = flops_proportional_split(batch, speeds);
+        // Floor at 1: move images from the largest share (batch >= n
+        // guarantees some share exceeds 1 while any is 0).
+        while let Some(zi) = shares.iter().position(|&s| s == 0) {
+            let mi = (0..n).max_by_key(|&i| shares[i]).expect("n >= 1");
+            shares[mi] -= 1;
+            shares[zi] += 1;
+        }
+        Self { batch, shares, proportional: true }
+    }
+
+    /// The plan a config implies: FLOPS-proportional over the cluster's
+    /// per-group profiles when dynamic batching is on AND the cluster is
+    /// actually heterogeneous; the equal split otherwise.
+    pub fn for_cluster(cluster: &ClusterSpec, groups: usize, batch: usize, dynamic: bool) -> Self {
+        if dynamic && cluster.is_heterogeneous() {
+            let speeds: Vec<f64> =
+                (0..groups.max(1)).map(|i| cluster.profile_for(i).conv_speed).collect();
+            Self::proportional(batch, &speeds)
+        } else {
+            Self::equal(batch, groups)
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.shares.len()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Group `g`'s image share.
+    pub fn share(&self, g: usize) -> usize {
+        self.shares[g % self.shares.len()]
+    }
+
+    pub fn shares(&self) -> &[usize] {
+        &self.shares
+    }
+
+    pub fn is_proportional(&self) -> bool {
+        self.proportional
+    }
+
+    /// Group `g`'s conv work relative to the equal split:
+    /// `share * groups / batch` (1.0 for every group of an equal plan —
+    /// returned exactly, so the default path is bit-identical to the
+    /// pre-plan timing model).
+    pub fn work_fraction(&self, g: usize) -> f64 {
+        if !self.proportional || self.batch == 0 {
+            return 1.0;
+        }
+        self.share(g) as f64 * self.groups() as f64 / self.batch as f64
+    }
+
+    /// Work fractions for all groups (the timing model's input).
+    pub fn work_fractions(&self) -> Vec<f64> {
+        (0..self.groups()).map(|g| self.work_fraction(g)).collect()
+    }
+
+    /// Gradient weight for group `g`'s publishes (see module docs):
+    /// equal to the work fraction, so a round of g publishes sums to an
+    /// unbiased full-batch gradient. Exactly 1.0 on equal plans.
+    pub fn grad_weight(&self, g: usize) -> f32 {
+        self.work_fraction(g) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::preset;
+
+    #[test]
+    fn equal_plan_is_identity() {
+        let p = BatchPlan::equal(32, 4);
+        assert_eq!(p.shares(), &[8, 8, 8, 8]);
+        assert!(!p.is_proportional());
+        for g in 0..4 {
+            assert_eq!(p.work_fraction(g), 1.0);
+            assert_eq!(p.grad_weight(g), 1.0);
+        }
+        // Non-dividing group count: remainder on the leading groups,
+        // fractions still exactly 1.0 (the identity contract).
+        let p = BatchPlan::equal(32, 3);
+        assert_eq!(p.shares(), &[11, 11, 10]);
+        assert_eq!(p.work_fraction(2), 1.0);
+    }
+
+    #[test]
+    fn proportional_shares_sum_and_order() {
+        let p = BatchPlan::proportional(32, &[6.6, 1.0, 1.0, 1.0]);
+        assert_eq!(p.shares().iter().sum::<usize>(), 32);
+        assert!(p.is_proportional());
+        assert!(p.share(0) > p.share(1), "faster group gets more: {:?}", p.shares());
+        // Weights average 1 across the round: sum w_i == g.
+        let wsum: f64 = (0..4).map(|g| p.work_fraction(g)).sum();
+        assert!((wsum - 4.0).abs() < 1e-9, "sum of work fractions {wsum}");
+    }
+
+    #[test]
+    fn for_cluster_homogeneous_is_equal() {
+        let c = preset("cpu-s").unwrap();
+        let p = BatchPlan::for_cluster(&c, 4, 32, true);
+        assert!(!p.is_proportional());
+        assert_eq!(p.shares(), &[8, 8, 8, 8]);
+        // Dynamic off on a hetero cluster also stays equal.
+        let h = preset("hetero-s").unwrap();
+        assert!(!BatchPlan::for_cluster(&h, 4, 32, false).is_proportional());
+    }
+
+    #[test]
+    fn for_cluster_hetero_equalizes_cycle() {
+        let c = preset("hetero-s").unwrap();
+        let p = BatchPlan::for_cluster(&c, 4, 32, true);
+        assert!(p.is_proportional());
+        assert_eq!(p.shares().iter().sum::<usize>(), 32);
+        // share_i / speed_i approximately constant: the straggler knob.
+        let cyc: Vec<f64> =
+            (0..4).map(|g| p.work_fraction(g) / c.profile_for(g).conv_speed).collect();
+        let (lo, hi) = cyc.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &x| {
+            (lo.min(x), hi.max(x))
+        });
+        // Integer rounding of a 32-image batch keeps cycles within ~35%
+        // of each other vs the 6.6x spread of the equal split.
+        assert!(hi / lo < 1.4, "cycles {cyc:?}");
+    }
+
+    #[test]
+    fn proportional_floors_every_share_at_one() {
+        // batch 8 across speeds 6.6:1:1:1 would floor group 3 to zero
+        // images (work fraction 0, grad weight 0); the plan moves one
+        // over from the biggest share instead.
+        let p = BatchPlan::proportional(8, &[6.6, 1.0, 1.0, 1.0]);
+        assert_eq!(p.shares().iter().sum::<usize>(), 8);
+        assert!(p.shares().iter().all(|&s| s >= 1), "{:?}", p.shares());
+        for g in 0..4 {
+            assert!(p.work_fraction(g) > 0.0);
+            assert!(p.grad_weight(g) > 0.0);
+        }
+        // Extreme ratio: still one image each.
+        let p = BatchPlan::proportional(4, &[1000.0, 1.0, 1.0, 1.0]);
+        assert_eq!(p.shares(), &[1, 1, 1, 1]);
+        // batch < groups: nobody can be floored -> equal split rules.
+        let p = BatchPlan::proportional(2, &[6.6, 1.0, 1.0, 1.0]);
+        assert!(!p.is_proportional());
+        assert_eq!(p.work_fraction(3), 1.0);
+    }
+
+    #[test]
+    fn degenerate_inputs_clamped() {
+        let p = BatchPlan::proportional(16, &[]);
+        assert_eq!(p.shares(), &[16]);
+        let p = BatchPlan::proportional(16, &[0.0, -1.0]);
+        assert_eq!(p.shares().iter().sum::<usize>(), 16);
+        assert_eq!(p.groups(), 2);
+        let p = BatchPlan::equal(16, 0);
+        assert_eq!(p.shares(), &[16]);
+    }
+}

@@ -9,6 +9,10 @@
 //! statistical-efficiency effects under study (staleness, implicit
 //! momentum) depend on the update process, not on the image corpus.
 
+mod batch_plan;
+
+pub use batch_plan::BatchPlan;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::tensor::HostTensor;

@@ -58,6 +58,14 @@ impl Scheduler for AveragingRounds {
         "averaging-rounds"
     }
 
+    /// Model averaging replicates the full model and trains full local
+    /// batches — there are no per-group shares or weighted publishes to
+    /// execute, so the session falls back to the equal plan and the
+    /// report's `batch_share`/`predicted_iter_gap` describe that.
+    fn honors_batch_plan(&self) -> bool {
+        false
+    }
+
     fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet> {
         let cfg = session.config();
         let rt = session.rt();

@@ -31,9 +31,9 @@ use super::host_xent;
 use super::report::{sort_records, EvalRecord, IterRecord, TrainReport};
 use crate::config::TrainConfig;
 use crate::coordinator::{StalenessStats, Topology};
-use crate::data::{Batch, BatchSequence, SyntheticDataset};
+use crate::data::{Batch, BatchPlan, BatchSequence, SyntheticDataset};
 use crate::model::ParamSet;
-use crate::optimizer::he_model::HeParams;
+use crate::optimizer::he_model::{HeParams, ProfiledHe};
 use crate::runtime::{from_literal, to_literal, Runtime};
 use crate::sim::{ServiceDist, TimingModel};
 use crate::util::rng::Rng;
@@ -226,6 +226,12 @@ pub struct TrainSession<'a> {
     opts: EngineOptions,
     data: SyntheticDataset,
     batches: BatchSequence,
+    /// Per-group batch partition (FLOPS-proportional under
+    /// `cfg.dynamic_batch` on heterogeneous clusters): every claimed
+    /// batch index nominally carries each group's share of the global
+    /// batch; the plan also sets the timing model's work fractions and
+    /// the report's per-group shares.
+    plan: BatchPlan,
     claimed: AtomicU64,
     stopped: AtomicBool,
     state: Mutex<SessionState>,
@@ -239,6 +245,7 @@ impl<'a> TrainSession<'a> {
     pub fn new(rt: &'a Runtime, cfg: TrainConfig, opts: EngineOptions) -> Self {
         let data = SyntheticDataset::for_arch(&cfg.arch, cfg.seed);
         let batches = BatchSequence::for_seed(cfg.seed);
+        let plan = cfg.batch_plan();
         let mut state = SessionState::default();
         state.records.reserve(cfg.steps);
         Self {
@@ -247,6 +254,7 @@ impl<'a> TrainSession<'a> {
             opts,
             data,
             batches,
+            plan,
             claimed: AtomicU64::new(0),
             stopped: AtomicBool::new(false),
             state: Mutex::new(state),
@@ -265,6 +273,19 @@ impl<'a> TrainSession<'a> {
 
     pub fn options(&self) -> &EngineOptions {
         &self.opts
+    }
+
+    /// The per-group batch partition in force for this run.
+    pub fn plan(&self) -> &BatchPlan {
+        &self.plan
+    }
+
+    /// Replace the plan with the equal split — for schedulers that do
+    /// not execute per-group shares (see
+    /// [`Scheduler::honors_batch_plan`]). Pre-run only: the driver
+    /// calls this before handing the session to the scheduler.
+    pub fn reset_plan_equal(&mut self) {
+        self.plan = BatchPlan::equal(self.cfg.batch, self.cfg.groups());
     }
 
     /// HE/timing model for this run, with the cluster's per-group device
@@ -429,9 +450,25 @@ impl<'a> TrainSession<'a> {
             });
         }
         let g = self.cfg.groups();
+        let n = self.cfg.conv_machines();
         let devices: Vec<String> = (0..g)
             .map(|gi| self.cfg.cluster.profile_for(gi).kind.name().to_string())
             .collect();
+        // Profile-aware cadence predictions for the per-group report,
+        // computed against the SESSION's plan (which a scheduler that
+        // ignores batch plans has reset to the equal split), so the
+        // prediction always describes the run that actually happened.
+        // Best effort: the arch is in the manifest for any run that got
+        // this far, but a prediction failure must not sink the report.
+        let k = (n / g.max(1)).max(1);
+        let predicted: Vec<f64> = profiled_he(self.rt, &self.cfg, &self.opts)
+            .map(|phe| {
+                (0..g)
+                    .map(|gi| phe.group_cycle_planned(gi, k, self.plan.work_fraction(gi)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let shares: Vec<usize> = (0..g).map(|gi| self.plan.share(gi)).collect();
         let server = std::mem::take(&mut st.server);
         let mut report = TrainReport {
             records,
@@ -449,6 +486,7 @@ impl<'a> TrainSession<'a> {
             group_stats: vec![],
         };
         report.recompute_group_stats(&devices);
+        report.annotate_group_plan(&shares, &predicted);
         report
     }
 }
@@ -457,13 +495,36 @@ impl<'a> TrainSession<'a> {
 /// derived from the cluster + architecture. The cluster's declared
 /// per-group profile list is handed through verbatim — `TimingModel`
 /// cycles it exactly like [`crate::config::ClusterSpec::profile_for`],
-/// so the two lookups can never disagree.
+/// so the two lookups can never disagree — and the batch plan's work
+/// fractions scale each group's conv phases (all 1.0 on the default
+/// equal split: bit-identical to the pre-plan model).
 pub fn timing_model(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<TimingModel> {
     let arch = rt.manifest().arch(&cfg.arch)?;
     let he = opts
         .he_override
         .unwrap_or_else(|| HeParams::derive(&cfg.cluster, arch, cfg.batch, opts.utilization));
-    Ok(TimingModel::with_profiles(he, opts.dist, cfg.cluster.group_profiles.clone()))
+    Ok(TimingModel::with_plan(
+        he,
+        opts.dist,
+        cfg.cluster.group_profiles.clone(),
+        cfg.batch_plan().work_fractions(),
+    ))
+}
+
+/// The profile-aware HE model for a config — the same parameters the
+/// timing model samples from, wrapped with the cluster's profiles, the
+/// config's dynamic-batch setting, and its FC mapping, so
+/// `ProfiledHe::iteration_time` predicts exactly the cadence the
+/// `SimClock` scheduler measures.
+pub fn profiled_he(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<ProfiledHe> {
+    let arch = rt.manifest().arch(&cfg.arch)?;
+    let he = opts
+        .he_override
+        .unwrap_or_else(|| HeParams::derive(&cfg.cluster, arch, cfg.batch, opts.utilization));
+    Ok(he
+        .with_profiles(cfg.cluster.group_profiles.clone(), cfg.batch)
+        .with_dynamic_batch(cfg.dynamic_batch)
+        .with_profiled_fc(cfg.fc_mapping == crate::config::FcMapping::Unmerged))
 }
 
 fn project_conv(p: &ParamSet, dir: &[f32]) -> f64 {
@@ -490,6 +551,15 @@ pub trait Scheduler {
         RecordOrder::Completion
     }
 
+    /// Whether this scheduler executes the session's batch plan
+    /// (per-group shares, weighted publishes). Model averaging does not
+    /// — it replicates the full model and trains full local batches —
+    /// so the session falls back to the equal plan and the report never
+    /// claims shares that were not in force.
+    fn honors_batch_plan(&self) -> bool {
+        true
+    }
+
     fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet>;
 }
 
@@ -501,7 +571,10 @@ pub fn run_scheduler<S: Scheduler + ?Sized>(
     sched: &S,
     init: ParamSet,
 ) -> Result<(TrainReport, ParamSet)> {
-    let session = TrainSession::new(rt, cfg, opts);
+    let mut session = TrainSession::new(rt, cfg, opts);
+    if !sched.honors_batch_plan() {
+        session.reset_plan_equal();
+    }
     let params = sched.run(&session, init)?;
     Ok((session.finalize(sched.record_order()), params))
 }

@@ -37,8 +37,8 @@ mod threaded;
 pub use averaging::{AveragingEngine, AveragingRounds};
 #[cfg(feature = "xla")]
 pub use driver::{
-    run_scheduler, timing_model, Completion, EngineOptions, ParamSource, RecordOrder,
-    Scheduler, SchedulerKind, ServerStats, TrainSession,
+    profiled_he, run_scheduler, timing_model, Completion, EngineOptions, ParamSource,
+    RecordOrder, Scheduler, SchedulerKind, ServerStats, TrainSession,
 };
 pub use report::{sort_records, EvalRecord, GroupStats, IterRecord, TrainReport};
 #[cfg(feature = "xla")]

@@ -49,6 +49,13 @@ pub struct GroupStats {
     /// Mean gap between this group's successive completions (virtual
     /// seconds) — the group's effective iteration time.
     pub mean_iter_gap: f64,
+    /// This group's batch-plan share of the global batch (equal split
+    /// unless `dynamic_batch` partitioned FLOPS-proportionally).
+    pub batch_share: usize,
+    /// Profile-aware HE-model prediction of this group's queue-free
+    /// iteration cycle (`ProfiledHe::group_cycle`) — compare against the
+    /// measured `mean_iter_gap` cadence. 0 when no prediction applies.
+    pub predicted_iter_gap: f64,
 }
 
 /// Periodic held-out evaluation.
@@ -186,6 +193,20 @@ impl TrainReport {
         self.group_stats = stats;
     }
 
+    /// Attach batch-plan shares and profile-aware cadence predictions to
+    /// `group_stats` (call after [`Self::recompute_group_stats`], which
+    /// rebuilds the vector and would drop them).
+    pub fn annotate_group_plan(&mut self, shares: &[usize], predicted: &[f64]) {
+        for s in self.group_stats.iter_mut() {
+            if let Some(&b) = shares.get(s.group) {
+                s.batch_share = b;
+            }
+            if let Some(&p) = predicted.get(s.group) {
+                s.predicted_iter_gap = p;
+            }
+        }
+    }
+
     /// Mean virtual time per iteration — hardware efficiency.
     pub fn mean_iter_time(&self) -> f64 {
         if self.records.is_empty() {
@@ -306,6 +327,26 @@ mod tests {
         assert_eq!(key(&a[1]), (0, 0)); // ties: group asc, then local index
         assert_eq!(key(&a[2]), (0, 1));
         assert_eq!(key(&a[3]), (1, 0));
+    }
+
+    #[test]
+    fn annotate_group_plan_fills_shares_and_predictions() {
+        let mut r = TrainReport {
+            records: vec![grec(0, 0, 1.0), grec(1, 0, 2.0)],
+            groups: 2,
+            ..Default::default()
+        };
+        r.recompute_group_stats(&["gpu".into(), "cpu".into()]);
+        r.annotate_group_plan(&[24, 8], &[0.25, 0.75]);
+        assert_eq!(r.group_stats[0].batch_share, 24);
+        assert_eq!(r.group_stats[1].batch_share, 8);
+        assert!((r.group_stats[0].predicted_iter_gap - 0.25).abs() < 1e-12);
+        assert!((r.group_stats[1].predicted_iter_gap - 0.75).abs() < 1e-12);
+        // Short vectors leave the remaining groups at their defaults.
+        r.recompute_group_stats(&["gpu".into(), "cpu".into()]);
+        r.annotate_group_plan(&[16], &[]);
+        assert_eq!(r.group_stats[1].batch_share, 0);
+        assert_eq!(r.group_stats[1].predicted_iter_gap, 0.0);
     }
 
     #[test]

@@ -172,6 +172,7 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
                     &st.activations,
                     &st.labels,
                     st.fc_snapshot.clone(),
+                    topo.groups[gi].grad_weight(),
                 )?;
                 states[gi].fc_loss = out.loss;
                 states[gi].fc_acc = out.acc;

@@ -19,7 +19,7 @@ use omnivore::engine::{EngineOptions, SchedulerKind, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::bayesian::BayesianOptimizer;
-use omnivore::optimizer::{se_model, AutoOptimizer, EngineTrainer, HeParams};
+use omnivore::optimizer::{se_model, AutoOptimizer, EngineTrainer, HeParams, Trainer};
 use omnivore::runtime::Runtime;
 use omnivore::sim::{predicted_vs_measured, ServiceDist};
 use omnivore::util::cli::Args;
@@ -27,9 +27,9 @@ use omnivore::util::cli::Args;
 const USAGE: &str = "usage: omnivore [--artifacts DIR] <train|optimize|sweep|simulate|bayesian|info> [flags]
   train:    --arch A --variant V --cluster C --groups G(-1=async,0=sync) --lr F --momentum F
             --steps N --seed S [--scheduler sim|threads|averaging[:TAU]] [--unmerged-fc]
-            [--threaded] [--baseline NAME] [--csv PATH] [--config FILE]
+            [--dynamic-batch] [--threaded] [--baseline NAME] [--csv PATH] [--config FILE]
   optimize: --arch A --variant V --cluster C --epochs N --epoch-steps N --seed S
-            [--scheduler sim|threads|averaging[:TAU]]
+            [--scheduler sim|threads|averaging[:TAU]] [--dynamic-batch]
   sweep:    --arch A --variant V --cluster C --steps N --target-acc F --seed S
   simulate: --arch A --cluster C --iters N
   bayesian: --arch A --variant V --cluster C --configs N --seed S
@@ -100,6 +100,9 @@ fn train(rt: &Runtime, args: &Args) -> Result<()> {
         };
         cfg = system.config(&cfg);
     }
+    if args.switch("dynamic-batch") {
+        cfg.dynamic_batch = true; // FLOPS-proportional group batch shares
+    }
     // `--threaded` is the historical spelling of `--scheduler threads`
     // and wins when both are given.
     let scheduler_flag = args.str("scheduler", "sim");
@@ -129,13 +132,23 @@ fn train(rt: &Runtime, args: &Args) -> Result<()> {
         report.fc_staleness.mean(),
     );
     if cfg.cluster.is_heterogeneous() {
-        let mut t = Table::new(&["group", "device", "iters", "time/iter", "staleness"]);
+        let mut t = Table::new(&[
+            "group",
+            "device",
+            "share",
+            "iters",
+            "time/iter",
+            "pred/iter",
+            "staleness",
+        ]);
         for s in &report.group_stats {
             t.row(&[
                 s.group.to_string(),
                 s.device.clone(),
+                s.batch_share.to_string(),
                 s.iters.to_string(),
                 fmt_secs(s.mean_iter_gap),
+                fmt_secs(s.predicted_iter_gap),
                 format!("{:.2}", s.mean_conv_staleness),
             ]);
         }
@@ -162,6 +175,7 @@ fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
         variant: args.str("variant", "jnp"),
         cluster: cluster_arg(args, "cpu-l")?,
         seed: args.get("seed", 0u64)?,
+        dynamic_batch: args.switch("dynamic-batch"),
         ..TrainConfig::default()
     };
     let epochs = args.get("epochs", 2usize)?;
@@ -171,18 +185,21 @@ fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
 
     let arch_info = rt.manifest().arch(&arch)?;
     let he = HeParams::derive(&base.cluster, arch_info, base.batch, 0.5);
+    let init = ParamSet::init(arch_info, base.seed);
+    let mut trainer =
+        EngineTrainer::new(rt, base, EngineOptions::default()).with_scheduler(scheduler);
+    // Profile-aware short-circuit: on heterogeneous clusters (and under
+    // --dynamic-batch) the FC-saturation point moves with the profiles.
+    let phe = trainer.profiled_he()?;
     println!(
         "HE model: t_cc={} t_nc={} t_fc={} | FC saturates at g={}",
         fmt_secs(he.t_cc),
         fmt_secs(he.t_nc),
         fmt_secs(he.t_fc),
-        he.smallest_saturating_g(base.conv_machines())
+        phe.smallest_saturating_g(trainer.n_machines())
     );
-    let init = ParamSet::init(arch_info, base.seed);
-    let mut trainer =
-        EngineTrainer::new(rt, base, EngineOptions::default()).with_scheduler(scheduler);
     let opt = AutoOptimizer { epochs, epoch_steps, ..Default::default() };
-    let (trace, _params) = opt.run(&mut trainer, init, &he)?;
+    let (trace, _params) = opt.run_profiled(&mut trainer, init, &phe)?;
     if let Some(h) = trace.cold_start_hyper {
         println!("cold start: eta={} mu={}", h.lr, h.momentum);
     }

@@ -27,7 +27,7 @@ use anyhow::Result;
 
 use super::cold_start::cold_start;
 use super::grid_search::{grid_search, GridSpec};
-use super::he_model::HeParams;
+use super::he_model::{HeParams, ProfiledHe};
 use super::Trainer;
 use crate::config::Hyper;
 use crate::engine::TrainReport;
@@ -62,6 +62,8 @@ pub struct AutoOptimizer {
     pub epoch_steps: usize,
     /// Iterations per grid-search probe (stands in for 1 minute).
     pub probe_steps: usize,
+    /// Iterations per cold-start η-search probe.
+    pub cold_probe_steps: usize,
     /// Synchronous warm-up length (cold start).
     pub warmup_steps: usize,
     /// Number of epochs to run.
@@ -76,6 +78,7 @@ impl Default for AutoOptimizer {
         Self {
             epoch_steps: 256,
             probe_steps: 48,
+            cold_probe_steps: 32,
             warmup_steps: 64,
             epochs: 2,
             lambda: 5e-4,
@@ -85,22 +88,45 @@ impl Default for AutoOptimizer {
 }
 
 impl AutoOptimizer {
-    /// Run Algorithm 1. `he` supplies the FC-saturation short-circuit.
+    /// Run Algorithm 1. `he` supplies the FC-saturation short-circuit
+    /// (homogeneous model; use [`Self::run_profiled`] on heterogeneous
+    /// clusters so the short-circuit sees the device profiles).
     pub fn run<T: Trainer>(
         &self,
         trainer: &mut T,
         init: ParamSet,
         he: &HeParams,
     ) -> Result<(OptimizerTrace, ParamSet)> {
+        self.run_profiled(trainer, init, &ProfiledHe::homogeneous(*he))
+    }
+
+    /// Run Algorithm 1 with the profile-aware HE model: the smallest
+    /// FC-saturating g is computed from per-group cycle times, so a
+    /// mixed CPU+GPU fleet or a straggler group moves the starting
+    /// point exactly as it moves the simulator's cadence.
+    pub fn run_profiled<T: Trainer>(
+        &self,
+        trainer: &mut T,
+        init: ParamSet,
+        he: &ProfiledHe,
+    ) -> Result<(OptimizerTrace, ParamSet)> {
         let n = trainer.n_machines();
         let mut trace = OptimizerTrace::default();
 
-        // Cold start: sync η search + warm-up (paper §IV-C).
+        // Cold start: sync η search + warm-up (paper §IV-C). Probe
+        // overhead counts the steps the probes actually trained —
+        // `ColdStart::probe_steps`, not a hardcoded constant.
         let (mut params, mut hyper) = if self.skip_cold_start {
             (init, Hyper { lr: 0.01, momentum: 0.9, lambda: self.lambda })
         } else {
-            let (p, h, cs) = cold_start(trainer, init, self.warmup_steps, self.lambda)?;
-            trace.probe_overhead_iters += cs.probes.len() * 32;
+            let (p, h, cs) = cold_start(
+                trainer,
+                init,
+                self.warmup_steps,
+                self.cold_probe_steps,
+                self.lambda,
+            )?;
+            trace.probe_overhead_iters += cs.probes.len() * cs.probe_steps;
             trace.cold_start_hyper = Some(h);
             (p, h)
         };
@@ -244,5 +270,85 @@ mod tests {
         let (trace, _) = opt.run(&mut t, init, &he).unwrap();
         assert!(trace.probe_overhead_iters > 0);
         assert_eq!(trace.epochs.len(), 2);
+    }
+
+    /// Wraps a trainer and tallies the steps of every train() call, so
+    /// the optimizer's accounting can be checked against ground truth.
+    struct SteppedTrainer<T: Trainer> {
+        inner: T,
+        step_log: Vec<usize>,
+    }
+
+    impl<T: Trainer> Trainer for SteppedTrainer<T> {
+        fn train(
+            &mut self,
+            g: usize,
+            hyper: Hyper,
+            steps: usize,
+            from: &ParamSet,
+        ) -> Result<(TrainReport, ParamSet)> {
+            self.step_log.push(steps);
+            self.inner.train(g, hyper, steps, from)
+        }
+
+        fn n_machines(&self) -> usize {
+            self.inner.n_machines()
+        }
+    }
+
+    #[test]
+    fn probe_overhead_matches_actual_probe_steps_exactly() {
+        // Non-default cold probe length: the historical hardcoded `* 32`
+        // would over-count by (32 - 7) per cold-start probe.
+        let opt = AutoOptimizer {
+            epochs: 1,
+            epoch_steps: 100,
+            probe_steps: 13,
+            cold_probe_steps: 7,
+            warmup_steps: 9,
+            skip_cold_start: false,
+            ..Default::default()
+        };
+        let mut t = SteppedTrainer {
+            inner: PaperLikeTrainer { n: 32, train_calls: 0 },
+            step_log: vec![],
+        };
+        let he = HeParams::measured(1.0, 0.0, 0.0322);
+        let init = ParamSet::from_tensors(vec![], 0).unwrap();
+        let (trace, _) = opt.run(&mut t, init, &he).unwrap();
+        // Ground truth: every train() call is a probe except the one
+        // warm-up and the committed epochs.
+        let total: usize = t.step_log.iter().sum();
+        let expected = total - opt.warmup_steps - opt.epochs * opt.epoch_steps;
+        assert_eq!(
+            trace.probe_overhead_iters, expected,
+            "accounted {} vs actually trained {} probe iterations (calls: {:?})",
+            trace.probe_overhead_iters, expected, t.step_log
+        );
+        // And the cold-start slice of it uses the real probe length
+        // (the η line search early-stops after 3 probes on this
+        // landscape: 0.1 worse, 0.01 best, 0.001 worse again).
+        assert_eq!(t.step_log.iter().filter(|&&s| s == 7).count(), 3, "3 cold probes at 7 steps");
+    }
+
+    #[test]
+    fn profiled_short_circuit_sees_the_straggler() {
+        use crate::config::{DeviceKind, DeviceProfile};
+        // Homogeneous: g=2 (k=4) saturates (1/4 + 0.14 < 0.28 is false;
+        // pick t_fc where it's true): t_fc = 0.3 -> g=2: 0.25+0.3=0.55 <
+        // 0.6 saturated. A 4x straggler group stretches group 0's cycle,
+        // dropping aggregate FC demand below saturation at g=2.
+        let he = HeParams::measured(1.0, 0.0, 0.3);
+        assert_eq!(he.smallest_saturating_g(8), 2);
+        let phe = he.with_profiles(
+            vec![
+                DeviceProfile::straggler(DeviceKind::Cpu, 4.0),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+            ],
+            32,
+        );
+        let g = phe.smallest_saturating_g(8);
+        assert!(g > 2, "straggler must push the short-circuit up, got {g}");
+        assert!(phe.fc_saturated(g, 8));
     }
 }

@@ -17,6 +17,10 @@ use crate::model::ParamSet;
 pub struct ColdStart {
     pub hyper: Hyper,
     pub probes: Vec<(f32, f32)>, // (eta, loss)
+    /// Iterations each probe actually trained — the caller's
+    /// probe-overhead accounting multiplies by THIS, not a guess
+    /// (the paper's "<10% overhead" claim is about real iterations).
+    pub probe_steps: usize,
 }
 
 /// η line search (highest to lowest, early-stop when loss worsens —
@@ -47,19 +51,21 @@ pub fn eta_line_search<T: Trainer>(
         }
         prev_loss = loss;
     }
-    Ok(ColdStart { hyper: Hyper { lr: best.0, momentum: 0.9, lambda }, probes })
+    Ok(ColdStart { hyper: Hyper { lr: best.0, momentum: 0.9, lambda }, probes, probe_steps })
 }
 
-/// Full cold start: η search + synchronous warm-up for `warmup_steps`.
-/// Returns the warmed parameters and the sync hyperparameters found.
+/// Full cold start: η line search at `probe_steps` iterations per probe
+/// + synchronous warm-up for `warmup_steps`. Returns the warmed
+/// parameters and the sync hyperparameters found.
 pub fn cold_start<T: Trainer>(
     trainer: &mut T,
     init: ParamSet,
     warmup_steps: usize,
+    probe_steps: usize,
     lambda: f32,
 ) -> Result<(ParamSet, Hyper, ColdStart)> {
     let etas = [0.1f32, 0.01, 0.001, 0.0001, 0.00001];
-    let cs = eta_line_search(trainer, &init, &etas, 32, lambda)?;
+    let cs = eta_line_search(trainer, &init, &etas, probe_steps, lambda)?;
     let (_, warmed) = trainer.train(1, cs.hyper, warmup_steps, &init)?;
     Ok((warmed, cs.hyper, cs))
 }
@@ -114,18 +120,27 @@ mod tests {
     fn finds_best_eta_with_early_stop() {
         let mut t = FakeTrainer { eta_star: 0.01, calls: vec![] };
         let init = ParamSet::from_tensors(vec![], 0).unwrap();
-        let (_, hyper, cs) = cold_start(&mut t, init, 4, 0.0).unwrap();
+        let (_, hyper, cs) = cold_start(&mut t, init, 4, 32, 0.0).unwrap();
         assert_eq!(hyper.lr, 0.01);
         assert_eq!(hyper.momentum, 0.9);
         // 0.1 diverges, 0.01 best, 0.001 worse -> stop (3 probes + warmup)
         assert_eq!(cs.probes.len(), 3);
+        assert_eq!(cs.probe_steps, 32);
     }
 
     #[test]
     fn survives_all_diverging_head() {
         let mut t = FakeTrainer { eta_star: 0.00001, calls: vec![] };
         let init = ParamSet::from_tensors(vec![], 0).unwrap();
-        let (_, hyper, _) = cold_start(&mut t, init, 2, 0.0).unwrap();
+        let (_, hyper, _) = cold_start(&mut t, init, 2, 32, 0.0).unwrap();
         assert_eq!(hyper.lr, 0.00001);
+    }
+
+    #[test]
+    fn probe_steps_threaded_through() {
+        let mut t = FakeTrainer { eta_star: 0.01, calls: vec![] };
+        let init = ParamSet::from_tensors(vec![], 0).unwrap();
+        let (_, _, cs) = cold_start(&mut t, init, 4, 7, 0.0).unwrap();
+        assert_eq!(cs.probe_steps, 7, "ColdStart must report the steps it used");
     }
 }

@@ -12,7 +12,8 @@
 //! from FLOP counts at an assumed device utilization (or measured once,
 //! k = 1), T_nc from the conv-model bytes over the link speed.
 
-use crate::config::ClusterSpec;
+use crate::config::{ClusterSpec, DeviceProfile};
+use crate::data::BatchPlan;
 use crate::runtime::ArchInfo;
 
 /// Measured-or-derived primitive times (seconds).
@@ -122,21 +123,228 @@ impl HeParams {
         self.t_conv(k) + self.t_fc < g as f64 * self.t_fc
     }
 
-    /// Smallest power-of-two group count that saturates the FC server —
-    /// Algorithm 1's short-circuit starting point (Appendix E-C1). Falls
-    /// back to n (fully async) when FC never saturates.
+    /// Smallest group count that saturates the FC server — Algorithm 1's
+    /// short-circuit starting point (Appendix E-C1). Candidates are
+    /// divisor-aligned (g groups of exactly k = n/g machines): the
+    /// power-of-two ladder for power-of-two n (the paper's clusters, the
+    /// historical fast path) and every divisor of n otherwise — the old
+    /// ladder skipped valid divisors on non-power-of-two clusters (n=12
+    /// never tried g=3 or 6) and could return a non-divisor. Falls back
+    /// to n (fully async) when FC never saturates.
     pub fn smallest_saturating_g(&self, n: usize) -> usize {
-        let mut g = 1;
-        while g <= n {
-            if self.fc_saturated(g, n) {
-                return g;
-            }
-            g *= 2;
-        }
-        n
+        smallest_saturating(n, |g| self.fc_saturated(g, n))
     }
 
     /// HE penalty P_HE(S) = HE(S)/HE(0), the paper's Fig 20 quantity.
+    pub fn penalty(&self, g: usize, n: usize) -> f64 {
+        self.iteration_time(g, n) / self.iteration_time(1, n)
+    }
+
+    /// Attach per-group device profiles (and optionally a dynamic batch
+    /// plan) to get the heterogeneity-aware predictions.
+    pub fn with_profiles(self, profiles: Vec<DeviceProfile>, batch: usize) -> ProfiledHe {
+        ProfiledHe { he: self, profiles, batch, dynamic_batch: false, fc_profiled: false }
+    }
+}
+
+/// Group counts `smallest_saturating_g` tests, ascending: powers of two
+/// for power-of-two n (fast path), all divisors otherwise.
+fn saturating_g_candidates(n: usize) -> Vec<usize> {
+    if n == 0 {
+        return vec![1];
+    }
+    if n.is_power_of_two() {
+        let mut g = 1;
+        let mut out = vec![];
+        while g <= n {
+            out.push(g);
+            g *= 2;
+        }
+        out
+    } else {
+        (1..=n).filter(|g| n % g == 0).collect()
+    }
+}
+
+/// The shared candidate scan behind both models' `smallest_saturating_g`
+/// (one fallback/candidate policy, two saturation predicates).
+fn smallest_saturating(n: usize, saturated: impl Fn(usize) -> bool) -> usize {
+    for g in saturating_g_candidates(n) {
+        if saturated(g) {
+            return g;
+        }
+    }
+    n.max(1)
+}
+
+/// The profile-aware HE model: [`HeParams`] plus the cluster's per-group
+/// [`DeviceProfile`]s and (optionally) FLOPS-proportional batch shares.
+///
+/// Group `i` in a g-group run cycles conv + FC in
+///
+/// ```text
+/// c_i = t_conv(k) * w_i / s_i + t_fc
+/// ```
+///
+/// where `s_i` is its conv speed multiplier and `w_i` its batch-plan
+/// work fraction (1 on the equal split). The groups progress
+/// independently until the merged FC server saturates, so the predicted
+/// system iteration time is the throughput sum
+///
+/// ```text
+/// HE(g) = max(t_fc, 1 / sum_i 1/c_i)
+/// ```
+///
+/// which reduces *exactly* to [`HeParams::iteration_time`]'s
+/// `max(t_fc, (t_conv + t_fc)/g)` when every profile is the baseline —
+/// and, unlike it, predicts the straggler-bound cadence the simulator
+/// actually measures on `hetero-s`/`straggler-s` (pinned within 5% by
+/// `it_props::profiled_he_matches_cluster_sim_on_hetero_presets`).
+#[derive(Clone, Debug)]
+pub struct ProfiledHe {
+    pub he: HeParams,
+    profiles: Vec<DeviceProfile>,
+    /// Global batch size, for integer-exact dynamic shares (0 =
+    /// continuous fractions).
+    batch: usize,
+    dynamic_batch: bool,
+    /// Unmerged FC mapping: the FC phase runs on the group's own
+    /// machines (scaled by its `fc_speed`, no shared-server floor)
+    /// instead of the merged one-machine FIFO server.
+    fc_profiled: bool,
+}
+
+impl ProfiledHe {
+    /// A homogeneous model: identical to bare [`HeParams`] predictions.
+    pub fn homogeneous(he: HeParams) -> Self {
+        he.with_profiles(vec![], 0)
+    }
+
+    /// Derive from a cluster spec + architecture, profiles attached
+    /// (the profile-aware analogue of [`HeParams::derive`]).
+    pub fn for_cluster(
+        cluster: &ClusterSpec,
+        arch: &ArchInfo,
+        batch: usize,
+        utilization: f64,
+    ) -> Self {
+        HeParams::derive(cluster, arch, batch, utilization)
+            .with_profiles(cluster.group_profiles.clone(), batch)
+    }
+
+    /// Predict under FLOPS-proportional batch shares (the
+    /// `--dynamic-batch` run mode) instead of the equal split.
+    pub fn with_dynamic_batch(mut self, on: bool) -> Self {
+        self.dynamic_batch = on;
+        self
+    }
+
+    /// Predict for the unmerged FC mapping (Fig 16a): each group's FC
+    /// phase runs on its own machines at its `fc_speed`, and there is
+    /// no shared FC server to saturate.
+    pub fn with_profiled_fc(mut self, on: bool) -> Self {
+        self.fc_profiled = on;
+        self
+    }
+
+    /// Profile of group `i` (baseline speeds when none are declared;
+    /// cycles like [`ClusterSpec::profile_for`]).
+    fn conv_speed(&self, i: usize) -> f64 {
+        if self.profiles.is_empty() {
+            1.0
+        } else {
+            self.profiles[i % self.profiles.len()].conv_speed
+        }
+    }
+
+    /// Group `i`'s FC service time under the configured mapping: the
+    /// shared merged server's `t_fc` (profile-independent, it is one
+    /// fixed machine), or `t_fc / fc_speed` when the group computes the
+    /// FC phase itself — mirroring `TimingModel::sample_fc[_of]`.
+    fn fc_service(&self, i: usize) -> f64 {
+        if self.fc_profiled && !self.profiles.is_empty() {
+            self.he.t_fc / self.profiles[i % self.profiles.len()].fc_speed
+        } else {
+            self.he.t_fc
+        }
+    }
+
+    fn is_heterogeneous(&self) -> bool {
+        self.profiles.iter().any(|p| p.conv_speed != 1.0 || p.fc_speed != 1.0)
+    }
+
+    /// Per-group conv work fractions at g groups — exactly the fractions
+    /// the engine's [`BatchPlan`] produces for this configuration (same
+    /// integer rounding), so prediction and simulation can never
+    /// disagree about the plan.
+    pub fn work_fractions(&self, g: usize) -> Vec<f64> {
+        let g = g.max(1);
+        if !self.dynamic_batch || !self.is_heterogeneous() {
+            return vec![1.0; g];
+        }
+        let speeds: Vec<f64> = (0..g).map(|i| self.conv_speed(i)).collect();
+        if self.batch == 0 {
+            // No batch size known: continuous shares.
+            let total: f64 = speeds.iter().sum();
+            return speeds.iter().map(|s| s * g as f64 / total).collect();
+        }
+        BatchPlan::proportional(self.batch, &speeds).work_fractions()
+    }
+
+    /// Group `i`'s queue-free iteration cycle with an explicit conv
+    /// work fraction: conv barrier (profile- and plan-scaled) + FC
+    /// service. The driver uses this with the *session's* plan, so the
+    /// reported prediction always matches the plan actually in force
+    /// (e.g. the averaging scheduler runs the equal split regardless of
+    /// `--dynamic-batch`).
+    pub fn group_cycle_planned(&self, i: usize, k: usize, work: f64) -> f64 {
+        self.he.t_conv(k.max(1)) * work / self.conv_speed(i) + self.fc_service(i)
+    }
+
+    /// Group `i`'s queue-free iteration cycle at g groups over n conv
+    /// machines, under this model's own batch plan.
+    pub fn group_cycle(&self, i: usize, g: usize, n: usize) -> f64 {
+        let g = g.clamp(1, n.max(1));
+        let k = (n / g).max(1);
+        let w = self.work_fractions(g);
+        self.group_cycle_planned(i, k, w[i % w.len()])
+    }
+
+    /// Predicted system time per iteration: group throughputs sum; in
+    /// the merged mapping the shared FC server's service rate floors
+    /// the cadence at `t_fc` (the unmerged mapping has no shared server
+    /// and therefore no floor).
+    pub fn iteration_time(&self, g: usize, n: usize) -> f64 {
+        let g = g.clamp(1, n.max(1));
+        let rate: f64 = (0..g).map(|i| 1.0 / self.group_cycle(i, g, n)).sum();
+        if self.fc_profiled {
+            1.0 / rate
+        } else {
+            self.he.t_fc.max(1.0 / rate)
+        }
+    }
+
+    /// Is the FC server saturated at g groups? The groups' aggregate
+    /// demand exceeds the shared server's service rate 1/t_fc. Reduces
+    /// to [`HeParams::fc_saturated`]'s `t_conv(k) + t_fc < g * t_fc` on
+    /// homogeneous clusters; always false in the unmerged mapping
+    /// (nothing shared to saturate).
+    pub fn fc_saturated(&self, g: usize, n: usize) -> bool {
+        if self.fc_profiled {
+            return false;
+        }
+        let g = g.clamp(1, n.max(1));
+        let rate: f64 = (0..g).map(|i| 1.0 / self.group_cycle(i, g, n)).sum();
+        rate * self.he.t_fc > 1.0
+    }
+
+    /// Smallest divisor-aligned FC-saturating group count (Algorithm 1's
+    /// short-circuit), under this cluster's profiles and batch plan.
+    pub fn smallest_saturating_g(&self, n: usize) -> usize {
+        smallest_saturating(n, |g| self.fc_saturated(g, n))
+    }
+
+    /// HE penalty P_HE(S) = HE(S)/HE(0) under profiles + plan.
     pub fn penalty(&self, g: usize, n: usize) -> f64 {
         self.iteration_time(g, n) / self.iteration_time(1, n)
     }
@@ -214,6 +422,132 @@ mod tests {
     fn never_saturates_falls_back_to_n() {
         let he = HeParams::measured(1.0, 0.0, 0.0);
         assert_eq!(he.smallest_saturating_g(8), 8);
+    }
+
+    #[test]
+    fn saturating_g_tries_non_power_of_two_divisors() {
+        // n = 12, t_fc = 0.14: g=2 (k=6) gives 1/6 + 0.14 = 0.307 >=
+        // 0.28, not saturated; g=3 (k=4) gives 1/4 + 0.14 = 0.39 < 0.42,
+        // saturated. The old power-of-two ladder skipped 3 (and 6) and
+        // returned the non-divisor 4.
+        let he = HeParams::measured(1.0, 0.0, 0.14);
+        assert!(!he.fc_saturated(2, 12));
+        assert!(he.fc_saturated(3, 12));
+        let g = he.smallest_saturating_g(12);
+        assert_eq!(g, 3);
+        assert_eq!(12 % g, 0, "must be divisor-aligned");
+        // Power-of-two n keeps the historical ladder behavior.
+        let he2 = HeParams::measured(1.0, 0.0, 0.1);
+        let g2 = he2.smallest_saturating_g(32);
+        assert!(g2.is_power_of_two());
+        assert!(he2.fc_saturated(g2, 32) && !he2.fc_saturated(g2 / 2, 32));
+    }
+
+    #[test]
+    fn saturating_g_candidate_lists() {
+        assert_eq!(saturating_g_candidates(8), vec![1, 2, 4, 8]);
+        assert_eq!(saturating_g_candidates(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(saturating_g_candidates(1), vec![1]);
+        assert_eq!(saturating_g_candidates(0), vec![1]);
+    }
+
+    #[test]
+    fn profiled_homogeneous_reduces_to_he_params() {
+        let he = HeParams::measured(1.0, 0.002, 0.05);
+        let phe = ProfiledHe::homogeneous(he);
+        let n = 32;
+        let mut g = 1;
+        while g <= n {
+            let a = he.iteration_time(g, n);
+            let b = phe.iteration_time(g, n);
+            assert!((a - b).abs() / a < 1e-12, "g={g}: {a} vs {b}");
+            assert_eq!(he.fc_saturated(g, n), phe.fc_saturated(g, n), "g={g}");
+            g *= 2;
+        }
+        assert_eq!(he.smallest_saturating_g(n), phe.smallest_saturating_g(n));
+        // Baseline (speed 1.0) profiles also reduce to the bare model.
+        let base = he.with_profiles(
+            vec![DeviceProfile::baseline(crate::config::DeviceKind::Cpu)],
+            32,
+        );
+        assert!((base.iteration_time(4, n) - he.iteration_time(4, n)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profiled_straggler_slows_prediction() {
+        use crate::config::DeviceKind;
+        let he = HeParams::measured(1.0, 0.0, 0.01);
+        let hom = ProfiledHe::homogeneous(he);
+        let slow = he.with_profiles(
+            vec![
+                DeviceProfile::straggler(DeviceKind::Cpu, 2.0),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+            ],
+            32,
+        );
+        // g=1: the straggler IS the cluster -> ~2x the homogeneous time.
+        let a = hom.iteration_time(1, 8);
+        let b = slow.iteration_time(1, 8);
+        assert!((b / a - (2.0 * (1.0 / 8.0) + 0.01) / (1.0 / 8.0 + 0.01)).abs() < 1e-9);
+        // g=2 (unsaturated): throughput-sum, strictly between the
+        // all-slow and all-fast predictions.
+        let two = slow.iteration_time(2, 8);
+        assert!(two > hom.iteration_time(2, 8));
+        assert!(two < hom.iteration_time(2, 8) * 2.0);
+    }
+
+    #[test]
+    fn unmerged_fc_scales_service_and_never_saturates() {
+        use crate::config::DeviceKind;
+        let he = HeParams::measured(1.0, 0.0, 0.4);
+        let profiles = vec![
+            DeviceProfile::from_kind(DeviceKind::Gpu), // fc_speed 4.0
+            DeviceProfile::from_kind(DeviceKind::Cpu),
+        ];
+        let merged = he.with_profiles(profiles.clone(), 32);
+        let unmerged = he.with_profiles(profiles, 32).with_profiled_fc(true);
+        // Merged: the shared server costs the GPU group full t_fc;
+        // unmerged: its own machines serve 4x faster.
+        let (g, n, k) = (2, 8, 4);
+        let conv_gpu = he.t_conv(k) / 6.6;
+        assert!((merged.group_cycle(0, g, n) - (conv_gpu + 0.4)).abs() < 1e-12);
+        assert!((unmerged.group_cycle(0, g, n) - (conv_gpu + 0.1)).abs() < 1e-12);
+        // CPU group (fc_speed 1.0): identical under both mappings.
+        assert!((merged.group_cycle(1, g, n) - unmerged.group_cycle(1, g, n)).abs() < 1e-12);
+        // No shared server -> no saturation, no t_fc floor.
+        assert!(merged.fc_saturated(8, n));
+        assert!(!unmerged.fc_saturated(8, n));
+        assert!(unmerged.iteration_time(8, n) < merged.iteration_time(8, n));
+    }
+
+    #[test]
+    fn dynamic_batch_equalizes_group_cycles() {
+        use crate::config::DeviceKind;
+        let he = HeParams::measured(1.0, 0.0, 0.01);
+        let profiles = vec![
+            DeviceProfile::from_kind(DeviceKind::Gpu),
+            DeviceProfile::from_kind(DeviceKind::Cpu),
+            DeviceProfile::from_kind(DeviceKind::Cpu),
+            DeviceProfile::from_kind(DeviceKind::Cpu),
+        ];
+        let eq = he.with_profiles(profiles.clone(), 32);
+        let dyn_ = he.with_profiles(profiles, 32).with_dynamic_batch(true);
+        let (g, n) = (4, 8);
+        let spread = |p: &ProfiledHe| {
+            let c: Vec<f64> = (0..g).map(|i| p.group_cycle(i, g, n)).collect();
+            c.iter().cloned().fold(0.0f64, f64::max)
+                - c.iter().cloned().fold(f64::INFINITY, f64::min)
+        };
+        assert!(
+            spread(&dyn_) < spread(&eq) * 0.4,
+            "dynamic {} vs equal {}",
+            spread(&dyn_),
+            spread(&eq)
+        );
+        // Work fractions mirror the BatchPlan exactly.
+        let w = dyn_.work_fractions(g);
+        let plan = BatchPlan::proportional(32, &[6.6, 1.0, 1.0, 1.0]);
+        assert_eq!(w, plan.work_fractions());
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod se_model;
 
 pub use algorithm1::{AutoOptimizer, EpochLog, OptimizerTrace};
 pub use grid_search::{grid_search, GridOutcome, GridSpec};
-pub use he_model::HeParams;
+pub use he_model::{HeParams, ProfiledHe};
 
 use anyhow::Result;
 
@@ -69,6 +69,20 @@ impl<'a> EngineTrainer<'a> {
     pub fn with_scheduler(mut self, scheduler: crate::engine::SchedulerKind) -> Self {
         self.scheduler = scheduler;
         self
+    }
+
+    /// FLOPS-proportional batch partitioning across unequal groups on
+    /// every probe and committed epoch (`TrainConfig::dynamic_batch`).
+    pub fn with_dynamic_batch(mut self, on: bool) -> Self {
+        self.base.dynamic_batch = on;
+        self
+    }
+
+    /// The profile-aware HE model for this trainer's cluster — what
+    /// Algorithm 1's FC-saturation short-circuit should consult on
+    /// heterogeneous clusters ([`AutoOptimizer::run_profiled`]).
+    pub fn profiled_he(&self) -> anyhow::Result<crate::optimizer::ProfiledHe> {
+        crate::engine::profiled_he(self.rt, &self.base, &self.opts)
     }
 }
 

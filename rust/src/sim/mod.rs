@@ -16,7 +16,7 @@ mod timing;
 
 pub use timing::{ServiceDist, TimingModel};
 
-use crate::optimizer::he_model::HeParams;
+use crate::optimizer::he_model::{HeParams, ProfiledHe};
 use crate::util::rng::Rng;
 
 /// Result of a timing-only simulation at one strategy point.
@@ -31,6 +31,37 @@ pub struct SimResult {
     pub iter_time_std: f64,
     /// Fraction of time the FC server was busy.
     pub fc_utilization: f64,
+    /// Iterations each group completed (unequal on hetero clusters).
+    pub group_iters: Vec<u64>,
+    /// Mean queue-free cycle per group (conv fwd + FC service + conv
+    /// bwd, excluding FC-queue wait) — the per-group compute cadence.
+    pub group_cycle: Vec<f64>,
+    /// Mean FC-queue wait per iteration (idle time at the shared
+    /// server).
+    pub fc_wait_mean: f64,
+}
+
+impl SimResult {
+    /// Straggler stall: the extra queue-free cycle time of the slowest
+    /// group over the fastest — per iteration, this is the idle a
+    /// synchronous barrier would pay and the cadence imbalance that
+    /// skews staleness in async runs. Zero on homogeneous clusters;
+    /// FLOPS-proportional batch shares drive it toward zero on
+    /// heterogeneous ones (the OmniLearn effect, fig20 hetero rows).
+    pub fn straggler_stall(&self) -> f64 {
+        let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+        for (&c, &n) in self.group_cycle.iter().zip(&self.group_iters) {
+            if n > 0 {
+                lo = lo.min(c);
+                hi = hi.max(c);
+            }
+        }
+        if lo.is_finite() {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Pure-timing cluster simulator: g groups of k machines sharing one
@@ -56,6 +87,9 @@ impl ClusterSim {
         let mut ready: Vec<f64> = vec![0.0; g];
         let mut fc_free = 0.0f64;
         let mut fc_busy = 0.0f64;
+        let mut fc_wait = 0.0f64;
+        let mut group_iters = vec![0u64; g];
+        let mut cycle_sum = vec![0.0f64; g];
         let mut completions: Vec<f64> = Vec::with_capacity(iters as usize);
         for _ in 0..iters {
             // Next group to start its conv fwd is the earliest-ready one.
@@ -67,16 +101,20 @@ impl ClusterSim {
             let t0 = ready[gi];
             // Intra-group barrier: k machines each sample a fwd time;
             // the group advances at the slowest (paper Observation 1).
-            // Heterogeneous clusters scale each group by its profile.
+            // Heterogeneous clusters scale each group by its profile and
+            // batch-plan work fraction.
             let fwd = self.timing.sample_conv_fwd_group_of(gi, k, &mut rng);
             let arrive = t0 + fwd;
             let fc_start = fc_free.max(arrive);
             let fc_t = self.timing.sample_fc(&mut rng);
             fc_free = fc_start + fc_t;
             fc_busy += fc_t;
+            fc_wait += fc_start - arrive;
             let bwd = self.timing.sample_conv_bwd_group_of(gi, k, &mut rng);
             let done = fc_free + bwd;
             ready[gi] = done;
+            group_iters[gi] += 1;
+            cycle_sum[gi] += fwd + fc_t + bwd;
             completions.push(done);
         }
         completions.sort_by(|a, b| a.total_cmp(b));
@@ -88,6 +126,11 @@ impl ClusterSim {
         let gmean = gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
         let var = gaps.iter().map(|x| (x - gmean).powi(2)).sum::<f64>()
             / gaps.len().max(1) as f64;
+        let group_cycle: Vec<f64> = cycle_sum
+            .iter()
+            .zip(&group_iters)
+            .map(|(&s, &n)| if n > 0 { s / n as f64 } else { 0.0 })
+            .collect();
         SimResult {
             groups: g,
             group_size: k,
@@ -96,6 +139,9 @@ impl ClusterSim {
             mean_iter_time: mean,
             iter_time_std: var.sqrt(),
             fc_utilization: if total_time > 0.0 { fc_busy / total_time } else { 0.0 },
+            group_iters,
+            group_cycle,
+            fc_wait_mean: fc_wait / iters.max(1) as f64,
         }
     }
 
@@ -124,6 +170,30 @@ pub fn predicted_vs_measured(
         .into_iter()
         .map(|r| (r.groups, he.iteration_time(r.groups, n_machines), r.mean_iter_time))
         .collect()
+}
+
+/// Profile-aware predicted-vs-simulated table (Fig 5b hetero rows): the
+/// [`ProfiledHe`] prediction against a [`ClusterSim`] carrying the same
+/// profiles and batch-plan work fractions. The work fractions depend on
+/// g, so a fresh timing model is built per strategy point.
+pub fn predicted_vs_measured_profiled(
+    phe: &ProfiledHe,
+    profiles: &[crate::config::DeviceProfile],
+    n_machines: usize,
+    dist: ServiceDist,
+    iters: u64,
+    seed: u64,
+) -> Vec<(usize, f64, f64)> {
+    let mut out = vec![];
+    let mut g = 1;
+    while g <= n_machines {
+        let timing =
+            TimingModel::with_plan(phe.he, dist, profiles.to_vec(), phe.work_fractions(g));
+        let r = ClusterSim::new(timing, n_machines).run(g, iters, seed);
+        out.push((g, phe.iteration_time(g, n_machines), r.mean_iter_time));
+        g *= 2;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -205,6 +275,54 @@ mod tests {
             "straggler {} vs baseline {}",
             b.mean_iter_time,
             a.mean_iter_time
+        );
+    }
+
+    #[test]
+    fn per_group_stats_cover_all_iterations() {
+        let sim = ClusterSim::new(TimingModel::new(he(), ServiceDist::Deterministic), 8);
+        let r = sim.run(4, 200, 3);
+        assert_eq!(r.group_iters.iter().sum::<u64>(), 200);
+        assert_eq!(r.group_cycle.len(), 4);
+        // Homogeneous + deterministic: every group cycles identically.
+        assert!(r.straggler_stall() < 1e-12, "stall {}", r.straggler_stall());
+    }
+
+    #[test]
+    fn dynamic_plan_removes_straggler_stall() {
+        use crate::config::{DeviceKind, DeviceProfile};
+        let profiles = vec![
+            DeviceProfile::straggler(DeviceKind::Cpu, 2.0),
+            DeviceProfile::baseline(DeviceKind::Cpu),
+            DeviceProfile::baseline(DeviceKind::Cpu),
+            DeviceProfile::baseline(DeviceKind::Cpu),
+        ];
+        let equal = ClusterSim::new(
+            TimingModel::with_profiles(he(), ServiceDist::Deterministic, profiles.clone()),
+            8,
+        )
+        .run(4, 400, 1);
+        // Shares proportional to speed: the straggler gets half the
+        // work of a baseline group -> equalized cycles.
+        let phe = he()
+            .with_profiles(profiles.clone(), 32)
+            .with_dynamic_batch(true);
+        let planned = ClusterSim::new(
+            TimingModel::with_plan(
+                he(),
+                ServiceDist::Deterministic,
+                profiles,
+                phe.work_fractions(4),
+            ),
+            8,
+        )
+        .run(4, 400, 1);
+        assert!(equal.straggler_stall() > 0.1, "equal stall {}", equal.straggler_stall());
+        assert!(
+            planned.straggler_stall() < equal.straggler_stall() * 0.5,
+            "planned {} vs equal {}",
+            planned.straggler_stall(),
+            equal.straggler_stall()
         );
     }
 

@@ -29,25 +29,42 @@ pub enum ServiceDist {
 pub const CONV_FWD_FRACTION: f64 = 1.0 / 3.0;
 
 /// Samples conv/FC service times consistent with an [`HeParams`] model,
-/// optionally scaled per compute group by a [`DeviceProfile`].
+/// optionally scaled per compute group by a [`DeviceProfile`] and a
+/// [`crate::data::BatchPlan`]'s work fractions.
 #[derive(Clone, Debug)]
 pub struct TimingModel {
     pub he: HeParams,
     pub dist: ServiceDist,
     /// Per-group device profiles; empty = homogeneous (all baseline).
     profiles: Vec<DeviceProfile>,
+    /// Per-group conv work fractions from the batch plan
+    /// (`share * g / batch`); empty = equal split (all 1.0).
+    work: Vec<f64>,
 }
 
 impl TimingModel {
     /// Homogeneous model: every group at the cluster baseline speed.
     pub fn new(he: HeParams, dist: ServiceDist) -> Self {
-        Self { he, dist, profiles: vec![] }
+        Self { he, dist, profiles: vec![], work: vec![] }
     }
 
     /// Heterogeneous model with one profile per compute group (cycles
     /// when there are more groups than profiles).
     pub fn with_profiles(he: HeParams, dist: ServiceDist, profiles: Vec<DeviceProfile>) -> Self {
-        Self { he, dist, profiles }
+        Self { he, dist, profiles, work: vec![] }
+    }
+
+    /// Heterogeneous model with a batch plan in force: group `g`'s conv
+    /// phases additionally scale by `work[g]` (its share of the global
+    /// batch relative to the equal split). An all-1.0 (or empty) vector
+    /// is bit-identical to [`Self::with_profiles`].
+    pub fn with_plan(
+        he: HeParams,
+        dist: ServiceDist,
+        profiles: Vec<DeviceProfile>,
+        work: Vec<f64>,
+    ) -> Self {
+        Self { he, dist, profiles, work }
     }
 
     /// Profile of compute group `g`.
@@ -56,6 +73,15 @@ impl TimingModel {
             DeviceProfile::baseline(DeviceKind::Cpu)
         } else {
             self.profiles[g % self.profiles.len()]
+        }
+    }
+
+    /// Batch-plan conv work fraction of group `g` (1.0 = equal split).
+    pub fn work_fraction(&self, g: usize) -> f64 {
+        if self.work.is_empty() {
+            1.0
+        } else {
+            self.work[g % self.work.len()]
         }
     }
 
@@ -78,11 +104,12 @@ impl TimingModel {
         (0..k).map(|_| self.sample_conv_fwd(k, rng)).fold(0.0, f64::max)
     }
 
-    /// Conv forward barrier of group `g`, scaled by its device profile.
-    /// Baseline profiles divide by exactly 1.0, so the homogeneous path
-    /// is bit-identical to [`Self::sample_conv_fwd_group`].
+    /// Conv forward barrier of group `g`, scaled by its device profile
+    /// and batch-plan work fraction. Baseline profiles divide by exactly
+    /// 1.0 and equal plans multiply by exactly 1.0, so the homogeneous
+    /// path is bit-identical to [`Self::sample_conv_fwd_group`].
     pub fn sample_conv_fwd_group_of(&self, g: usize, k: usize, rng: &mut Rng) -> f64 {
-        self.sample_conv_fwd_group(k, rng) / self.profile(g).conv_speed
+        self.sample_conv_fwd_group(k, rng) * self.work_fraction(g) / self.profile(g).conv_speed
     }
 
     pub fn sample_conv_bwd(&self, k: usize, rng: &mut Rng) -> f64 {
@@ -93,9 +120,10 @@ impl TimingModel {
         (0..k).map(|_| self.sample_conv_bwd(k, rng)).fold(0.0, f64::max)
     }
 
-    /// Conv backward barrier of group `g`, scaled by its device profile.
+    /// Conv backward barrier of group `g`, scaled by its device profile
+    /// and batch-plan work fraction.
     pub fn sample_conv_bwd_group_of(&self, g: usize, k: usize, rng: &mut Rng) -> f64 {
-        self.sample_conv_bwd_group(k, rng) / self.profile(g).conv_speed
+        self.sample_conv_bwd_group(k, rng) * self.work_fraction(g) / self.profile(g).conv_speed
     }
 
     /// FC server service time for one group request (the merged FC
@@ -200,6 +228,47 @@ mod tests {
         let slow = t.sample_conv_bwd_group_of(0, 1, &mut rng);
         let base = t.sample_conv_bwd_group(1, &mut rng);
         assert!((slow / base - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn work_fraction_scales_conv_not_fc() {
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let base = TimingModel::with_profiles(
+            he,
+            ServiceDist::Deterministic,
+            vec![DeviceProfile::baseline(DeviceKind::Cpu)],
+        );
+        let planned = TimingModel::with_plan(
+            he,
+            ServiceDist::Deterministic,
+            vec![DeviceProfile::baseline(DeviceKind::Cpu)],
+            vec![0.5, 1.5],
+        );
+        let mut r1 = Rng::seed_from_u64(4);
+        let mut r2 = Rng::seed_from_u64(4);
+        let b = base.sample_conv_fwd_group_of(0, 2, &mut r1);
+        assert!((planned.sample_conv_fwd_group_of(0, 2, &mut r2) - b * 0.5).abs() < 1e-12);
+        let b = base.sample_conv_bwd_group_of(1, 2, &mut r1);
+        assert!((planned.sample_conv_bwd_group_of(1, 2, &mut r2) - b * 1.5).abs() < 1e-12);
+        // FC service is batch-shape-bound (the artifact runs the full
+        // batch), so the plan does not scale it.
+        assert_eq!(planned.sample_fc(&mut r1), base.sample_fc(&mut r2));
+        // An all-1.0 plan is bit-identical to no plan.
+        let unit = TimingModel::with_plan(
+            he,
+            ServiceDist::Lognormal { cv: 0.06 },
+            vec![],
+            vec![1.0; 4],
+        );
+        let noplan = TimingModel::with_profiles(he, ServiceDist::Lognormal { cv: 0.06 }, vec![]);
+        let mut r1 = Rng::seed_from_u64(77);
+        let mut r2 = Rng::seed_from_u64(77);
+        for g in 0..8 {
+            assert_eq!(
+                unit.sample_conv_fwd_group_of(g, 3, &mut r1),
+                noplan.sample_conv_fwd_group_of(g, 3, &mut r2)
+            );
+        }
     }
 
     #[test]

@@ -7,4 +7,6 @@ mod host;
 mod ops;
 
 pub use host::HostTensor;
-pub use ops::{axpy, dot, l2_norm, momentum_sgd_step, scale, sub_into};
+pub use ops::{
+    axpy, dot, l2_norm, momentum_sgd_step, momentum_sgd_step_scaled, scale, sub_into,
+};

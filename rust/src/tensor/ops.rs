@@ -46,6 +46,28 @@ pub fn momentum_sgd_step(w: &mut [f32], v: &mut [f32], g: &[f32], mu: f32, eta: 
     }
 }
 
+/// [`momentum_sgd_step`] with the gradient scaled by `s` in place:
+/// `v <- mu v - eta (s g + lambda w); w <- w + v`. Used by the
+/// FLOPS-proportional batch plan's weighted publishes; `s = 1.0`
+/// multiplies exactly and is bit-identical to the unscaled step.
+pub fn momentum_sgd_step_scaled(
+    w: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    s: f32,
+    mu: f32,
+    eta: f32,
+    lambda: f32,
+) {
+    debug_assert_eq!(w.len(), v.len());
+    debug_assert_eq!(w.len(), g.len());
+    for ((wi, vi), gi) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+        let nv = mu * *vi - eta * (s * *gi + lambda * *wi);
+        *vi = nv;
+        *wi += nv;
+    }
+}
+
 /// Dot product.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());

@@ -170,6 +170,55 @@ fn heterogeneous_cluster_reports_per_group_timing() {
 }
 
 #[test]
+fn dynamic_batch_report_and_prediction() {
+    // --dynamic-batch on hetero-s: shares are FLOPS-proportional (gpu
+    // group largest, summing to the global batch), the profile-aware
+    // cadence prediction lands in the report, and the measured per-group
+    // gap tracks it for the groups the queue-free model covers.
+    let mut c = cfg(4, 160);
+    c.cluster = cluster::preset("hetero-s").unwrap();
+    c.dynamic_batch = true;
+    // Conv-bound measured HE params: the queue-free cadence model is
+    // the whole story, so the spread comparison below is deterministic.
+    let opts = || EngineOptions {
+        dist: ServiceDist::Deterministic,
+        he_override: Some(HeParams::measured(1.0, 0.002, 0.01)),
+        ..Default::default()
+    };
+    let report = SimTimeEngine::new(runtime(), c.clone(), opts()).run(init()).unwrap();
+    assert_eq!(report.group_stats.len(), 4);
+    let shares: Vec<usize> = report.group_stats.iter().map(|s| s.batch_share).collect();
+    assert_eq!(shares.iter().sum::<usize>(), c.batch, "shares {shares:?}");
+    assert!(shares[0] > shares[1], "gpu group must get the bigger share: {shares:?}");
+    for s in &report.group_stats {
+        assert!(s.predicted_iter_gap > 0.0, "group {} missing prediction", s.group);
+    }
+    // Dynamic shares narrow the cadence spread vs the equal split.
+    let mut eq = c.clone();
+    eq.dynamic_batch = false;
+    let equal = SimTimeEngine::new(runtime(), eq, opts()).run(init()).unwrap();
+    let spread = |r: &omnivore::engine::TrainReport| {
+        let gaps: Vec<f64> = r
+            .group_stats
+            .iter()
+            .filter(|s| s.iters > 1)
+            .map(|s| s.mean_iter_gap)
+            .collect();
+        gaps.iter().cloned().fold(0.0f64, f64::max)
+            - gaps.iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+    assert!(
+        spread(&report) < spread(&equal),
+        "dynamic spread {} vs equal spread {}",
+        spread(&report),
+        spread(&equal)
+    );
+    // Equal-split reports still carry their (uniform) shares.
+    let eq_shares: Vec<usize> = equal.group_stats.iter().map(|s| s.batch_share).collect();
+    assert_eq!(eq_shares, vec![8, 8, 8, 8]);
+}
+
+#[test]
 fn max_virtual_time_budget_stops_all_schedulers() {
     // The same virtual-time budget option cuts off both clock-driven
     // schedulers (threaded vtime is wall-clock, so budget it generously

@@ -59,6 +59,7 @@ fn algorithm1_end_to_end_on_real_engine() {
     let arch = runtime().manifest().arch("lenet").unwrap();
     let he = HeParams::derive(&cluster::preset("cpu-s").unwrap(), arch, 32, 0.5);
     let opt = AutoOptimizer {
+        cold_probe_steps: 32,
         epochs: 1,
         epoch_steps: 96,
         probe_steps: 16,
