@@ -12,7 +12,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::EngineOptions;
 use omnivore::metrics::Table;
 use omnivore::model::ParamSet;
 use omnivore::optimizer::grid_search::{grid_search, GridSpec};
@@ -45,17 +44,14 @@ fn main() {
     // on the real CNN — must DECREASE as implicit momentum rises.
     println!("\ntuned explicit momentum vs g (real engine, mnist-sim):");
     let rt = support::runtime();
-    let base = support::cfg("lenet", support::preset("cpu-s"), 1, Hyper::default(), 0);
+    let base = support::spec("lenet", support::preset("cpu-s"), 1, Hyper::default(), 0)
+        .dist(ServiceDist::Exponential);
     let arch = rt.manifest().arch("lenet").unwrap();
     let _ = ParamSet::init(arch, 0);
     // Probes start from a lightly-warmed checkpoint, like the paper's
     // epoch grid searches (Appendix E-C).
     let warm = support::warm_params(&rt, "lenet", &support::preset("cpu-s"), 20);
-    let mut trainer = EngineTrainer::new(
-        &rt,
-        base,
-        EngineOptions { dist: ServiceDist::Exponential, ..Default::default() },
-    );
+    let mut trainer = EngineTrainer::new(&rt, base);
     let mut t2 = Table::new(&["groups g", "tuned explicit mu*", "compensation model"]);
     let mut tuned = vec![];
     for g in [1usize, 2, 4, 8] {

@@ -11,7 +11,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::se_model;
 
@@ -36,16 +35,14 @@ fn main() {
     let mut g = 1;
     while g <= n {
         let mu = se_model::compensated_momentum(0.9, g) as f32;
-        let cfg = support::cfg(
+        let spec = support::spec(
             "caffenet8",
             cl.clone(),
             g,
             Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
             steps,
         );
-        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
-            .run(warm.clone())
-            .unwrap();
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
         let he = report.mean_iter_time();
         let se = report.iters_to_accuracy(target, 16).map(|i| i as f64);
         let total = report.time_to_accuracy(target, 16);

@@ -7,9 +7,8 @@
 #[path = "support/mod.rs"]
 mod support;
 
+use omnivore::api::RunSpec;
 use omnivore::baselines::BaselineSystem;
-use omnivore::config::TrainConfig;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Series, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams};
@@ -23,14 +22,11 @@ fn main() {
     let target = 0.9f32;
     let steps = support::scaled(260);
 
-    let base = TrainConfig {
-        arch: "caffenet8".into(),
-        variant: "jnp".into(),
-        cluster: cl.clone(),
-        steps,
-        seed: 0,
-        ..TrainConfig::default()
-    };
+    let base = RunSpec::new("caffenet8")
+        .cluster(cl.clone())
+        .steps(steps)
+        .seed(0)
+        .eval_every(0);
 
     let mut table = Table::new(&["system", "strategy", "time->{target}", "final acc", "speedup vs slowest"]);
     let mut rows: Vec<(String, String, Option<f64>, f32)> = vec![];
@@ -39,11 +35,8 @@ fn main() {
     // Baselines: fixed strategies, momentum 0.9, best-effort lr (the
     // paper grid-searches lr for competitors; we use the sync-optimal).
     for system in [BaselineSystem::MxnetSync, BaselineSystem::MxnetAsync] {
-        let mut cfg = system.config(&base);
-        cfg.hyper.lr = 0.02;
-        let report = SimTimeEngine::new(&rt, cfg.clone(), EngineOptions::default())
-            .run(init.clone())
-            .unwrap();
+        let spec = base.clone().lr(0.02).baseline(system);
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, init.clone());
         let mut s = Series::new(&system.label());
         for r in report.records.iter().step_by(8) {
             s.push(r.vtime, r.acc as f64);
@@ -59,8 +52,8 @@ fn main() {
 
     // Omnivore with the automatic optimizer (cold start included; its
     // probe overhead counts against it, like the paper's 10%).
-    let he = HeParams::derive(&cl, arch, base.batch, 0.5);
-    let mut trainer = EngineTrainer::new(&rt, base, EngineOptions::default());
+    let he = HeParams::derive(&cl, arch, base.train.batch, 0.5);
+    let mut trainer = EngineTrainer::new(&rt, base);
     let opt = AutoOptimizer {
         cold_probe_steps: 32,
         epochs: 2,

@@ -10,7 +10,6 @@ mod support;
 
 use omnivore::baselines::BaselineSystem;
 use omnivore::config::{FcMapping, Hyper, Strategy};
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::{se_model, HeParams};
 
@@ -46,30 +45,28 @@ fn main() {
             ),
         ];
         for (label, strategy, mu, fc) in runs {
-            let mut cfg = support::cfg(
+            let spec = support::spec(
                 arch_name,
                 cl.clone(),
                 1,
                 Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
                 steps,
-            );
-            cfg.strategy = strategy;
-            cfg.fc_mapping = fc;
-            let report = SimTimeEngine::new(&rt, cfg.clone(), EngineOptions::default())
-                .run(warm.clone())
-                .unwrap();
+            )
+            .strategy(strategy)
+            .fc_mapping(fc);
+            let groups = spec.train.groups();
+            let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
             let t = report.time_to_accuracy(target, 32);
             table.row(&[
                 cname.into(),
                 label.clone(),
-                cfg.groups().to_string(),
+                groups.to_string(),
                 format!("{mu:.2}"),
                 t.map(fmt_secs).unwrap_or_else(|| "timeout".into()),
                 format!("{:.3}", report.final_acc(32)),
             ]);
             csv.push_str(&format!(
-                "{cname},{label},{},{mu},{},{}\n",
-                cfg.groups(),
+                "{cname},{label},{groups},{mu},{},{}\n",
                 t.unwrap_or(f64::NAN),
                 report.final_acc(32)
             ));

@@ -9,7 +9,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::se_model;
 
@@ -32,16 +31,14 @@ fn main() {
     let mut csv = String::from("policy,mu,iters,time,final_acc\n");
     let mut times = vec![];
     for (label, mu) in cases {
-        let cfg = support::cfg(
+        let spec = support::spec(
             "caffenet8",
             cl.clone(),
             g,
             Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
             steps,
         );
-        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
-            .run(warm.clone())
-            .unwrap();
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
         let iters = report.iters_to_accuracy(target, 16);
         let time = report.time_to_accuracy(target, 16);
         times.push(time);

@@ -13,7 +13,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::sim::ServiceDist;
 
@@ -30,18 +29,20 @@ fn main() {
         // A cluster with exactly k+1 machines gives one group of k.
         let mut cl = support::preset("cpu-s");
         cl.machines = k + 1;
-        let cfg = support::cfg(
+        let spec = support::spec(
             "caffenet8",
             cl,
             1,
             Hyper { lr: 0.02, momentum: 0.9, lambda: 5e-4 },
             steps,
-        );
+        )
+        .dist(ServiceDist::Deterministic);
         let before = rt.stats();
-        let opts = EngineOptions { dist: ServiceDist::Deterministic, ..Default::default() };
-        let report = SimTimeEngine::new(&rt, cfg, opts)
-            .run(support::warm_params(&rt, "caffenet8", &support::preset("cpu-s"), 8))
-            .unwrap();
+        let (_outcome, report, _params) = support::run_from(
+            &rt,
+            &spec,
+            support::warm_params(&rt, "caffenet8", &support::preset("cpu-s"), 8),
+        );
         let after = rt.stats();
         let vt = report.mean_iter_time();
         let wall = (after.execute_secs - before.execute_secs) / report.records.len() as f64;

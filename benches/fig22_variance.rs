@@ -10,9 +10,8 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::ThreadedEngine;
+use omnivore::engine::SchedulerKind;
 use omnivore::metrics::Table;
-use omnivore::model::ParamSet;
 use omnivore::optimizer::HeParams;
 use omnivore::sim::{ClusterSim, ServiceDist, TimingModel};
 
@@ -45,16 +44,17 @@ fn main() {
     }
 
     // Real threaded run on this host: per-iteration wall-clock gaps.
-    let mut cfg = support::cfg(
+    let mut cl9 = cl.clone();
+    cl9.machines = 9;
+    let spec = support::spec(
         "lenet",
-        cl.clone(),
+        cl9,
         8,
         Hyper { lr: 0.02, momentum: 0.2, lambda: 5e-4 },
         support::scaled(64),
-    );
-    cfg.cluster.machines = 9;
-    let init = ParamSet::init(rt.manifest().arch("lenet").unwrap(), 0);
-    let report = ThreadedEngine::new(&rt, cfg).run(init).unwrap();
+    )
+    .scheduler(SchedulerKind::OsThreads);
+    let (_outcome, report) = support::run(&rt, &spec);
     let times: Vec<f64> = report.records.iter().map(|r| r.vtime).collect();
     let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
     let tail = &gaps[gaps.len() / 4..];

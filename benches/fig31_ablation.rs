@@ -12,7 +12,6 @@
 mod support;
 
 use omnivore::config::{FcMapping, Hyper};
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::{se_model, HeParams};
 
@@ -51,17 +50,15 @@ fn main() {
         Table::new(&["configuration", "g", "eta", "mu", "time->target", "final acc", "diverged"]);
     let mut csv = String::from("config,g,eta,mu,time,final_acc,diverged\n");
     for (label, g, eta, mu, fc) in cases {
-        let mut cfg = support::cfg(
+        let spec = support::spec(
             "caffenet8",
             cl.clone(),
             g,
             Hyper { lr: eta, momentum: mu, lambda: 5e-4 },
             steps,
-        );
-        cfg.fc_mapping = fc;
-        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
-            .run(warm.clone())
-            .unwrap();
+        )
+        .fc_mapping(fc);
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
         let t = report.time_to_accuracy(target, 16);
         table.row(&[
             label.into(),

@@ -9,7 +9,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::se_model;
 
@@ -32,16 +31,14 @@ fn main() {
     let mut g = 1;
     while g <= n {
         let mu = se_model::compensated_momentum(0.9, g) as f32;
-        let cfg = support::cfg(
+        let spec = support::spec(
             "rnn",
             cl.clone(),
             g,
             Hyper { lr: 0.05, momentum: mu, lambda: 5e-4 },
             steps,
         );
-        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
-            .run(warm.clone())
-            .unwrap();
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
         let he = report.mean_iter_time();
         let iters = report.iters_to_accuracy(target, 32);
         let total = report.time_to_accuracy(target, 32);

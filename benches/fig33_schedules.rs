@@ -8,8 +8,8 @@
 #[path = "support/mod.rs"]
 mod support;
 
-use omnivore::config::TrainConfig;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::api::RunSpec;
+use omnivore::config::Hyper;
 use omnivore::metrics::{fmt_secs, Series, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams};
@@ -34,18 +34,15 @@ fn main() {
     for (phase, (eta, steps)) in
         [(0.02f32, total_steps * 2 / 3), (0.002, total_steps / 3)].iter().enumerate()
     {
-        let cfg = TrainConfig {
-            arch: "caffenet8".into(),
-            variant: "jnp".into(),
-            cluster: cl.clone(),
-            strategy: omnivore::config::Strategy::Groups(g),
-            hyper: omnivore::config::Hyper { lr: *eta, momentum: 0.6, lambda: 5e-4 },
-            steps: *steps,
-            seed: phase as u64 + 10,
-            ..TrainConfig::default()
-        };
-        let engine = SimTimeEngine::new(&rt, cfg, EngineOptions::default());
-        let (report, p) = engine.run_with_params(sched_params).unwrap();
+        let spec = support::spec(
+            "caffenet8",
+            cl.clone(),
+            g,
+            Hyper { lr: *eta, momentum: 0.6, lambda: 5e-4 },
+            *steps,
+        )
+        .seed(phase as u64 + 10);
+        let (_outcome, report, p) = support::run_from(&rt, &spec, sched_params);
         sched_params = p;
         for r in report.records.iter().step_by(8) {
             sched_curve.push(t_off + r.vtime, r.loss as f64);
@@ -57,14 +54,8 @@ fn main() {
     series.push(sched_curve);
 
     // Omnivore: Algorithm 1 epochs with retuning between them.
-    let base = TrainConfig {
-        arch: "caffenet8".into(),
-        variant: "jnp".into(),
-        cluster: cl.clone(),
-        seed: 0,
-        ..TrainConfig::default()
-    };
-    let mut trainer = EngineTrainer::new(&rt, base, EngineOptions::default());
+    let base = RunSpec::new("caffenet8").cluster(cl.clone()).seed(0).eval_every(0);
+    let mut trainer = EngineTrainer::new(&rt, base);
     let opt = AutoOptimizer {
         cold_probe_steps: 32,
         epochs: 3,

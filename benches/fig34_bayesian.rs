@@ -8,8 +8,7 @@
 #[path = "support/mod.rs"]
 mod support;
 
-use omnivore::config::TrainConfig;
-use omnivore::engine::EngineOptions;
+use omnivore::api::RunSpec;
 use omnivore::metrics::Table;
 use omnivore::model::ParamSet;
 use omnivore::optimizer::bayesian::BayesianOptimizer;
@@ -21,19 +20,12 @@ fn main() {
     let cl = support::preset("cpu-s");
     let arch = rt.manifest().arch("lenet").unwrap();
     let init = ParamSet::init(arch, 0);
-    let base = TrainConfig {
-        arch: "lenet".into(),
-        variant: "jnp".into(),
-        cluster: cl.clone(),
-        seed: 0,
-        ..TrainConfig::default()
-    };
+    let base = RunSpec::new("lenet").cluster(cl.clone()).seed(0).eval_every(0);
     let he = HeParams::derive(&cl, arch, 32, 0.5);
     let probe_steps = support::scaled(32);
 
     // Omnivore's optimizer.
-    let mut trainer =
-        EngineTrainer::new(&rt, base.clone(), EngineOptions::default());
+    let mut trainer = EngineTrainer::new(&rt, base);
     let opt = AutoOptimizer {
         cold_probe_steps: 32,
         epochs: 1,

@@ -17,7 +17,6 @@ mod support;
 
 use omnivore::config::Hyper;
 use omnivore::coordinator::ParamServer;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::Table;
 use omnivore::model::ParamSet;
 use omnivore::runtime::{to_literal, LiteralCache};
@@ -105,7 +104,7 @@ fn main() {
     );
 
     // 3. End-to-end share: coordinator vs XLA in a real run.
-    let cfg = support::cfg(
+    let spec = support::spec(
         "lenet",
         support::preset("cpu-s"),
         4,
@@ -113,8 +112,7 @@ fn main() {
         support::scaled(48),
     );
     let before = rt.stats();
-    let init = ParamSet::init(rt.manifest().arch("lenet").unwrap(), 0);
-    let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default()).run(init).unwrap();
+    let (_outcome, report) = support::run(&rt, &spec);
     let after = rt.stats();
     let xla = after.execute_secs - before.execute_secs;
     let wall = report.wallclock_secs;

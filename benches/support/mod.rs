@@ -5,11 +5,17 @@
 //! the paper reports and writes a CSV under `results/`. Absolute numbers
 //! come from this repo's simulated substrate; the reproduction target is
 //! the SHAPE of each result (who wins, crossovers, saturation points).
+//!
+//! All benches drive training through the experiment API (DESIGN.md
+//! §API): build a [`RunSpec`] with [`spec`] (or the builder directly),
+//! execute it with [`run`] / [`run_from`] — no bench hand-assembles
+//! engines or `TrainConfig` literals anymore.
 
 #![allow(dead_code)]
 
-use omnivore::config::{cluster, ClusterSpec, Hyper, Strategy, TrainConfig};
-use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::api::{RunOutcome, RunSpec};
+use omnivore::config::{cluster, ClusterSpec, Hyper};
+use omnivore::engine::TrainReport;
 use omnivore::model::ParamSet;
 use omnivore::runtime::Runtime;
 
@@ -31,36 +37,60 @@ pub fn preset(name: &str) -> ClusterSpec {
     cluster::preset(name).unwrap_or_else(|| panic!("unknown preset {name}"))
 }
 
-/// Standard run config used across benches.
-pub fn cfg(arch: &str, cluster: ClusterSpec, g: usize, hyper: Hyper, steps: usize) -> TrainConfig {
-    TrainConfig {
-        arch: arch.into(),
-        variant: "jnp".into(),
-        cluster,
-        strategy: Strategy::Groups(g),
-        hyper,
-        steps,
-        seed: 0,
-        ..TrainConfig::default()
-    }
+/// Standard run spec used across benches: seed 0, no eval cadence (the
+/// benches read the per-iteration records), everything else at the
+/// builder defaults.
+pub fn spec(
+    arch: &str,
+    cluster: ClusterSpec,
+    g: usize,
+    hyper: Hyper,
+    steps: usize,
+) -> RunSpec {
+    RunSpec::new(arch)
+        .cluster(cluster)
+        .groups(g)
+        .hyper(hyper)
+        .steps(steps)
+        .seed(0)
+        .eval_every(0)
+}
+
+/// Execute a spec from cold init — the one facade call every bench
+/// funnels through.
+pub fn run(rt: &Runtime, spec: &RunSpec) -> (RunOutcome, TrainReport) {
+    let (outcome, report, _params) = run_from_init(rt, spec);
+    (outcome, report)
+}
+
+/// Execute a spec starting from explicit parameters (warm starts,
+/// continuing across schedule phases); also returns the final params.
+pub fn run_from(
+    rt: &Runtime,
+    spec: &RunSpec,
+    params: ParamSet,
+) -> (RunOutcome, TrainReport, ParamSet) {
+    spec.execute_from(rt, params).expect("bench run")
+}
+
+/// Execute from cold init, returning the final params too.
+pub fn run_from_init(rt: &Runtime, spec: &RunSpec) -> (RunOutcome, TrainReport, ParamSet) {
+    let cfg = spec.effective_config();
+    let arch_info = rt.manifest().arch(&cfg.arch).expect("arch in manifest");
+    run_from(rt, spec, ParamSet::init(arch_info, cfg.seed))
 }
 
 /// Warm-started parameters: a short synchronous run from cold init (the
 /// paper's tradeoff experiments all start from a common checkpoint).
 pub fn warm_params(rt: &Runtime, arch: &str, cluster: &ClusterSpec, steps: usize) -> ParamSet {
-    let arch_info = rt.manifest().arch(arch).expect("arch in manifest");
-    let c = cfg(
+    let s = spec(
         arch,
         cluster.clone(),
         1,
         Hyper { lr: 0.02, momentum: 0.9, lambda: 5e-4 },
         steps,
     );
-    let engine = SimTimeEngine::new(rt, c, EngineOptions::default());
-    engine
-        .run_with_params(ParamSet::init(arch_info, 0))
-        .expect("warmup run")
-        .1
+    run_from_init(rt, &s).2
 }
 
 /// Write a results CSV (creating results/).

@@ -9,7 +9,7 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::{AveragingEngine, EngineOptions, SimTimeEngine};
+use omnivore::engine::SchedulerKind;
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::{se_model, HeParams};
 
@@ -29,16 +29,14 @@ fn main() {
     // Parameter server at the optimizer's pick.
     for g in [1usize, 4] {
         let mu = se_model::compensated_momentum(0.9, g) as f32;
-        let cfg = support::cfg(
+        let spec = support::spec(
             "lenet",
             cl.clone(),
             g,
             Hyper { lr: 0.03, momentum: mu, lambda: 5e-4 },
             steps,
         );
-        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
-            .run(warm.clone())
-            .unwrap();
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
         let iters = report.iters_to_accuracy(target, 32);
         let t = report.time_to_accuracy(target, 32);
         table.row(&[
@@ -58,15 +56,16 @@ fn main() {
 
     // Model averaging across tau.
     for tau in [1usize, 4, 16] {
-        let cfg = support::cfg(
+        let spec = support::spec(
             "lenet",
             cl.clone(),
             4,
             Hyper { lr: 0.03, momentum: 0.6, lambda: 5e-4 },
             steps,
-        );
-        let engine = AveragingEngine::new(&rt, cfg, tau, he);
-        let report = engine.run(warm.clone()).unwrap();
+        )
+        .scheduler(SchedulerKind::AveragingRounds { tau })
+        .he_override(he);
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm.clone());
         let iters = report.iters_to_accuracy(target, 32);
         let t = report.time_to_accuracy(target, 32);
         table.row(&[

@@ -6,7 +6,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::EngineOptions;
 use omnivore::metrics::Table;
 use omnivore::model::ParamSet;
 use omnivore::optimizer::grid_search::{grid_search, GridSpec};
@@ -25,8 +24,7 @@ fn main() {
             let cl = support::preset("cpu-l"); // 32 conv machines: g up to 32
             let mut trainer = EngineTrainer::new(
                 &rt,
-                support::cfg(arch_name, cl, g, Hyper::default(), 0),
-                EngineOptions::default(),
+                support::spec(arch_name, cl, g, Hyper::default(), 0),
             );
             let spec = GridSpec {
                 momenta: vec![0.0, 0.3, 0.6, 0.9],

@@ -6,7 +6,6 @@
 mod support;
 
 use omnivore::config::Hyper;
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::optimizer::{se_model, HeParams};
 
@@ -41,16 +40,14 @@ fn main() {
         let g = he.smallest_saturating_g(n).min(n);
         let mu = se_model::compensated_momentum(0.9, g) as f32;
         let warm = support::warm_params(&rt, "caffenet8", &cl, 48);
-        let cfg = support::cfg(
+        let spec = support::spec(
             "caffenet8",
             cl.clone(),
             g,
             Hyper { lr: 0.02, momentum: mu, lambda: 5e-4 },
             steps,
         );
-        let report = SimTimeEngine::new(&rt, cfg, EngineOptions::default())
-            .run(warm)
-            .unwrap();
+        let (_outcome, report, _params) = support::run_from(&rt, &spec, warm);
         let t = report.time_to_accuracy(target, 32);
         let price = price_per_hour(cname);
         let cost = t.map(|t| t / 3600.0 * price);

@@ -7,9 +7,8 @@
 //! cargo run --release --example auto_optimizer
 //! ```
 
+use omnivore::api::RunSpec;
 use omnivore::baselines::BaselineSystem;
-use omnivore::config::{cluster, TrainConfig};
-use omnivore::engine::{EngineOptions, SimTimeEngine};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams};
@@ -20,38 +19,32 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["cluster", "system", "strategy", "mu", "final acc", "vtime"]);
 
     for cluster_name in ["cpu-s", "gpu-s"] {
-        let cl = cluster::preset(cluster_name).unwrap();
-        let base = TrainConfig {
-            arch: "lenet".into(),
-            variant: "jnp".into(),
-            cluster: cl.clone(),
-            seed: 0,
-            steps: 200,
-            ..TrainConfig::default()
-        };
-        let arch = rt.manifest().arch(&base.arch)?;
+        let base = RunSpec::new("lenet")
+            .cluster_preset(cluster_name)?
+            .seed(0)
+            .steps(200)
+            .eval_every(0);
+        let cl = base.train.cluster.clone();
+        let arch = rt.manifest().arch(&base.train.arch)?;
         let init = ParamSet::init(arch, 0);
 
         // Fixed-strategy baselines (momentum pinned at 0.9, unmerged FC).
         for system in [BaselineSystem::MxnetSync, BaselineSystem::MxnetAsync] {
-            let mut cfg = system.config(&base);
-            cfg.hyper.lr = 0.03;
-            let report = SimTimeEngine::new(&rt, cfg.clone(), EngineOptions::default())
-                .run(init.clone())?;
+            let spec = base.clone().lr(0.03).baseline(system);
+            let (outcome, report, _params) = spec.execute_from(&rt, init.clone())?;
             table.row(&[
                 cluster_name.into(),
                 system.label(),
-                format!("g={}", report.groups),
-                format!("{:.2}", cfg.hyper.momentum),
+                format!("g={}", outcome.groups),
+                format!("{:.2}", spec.effective_config().hyper.momentum),
                 format!("{:.3}", report.final_acc(32)),
-                fmt_secs(report.virtual_time),
+                fmt_secs(outcome.virtual_time),
             ]);
         }
 
         // Omnivore: automatic optimizer.
-        let he = HeParams::derive(&cl, arch, base.batch, 0.5);
-        let mut trainer =
-            EngineTrainer::new(&rt, base.clone(), EngineOptions::default());
+        let he = HeParams::derive(&cl, arch, base.train.batch, 0.5);
+        let mut trainer = EngineTrainer::new(&rt, base.clone());
         let opt = AutoOptimizer {
             cold_probe_steps: 32,
             epochs: 1,

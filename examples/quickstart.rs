@@ -1,14 +1,14 @@
-//! Quickstart: load the AOT artifacts, train a small CNN synchronously on
-//! the MNIST-sim dataset, and print the loss curve summary.
+//! Quickstart: describe an experiment with the [`RunSpec`] builder,
+//! execute it in one call, and inspect the [`RunOutcome`] — the same
+//! API every CLI subcommand, bench, and the optimizer speak
+//! (DESIGN.md §API).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use omnivore::config::{cluster, Hyper, Strategy, TrainConfig};
-use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::api::{RunSpec, RunStore};
 use omnivore::metrics::fmt_secs;
-use omnivore::model::ParamSet;
 use omnivore::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -16,49 +16,46 @@ fn main() -> anyhow::Result<()> {
     //    the HLO-text artifacts through the PJRT CPU client.
     let rt = Runtime::load("artifacts")?;
 
-    // 2. Configure a run: LeNet-S on mnist-sim, 9-machine CPU cluster
-    //    (paper Fig 9's CPU-S), fully synchronous.
-    let cfg = TrainConfig {
-        arch: "lenet".into(),
-        variant: "jnp".into(),
-        cluster: cluster::preset("cpu-s").unwrap(),
-        strategy: Strategy::Sync,
-        hyper: Hyper { lr: 0.03, momentum: 0.9, lambda: 5e-4 },
-        steps: 150,
-        seed: 0,
-        ..TrainConfig::default()
-    };
+    // 2. Describe the experiment: LeNet-S on mnist-sim, 9-machine CPU
+    //    cluster (paper Fig 9's CPU-S), fully synchronous, evaluated on
+    //    the held-out batch every 50 iterations. Unset knobs keep the
+    //    CLI defaults; the spec serializes to JSON (`to_json`) so the
+    //    same run can be driven by `omnivore train --config run.json`.
+    let spec = RunSpec::new("lenet")
+        .cluster_preset("cpu-s")?
+        .sync()
+        .lr(0.03)
+        .momentum(0.9)
+        .steps(150)
+        .seed(0)
+        .eval_every(50)
+        .tag("quickstart");
 
-    // 3. Initialize the model and train. The engine advances a virtual
-    //    cluster clock while every gradient runs for real through XLA.
-    let init = ParamSet::init(rt.manifest().arch(&cfg.arch)?, cfg.seed);
+    // 3. Execute. The engine advances a virtual cluster clock while
+    //    every gradient runs for real through XLA; the outcome wraps
+    //    the report in a machine-readable, JSON-roundtrippable summary.
     println!(
-        "training {} ({} params) on {} machines, batch {}...",
-        cfg.arch,
-        init.num_params(),
-        cfg.cluster.machines,
-        cfg.batch
+        "training {} on {} machines, batch {}...",
+        spec.train.arch, spec.train.cluster.machines, spec.train.batch
     );
-    let opts = EngineOptions { eval_every: 50, ..Default::default() };
-    let report = SimTimeEngine::new(&rt, cfg, opts).run(init)?;
+    let outcome = spec.execute(&rt)?;
 
-    // 4. Inspect the results.
-    for r in report.records.iter().step_by(25) {
-        println!(
-            "  iter {:>4}  vtime {:>8}  loss {:.4}  acc {:.2}",
-            r.seq,
-            fmt_secs(r.vtime),
-            r.loss,
-            r.acc
-        );
-    }
+    // 4. Inspect the results and log them to the run store — later runs
+    //    (and the optimizer) can compare against them by tag.
     println!(
         "final: loss {:.4}, train acc {:.3}, eval acc {:.3} | {} virtual, {} wall",
-        report.final_loss(32),
-        report.final_acc(32),
-        report.evals.last().map(|e| e.acc).unwrap_or(0.0),
-        fmt_secs(report.virtual_time),
-        fmt_secs(report.wallclock_secs),
+        outcome.final_loss,
+        outcome.final_acc,
+        outcome.final_eval_acc.unwrap_or(0.0),
+        fmt_secs(outcome.virtual_time),
+        fmt_secs(outcome.wallclock_secs),
+    );
+    let store = RunStore::open("runs")?;
+    store.append(&outcome)?;
+    println!(
+        "stored under tag 'quickstart' ({} run(s) so far) in {}",
+        store.by_tag("quickstart")?.len(),
+        store.path().display()
     );
     Ok(())
 }

@@ -7,8 +7,7 @@
 //! cargo run --release --example tradeoff_sweep [-- --cluster cpu-l --steps 200]
 //! ```
 
-use omnivore::config::{cluster, Hyper, Strategy, TrainConfig};
-use omnivore::engine::{EngineOptions, SimTimeEngine};
+use omnivore::api::RunSpec;
 use omnivore::metrics::{fmt_secs, write_csv, Series, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::se_model;
@@ -24,26 +23,15 @@ fn main() -> anyhow::Result<()> {
     args.finish()?;
 
     let rt = Runtime::load("artifacts")?;
-    let cl = cluster::preset(&cluster_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown cluster {cluster_name}"))?;
-    let n = cl.machines - 1;
+    let base = RunSpec::new(&arch).cluster_preset(&cluster_name)?.seed(0).eval_every(0);
+    let n = base.train.cluster.machines - 1;
     let arch_info = rt.manifest().arch(&arch)?;
 
     // Warm start (the paper measures the tradeoff from a common
     // checkpoint after cold start, §V-B).
     let warm = {
-        let cfg = TrainConfig {
-            arch: arch.clone(),
-            variant: "jnp".into(),
-            cluster: cl.clone(),
-            strategy: Strategy::Sync,
-            hyper: Hyper { lr: 0.01, momentum: 0.9, lambda: 5e-4 },
-            steps: 48,
-            seed: 0,
-            ..TrainConfig::default()
-        };
-        let engine = SimTimeEngine::new(&rt, cfg, EngineOptions::default());
-        engine.run_with_params(ParamSet::init(arch_info, 0))?.1
+        let spec = base.clone().sync().lr(0.01).momentum(0.9).steps(48);
+        spec.execute_from(&rt, ParamSet::init(arch_info, 0))?.2
     };
 
     let mut table = Table::new(&[
@@ -55,18 +43,8 @@ fn main() -> anyhow::Result<()> {
     let mut g = 1;
     while g <= n {
         let mu = se_model::compensated_momentum(0.9, g) as f32;
-        let cfg = TrainConfig {
-            arch: arch.clone(),
-            variant: "jnp".into(),
-            cluster: cl.clone(),
-            strategy: Strategy::Groups(g),
-            hyper: Hyper { lr: 0.01, momentum: mu, lambda: 5e-4 },
-            steps,
-            seed: 0,
-            ..TrainConfig::default()
-        };
-        let engine = SimTimeEngine::new(&rt, cfg, EngineOptions::default());
-        let report = engine.run(warm.clone())?;
+        let spec = base.clone().groups(g).lr(0.01).momentum(mu).steps(steps);
+        let (_outcome, report, _params) = spec.execute_from(&rt, warm.clone())?;
         let he = report.mean_iter_time();
         let se = report.iters_to_accuracy(target, 32);
         let total = report.time_to_accuracy(target, 32);

@@ -11,8 +11,7 @@
 //! make artifacts && cargo run --release --example train_imagenet8
 //! ```
 
-use omnivore::config::{cluster, TrainConfig};
-use omnivore::engine::EngineOptions;
+use omnivore::api::RunSpec;
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::model::{save_checkpoint, ParamSet};
 use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams};
@@ -20,33 +19,24 @@ use omnivore::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load("artifacts")?;
-    let base = TrainConfig {
-        arch: "caffenet8".into(),
-        variant: "jnp".into(),
-        cluster: cluster::preset("cpu-l").unwrap(), // 33 machines, 1 Gbit
-        seed: 0,
-        ..TrainConfig::default()
-    };
-    let arch = rt.manifest().arch(&base.arch)?;
-    let init = ParamSet::init(arch, base.seed);
-    let n = base.conv_machines();
+    // 33 machines, 1 Gbit; eval cadence 64 (the builder default).
+    let base = RunSpec::new("caffenet8").cluster_preset("cpu-l")?.seed(0);
+    let arch = rt.manifest().arch(&base.train.arch)?;
+    let init = ParamSet::init(arch, base.train.seed);
+    let n = base.train.conv_machines();
 
     // The analytic HE model drives the optimizer's starting point.
-    let he = HeParams::derive(&base.cluster, arch, base.batch, 0.5);
+    let he = HeParams::derive(&base.train.cluster, arch, base.train.batch, 0.5);
     println!(
         "cluster {}: t_cc={} t_nc={} t_fc={}; FC saturates at g={}",
-        base.cluster.name,
+        base.train.cluster.name,
         fmt_secs(he.t_cc),
         fmt_secs(he.t_nc),
         fmt_secs(he.t_fc),
         he.smallest_saturating_g(n)
     );
 
-    let mut trainer = EngineTrainer::new(
-        &rt,
-        base,
-        EngineOptions { eval_every: 64, ..Default::default() },
-    );
+    let mut trainer = EngineTrainer::new(&rt, base);
     let opt = AutoOptimizer {
         cold_probe_steps: 32,
         epochs: 3,

@@ -1,0 +1,103 @@
+//! The experiment API (DESIGN.md §API) — one declarative surface behind
+//! every entrypoint, the way the paper frames Omnivore itself: "given a
+//! specification of a convolutional neural network ... minimize the
+//! time to train".
+//!
+//! * [`RunSpec`] — fluent builder + versioned JSON schema unifying the
+//!   train config, engine options, scheduler choice, and baseline
+//!   mapping; `spec.execute(&rt)` runs the whole experiment.
+//! * [`RunOutcome`] — the machine-readable, JSON-roundtrippable result
+//!   (what `omnivore train --json` prints).
+//! * [`RunStore`] — append-only JSONL run log (`runs/runs.jsonl`) with
+//!   `latest()` / `by_tag()` lookup, written by every CLI subcommand.
+//!
+//! Like `engine::report`, the spec/outcome/store types are pure and
+//! compile without the `xla` feature; only `RunSpec::execute` needs the
+//! PJRT runtime.
+
+mod outcome;
+mod spec;
+mod store;
+
+pub use outcome::{RunOutcome, FINAL_WINDOW, OUTCOME_VERSION};
+pub use spec::{RunSpec, SPEC_VERSION};
+pub use store::{RunStore, DEFAULT_RUNS_DIR};
+
+use anyhow::Result;
+
+use crate::engine::SchedulerKind;
+
+/// Artifacts-directory precedence for the CLI: an explicit `--artifacts`
+/// flag wins, then the spec/config file's `artifacts_dir`, then the
+/// default. (Before the API redesign, `--config run.json` parsed
+/// `artifacts_dir` and silently ignored it — the Runtime had already
+/// been built from the flag's default.)
+pub fn resolve_artifacts_dir(explicit: Option<&str>, spec: Option<&str>) -> String {
+    explicit
+        .map(str::to_string)
+        .or_else(|| spec.map(str::to_string))
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+/// Resolve the CLI's scheduler flags. `--threaded` alone is a
+/// deprecated alias of `--scheduler threads`; combining it with a
+/// `--scheduler` that names a DIFFERENT scheduler is a hard error
+/// (historically `--threaded` silently won).
+pub fn scheduler_from_flags(
+    scheduler: Option<&str>,
+    threaded: bool,
+) -> Result<SchedulerKind> {
+    match (scheduler, threaded) {
+        (None, false) => Ok(SchedulerKind::SimClock),
+        (None, true) => Ok(SchedulerKind::OsThreads),
+        (Some(name), false) => SchedulerKind::parse(name),
+        (Some(name), true) => {
+            let kind = SchedulerKind::parse(name)?;
+            if kind == SchedulerKind::OsThreads {
+                Ok(kind)
+            } else {
+                anyhow::bail!(
+                    "--threaded conflicts with --scheduler {name}; drop --threaded \
+                     (it is a deprecated alias of --scheduler threads)"
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_precedence_flag_then_spec_then_default() {
+        assert_eq!(resolve_artifacts_dir(Some("flag"), Some("spec")), "flag");
+        assert_eq!(resolve_artifacts_dir(None, Some("spec")), "spec");
+        assert_eq!(resolve_artifacts_dir(None, None), "artifacts");
+        assert_eq!(resolve_artifacts_dir(Some("flag"), None), "flag");
+    }
+
+    #[test]
+    fn threaded_flag_rules() {
+        // Alone: deprecated alias.
+        assert_eq!(scheduler_from_flags(None, true).unwrap(), SchedulerKind::OsThreads);
+        // Default.
+        assert_eq!(scheduler_from_flags(None, false).unwrap(), SchedulerKind::SimClock);
+        // Explicit scheduler passes through.
+        assert_eq!(
+            scheduler_from_flags(Some("averaging:2"), false).unwrap(),
+            SchedulerKind::AveragingRounds { tau: 2 }
+        );
+        // Redundant but consistent: allowed.
+        assert_eq!(
+            scheduler_from_flags(Some("threads"), true).unwrap(),
+            SchedulerKind::OsThreads
+        );
+        // Conflicting: hard error (used to silently pick threads).
+        let err = scheduler_from_flags(Some("sim"), true).unwrap_err();
+        assert!(err.to_string().contains("conflicts"), "{err}");
+        assert!(scheduler_from_flags(Some("averaging"), true).is_err());
+        // Unknown names still rejected.
+        assert!(scheduler_from_flags(Some("bogus"), false).is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! [`RunOutcome`] — the machine-readable result of executing a
+//! [`RunSpec`]: what the CLI table prints, what the run store persists,
+//! and what the optimizer/benches compare across runs. Versioned and
+//! JSON-roundtrippable (`to_json`/`from_json` are exact inverses for
+//! every field carried).
+
+use anyhow::{bail, Result};
+
+use super::spec::RunSpec;
+use crate::engine::{GroupStats, TrainReport};
+use crate::util::json::Json;
+
+/// Current RunOutcome schema version (same policy as
+/// [`super::spec::SPEC_VERSION`]: newer files are rejected, not
+/// half-parsed).
+pub const OUTCOME_VERSION: u64 = 1;
+
+/// Smoothing window for the headline final-loss/final-acc numbers —
+/// the same window the CLI table and the grid search use.
+pub const FINAL_WINDOW: usize = 32;
+
+/// Everything a completed run reports, summarized from its
+/// [`TrainReport`] plus the spec that produced it.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub outcome_version: u64,
+    /// The spec that produced this outcome (round-trips with it).
+    pub spec: RunSpec,
+    /// Resolved scheduler name (`sim-clock`, `os-threads`, ...).
+    pub scheduler: String,
+    /// Iterations completed.
+    pub iters: u64,
+    /// Mean train loss / accuracy over the last [`FINAL_WINDOW`] records.
+    pub final_loss: f32,
+    pub final_acc: f32,
+    /// Virtual seconds on the modeled cluster / real seconds on this box.
+    pub virtual_time: f64,
+    pub wallclock_secs: f64,
+    pub mean_iter_time: f64,
+    pub diverged: bool,
+    /// Mean/max conv and FC staleness over all publishes.
+    pub conv_staleness_mean: f64,
+    pub conv_staleness_max: u64,
+    pub fc_staleness_mean: f64,
+    pub fc_staleness_max: u64,
+    /// Time-to-accuracy at the spec's `stop_at_train_acc` target (when
+    /// one was set and reached).
+    pub target_acc: Option<f32>,
+    pub iters_to_target: Option<u64>,
+    pub time_to_target: Option<f64>,
+    /// Last held-out evaluation (when `eval_every` > 0).
+    pub final_eval_loss: Option<f32>,
+    pub final_eval_acc: Option<f32>,
+    pub groups: usize,
+    pub group_size: usize,
+    /// Per-group breakdown, verbatim from the report.
+    pub group_stats: Vec<GroupStats>,
+    /// Runtime counters ([`crate::runtime::RuntimeStats`], flattened).
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub compile_secs: f64,
+    pub lit_cache_hits: u64,
+    pub lit_cache_misses: u64,
+    /// Profile-aware HE-model prediction of the steady-state time per
+    /// iteration, when the model could be derived for this spec.
+    pub predicted_iter_time: Option<f64>,
+}
+
+impl RunOutcome {
+    /// Summarize a report. `predicted_iter_time` is the HE prediction
+    /// when available (see [`RunSpec::outcome_of`]).
+    pub fn from_report(
+        spec: &RunSpec,
+        scheduler: &str,
+        report: &TrainReport,
+        predicted_iter_time: Option<f64>,
+    ) -> Self {
+        let target_acc = spec.options.stop_at_train_acc;
+        Self {
+            outcome_version: OUTCOME_VERSION,
+            spec: spec.clone(),
+            scheduler: scheduler.into(),
+            iters: report.records.len() as u64,
+            final_loss: report.final_loss(FINAL_WINDOW),
+            final_acc: report.final_acc(FINAL_WINDOW),
+            virtual_time: report.virtual_time,
+            wallclock_secs: report.wallclock_secs,
+            mean_iter_time: report.mean_iter_time(),
+            diverged: report.diverged(),
+            conv_staleness_mean: report.conv_staleness.mean(),
+            conv_staleness_max: report.conv_staleness.max_staleness,
+            fc_staleness_mean: report.fc_staleness.mean(),
+            fc_staleness_max: report.fc_staleness.max_staleness,
+            target_acc,
+            iters_to_target: target_acc
+                .and_then(|t| report.iters_to_accuracy(t, FINAL_WINDOW)),
+            time_to_target: target_acc
+                .and_then(|t| report.time_to_accuracy(t, FINAL_WINDOW)),
+            final_eval_loss: report.evals.last().map(|e| e.loss),
+            final_eval_acc: report.evals.last().map(|e| e.acc),
+            groups: report.groups,
+            group_size: report.group_size,
+            group_stats: report.group_stats.clone(),
+            executions: report.runtime_stats.executions,
+            execute_secs: report.runtime_stats.execute_secs,
+            compile_secs: report.runtime_stats.compile_secs,
+            lit_cache_hits: report.lit_cache_hits,
+            lit_cache_misses: report.lit_cache_misses,
+            predicted_iter_time,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("outcome_version", Json::Num(self.outcome_version as f64)),
+            ("spec", self.spec.to_json()),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("final_loss", num_to_json(self.final_loss as f64)),
+            ("final_acc", num_to_json(self.final_acc as f64)),
+            ("virtual_time", num_to_json(self.virtual_time)),
+            ("wallclock_secs", num_to_json(self.wallclock_secs)),
+            ("mean_iter_time", num_to_json(self.mean_iter_time)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("conv_staleness_mean", num_to_json(self.conv_staleness_mean)),
+            ("conv_staleness_max", Json::Num(self.conv_staleness_max as f64)),
+            ("fc_staleness_mean", num_to_json(self.fc_staleness_mean)),
+            ("fc_staleness_max", Json::Num(self.fc_staleness_max as f64)),
+            ("groups", Json::Num(self.groups as f64)),
+            ("group_size", Json::Num(self.group_size as f64)),
+            (
+                "group_stats",
+                Json::Arr(self.group_stats.iter().map(group_stats_to_json).collect()),
+            ),
+            ("executions", Json::Num(self.executions as f64)),
+            ("execute_secs", Json::Num(self.execute_secs)),
+            ("compile_secs", Json::Num(self.compile_secs)),
+            ("lit_cache_hits", Json::Num(self.lit_cache_hits as f64)),
+            ("lit_cache_misses", Json::Num(self.lit_cache_misses as f64)),
+        ];
+        if let Some(t) = self.target_acc {
+            fields.push(("target_acc", Json::Num(t as f64)));
+        }
+        if let Some(i) = self.iters_to_target {
+            fields.push(("iters_to_target", Json::Num(i as f64)));
+        }
+        if let Some(t) = self.time_to_target {
+            fields.push(("time_to_target", num_to_json(t)));
+        }
+        if let Some(l) = self.final_eval_loss {
+            fields.push(("final_eval_loss", num_to_json(l as f64)));
+        }
+        if let Some(a) = self.final_eval_acc {
+            fields.push(("final_eval_acc", num_to_json(a as f64)));
+        }
+        if let Some(p) = self.predicted_iter_time {
+            fields.push(("predicted_iter_time", num_to_json(p)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let version = v.get("outcome_version")?.as_usize()? as u64;
+        if version > OUTCOME_VERSION {
+            bail!(
+                "RunOutcome version {version} is newer than this binary's \
+                 v{OUTCOME_VERSION}; refusing to half-parse it"
+            );
+        }
+        for key in v.as_obj()?.keys() {
+            if !OUTCOME_FIELDS.contains(&key.as_str()) {
+                bail!("unknown field {key:?} in RunOutcome (schema v{OUTCOME_VERSION})");
+            }
+        }
+        let group_stats = v
+            .get("group_stats")?
+            .as_arr()?
+            .iter()
+            .map(group_stats_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            outcome_version: OUTCOME_VERSION,
+            spec: RunSpec::from_json(v.get("spec")?)?,
+            scheduler: v.get("scheduler")?.as_str()?.to_string(),
+            iters: v.get("iters")?.as_usize()? as u64,
+            final_loss: as_f32(v.get("final_loss")?)?,
+            final_acc: as_f32(v.get("final_acc")?)?,
+            virtual_time: num_from_json(v.get("virtual_time")?)?,
+            wallclock_secs: num_from_json(v.get("wallclock_secs")?)?,
+            mean_iter_time: num_from_json(v.get("mean_iter_time")?)?,
+            diverged: v.get("diverged")?.as_bool()?,
+            conv_staleness_mean: num_from_json(v.get("conv_staleness_mean")?)?,
+            conv_staleness_max: v.get("conv_staleness_max")?.as_usize()? as u64,
+            fc_staleness_mean: num_from_json(v.get("fc_staleness_mean")?)?,
+            fc_staleness_max: v.get("fc_staleness_max")?.as_usize()? as u64,
+            target_acc: v.opt("target_acc").map(as_f32).transpose()?,
+            iters_to_target: v
+                .opt("iters_to_target")
+                .map(|x| Ok::<u64, anyhow::Error>(x.as_usize()? as u64))
+                .transpose()?,
+            time_to_target: v.opt("time_to_target").map(num_from_json).transpose()?,
+            final_eval_loss: v.opt("final_eval_loss").map(as_f32).transpose()?,
+            final_eval_acc: v.opt("final_eval_acc").map(as_f32).transpose()?,
+            groups: v.get("groups")?.as_usize()?,
+            group_size: v.get("group_size")?.as_usize()?,
+            group_stats,
+            executions: v.get("executions")?.as_usize()? as u64,
+            execute_secs: v.get("execute_secs")?.as_f64()?,
+            compile_secs: v.get("compile_secs")?.as_f64()?,
+            lit_cache_hits: v.get("lit_cache_hits")?.as_usize()? as u64,
+            lit_cache_misses: v.get("lit_cache_misses")?.as_usize()? as u64,
+            predicted_iter_time: v
+                .opt("predicted_iter_time")
+                .map(num_from_json)
+                .transpose()?,
+        })
+    }
+
+    /// The spec tag this outcome was recorded under, if any.
+    pub fn tag(&self) -> Option<&str> {
+        self.spec.tag.as_deref()
+    }
+}
+
+const OUTCOME_FIELDS: &[&str] = &[
+    "outcome_version",
+    "spec",
+    "scheduler",
+    "iters",
+    "final_loss",
+    "final_acc",
+    "virtual_time",
+    "wallclock_secs",
+    "mean_iter_time",
+    "diverged",
+    "conv_staleness_mean",
+    "conv_staleness_max",
+    "fc_staleness_mean",
+    "fc_staleness_max",
+    "target_acc",
+    "iters_to_target",
+    "time_to_target",
+    "final_eval_loss",
+    "final_eval_acc",
+    "groups",
+    "group_size",
+    "group_stats",
+    "executions",
+    "execute_secs",
+    "compile_secs",
+    "lit_cache_hits",
+    "lit_cache_misses",
+    "predicted_iter_time",
+];
+
+/// Non-finite-safe number encoding: a diverged run reports
+/// `final_loss = inf`, and bare `inf`/`nan` are not valid JSON — encode
+/// them as tagged strings so the run store can persist failures too.
+fn num_to_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn num_from_json(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("bad number {other:?}"),
+        },
+        other => bail!("not a number: {other:?}"),
+    }
+}
+
+fn as_f32(v: &Json) -> Result<f32> {
+    Ok(num_from_json(v)? as f32)
+}
+
+fn group_stats_to_json(s: &GroupStats) -> Json {
+    Json::obj(vec![
+        ("group", Json::Num(s.group as f64)),
+        ("device", Json::Str(s.device.clone())),
+        ("iters", Json::Num(s.iters as f64)),
+        ("mean_conv_staleness", Json::Num(s.mean_conv_staleness)),
+        ("mean_fc_staleness", Json::Num(s.mean_fc_staleness)),
+        ("mean_iter_gap", Json::Num(s.mean_iter_gap)),
+        ("batch_share", Json::Num(s.batch_share as f64)),
+        ("predicted_iter_gap", Json::Num(s.predicted_iter_gap)),
+    ])
+}
+
+fn group_stats_from_json(v: &Json) -> Result<GroupStats> {
+    Ok(GroupStats {
+        group: v.get("group")?.as_usize()?,
+        device: v.get("device")?.as_str()?.to_string(),
+        iters: v.get("iters")?.as_usize()? as u64,
+        mean_conv_staleness: v.get("mean_conv_staleness")?.as_f64()?,
+        mean_fc_staleness: v.get("mean_fc_staleness")?.as_f64()?,
+        mean_iter_gap: v.get("mean_iter_gap")?.as_f64()?,
+        batch_share: v.get("batch_share")?.as_usize()?,
+        predicted_iter_gap: v.get("predicted_iter_gap")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::StalenessStats;
+    use crate::engine::{EvalRecord, IterRecord};
+    use crate::runtime::RuntimeStats;
+
+    /// A synthetic report exercising every field the outcome carries.
+    fn report() -> TrainReport {
+        let records: Vec<IterRecord> = (0..40)
+            .map(|i| IterRecord {
+                seq: i,
+                group: (i % 2) as usize,
+                local_index: i / 2,
+                vtime: 0.5 * (i + 1) as f64,
+                loss: 2.0 - 0.04 * i as f32,
+                acc: 0.02 * i as f32,
+                conv_staleness: i % 3,
+                fc_staleness: 0,
+            })
+            .collect();
+        let mut r = TrainReport {
+            records,
+            evals: vec![EvalRecord { seq: 32, vtime: 16.0, loss: 0.8, acc: 0.55 }],
+            conv_staleness: StalenessStats {
+                publishes: 40,
+                total_staleness: 40,
+                max_staleness: 2,
+                histogram: vec![],
+            },
+            fc_staleness: StalenessStats::default(),
+            virtual_time: 20.0,
+            wallclock_secs: 1.25,
+            runtime_stats: RuntimeStats {
+                executions: 123,
+                execute_secs: 0.75,
+                compile_secs: 0.25,
+            },
+            lit_cache_hits: 7,
+            lit_cache_misses: 3,
+            proj_trace: vec![],
+            groups: 2,
+            group_size: 4,
+            group_stats: vec![],
+        };
+        r.recompute_group_stats(&["gpu".into(), "cpu".into()]);
+        r.annotate_group_plan(&[24, 8], &[0.4, 0.6]);
+        r
+    }
+
+    fn outcome() -> RunOutcome {
+        let spec = RunSpec::new("lenet").groups(2).stop_at_train_acc(0.5).tag("t");
+        RunOutcome::from_report(&spec, "sim-clock", &report(), Some(0.55))
+    }
+
+    #[test]
+    fn from_report_summarizes_the_table_numbers() {
+        let rep = report();
+        let o = outcome();
+        assert_eq!(o.iters, 40);
+        assert_eq!(o.final_loss, rep.final_loss(FINAL_WINDOW));
+        assert_eq!(o.final_acc, rep.final_acc(FINAL_WINDOW));
+        assert_eq!(o.virtual_time, 20.0);
+        assert_eq!(o.mean_iter_time, rep.mean_iter_time());
+        assert_eq!(o.conv_staleness_mean, 1.0);
+        assert_eq!(o.conv_staleness_max, 2);
+        assert_eq!(o.target_acc, Some(0.5));
+        assert_eq!(o.iters_to_target, rep.iters_to_accuracy(0.5, FINAL_WINDOW));
+        assert_eq!(o.time_to_target, rep.time_to_accuracy(0.5, FINAL_WINDOW));
+        assert_eq!(o.final_eval_acc, Some(0.55));
+        assert_eq!(o.group_stats.len(), 2);
+        assert_eq!(o.executions, 123);
+        assert!(!o.diverged);
+    }
+
+    #[test]
+    fn json_roundtrip_pins_every_field() {
+        let o = outcome();
+        let j = o.to_json().dump();
+        let o2 = RunOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(o2.outcome_version, OUTCOME_VERSION);
+        assert_eq!(o2.scheduler, o.scheduler);
+        assert_eq!(o2.iters, o.iters);
+        assert_eq!(o2.final_loss, o.final_loss);
+        assert_eq!(o2.final_acc, o.final_acc);
+        assert_eq!(o2.virtual_time, o.virtual_time);
+        assert_eq!(o2.wallclock_secs, o.wallclock_secs);
+        assert_eq!(o2.mean_iter_time, o.mean_iter_time);
+        assert_eq!(o2.diverged, o.diverged);
+        assert_eq!(o2.conv_staleness_mean, o.conv_staleness_mean);
+        assert_eq!(o2.conv_staleness_max, o.conv_staleness_max);
+        assert_eq!(o2.fc_staleness_mean, o.fc_staleness_mean);
+        assert_eq!(o2.fc_staleness_max, o.fc_staleness_max);
+        assert_eq!(o2.target_acc, o.target_acc);
+        assert_eq!(o2.iters_to_target, o.iters_to_target);
+        assert_eq!(o2.time_to_target, o.time_to_target);
+        assert_eq!(o2.final_eval_loss, o.final_eval_loss);
+        assert_eq!(o2.final_eval_acc, o.final_eval_acc);
+        assert_eq!(o2.groups, o.groups);
+        assert_eq!(o2.group_size, o.group_size);
+        assert_eq!(o2.executions, o.executions);
+        assert_eq!(o2.execute_secs, o.execute_secs);
+        assert_eq!(o2.compile_secs, o.compile_secs);
+        assert_eq!(o2.lit_cache_hits, o.lit_cache_hits);
+        assert_eq!(o2.lit_cache_misses, o.lit_cache_misses);
+        assert_eq!(o2.predicted_iter_time, o.predicted_iter_time);
+        assert_eq!(o2.tag(), Some("t"));
+        assert_eq!(o2.group_stats.len(), o.group_stats.len());
+        for (a, b) in o2.group_stats.iter().zip(&o.group_stats) {
+            assert_eq!(a.group, b.group);
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.mean_conv_staleness, b.mean_conv_staleness);
+            assert_eq!(a.mean_fc_staleness, b.mean_fc_staleness);
+            assert_eq!(a.mean_iter_gap, b.mean_iter_gap);
+            assert_eq!(a.batch_share, b.batch_share);
+            assert_eq!(a.predicted_iter_gap, b.predicted_iter_gap);
+        }
+        // The embedded spec round-trips too.
+        assert_eq!(o2.spec.train.arch, "lenet");
+        assert_eq!(o2.spec.options.stop_at_train_acc, Some(0.5));
+    }
+
+    #[test]
+    fn diverged_outcome_with_infinite_loss_roundtrips() {
+        // An empty/diverged report has final_loss = inf; bare `inf` is
+        // not valid JSON, so the tagged-string encoding must carry it.
+        let spec = RunSpec::new("lenet");
+        let o = RunOutcome::from_report(&spec, "sim-clock", &TrainReport::default(), None);
+        assert!(o.final_loss.is_infinite());
+        let j = o.to_json().dump();
+        let o2 = RunOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(o2.final_loss.is_infinite() && o2.final_loss > 0.0);
+        assert_eq!(o2.iters, 0);
+    }
+
+    #[test]
+    fn future_outcome_version_rejected() {
+        let j = outcome().to_json().dump().replacen(
+            &format!("\"outcome_version\":{OUTCOME_VERSION}"),
+            &format!("\"outcome_version\":{}", OUTCOME_VERSION + 1),
+            1,
+        );
+        let err = RunOutcome::from_json(&Json::parse(&j).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+    }
+
+    #[test]
+    fn unknown_outcome_field_rejected() {
+        let j = outcome()
+            .to_json()
+            .dump()
+            .replacen("\"iters\":", "\"itres\":1,\"iters\":", 1);
+        assert!(RunOutcome::from_json(&Json::parse(&j).unwrap()).is_err());
+    }
+}

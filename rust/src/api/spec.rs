@@ -1,0 +1,701 @@
+//! [`RunSpec`] — the one experiment description every entrypoint speaks.
+//!
+//! A spec unifies what used to be hand-wired at 25+ call sites: the
+//! [`TrainConfig`], the [`EngineOptions`], the scheduler choice, and the
+//! optional baseline-system mapping, behind a fluent builder and a
+//! versioned JSON schema (`spec_version`, unknown fields rejected,
+//! legacy bare-`TrainConfig` files still accepted). `execute` runs the
+//! whole thing in one call and returns a [`RunOutcome`].
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::BaselineSystem;
+use crate::config::{ClusterSpec, FcMapping, Hyper, Strategy, TrainConfig};
+use crate::engine::{EngineOptions, SchedulerKind};
+use crate::optimizer::he_model::HeParams;
+use crate::sim::ServiceDist;
+use crate::util::json::Json;
+
+/// Current RunSpec schema version. Files written by a NEWER omnivore
+/// (higher version) are rejected rather than half-parsed; files with no
+/// `spec_version` at all are treated as legacy bare `TrainConfig`s.
+pub const SPEC_VERSION: u64 = 1;
+
+/// One complete experiment description: what to train, how to schedule
+/// it, which knobs to honor, and (optionally) which competitor system's
+/// strategy envelope to emulate.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Schema version this spec was built against (= [`SPEC_VERSION`]).
+    pub spec_version: u64,
+    /// The training problem + strategy (model, cluster, hyper, steps).
+    pub train: TrainConfig,
+    /// Engine knobs honored identically by every scheduler.
+    pub options: EngineOptions,
+    /// Which scheduler executes the run.
+    pub scheduler: SchedulerKind,
+    /// Emulate a competitor system's strategy envelope
+    /// ([`BaselineSystem::config`] is applied over `train` at execute
+    /// time; see [`Self::effective_config`]).
+    pub baseline: Option<BaselineSystem>,
+    /// Free-form label for run-store lookup ([`super::RunStore::by_tag`]).
+    pub tag: Option<String>,
+}
+
+impl Default for RunSpec {
+    /// Defaults identical to the CLI's `train` defaults: caffenet8/jnp
+    /// on cpu-s, synchronous, lr 0.01 / momentum 0.9, 256 steps, seed 0,
+    /// merged FC, sim-clock scheduler, eval every 64 iterations.
+    fn default() -> Self {
+        Self {
+            spec_version: SPEC_VERSION,
+            train: TrainConfig { steps: 256, ..TrainConfig::default() },
+            options: EngineOptions { eval_every: 64, ..EngineOptions::default() },
+            scheduler: SchedulerKind::SimClock,
+            baseline: None,
+            tag: None,
+        }
+    }
+}
+
+impl RunSpec {
+    /// Start a spec for `arch` from the CLI defaults.
+    pub fn new(arch: &str) -> Self {
+        let mut s = Self::default();
+        s.train.arch = arch.into();
+        s
+    }
+
+    // -- fluent builder ----------------------------------------------------
+
+    pub fn variant(mut self, v: &str) -> Self {
+        self.train.variant = v.into();
+        self
+    }
+
+    pub fn cluster(mut self, c: ClusterSpec) -> Self {
+        self.train.cluster = c;
+        self
+    }
+
+    /// Cluster by preset name (`cpu-s`, `cpu-l`, `gpu-s`, `hetero-s`, ...).
+    pub fn cluster_preset(mut self, name: &str) -> Result<Self> {
+        self.train.cluster = crate::config::cluster::preset(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown cluster preset {name:?}"))?;
+        Ok(self)
+    }
+
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        self.train.strategy = s;
+        self
+    }
+
+    /// `g` compute groups (the paper's intermediate strategies).
+    pub fn groups(self, g: usize) -> Self {
+        self.strategy(Strategy::Groups(g))
+    }
+
+    /// Fully synchronous (one group).
+    pub fn sync(self) -> Self {
+        self.strategy(Strategy::Sync)
+    }
+
+    pub fn hyper(mut self, h: Hyper) -> Self {
+        self.train.hyper = h;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.train.hyper.lr = lr;
+        self
+    }
+
+    pub fn momentum(mut self, mu: f32) -> Self {
+        self.train.hyper.momentum = mu;
+        self
+    }
+
+    pub fn lambda(mut self, lambda: f32) -> Self {
+        self.train.hyper.lambda = lambda;
+        self
+    }
+
+    pub fn batch(mut self, b: usize) -> Self {
+        self.train.batch = b;
+        self
+    }
+
+    pub fn steps(mut self, n: usize) -> Self {
+        self.train.steps = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.train.seed = s;
+        self
+    }
+
+    pub fn fc_mapping(mut self, m: FcMapping) -> Self {
+        self.train.fc_mapping = m;
+        self
+    }
+
+    /// MXNet/DistBelief-style unmerged FC servers (paper Fig 16a).
+    pub fn unmerged_fc(self) -> Self {
+        self.fc_mapping(FcMapping::Unmerged)
+    }
+
+    /// FLOPS-proportional batch partitioning on heterogeneous clusters.
+    pub fn dynamic_batch(mut self, on: bool) -> Self {
+        self.train.dynamic_batch = on;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.train.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn scheduler(mut self, k: SchedulerKind) -> Self {
+        self.scheduler = k;
+        self
+    }
+
+    /// Scheduler by name (`sim`, `threads`, `averaging[:TAU]`).
+    pub fn scheduler_name(mut self, name: &str) -> Result<Self> {
+        self.scheduler = SchedulerKind::parse(name)?;
+        Ok(self)
+    }
+
+    pub fn baseline(mut self, b: BaselineSystem) -> Self {
+        self.baseline = Some(b);
+        self
+    }
+
+    /// Baseline by name (`omnivore`, `mxnet-sync`, `singa-g4`, ...).
+    pub fn baseline_name(mut self, name: &str) -> Result<Self> {
+        self.baseline = Some(BaselineSystem::parse(name)?);
+        Ok(self)
+    }
+
+    pub fn tag(mut self, t: &str) -> Self {
+        self.tag = Some(t.into());
+        self
+    }
+
+    pub fn options(mut self, o: EngineOptions) -> Self {
+        self.options = o;
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.options.eval_every = n;
+        self
+    }
+
+    pub fn utilization(mut self, u: f64) -> Self {
+        self.options.utilization = u;
+        self
+    }
+
+    pub fn dist(mut self, d: ServiceDist) -> Self {
+        self.options.dist = d;
+        self
+    }
+
+    pub fn record_proj(mut self, on: bool) -> Self {
+        self.options.record_proj = on;
+        self
+    }
+
+    pub fn stop_at_train_acc(mut self, target: f32) -> Self {
+        self.options.stop_at_train_acc = Some(target);
+        self
+    }
+
+    pub fn max_virtual_time(mut self, secs: f64) -> Self {
+        self.options.max_virtual_time = Some(secs);
+        self
+    }
+
+    /// Measured-timing override of the derived HE parameters.
+    pub fn he_override(mut self, he: HeParams) -> Self {
+        self.options.he_override = Some(he);
+        self
+    }
+
+    // -- semantics ---------------------------------------------------------
+
+    /// The config the engines actually run: `train` with the baseline
+    /// system's strategy envelope applied over it (identity when no
+    /// baseline is set).
+    pub fn effective_config(&self) -> TrainConfig {
+        match self.baseline {
+            Some(system) => system.config(&self.train),
+            None => self.train.clone(),
+        }
+    }
+
+    // -- JSON schema -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("spec_version", Json::Num(self.spec_version as f64)),
+            ("train", self.train.to_json()),
+            ("options", options_to_json(&self.options)),
+            ("scheduler", Json::Str(self.scheduler.spec_name())),
+        ];
+        if let Some(b) = self.baseline {
+            fields.push(("baseline", Json::Str(b.label())));
+        }
+        if let Some(t) = &self.tag {
+            fields.push(("tag", Json::Str(t.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a spec. Three accepted shapes:
+    /// * v1 RunSpec object (`spec_version` = 1; unknown fields rejected);
+    /// * future versions — rejected with a clear error, never half-read;
+    /// * legacy bare `TrainConfig` object (no `spec_version`, no
+    ///   `train`) — wrapped with the CLI-default options/scheduler, so
+    ///   every pre-API `--config run.json` file keeps working.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if v.opt("spec_version").is_none() && v.opt("train").is_none() {
+            // Legacy TrainConfig file (lenient, as it always was).
+            let train = TrainConfig::from_json(v)
+                .context("parsing legacy TrainConfig-format spec")?;
+            return Ok(Self { train, ..Self::default() });
+        }
+        let version = v.get("spec_version")?.as_usize()? as u64;
+        if version > SPEC_VERSION {
+            bail!(
+                "RunSpec version {version} is newer than this binary's \
+                 v{SPEC_VERSION}; refusing to half-parse it"
+            );
+        }
+        reject_unknown(v, "RunSpec", TOP_FIELDS)?;
+        let train_json = v.get("train")?;
+        reject_unknown(train_json, "RunSpec.train", TRAIN_FIELDS)?;
+        if let Some(h) = train_json.opt("hyper") {
+            reject_unknown(h, "RunSpec.train.hyper", HYPER_FIELDS)?;
+        }
+        // Cluster may be a preset name string or a full object; only the
+        // object form has fields to check (and its group_profiles items
+        // may themselves be bare kind strings).
+        if let Some(c @ Json::Obj(_)) = train_json.opt("cluster") {
+            reject_unknown(c, "RunSpec.train.cluster", CLUSTER_FIELDS)?;
+            if let Some(Json::Arr(profiles)) = c.opt("group_profiles") {
+                for p in profiles.iter().filter(|p| matches!(p, Json::Obj(_))) {
+                    reject_unknown(
+                        p,
+                        "RunSpec.train.cluster.group_profiles[]",
+                        PROFILE_FIELDS,
+                    )?;
+                }
+            }
+        }
+        let train = TrainConfig::from_json(train_json)?;
+        let options = match v.opt("options") {
+            Some(o) => options_from_json(o)?,
+            None => RunSpec::default().options,
+        };
+        let scheduler = match v.opt("scheduler") {
+            Some(s) => SchedulerKind::parse(s.as_str()?)?,
+            None => SchedulerKind::SimClock,
+        };
+        let baseline = v
+            .opt("baseline")
+            .map(|b| BaselineSystem::parse(b.as_str()?))
+            .transpose()?;
+        let tag = v.opt("tag").map(|t| t.as_str().map(String::from)).transpose()?;
+        Ok(Self { spec_version: SPEC_VERSION, train, options, scheduler, baseline, tag })
+    }
+
+    /// Load a spec (or legacy TrainConfig) from a JSON file.
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {path}"))?;
+        Self::from_json(&Json::parse(&text).with_context(|| format!("parsing {path}"))?)
+    }
+}
+
+const TOP_FIELDS: &[&str] =
+    &["spec_version", "train", "options", "scheduler", "baseline", "tag"];
+const TRAIN_FIELDS: &[&str] = &[
+    "arch",
+    "variant",
+    "batch",
+    "strategy",
+    "fc_mapping",
+    "hyper",
+    "cluster",
+    "steps",
+    "seed",
+    "artifacts_dir",
+    "dynamic_batch",
+];
+const HYPER_FIELDS: &[&str] = &["lr", "momentum", "lambda"];
+const CLUSTER_FIELDS: &[&str] = &[
+    "name",
+    "machines",
+    "tflops_per_machine",
+    "network_gbits",
+    "device",
+    "group_profiles",
+];
+const PROFILE_FIELDS: &[&str] = &["kind", "conv_speed", "fc_speed"];
+const OPTION_FIELDS: &[&str] = &[
+    "eval_every",
+    "utilization",
+    "dist",
+    "record_proj",
+    "stop_at_train_acc",
+    "max_virtual_time",
+    "he_override",
+];
+const HE_FIELDS: &[&str] = &["t_cc", "t_nc", "t_fc"];
+
+/// Unknown-field rejection: a typo'd knob must fail loudly, not run the
+/// experiment without it.
+fn reject_unknown(v: &Json, ctx: &str, known: &[&str]) -> Result<()> {
+    for key in v.as_obj()?.keys() {
+        if !known.contains(&key.as_str()) {
+            bail!("unknown field {key:?} in {ctx} (schema v{SPEC_VERSION})");
+        }
+    }
+    Ok(())
+}
+
+fn options_to_json(o: &EngineOptions) -> Json {
+    let dist = match o.dist {
+        ServiceDist::Deterministic => Json::Str("deterministic".into()),
+        ServiceDist::Exponential => Json::Str("exponential".into()),
+        ServiceDist::Lognormal { cv } => Json::obj(vec![
+            ("kind", Json::Str("lognormal".into())),
+            ("cv", Json::Num(cv)),
+        ]),
+    };
+    let mut fields = vec![
+        ("eval_every", Json::Num(o.eval_every as f64)),
+        ("utilization", Json::Num(o.utilization)),
+        ("dist", dist),
+        ("record_proj", Json::Bool(o.record_proj)),
+    ];
+    if let Some(a) = o.stop_at_train_acc {
+        fields.push(("stop_at_train_acc", Json::Num(a as f64)));
+    }
+    if let Some(t) = o.max_virtual_time {
+        fields.push(("max_virtual_time", Json::Num(t)));
+    }
+    if let Some(he) = o.he_override {
+        fields.push((
+            "he_override",
+            Json::obj(vec![
+                ("t_cc", Json::Num(he.t_cc)),
+                ("t_nc", Json::Num(he.t_nc)),
+                ("t_fc", Json::Num(he.t_fc)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+fn options_from_json(v: &Json) -> Result<EngineOptions> {
+    reject_unknown(v, "RunSpec.options", OPTION_FIELDS)?;
+    // Unset knobs in a partial "options" object keep the same CLI
+    // defaults as omitting "options" entirely (eval cadence included).
+    let d = RunSpec::default().options;
+    let dist = match v.opt("dist") {
+        None => d.dist,
+        Some(Json::Str(s)) => match s.as_str() {
+            "deterministic" => ServiceDist::Deterministic,
+            "exponential" => ServiceDist::Exponential,
+            other => bail!("unknown service dist {other:?}"),
+        },
+        Some(obj) => {
+            reject_unknown(obj, "RunSpec.options.dist", &["kind", "cv"])?;
+            let kind = obj.get("kind")?.as_str()?;
+            if kind != "lognormal" {
+                bail!("unknown service dist kind {kind:?}");
+            }
+            ServiceDist::Lognormal { cv: obj.get("cv")?.as_f64()? }
+        }
+    };
+    let he_override = v
+        .opt("he_override")
+        .map(|h| -> Result<HeParams> {
+            reject_unknown(h, "RunSpec.options.he_override", HE_FIELDS)?;
+            Ok(HeParams::measured(
+                h.get("t_cc")?.as_f64()?,
+                h.get("t_nc")?.as_f64()?,
+                h.get("t_fc")?.as_f64()?,
+            ))
+        })
+        .transpose()?;
+    Ok(EngineOptions {
+        eval_every: v
+            .opt("eval_every")
+            .map(|x| x.as_usize())
+            .transpose()?
+            .unwrap_or(d.eval_every),
+        utilization: v
+            .opt("utilization")
+            .map(|x| x.as_f64())
+            .transpose()?
+            .unwrap_or(d.utilization),
+        dist,
+        record_proj: v
+            .opt("record_proj")
+            .map(|x| x.as_bool())
+            .transpose()?
+            .unwrap_or(d.record_proj),
+        stop_at_train_acc: v
+            .opt("stop_at_train_acc")
+            .map(|x| Ok::<f32, anyhow::Error>(x.as_f64()? as f32))
+            .transpose()?,
+        max_virtual_time: v.opt("max_virtual_time").map(|x| x.as_f64()).transpose()?,
+        he_override,
+    })
+}
+
+// -- execution (the one-call facade) ----------------------------------------
+
+#[cfg(feature = "xla")]
+impl RunSpec {
+    /// Cold-start parameters for this spec: initialized from the
+    /// runtime's manifest at the spec's seed — the one definition of
+    /// "from scratch" shared by [`Self::execute`] and the CLI.
+    pub fn cold_init(&self, rt: &crate::runtime::Runtime) -> Result<crate::model::ParamSet> {
+        let cfg = self.effective_config();
+        Ok(crate::model::ParamSet::init(rt.manifest().arch(&cfg.arch)?, cfg.seed))
+    }
+
+    /// Run the experiment end to end: init parameters from the runtime's
+    /// manifest, execute under the spec's scheduler, and wrap the report
+    /// in a [`RunOutcome`].
+    pub fn execute(&self, rt: &crate::runtime::Runtime) -> Result<super::RunOutcome> {
+        let init = self.cold_init(rt)?;
+        Ok(self.execute_from(rt, init)?.0)
+    }
+
+    /// Like [`Self::execute`] but starting from explicit parameters
+    /// (warm starts, optimizer epochs) and also returning the full
+    /// [`crate::engine::TrainReport`] and final parameters — what the
+    /// figure benches plot series from.
+    pub fn execute_from(
+        &self,
+        rt: &crate::runtime::Runtime,
+        params: crate::model::ParamSet,
+    ) -> Result<(super::RunOutcome, crate::engine::TrainReport, crate::model::ParamSet)>
+    {
+        let (report, params) = self.scheduler.run(rt, self, params)?;
+        let outcome = self.outcome_of(rt, &report);
+        Ok((outcome, report, params))
+    }
+
+    /// Wrap an already-produced report for this spec (used by the
+    /// optimizer subcommands, which drive training through
+    /// [`crate::optimizer::EngineTrainer`] and still want a stored
+    /// outcome per run).
+    pub fn outcome_of(
+        &self,
+        rt: &crate::runtime::Runtime,
+        report: &crate::engine::TrainReport,
+    ) -> super::RunOutcome {
+        let cfg = self.effective_config();
+        // HE prediction when available — never fails the run.
+        let predicted = crate::engine::profiled_he(rt, &cfg, &self.options)
+            .ok()
+            .map(|phe| phe.iteration_time(cfg.groups(), cfg.conv_machines()));
+        super::RunOutcome::from_report(self, self.scheduler.name(), report, predicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_match_cli() {
+        let s = RunSpec::default();
+        assert_eq!(s.spec_version, SPEC_VERSION);
+        assert_eq!(s.train.arch, "caffenet8");
+        assert_eq!(s.train.variant, "jnp");
+        assert_eq!(s.train.cluster.name, "cpu-s");
+        assert_eq!(s.train.strategy, Strategy::Sync);
+        assert_eq!(s.train.steps, 256);
+        assert_eq!(s.train.hyper.lr, 0.01);
+        assert_eq!(s.train.hyper.momentum, 0.9);
+        assert_eq!(s.options.eval_every, 64);
+        assert_eq!(s.scheduler, SchedulerKind::SimClock);
+        assert!(s.baseline.is_none() && s.tag.is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let s = RunSpec::new("lenet")
+            .variant("jnp")
+            .cluster_preset("hetero-s")
+            .unwrap()
+            .groups(4)
+            .lr(0.03)
+            .momentum(0.6)
+            .batch(32)
+            .steps(77)
+            .seed(9)
+            .unmerged_fc()
+            .dynamic_batch(true)
+            .scheduler(SchedulerKind::AveragingRounds { tau: 4 })
+            .baseline(BaselineSystem::MxnetAsync)
+            .tag("roundtrip")
+            .eval_every(16)
+            .dist(ServiceDist::Exponential)
+            .record_proj(true)
+            .stop_at_train_acc(0.9)
+            .max_virtual_time(120.0)
+            .he_override(HeParams::measured(1.0, 0.5, 0.25));
+        let j = s.to_json().dump();
+        let s2 = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s2.spec_version, SPEC_VERSION);
+        assert_eq!(s2.train.arch, "lenet");
+        assert_eq!(s2.train.cluster, s.train.cluster);
+        assert_eq!(s2.train.strategy, Strategy::Groups(4));
+        assert_eq!(s2.train.hyper, s.train.hyper);
+        assert_eq!(s2.train.batch, 32);
+        assert_eq!(s2.train.steps, 77);
+        assert_eq!(s2.train.seed, 9);
+        assert_eq!(s2.train.fc_mapping, FcMapping::Unmerged);
+        assert!(s2.train.dynamic_batch);
+        assert_eq!(s2.scheduler, SchedulerKind::AveragingRounds { tau: 4 });
+        assert_eq!(s2.baseline, Some(BaselineSystem::MxnetAsync));
+        assert_eq!(s2.tag.as_deref(), Some("roundtrip"));
+        assert_eq!(s2.options.eval_every, 16);
+        assert_eq!(s2.options.dist, ServiceDist::Exponential);
+        assert!(s2.options.record_proj);
+        assert_eq!(s2.options.stop_at_train_acc, Some(0.9));
+        assert_eq!(s2.options.max_virtual_time, Some(120.0));
+        let he = s2.options.he_override.unwrap();
+        assert_eq!((he.t_cc, he.t_nc, he.t_fc), (1.0, 0.5, 0.25));
+    }
+
+    #[test]
+    fn lognormal_dist_roundtrips() {
+        let s = RunSpec::default().dist(ServiceDist::Lognormal { cv: 0.11 });
+        let j = s.to_json().dump();
+        let s2 = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s2.options.dist, ServiceDist::Lognormal { cv: 0.11 });
+    }
+
+    #[test]
+    fn future_spec_version_rejected() {
+        let j = format!(
+            r#"{{"spec_version":{},"train":{}}}"#,
+            SPEC_VERSION + 1,
+            TrainConfig::default().to_json().dump()
+        );
+        let err = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+    }
+
+    #[test]
+    fn unknown_fields_rejected_at_every_level() {
+        let good = RunSpec::default().to_json().dump();
+        for (needle, injected) in [
+            ("\"train\":", "\"train\":"), // top-level: add a sibling typo key
+            ("\"eval_every\":", "\"eval_evry\":1,\"eval_every\":"),
+            ("\"lr\":", "\"learning_rate\":1,\"lr\":"),
+            ("\"steps\":", "\"stepz\":1,\"steps\":"),
+        ] {
+            let bad = if needle == "\"train\":" {
+                good.replacen("\"train\":", "\"typo_knob\":1,\"train\":", 1)
+            } else {
+                good.replacen(needle, injected, 1)
+            };
+            let err = RunSpec::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+            assert!(err.to_string().contains("unknown field"), "{bad} -> {err}");
+        }
+    }
+
+    #[test]
+    fn partial_options_keep_cli_defaults() {
+        // A spec file with only SOME option knobs set keeps the same
+        // defaults for the rest as omitting "options" entirely — in
+        // particular eval_every stays at the CLI cadence of 64 instead
+        // of silently disabling evaluation.
+        let j = format!(
+            r#"{{"spec_version":1,"train":{},"options":{{"utilization":0.6}}}}"#,
+            TrainConfig::default().to_json().dump()
+        );
+        let s = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s.options.utilization, 0.6);
+        assert_eq!(s.options.eval_every, RunSpec::default().options.eval_every);
+    }
+
+    #[test]
+    fn unknown_fields_in_dist_and_cluster_rejected() {
+        // DESIGN.md §API: unknown fields at ANY level of a versioned
+        // spec fail loudly.
+        let dist = RunSpec::default().to_json().dump().replacen(
+            "\"cv\":",
+            "\"cvv\":0.5,\"cv\":",
+            1,
+        );
+        assert!(RunSpec::from_json(&Json::parse(&dist).unwrap()).is_err());
+        let cluster = RunSpec::default()
+            .cluster_preset("hetero-s")
+            .unwrap()
+            .to_json()
+            .dump()
+            .replacen("\"machines\":", "\"machinez\":1,\"machines\":", 1);
+        assert!(RunSpec::from_json(&Json::parse(&cluster).unwrap()).is_err());
+        let profile = RunSpec::default()
+            .cluster_preset("hetero-s")
+            .unwrap()
+            .to_json()
+            .dump()
+            .replacen("\"conv_speed\":", "\"conv_sped\":1,\"conv_speed\":", 1);
+        assert!(RunSpec::from_json(&Json::parse(&profile).unwrap()).is_err());
+    }
+
+    #[test]
+    fn legacy_train_config_files_still_parse() {
+        // A pre-API `--config run.json` file: bare TrainConfig, lenient.
+        let legacy = r#"{"arch":"lenet","variant":"jnp","batch":32,
+                         "strategy":4,"cluster":"cpu-s","steps":10}"#;
+        let s = RunSpec::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(s.train.arch, "lenet");
+        assert_eq!(s.train.strategy, Strategy::Groups(4));
+        assert_eq!(s.train.steps, 10);
+        // Wrapped with the CLI defaults.
+        assert_eq!(s.scheduler, SchedulerKind::SimClock);
+        assert_eq!(s.options.eval_every, 64);
+        assert!(s.baseline.is_none());
+    }
+
+    #[test]
+    fn effective_config_applies_baseline_envelope() {
+        let s = RunSpec::new("lenet").groups(4).baseline(BaselineSystem::MxnetSync);
+        let cfg = s.effective_config();
+        assert_eq!(cfg.strategy, Strategy::Sync); // MXNet: sync XOR async
+        assert_eq!(cfg.fc_mapping, FcMapping::Unmerged);
+        assert_eq!(cfg.hyper.momentum, 0.9);
+        // No baseline: identity.
+        let id = RunSpec::new("lenet").groups(4).effective_config();
+        assert_eq!(id.strategy, Strategy::Groups(4));
+    }
+
+    #[test]
+    fn builder_names_resolve() {
+        let s = RunSpec::new("lenet")
+            .scheduler_name("averaging:8")
+            .unwrap()
+            .baseline_name("singa-g2")
+            .unwrap();
+        assert_eq!(s.scheduler, SchedulerKind::AveragingRounds { tau: 8 });
+        assert_eq!(s.baseline, Some(BaselineSystem::SingaGroups(2)));
+        assert!(RunSpec::new("x").scheduler_name("bogus").is_err());
+        assert!(RunSpec::new("x").baseline_name("bogus").is_err());
+        assert!(RunSpec::new("x").cluster_preset("bogus").is_err());
+    }
+}

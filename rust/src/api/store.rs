@@ -1,0 +1,150 @@
+//! [`RunStore`] — append-only JSONL persistence for [`RunOutcome`]s.
+//!
+//! Layout: one directory (default `runs/`) holding `runs.jsonl`, one
+//! outcome per line in append order. Append-only means concurrent
+//! writers interleave whole lines and history is never rewritten;
+//! lookup is linear scan (the store is an experiment log, not a
+//! database). Lines that no longer parse (hand-edited, or written by a
+//! newer schema) are skipped by reads rather than poisoning the whole
+//! log.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::outcome::RunOutcome;
+use crate::util::json::Json;
+
+/// Default store directory, relative to the working directory.
+pub const DEFAULT_RUNS_DIR: &str = "runs";
+
+/// An on-disk run log.
+pub struct RunStore {
+    file: PathBuf,
+}
+
+impl RunStore {
+    /// Open (creating if needed) the store under `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run store dir {}", dir.display()))?;
+        Ok(Self { file: dir.join("runs.jsonl") })
+    }
+
+    /// Path of the underlying JSONL file.
+    pub fn path(&self) -> &Path {
+        &self.file
+    }
+
+    /// Append one outcome (one JSON line).
+    pub fn append(&self, outcome: &RunOutcome) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.file)
+            .with_context(|| format!("opening {}", self.file.display()))?;
+        writeln!(f, "{}", outcome.to_json().dump())
+            .with_context(|| format!("appending to {}", self.file.display()))?;
+        Ok(())
+    }
+
+    fn read(&self) -> Result<Option<String>> {
+        match std::fs::read_to_string(&self.file) {
+            Ok(t) => Ok(Some(t)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => {
+                Err(e).with_context(|| format!("reading {}", self.file.display()))
+            }
+        }
+    }
+
+    /// All parseable outcomes, in append order. Missing file = empty
+    /// store; unparseable lines are skipped.
+    pub fn load(&self) -> Result<Vec<RunOutcome>> {
+        let Some(text) = self.read()? else { return Ok(vec![]) };
+        Ok(text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .filter_map(|l| Json::parse(l).ok())
+            .filter_map(|v| RunOutcome::from_json(&v).ok())
+            .collect())
+    }
+
+    /// The most recently appended outcome. Scans from the tail, so only
+    /// the lines after the last parseable outcome are parsed — not the
+    /// whole history.
+    pub fn latest(&self) -> Result<Option<RunOutcome>> {
+        let Some(text) = self.read()? else { return Ok(None) };
+        Ok(text
+            .lines()
+            .rev()
+            .filter(|l| !l.trim().is_empty())
+            .filter_map(|l| Json::parse(l).ok())
+            .find_map(|v| RunOutcome::from_json(&v).ok()))
+    }
+
+    /// All outcomes recorded under `tag`, in append order.
+    pub fn by_tag(&self, tag: &str) -> Result<Vec<RunOutcome>> {
+        Ok(self.load()?.into_iter().filter(|o| o.tag() == Some(tag)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::RunSpec;
+    use crate::engine::TrainReport;
+
+    fn outcome(tag: &str, steps: usize) -> RunOutcome {
+        let spec = RunSpec::new("lenet").steps(steps).tag(tag);
+        RunOutcome::from_report(&spec, "sim-clock", &TrainReport::default(), None)
+    }
+
+    #[test]
+    fn append_then_latest_and_by_tag() {
+        let dir = crate::util::temp_dir("runstore").unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        assert!(store.latest().unwrap().is_none());
+        store.append(&outcome("a", 10)).unwrap();
+        store.append(&outcome("b", 20)).unwrap();
+        store.append(&outcome("a", 30)).unwrap();
+        assert_eq!(store.load().unwrap().len(), 3);
+        assert_eq!(store.latest().unwrap().unwrap().spec.train.steps, 30);
+        let a = store.by_tag("a").unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].spec.train.steps, 10);
+        assert_eq!(a[1].spec.train.steps, 30);
+        assert!(store.by_tag("nope").unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped_not_fatal() {
+        let dir = crate::util::temp_dir("runstore").unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        store.append(&outcome("ok", 1)).unwrap();
+        std::fs::write(
+            store.path(),
+            format!(
+                "{}\nnot json at all\n{{\"outcome_version\":999}}\n",
+                outcome("ok", 1).to_json().dump()
+            ),
+        )
+        .unwrap();
+        let all = store.load().unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].tag(), Some("ok"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn store_survives_reopen() {
+        let dir = crate::util::temp_dir("runstore").unwrap();
+        RunStore::open(&dir).unwrap().append(&outcome("x", 5)).unwrap();
+        let reopened = RunStore::open(&dir).unwrap();
+        assert_eq!(reopened.latest().unwrap().unwrap().tag(), Some("x"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -6,6 +6,8 @@
 //! merges the FC servers, whether it tunes momentum, and what its
 //! single-device conv implementation achieves (the `b_p` story, Fig 3).
 
+use anyhow::Result;
+
 use crate::config::{FcMapping, Hyper, Strategy, TrainConfig};
 
 /// A competitor system's strategy envelope.
@@ -31,6 +33,33 @@ pub enum BaselineSystem {
 }
 
 impl BaselineSystem {
+    /// Parse a baseline name — the inverse of [`Self::label`], mirroring
+    /// [`crate::engine::SchedulerKind::parse`] so the CLI, RunSpec
+    /// files, and benches share ONE name table instead of each
+    /// hand-rolling a string match.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "omnivore" => Ok(BaselineSystem::Omnivore),
+            "mxnet-sync" => Ok(BaselineSystem::MxnetSync),
+            "mxnet-async" => Ok(BaselineSystem::MxnetAsync),
+            "caffe" => Ok(BaselineSystem::CaffeSingle),
+            "tensorflow" => Ok(BaselineSystem::TensorFlowSingle),
+            other => {
+                if let Some(g) = other.strip_prefix("singa-g") {
+                    let g: usize = g
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad singa group count {g:?}"))?;
+                    Ok(BaselineSystem::SingaGroups(g.max(1)))
+                } else {
+                    anyhow::bail!(
+                        "unknown baseline {other:?} \
+                         (omnivore | mxnet-sync | mxnet-async | singa-gN | caffe | tensorflow)"
+                    )
+                }
+            }
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             BaselineSystem::Omnivore => "omnivore".into(),
@@ -153,6 +182,27 @@ mod tests {
         assert_eq!(sync.hyper.momentum, 0.9);
         let async_ = BaselineSystem::MxnetAsync.config(&base);
         assert_eq!(async_.strategy, Strategy::Async);
+    }
+
+    #[test]
+    fn parse_inverts_label() {
+        for system in [
+            BaselineSystem::Omnivore,
+            BaselineSystem::MxnetSync,
+            BaselineSystem::MxnetAsync,
+            BaselineSystem::SingaGroups(4),
+            BaselineSystem::CaffeSingle,
+            BaselineSystem::TensorFlowSingle,
+        ] {
+            assert_eq!(BaselineSystem::parse(&system.label()).unwrap(), system);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names() {
+        assert!(BaselineSystem::parse("pytorch").is_err());
+        assert!(BaselineSystem::parse("singa-gx").is_err());
+        assert!(BaselineSystem::parse("").is_err());
     }
 
     #[test]

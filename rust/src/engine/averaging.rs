@@ -20,9 +20,8 @@
 
 use anyhow::Result;
 
-use super::driver::{
-    run_scheduler, Completion, EngineOptions, ParamSource, Scheduler, TrainSession,
-};
+use super::driver::{run_scheduler, Completion, ParamSource, Scheduler, TrainSession};
+use super::options::EngineOptions;
 use crate::config::TrainConfig;
 use crate::model::ParamSet;
 use crate::optimizer::he_model::HeParams;

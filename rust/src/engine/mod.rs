@@ -27,6 +27,7 @@
 mod averaging;
 #[cfg(feature = "xla")]
 mod driver;
+mod options;
 mod report;
 #[cfg(feature = "xla")]
 mod sim_time;
@@ -37,9 +38,10 @@ mod threaded;
 pub use averaging::{AveragingEngine, AveragingRounds};
 #[cfg(feature = "xla")]
 pub use driver::{
-    profiled_he, run_scheduler, timing_model, Completion, EngineOptions, ParamSource,
-    RecordOrder, Scheduler, SchedulerKind, ServerStats, TrainSession,
+    profiled_he, run_scheduler, timing_model, Completion, ParamSource, RecordOrder,
+    Scheduler, ServerStats, TrainSession,
 };
+pub use options::{EngineOptions, SchedulerKind};
 pub use report::{sort_records, EvalRecord, GroupStats, IterRecord, TrainReport};
 #[cfg(feature = "xla")]
 pub use sim_time::{SimClock, SimTimeEngine};

@@ -1,0 +1,135 @@
+//! Scheduler-independent engine knobs and the by-name scheduler
+//! selector.
+//!
+//! Both types are part of the public experiment API ([`crate::api`]):
+//! a [`crate::api::RunSpec`] embeds them, so — like
+//! [`super::report`] — they live outside the `xla` feature gate and
+//! compile in `--no-default-features` builds. The execution half
+//! (`SchedulerKind::run`) stays in the gated driver.
+
+use anyhow::Result;
+
+use crate::optimizer::he_model::HeParams;
+use crate::sim::ServiceDist;
+
+/// Engine knobs beyond the train config — honored by every scheduler.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Evaluate on the held-out batch every this many iterations (0 = never).
+    pub eval_every: usize,
+    /// Assumed device utilization for the HE derivation (paper Fig 3 ~0.5).
+    pub utilization: f64,
+    /// Service-time noise model.
+    pub dist: ServiceDist,
+    /// Record the parameter projection trace for momentum fitting.
+    pub record_proj: bool,
+    /// Stop early once smoothed (window 32) train accuracy reaches this.
+    pub stop_at_train_acc: Option<f32>,
+    /// Stop after this much virtual time (seconds), if set.
+    pub max_virtual_time: Option<f64>,
+    /// Override the derived HE parameters (measured-timing runs).
+    pub he_override: Option<HeParams>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            eval_every: 0,
+            utilization: 0.5,
+            dist: ServiceDist::Lognormal { cv: 0.06 },
+            record_proj: false,
+            stop_at_train_acc: None,
+            max_virtual_time: None,
+            he_override: None,
+        }
+    }
+}
+
+/// Scheduler selection by name — how the CLI, a [`crate::api::RunSpec`],
+/// and the optimizer pick an execution engine without hard-coding one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Discrete-event virtual clock (deterministic, the default).
+    SimClock,
+    /// One OS thread per compute group, racing on the shared servers.
+    OsThreads,
+    /// SparkNet-style model averaging every `tau` local iterations.
+    AveragingRounds { tau: usize },
+}
+
+impl SchedulerKind {
+    /// Parse a scheduler name: `sim`/`sim-clock`, `threads`/`threaded`/
+    /// `os-threads`, `averaging` or `averaging:TAU`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" | "sim-clock" | "simclock" => Ok(SchedulerKind::SimClock),
+            "threads" | "threaded" | "os-threads" => Ok(SchedulerKind::OsThreads),
+            "averaging" => Ok(SchedulerKind::AveragingRounds { tau: 1 }),
+            other => {
+                if let Some(tau) = other.strip_prefix("averaging:") {
+                    let tau: usize = tau
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad averaging tau {tau:?}"))?;
+                    Ok(SchedulerKind::AveragingRounds { tau: tau.max(1) })
+                } else {
+                    anyhow::bail!(
+                        "unknown scheduler {other:?} (sim | threads | averaging[:TAU])"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::SimClock => "sim-clock",
+            SchedulerKind::OsThreads => "os-threads",
+            SchedulerKind::AveragingRounds { .. } => "averaging-rounds",
+        }
+    }
+
+    /// Canonical serialized form — always re-parses to the same value
+    /// (`SchedulerKind::parse(&k.spec_name()) == Ok(k)`), so RunSpec
+    /// files and `--scheduler` flags share one name table.
+    pub fn spec_name(&self) -> String {
+        match self {
+            SchedulerKind::SimClock => "sim".into(),
+            SchedulerKind::OsThreads => "threads".into(),
+            SchedulerKind::AveragingRounds { tau } => format!("averaging:{tau}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_kind_parses_names() {
+        assert_eq!(SchedulerKind::parse("sim").unwrap(), SchedulerKind::SimClock);
+        assert_eq!(SchedulerKind::parse("sim-clock").unwrap(), SchedulerKind::SimClock);
+        assert_eq!(SchedulerKind::parse("threaded").unwrap(), SchedulerKind::OsThreads);
+        assert_eq!(SchedulerKind::parse("threads").unwrap(), SchedulerKind::OsThreads);
+        assert_eq!(
+            SchedulerKind::parse("averaging").unwrap(),
+            SchedulerKind::AveragingRounds { tau: 1 }
+        );
+        assert_eq!(
+            SchedulerKind::parse("averaging:8").unwrap(),
+            SchedulerKind::AveragingRounds { tau: 8 }
+        );
+        assert!(SchedulerKind::parse("averaging:x").is_err());
+        assert!(SchedulerKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn spec_name_reparses_to_self() {
+        for k in [
+            SchedulerKind::SimClock,
+            SchedulerKind::OsThreads,
+            SchedulerKind::AveragingRounds { tau: 4 },
+        ] {
+            assert_eq!(SchedulerKind::parse(&k.spec_name()).unwrap(), k);
+        }
+    }
+}

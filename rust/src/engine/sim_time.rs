@@ -30,9 +30,9 @@ use std::collections::BinaryHeap;
 use anyhow::Result;
 
 use super::driver::{
-    run_scheduler, Completion, EngineOptions, RecordOrder, Scheduler, ServerStats,
-    TrainSession,
+    run_scheduler, Completion, RecordOrder, Scheduler, ServerStats, TrainSession,
 };
+use super::options::EngineOptions;
 use crate::config::{FcMapping, TrainConfig};
 use crate::coordinator::{ConvFwdState, Topology};
 use crate::model::ParamSet;

@@ -20,9 +20,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::driver::{
-    run_scheduler, Completion, EngineOptions, RecordOrder, Scheduler, ServerStats,
-    TrainSession,
+    run_scheduler, Completion, RecordOrder, Scheduler, ServerStats, TrainSession,
 };
+use super::options::EngineOptions;
 use crate::config::TrainConfig;
 use crate::coordinator::Topology;
 use crate::model::ParamSet;

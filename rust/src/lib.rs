@@ -20,7 +20,9 @@
 //! training loop, parameter updates (momentum SGD, paper eq. (3)–(4)),
 //! scheduling, and optimization.
 //!
-//! Entry points: the unified engine driver (`engine::TrainSession` +
+//! Entry points: the experiment API ([`api::RunSpec`] builder →
+//! `execute` → [`api::RunOutcome`], persisted by [`api::RunStore`] —
+//! DESIGN.md §API), the unified engine driver (`engine::TrainSession` +
 //! pluggable `engine::Scheduler`s — DESIGN.md §Engines) behind
 //! [`engine::SimTimeEngine`] (deterministic simulated-time async
 //! trainer, heterogeneous device profiles), [`engine::ThreadedEngine`]
@@ -28,6 +30,7 @@
 //! model averaging), [`optimizer::algorithm1::AutoOptimizer`] (the
 //! paper's Algorithm 1), and the `omnivore` CLI (`rust/src/main.rs`).
 
+pub mod api;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
@@ -41,6 +44,7 @@ pub mod sim;
 pub mod tensor;
 pub mod util;
 
+pub use api::{RunOutcome, RunSpec, RunStore};
 pub use config::{ClusterSpec, Hyper, Strategy, TrainConfig};
 pub use engine::TrainReport;
 #[cfg(feature = "xla")]

@@ -9,129 +9,346 @@
 //! * `bayesian` — compare Algorithm 1 against the GP-EI baseline.
 //! * `info`     — artifact/manifest inventory.
 //!
+//! Every training subcommand is a thin shell over the experiment API
+//! (DESIGN.md §API): flags build a [`RunSpec`], execution produces a
+//! [`RunOutcome`] that is appended to the [`RunStore`] (`--runs DIR`,
+//! default `runs/`), and `--json` prints that outcome instead of the
+//! human tables. `--config` accepts a RunSpec file (legacy bare
+//! TrainConfig files still parse).
+//!
+//! The usage text is GENERATED from the per-subcommand flag tables
+//! below, and every flag accessor resolves through the same tables — an
+//! undeclared flag panics on first use, so the help can't drift from
+//! the code again.
+//!
 //! Flag parsing is the in-repo `util::cli` (offline build, see DESIGN.md).
 
 use anyhow::Result;
 
-use omnivore::baselines::BaselineSystem;
-use omnivore::config::{cluster, FcMapping, Hyper, Strategy, TrainConfig};
-use omnivore::engine::{EngineOptions, SchedulerKind, SimTimeEngine};
+use omnivore::api::{
+    resolve_artifacts_dir, scheduler_from_flags, RunOutcome, RunSpec, RunStore,
+    DEFAULT_RUNS_DIR,
+};
+use omnivore::config::Strategy;
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::bayesian::BayesianOptimizer;
-use omnivore::optimizer::{se_model, AutoOptimizer, EngineTrainer, HeParams, Trainer};
+use omnivore::optimizer::{AutoOptimizer, EngineTrainer, HeParams, Trainer};
 use omnivore::runtime::Runtime;
 use omnivore::sim::{predicted_vs_measured, ServiceDist};
 use omnivore::util::cli::Args;
+use omnivore::util::json::Json;
 
-const USAGE: &str = "usage: omnivore [--artifacts DIR] <train|optimize|sweep|simulate|bayesian|info> [flags]
-  train:    --arch A --variant V --cluster C --groups G(-1=async,0=sync) --lr F --momentum F
-            --steps N --seed S [--scheduler sim|threads|averaging[:TAU]] [--unmerged-fc]
-            [--dynamic-batch] [--threaded] [--baseline NAME] [--csv PATH] [--config FILE]
-  optimize: --arch A --variant V --cluster C --epochs N --epoch-steps N --seed S
-            [--scheduler sim|threads|averaging[:TAU]] [--dynamic-batch]
-  sweep:    --arch A --variant V --cluster C --steps N --target-acc F --seed S
-  simulate: --arch A --cluster C --iters N
-  bayesian: --arch A --variant V --cluster C --configs N --seed S
-  info";
+// ---------------------------------------------------------------------------
+// Flag tables — the single source of truth for both parsing and usage.
+
+/// One CLI flag: `meta` is the value placeholder (`None` = boolean switch).
+struct Flag {
+    name: &'static str,
+    meta: Option<&'static str>,
+}
+
+const fn val(name: &'static str, meta: &'static str) -> Flag {
+    Flag { name, meta: Some(meta) }
+}
+
+const fn switch(name: &'static str) -> Flag {
+    Flag { name, meta: None }
+}
+
+/// Flags every subcommand accepts.
+const GLOBAL_FLAGS: &[Flag] = &[val("artifacts", "DIR")];
+
+const TRAIN_FLAGS: &[Flag] = &[
+    val("arch", "A"),
+    val("variant", "V"),
+    val("cluster", "C"),
+    val("groups", "G(-1=async,0=sync)"),
+    val("lr", "F"),
+    val("momentum", "F"),
+    val("steps", "N"),
+    val("seed", "S"),
+    val("scheduler", "sim|threads|averaging[:TAU]"),
+    switch("unmerged-fc"),
+    switch("dynamic-batch"),
+    switch("threaded"),
+    val("baseline", "NAME"),
+    val("config", "FILE"),
+    val("csv", "PATH"),
+    val("runs", "DIR"),
+    val("tag", "T"),
+    switch("json"),
+];
+
+const OPTIMIZE_FLAGS: &[Flag] = &[
+    val("arch", "A"),
+    val("variant", "V"),
+    val("cluster", "C"),
+    val("epochs", "N"),
+    val("epoch-steps", "N"),
+    val("seed", "S"),
+    val("scheduler", "sim|threads|averaging[:TAU]"),
+    switch("dynamic-batch"),
+    val("runs", "DIR"),
+    val("tag", "T"),
+    switch("json"),
+];
+
+const SWEEP_FLAGS: &[Flag] = &[
+    val("arch", "A"),
+    val("variant", "V"),
+    val("cluster", "C"),
+    val("steps", "N"),
+    val("target-acc", "F"),
+    val("seed", "S"),
+    val("runs", "DIR"),
+    val("tag", "T"),
+    switch("json"),
+];
+
+const SIMULATE_FLAGS: &[Flag] =
+    &[val("arch", "A"), val("cluster", "C"), val("iters", "N")];
+
+const BAYESIAN_FLAGS: &[Flag] = &[
+    val("arch", "A"),
+    val("variant", "V"),
+    val("cluster", "C"),
+    val("configs", "N"),
+    val("seed", "S"),
+    val("runs", "DIR"),
+    val("tag", "T"),
+    switch("json"),
+];
+
+const INFO_FLAGS: &[Flag] = &[];
+
+const SUBCOMMANDS: &[(&str, &[Flag])] = &[
+    ("train", TRAIN_FLAGS),
+    ("optimize", OPTIMIZE_FLAGS),
+    ("sweep", SWEEP_FLAGS),
+    ("simulate", SIMULATE_FLAGS),
+    ("bayesian", BAYESIAN_FLAGS),
+    ("info", INFO_FLAGS),
+];
+
+/// Render the usage text from the flag tables.
+fn usage() -> String {
+    let mut out = String::from(
+        "usage: omnivore [--artifacts DIR] <train|optimize|sweep|simulate|bayesian|info> [flags]\n",
+    );
+    for (name, flags) in SUBCOMMANDS {
+        let mut line = format!("  {name}:");
+        while line.len() < 12 {
+            line.push(' ');
+        }
+        let indent = " ".repeat(12);
+        let mut col = line.len();
+        for f in *flags {
+            let piece = match f.meta {
+                Some(m) => format!(" --{} {}", f.name, m),
+                None => format!(" [--{}]", f.name),
+            };
+            if col + piece.len() > 78 {
+                line.push('\n');
+                line.push_str(&indent);
+                col = indent.len();
+            }
+            line.push_str(&piece);
+            col += piece.len();
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str(
+        "  (--json prints the RunOutcome instead of tables; every run is appended\n   to the run store under --runs, default runs/)",
+    );
+    out
+}
+
+/// Flag access routed through the declared tables: reading a flag that
+/// the usage text does not list panics immediately, so code and help
+/// cannot drift apart.
+struct Cx<'a> {
+    args: &'a Args,
+    flags: &'static [Flag],
+}
+
+impl<'a> Cx<'a> {
+    fn new(args: &'a Args, flags: &'static [Flag]) -> Self {
+        Self { args, flags }
+    }
+
+    fn declared(&self, name: &str, wants_value: bool) -> &Flag {
+        let f = GLOBAL_FLAGS
+            .iter()
+            .chain(self.flags.iter())
+            .find(|f| f.name == name)
+            .unwrap_or_else(|| {
+                panic!("flag --{name} read by the code but missing from the usage table")
+            });
+        assert_eq!(
+            f.meta.is_some(),
+            wants_value,
+            "flag --{name}: usage table and accessor disagree on switch vs value"
+        );
+        f
+    }
+
+    fn str(&self, name: &str, default: &str) -> String {
+        self.declared(name, true);
+        self.args.str(name, default)
+    }
+
+    fn opt_str(&self, name: &str) -> Option<String> {
+        self.declared(name, true);
+        self.args.opt_str(name)
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.declared(name, true);
+        self.args.get(name, default)
+    }
+
+    fn switch(&self, name: &str) -> bool {
+        self.declared(name, false);
+        self.args.switch(name)
+    }
+
+    fn finish(&self) -> Result<()> {
+        self.args.finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let artifacts = args.str("artifacts", "artifacts");
     let Some(cmd) = args.subcommand.clone() else {
-        eprintln!("{USAGE}");
+        eprintln!("{}", usage());
         std::process::exit(2);
     };
-    let rt = Runtime::load(&artifacts)?;
     match cmd.as_str() {
-        "train" => train(&rt, &args),
-        "optimize" => optimize(&rt, &args),
-        "sweep" => sweep(&rt, &args),
-        "simulate" => simulate(&rt, &args),
-        "bayesian" => bayesian(&rt, &args),
-        "info" => info(&rt, &args),
+        "train" => train(&args),
+        "optimize" => optimize(&args),
+        "sweep" => sweep(&args),
+        "simulate" => simulate(&args),
+        "bayesian" => bayesian(&args),
+        "info" => info(&args),
         other => {
-            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            eprintln!("unknown subcommand {other:?}\n{}", usage());
             std::process::exit(2);
         }
     }
 }
 
-fn cluster_arg(args: &Args, default: &str) -> Result<omnivore::config::ClusterSpec> {
-    let name = args.str("cluster", default);
-    cluster::preset(&name).ok_or_else(|| anyhow::anyhow!("unknown cluster preset {name:?}"))
+/// Load the runtime with the artifacts-dir precedence: explicit
+/// `--artifacts` flag > spec/config file > default. The resolved dir is
+/// written back into the spec so the stored outcome records what ran.
+fn load_runtime(cx: &Cx, spec: &mut RunSpec) -> Result<Runtime> {
+    let explicit = cx.opt_str("artifacts");
+    let dir =
+        resolve_artifacts_dir(explicit.as_deref(), Some(&spec.train.artifacts_dir));
+    spec.train.artifacts_dir = dir.clone();
+    Runtime::load(&dir)
 }
 
-fn train(rt: &Runtime, args: &Args) -> Result<()> {
-    let mut cfg = if let Some(path) = args.opt_str("config") {
-        TrainConfig::from_json_file(&path)?
-    } else {
-        TrainConfig {
-            arch: args.str("arch", "caffenet8"),
-            variant: args.str("variant", "jnp"),
-            cluster: cluster_arg(args, "cpu-s")?,
-            strategy: match args.get("groups", 0i64)? {
-                0 => Strategy::Sync,
-                -1 => Strategy::Async,
-                g => Strategy::Groups(g as usize),
-            },
-            hyper: Hyper {
-                lr: args.get("lr", 0.01f32)?,
-                momentum: args.get("momentum", 0.9f32)?,
-                ..Hyper::default()
-            },
-            steps: args.get("steps", 256usize)?,
-            seed: args.get("seed", 0u64)?,
-            fc_mapping: if args.switch("unmerged-fc") {
-                FcMapping::Unmerged
-            } else {
-                FcMapping::Merged
-            },
-            ..TrainConfig::default()
-        }
-    };
-    if let Some(b) = args.opt_str("baseline") {
-        let system = match b.as_str() {
-            "mxnet-sync" => BaselineSystem::MxnetSync,
-            "mxnet-async" => BaselineSystem::MxnetAsync,
-            "caffe" => BaselineSystem::CaffeSingle,
-            "omnivore" => BaselineSystem::Omnivore,
-            other => anyhow::bail!("unknown baseline {other:?}"),
-        };
-        cfg = system.config(&cfg);
-    }
-    if args.switch("dynamic-batch") {
-        cfg.dynamic_batch = true; // FLOPS-proportional group batch shares
-    }
-    // `--threaded` is the historical spelling of `--scheduler threads`
-    // and wins when both are given.
-    let scheduler_flag = args.str("scheduler", "sim");
-    let scheduler = if args.switch("threaded") {
-        SchedulerKind::OsThreads
-    } else {
-        SchedulerKind::parse(&scheduler_flag)?
-    };
-    let csv = args.opt_str("csv");
-    args.finish()?;
+fn store_outcome(runs_dir: &str, outcome: &RunOutcome) -> Result<()> {
+    RunStore::open(runs_dir)?.append(outcome)
+}
 
-    let arch_info = rt.manifest().arch(&cfg.arch)?;
-    let init = ParamSet::init(arch_info, cfg.seed);
-    let opts = EngineOptions { eval_every: 64, ..Default::default() };
-    let (report, _params) = scheduler.run(rt, cfg.clone(), opts, init)?;
-    println!("scheduler: {}", scheduler.name());
+/// Record the optimizer's final committed epoch in the run store, under
+/// the spec the optimizer actually chose for it (shared by `optimize`
+/// and `bayesian`). `None` when no epoch was committed.
+fn store_final_epoch(
+    rt: &Runtime,
+    base: &RunSpec,
+    trace: &omnivore::optimizer::OptimizerTrace,
+    runs_dir: &str,
+) -> Result<Option<RunOutcome>> {
+    match (trace.epochs.last(), trace.reports.last()) {
+        (Some(e), Some(rep)) => {
+            let epoch_spec =
+                base.clone().groups(e.g).hyper(e.hyper).steps(rep.records.len());
+            let outcome = epoch_spec.outcome_of(rt, rep);
+            store_outcome(runs_dir, &outcome)?;
+            Ok(Some(outcome))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, TRAIN_FLAGS);
+    let mut spec = if let Some(path) = cx.opt_str("config") {
+        RunSpec::from_json_file(&path)?
+    } else {
+        let mut s = RunSpec::new(&cx.str("arch", "caffenet8"))
+            .variant(&cx.str("variant", "jnp"))
+            .cluster_preset(&cx.str("cluster", "cpu-s"))?
+            .lr(cx.get("lr", 0.01f32)?)
+            .momentum(cx.get("momentum", 0.9f32)?)
+            .steps(cx.get("steps", 256usize)?)
+            .seed(cx.get("seed", 0u64)?);
+        s = match cx.get("groups", 0i64)? {
+            0 => s.sync(),
+            -1 => s.strategy(Strategy::Async),
+            g => s.groups(g as usize),
+        };
+        if cx.switch("unmerged-fc") {
+            s = s.unmerged_fc();
+        }
+        s
+    };
+    if let Some(b) = cx.opt_str("baseline") {
+        spec = spec.baseline_name(&b)?;
+    }
+    if cx.switch("dynamic-batch") {
+        spec = spec.dynamic_batch(true);
+    }
+    // `--threaded` alone is a deprecated alias of `--scheduler threads`;
+    // combined with a conflicting `--scheduler` it is a hard error. When
+    // neither flag is given, the spec file's scheduler stands.
+    let sched_flag = cx.opt_str("scheduler");
+    let threaded = cx.switch("threaded");
+    if sched_flag.is_some() || threaded {
+        spec.scheduler = scheduler_from_flags(sched_flag.as_deref(), threaded)?;
+    }
+    if let Some(t) = cx.opt_str("tag") {
+        spec = spec.tag(&t);
+    }
+    let json_out = cx.switch("json");
+    let csv = cx.opt_str("csv");
+    let runs_dir = cx.str("runs", DEFAULT_RUNS_DIR);
+    let rt = load_runtime(&cx, &mut spec)?;
+    cx.finish()?;
+
+    let init = spec.cold_init(&rt)?;
+    let (outcome, report, _params) = spec.execute_from(&rt, init)?;
+    store_outcome(&runs_dir, &outcome)?;
+    if let Some(path) = csv {
+        std::fs::write(&path, report.to_csv())?;
+    }
+    if json_out {
+        println!("{}", outcome.to_json().dump());
+        return Ok(());
+    }
+    println!("scheduler: {}", outcome.scheduler);
     println!(
         "run: g={} k={} steps={} | final loss {:.4} acc {:.3} | {} virtual ({} wall) | staleness conv {:.2} fc {:.2}",
-        report.groups,
-        report.group_size,
-        report.records.len(),
-        report.final_loss(32),
-        report.final_acc(32),
-        fmt_secs(report.virtual_time),
-        fmt_secs(report.wallclock_secs),
-        report.conv_staleness.mean(),
-        report.fc_staleness.mean(),
+        outcome.groups,
+        outcome.group_size,
+        outcome.iters,
+        outcome.final_loss,
+        outcome.final_acc,
+        fmt_secs(outcome.virtual_time),
+        fmt_secs(outcome.wallclock_secs),
+        outcome.conv_staleness_mean,
+        outcome.fc_staleness_mean,
     );
-    if cfg.cluster.is_heterogeneous() {
+    if spec.effective_config().cluster.is_heterogeneous() {
         let mut t = Table::new(&[
             "group",
             "device",
@@ -141,7 +358,7 @@ fn train(rt: &Runtime, args: &Args) -> Result<()> {
             "pred/iter",
             "staleness",
         ]);
-        for s in &report.group_stats {
+        for s in &outcome.group_stats {
             t.row(&[
                 s.group.to_string(),
                 s.device.clone(),
@@ -154,52 +371,63 @@ fn train(rt: &Runtime, args: &Args) -> Result<()> {
         }
         t.print();
     }
-    let stats = report.runtime_stats;
     println!(
         "runtime: {} executions, {} in XLA, {} compiling",
-        stats.executions,
-        fmt_secs(stats.execute_secs),
-        fmt_secs(stats.compile_secs)
+        outcome.executions,
+        fmt_secs(outcome.execute_secs),
+        fmt_secs(outcome.compile_secs)
     );
-    if let Some(path) = csv {
-        std::fs::write(&path, report.to_csv())?;
-        println!("wrote {path}");
-    }
+    println!("[store] {} (tag {})", runs_dir, outcome.tag().unwrap_or("-"));
     Ok(())
 }
 
-fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
-    let arch = args.str("arch", "caffenet8");
-    let base = TrainConfig {
-        arch: arch.clone(),
-        variant: args.str("variant", "jnp"),
-        cluster: cluster_arg(args, "cpu-l")?,
-        seed: args.get("seed", 0u64)?,
-        dynamic_batch: args.switch("dynamic-batch"),
-        ..TrainConfig::default()
-    };
-    let epochs = args.get("epochs", 2usize)?;
-    let epoch_steps = args.get("epoch-steps", 256usize)?;
-    let scheduler = SchedulerKind::parse(&args.str("scheduler", "sim"))?;
-    args.finish()?;
+fn optimize(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, OPTIMIZE_FLAGS);
+    let mut spec = RunSpec::new(&cx.str("arch", "caffenet8"))
+        .variant(&cx.str("variant", "jnp"))
+        .cluster_preset(&cx.str("cluster", "cpu-l"))?
+        .seed(cx.get("seed", 0u64)?)
+        .dynamic_batch(cx.switch("dynamic-batch"))
+        .eval_every(0)
+        .scheduler_name(&cx.str("scheduler", "sim"))?;
+    if let Some(t) = cx.opt_str("tag") {
+        spec = spec.tag(&t);
+    }
+    let epochs = cx.get("epochs", 2usize)?;
+    let epoch_steps = cx.get("epoch-steps", 256usize)?;
+    let json_out = cx.switch("json");
+    let runs_dir = cx.str("runs", DEFAULT_RUNS_DIR);
+    let rt = load_runtime(&cx, &mut spec)?;
+    cx.finish()?;
 
-    let arch_info = rt.manifest().arch(&arch)?;
-    let he = HeParams::derive(&base.cluster, arch_info, base.batch, 0.5);
-    let init = ParamSet::init(arch_info, base.seed);
-    let mut trainer =
-        EngineTrainer::new(rt, base, EngineOptions::default()).with_scheduler(scheduler);
+    let arch_info = rt.manifest().arch(&spec.train.arch)?;
+    let he = HeParams::derive(&spec.train.cluster, arch_info, spec.train.batch, 0.5);
+    let init = ParamSet::init(arch_info, spec.train.seed);
+    let mut trainer = EngineTrainer::new(&rt, spec.clone());
     // Profile-aware short-circuit: on heterogeneous clusters (and under
     // --dynamic-batch) the FC-saturation point moves with the profiles.
     let phe = trainer.profiled_he()?;
-    println!(
-        "HE model: t_cc={} t_nc={} t_fc={} | FC saturates at g={}",
-        fmt_secs(he.t_cc),
-        fmt_secs(he.t_nc),
-        fmt_secs(he.t_fc),
-        phe.smallest_saturating_g(trainer.n_machines())
-    );
+    if !json_out {
+        println!(
+            "HE model: t_cc={} t_nc={} t_fc={} | FC saturates at g={}",
+            fmt_secs(he.t_cc),
+            fmt_secs(he.t_nc),
+            fmt_secs(he.t_fc),
+            phe.smallest_saturating_g(trainer.n_machines())
+        );
+    }
     let opt = AutoOptimizer { epochs, epoch_steps, ..Default::default() };
     let (trace, _params) = opt.run_profiled(&mut trainer, init, &phe)?;
+    let outcome = store_final_epoch(&rt, &spec, &trace, &runs_dir)?;
+    if json_out {
+        // Always emit one JSON value ({} when nothing was committed) so
+        // `... --json | jq .` never sees empty stdin.
+        println!(
+            "{}",
+            outcome.map(|o| o.to_json()).unwrap_or_else(|| Json::obj(vec![])).dump()
+        );
+        return Ok(());
+    }
     if let Some(h) = trace.cold_start_hyper {
         println!("cold start: eta={} mu={}", h.lr, h.momentum);
     }
@@ -219,65 +447,85 @@ fn optimize(rt: &Runtime, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn sweep(rt: &Runtime, args: &Args) -> Result<()> {
-    let arch = args.str("arch", "caffenet8");
-    let variant = args.str("variant", "jnp");
-    let cluster = cluster_arg(args, "cpu-l")?;
-    let steps = args.get("steps", 192usize)?;
-    let target_acc = args.get("target-acc", 0.85f32)?;
-    let seed = args.get("seed", 0u64)?;
-    args.finish()?;
+fn sweep(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, SWEEP_FLAGS);
+    let mut base = RunSpec::new(&cx.str("arch", "caffenet8"))
+        .variant(&cx.str("variant", "jnp"))
+        .cluster_preset(&cx.str("cluster", "cpu-l"))?
+        .steps(cx.get("steps", 192usize)?)
+        .seed(cx.get("seed", 0u64)?)
+        .eval_every(0);
+    if let Some(t) = cx.opt_str("tag") {
+        base = base.tag(&t);
+    }
+    let target_acc = cx.get("target-acc", 0.85f32)?;
+    let json_out = cx.switch("json");
+    let runs_dir = cx.str("runs", DEFAULT_RUNS_DIR);
+    let rt = load_runtime(&cx, &mut base)?;
+    cx.finish()?;
 
-    let n = cluster.machines - 1;
-    let arch_info = rt.manifest().arch(&arch)?;
+    let n = base.train.cluster.machines - 1;
+    let arch_info = rt.manifest().arch(&base.train.arch)?;
+    let store = RunStore::open(&runs_dir)?;
     let mut t =
         Table::new(&["g", "mu*", "time/iter", "iters->acc", "time->acc", "staleness"]);
+    let mut rows = vec![];
     let mut g = 1;
     while g <= n {
-        let cfg = TrainConfig {
-            arch: arch.clone(),
-            variant: variant.clone(),
-            cluster: cluster.clone(),
-            strategy: Strategy::Groups(g),
-            hyper: Hyper {
-                lr: 0.01,
-                momentum: se_model::compensated_momentum(0.9, g) as f32,
-                ..Hyper::default()
-            },
-            steps,
-            seed,
-            ..TrainConfig::default()
-        };
-        let init = ParamSet::init(arch_info, seed);
-        let report = SimTimeEngine::new(rt, cfg.clone(), EngineOptions::default()).run(init)?;
+        let spec = base
+            .clone()
+            .groups(g)
+            .lr(0.01)
+            .momentum(omnivore::optimizer::se_model::compensated_momentum(0.9, g) as f32);
+        let init = ParamSet::init(arch_info, spec.train.seed);
+        let (outcome, report, _params) = spec.execute_from(&rt, init)?;
+        store.append(&outcome)?;
+        let iters_to = report.iters_to_accuracy(target_acc, 32);
+        let time_to = report.time_to_accuracy(target_acc, 32);
         t.row(&[
             g.to_string(),
-            format!("{:.2}", cfg.hyper.momentum),
+            format!("{:.2}", spec.train.hyper.momentum),
             fmt_secs(report.mean_iter_time()),
-            report
-                .iters_to_accuracy(target_acc, 32)
-                .map(|i| i.to_string())
-                .unwrap_or_else(|| "-".into()),
-            report
-                .time_to_accuracy(target_acc, 32)
-                .map(fmt_secs)
-                .unwrap_or_else(|| "-".into()),
+            iters_to.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            time_to.map(fmt_secs).unwrap_or_else(|| "-".into()),
             format!("{:.2}", report.conv_staleness.mean()),
         ]);
+        // JSON rows carry the table's headline metrics (computed at
+        // --target-acc, which the outcome alone does not know) next to
+        // the full outcome.
+        let mut row = vec![
+            ("g", Json::Num(g as f64)),
+            ("target_acc", Json::Num(target_acc as f64)),
+        ];
+        if let Some(i) = iters_to {
+            row.push(("iters_to_target", Json::Num(i as f64)));
+        }
+        if let Some(s) = time_to {
+            row.push(("time_to_target", Json::Num(s)));
+        }
+        row.push(("outcome", outcome.to_json()));
+        rows.push(Json::obj(row));
         g *= 2;
     }
-    t.print();
+    if json_out {
+        println!("{}", Json::Arr(rows).dump());
+    } else {
+        t.print();
+    }
     Ok(())
 }
 
-fn simulate(rt: &Runtime, args: &Args) -> Result<()> {
-    let arch = args.str("arch", "caffenet8");
-    let cluster = cluster_arg(args, "cpu-l")?;
-    let iters = args.get("iters", 400u64)?;
-    args.finish()?;
+fn simulate(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, SIMULATE_FLAGS);
+    let arch = cx.str("arch", "caffenet8");
+    let mut spec = RunSpec::new(&arch).cluster_preset(&cx.str("cluster", "cpu-l"))?;
+    let iters = cx.get("iters", 400u64)?;
+    let rt = load_runtime(&cx, &mut spec)?;
+    cx.finish()?;
 
+    let cluster = &spec.train.cluster;
     let arch_info = rt.manifest().arch(&arch)?;
-    let he = HeParams::derive(&cluster, arch_info, 32, 0.5);
+    let he = HeParams::derive(cluster, arch_info, 32, 0.5);
     let rows = predicted_vs_measured(
         &he,
         cluster.machines - 1,
@@ -299,34 +547,54 @@ fn simulate(rt: &Runtime, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn bayesian(rt: &Runtime, args: &Args) -> Result<()> {
-    let arch = args.str("arch", "caffenet8");
-    let base = TrainConfig {
-        arch: arch.clone(),
-        variant: args.str("variant", "jnp"),
-        cluster: cluster_arg(args, "cpu-s")?,
-        seed: args.get("seed", 0u64)?,
-        ..TrainConfig::default()
-    };
-    let configs = args.get("configs", 12usize)?;
-    args.finish()?;
+fn bayesian(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, BAYESIAN_FLAGS);
+    let mut spec = RunSpec::new(&cx.str("arch", "caffenet8"))
+        .variant(&cx.str("variant", "jnp"))
+        .cluster_preset(&cx.str("cluster", "cpu-s"))?
+        .seed(cx.get("seed", 0u64)?)
+        .eval_every(0);
+    if let Some(t) = cx.opt_str("tag") {
+        spec = spec.tag(&t);
+    }
+    let configs = cx.get("configs", 12usize)?;
+    let json_out = cx.switch("json");
+    let runs_dir = cx.str("runs", DEFAULT_RUNS_DIR);
+    let rt = load_runtime(&cx, &mut spec)?;
+    cx.finish()?;
 
-    let arch_info = rt.manifest().arch(&arch)?;
-    let he = HeParams::derive(&base.cluster, arch_info, base.batch, 0.5);
-    let init = ParamSet::init(arch_info, base.seed);
+    let arch_info = rt.manifest().arch(&spec.train.arch)?;
+    let he = HeParams::derive(&spec.train.cluster, arch_info, spec.train.batch, 0.5);
+    let init = ParamSet::init(arch_info, spec.train.seed);
 
     // Omnivore's optimizer first (its loss is the reference).
-    let mut trainer = EngineTrainer::new(rt, base.clone(), EngineOptions::default());
+    let mut trainer = EngineTrainer::new(&rt, spec.clone());
     let opt = AutoOptimizer { epochs: 1, epoch_steps: 128, ..Default::default() };
     let (trace, _) = opt.run(&mut trainer, init.clone(), &he)?;
     let reference = trace.epochs.last().map(|e| e.final_loss).unwrap_or(f32::INFINITY);
+    let outcome = store_final_epoch(&rt, &spec, &trace, &runs_dir)?;
+
+    let bo = BayesianOptimizer { max_configs: configs, ..Default::default() };
+    let bo_trace = bo.run(&mut trainer, &init, reference, 0.01)?;
+    if json_out {
+        let mut fields = vec![
+            ("omnivore_loss", Json::Num(reference as f64)),
+            ("bayesian_best_loss", Json::Num(bo_trace.best.loss as f64)),
+            ("bayesian_configs", Json::Num(bo_trace.probes.len() as f64)),
+        ];
+        if let Some(c) = bo_trace.configs_to_near_optimal {
+            fields.push(("configs_to_near_optimal", Json::Num(c as f64)));
+        }
+        if let Some(o) = &outcome {
+            fields.push(("omnivore_outcome", o.to_json()));
+        }
+        println!("{}", Json::obj(fields).dump());
+        return Ok(());
+    }
     println!(
         "omnivore: loss {reference:.4} in {} probes + 1 epoch",
         trace.epochs.iter().map(|e| e.grid_probes).sum::<usize>()
     );
-
-    let bo = BayesianOptimizer { max_configs: configs, ..Default::default() };
-    let bo_trace = bo.run(&mut trainer, &init, reference, 0.01)?;
     println!(
         "bayesian: best loss {:.4} in {} configs; within 1% of omnivore at config {}",
         bo_trace.best.loss,
@@ -339,8 +607,11 @@ fn bayesian(rt: &Runtime, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn info(rt: &Runtime, args: &Args) -> Result<()> {
-    args.finish()?;
+fn info(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, INFO_FLAGS);
+    let mut spec = RunSpec::default();
+    let rt = load_runtime(&cx, &mut spec)?;
+    cx.finish()?;
     let m = rt.manifest();
     println!("group batch: {}", m.group_batch);
     for (name, a) in &m.archs {
@@ -351,4 +622,32 @@ fn info(rt: &Runtime, args: &Args) -> Result<()> {
     }
     println!("{} artifacts", m.artifacts.len());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_lists_every_declared_flag() {
+        let u = usage();
+        for (name, flags) in SUBCOMMANDS {
+            assert!(u.contains(&format!("  {name}:")), "usage missing {name}\n{u}");
+            for f in *flags {
+                assert!(u.contains(&format!("--{}", f.name)), "usage missing --{}", f.name);
+            }
+        }
+        assert!(u.contains("--artifacts DIR"));
+    }
+
+    #[test]
+    fn cx_panics_on_undeclared_flag() {
+        let args = Args::parse(["train".to_string()]).unwrap();
+        let cx = Cx::new(&args, TRAIN_FLAGS);
+        assert_eq!(cx.str("arch", "x"), "x"); // declared: fine
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cx.str("not-a-flag", "x")
+        }));
+        assert!(boom.is_err(), "undeclared flag must panic");
+    }
 }

@@ -42,39 +42,39 @@ pub trait Trainer {
 }
 
 /// The real trainer: wraps the unified engine driver over a base
-/// config. The scheduler is selected by name ([`SchedulerKind`]) rather
-/// than hard-coding the simulated-time engine — Algorithm 1 runs
-/// unchanged over OS threads or model averaging.
-///
-/// [`SchedulerKind`]: crate::engine::SchedulerKind
+/// [`crate::api::RunSpec`] — the same experiment description every
+/// other entrypoint speaks. Each probe/epoch clones the spec with the
+/// strategy, hyperparameters, and step budget under test and runs it
+/// under the spec's scheduler, so Algorithm 1 runs unchanged over the
+/// simulated clock, OS threads, or model averaging.
 #[cfg(feature = "xla")]
 pub struct EngineTrainer<'a> {
     pub rt: &'a crate::runtime::Runtime,
-    pub base: crate::config::TrainConfig,
-    pub opts: crate::engine::EngineOptions,
-    pub scheduler: crate::engine::SchedulerKind,
+    pub spec: crate::api::RunSpec,
 }
 
 #[cfg(feature = "xla")]
 impl<'a> EngineTrainer<'a> {
-    /// Trainer over the default (simulated-clock) scheduler.
-    pub fn new(
-        rt: &'a crate::runtime::Runtime,
-        base: crate::config::TrainConfig,
-        opts: crate::engine::EngineOptions,
-    ) -> Self {
-        Self { rt, base, opts, scheduler: crate::engine::SchedulerKind::SimClock }
+    /// A baseline envelope on the spec is resolved into `train` here and
+    /// cleared: left in place it would re-apply on every probe
+    /// (`effective_config` forcing e.g. MXNet's sync strategy and 0.9
+    /// momentum) and silently override the exact knobs the optimizer is
+    /// sweeping. Resolving keeps the system's fc_mapping/hyper floor
+    /// while letting Algorithm 1 vary (g, mu, eta) for real.
+    pub fn new(rt: &'a crate::runtime::Runtime, spec: crate::api::RunSpec) -> Self {
+        let train = spec.effective_config();
+        Self { rt, spec: crate::api::RunSpec { train, baseline: None, ..spec } }
     }
 
     pub fn with_scheduler(mut self, scheduler: crate::engine::SchedulerKind) -> Self {
-        self.scheduler = scheduler;
+        self.spec.scheduler = scheduler;
         self
     }
 
     /// FLOPS-proportional batch partitioning across unequal groups on
     /// every probe and committed epoch (`TrainConfig::dynamic_batch`).
     pub fn with_dynamic_batch(mut self, on: bool) -> Self {
-        self.base.dynamic_batch = on;
+        self.spec.train.dynamic_batch = on;
         self
     }
 
@@ -82,7 +82,7 @@ impl<'a> EngineTrainer<'a> {
     /// Algorithm 1's FC-saturation short-circuit should consult on
     /// heterogeneous clusters ([`AutoOptimizer::run_profiled`]).
     pub fn profiled_he(&self) -> anyhow::Result<crate::optimizer::ProfiledHe> {
-        crate::engine::profiled_he(self.rt, &self.base, &self.opts)
+        crate::engine::profiled_he(self.rt, &self.spec.train, &self.spec.options)
     }
 }
 
@@ -95,14 +95,16 @@ impl<'a> Trainer for EngineTrainer<'a> {
         steps: usize,
         from: &ParamSet,
     ) -> Result<(TrainReport, ParamSet)> {
-        let mut cfg = self.base.clone();
-        cfg.strategy = crate::config::Strategy::Groups(g);
-        cfg.hyper = hyper;
-        cfg.steps = steps;
-        self.scheduler.run(self.rt, cfg, self.opts.clone(), from.clone())
+        let spec = self
+            .spec
+            .clone()
+            .strategy(crate::config::Strategy::Groups(g))
+            .hyper(hyper)
+            .steps(steps);
+        spec.scheduler.run(self.rt, &spec, from.clone())
     }
 
     fn n_machines(&self) -> usize {
-        self.base.conv_machines()
+        self.spec.train.conv_machines()
     }
 }

@@ -1,0 +1,157 @@
+//! Integration: the experiment API (DESIGN.md §API) against the real
+//! PJRT-backed engine — `RunSpec::execute` must reproduce the raw
+//! scheduler path bit-for-bit, outcomes must roundtrip through JSON and
+//! the run store, and legacy TrainConfig files must keep working.
+
+mod common;
+
+use common::runtime;
+use omnivore::api::{RunOutcome, RunSpec, RunStore, FINAL_WINDOW};
+use omnivore::baselines::BaselineSystem;
+use omnivore::config::{FcMapping, Strategy, TrainConfig};
+use omnivore::engine::SchedulerKind;
+use omnivore::model::ParamSet;
+use omnivore::util::json::Json;
+
+fn spec(steps: usize) -> RunSpec {
+    RunSpec::new("lenet")
+        .cluster_preset("cpu-s")
+        .unwrap()
+        .sync()
+        .lr(0.03)
+        .momentum(0.6)
+        .steps(steps)
+        .seed(0)
+        .eval_every(0)
+}
+
+fn init() -> ParamSet {
+    ParamSet::init(runtime().manifest().arch("lenet").unwrap(), 0)
+}
+
+#[test]
+fn execute_reproduces_scheduler_run_bit_for_bit() {
+    // The facade must be a pure repackaging of SchedulerKind::run — on
+    // cpu-s g=1 the two paths execute the identical artifact sequence,
+    // so every record matches exactly.
+    let s = spec(16);
+    let (raw, _params) = SchedulerKind::SimClock.run(runtime(), &s, init()).unwrap();
+    let (outcome, via_api, _params) = s.execute_from(runtime(), init()).unwrap();
+    assert_eq!(raw.records.len(), 16);
+    assert_eq!(via_api.records.len(), 16);
+    for (a, b) in raw.records.iter().zip(&via_api.records) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.loss, b.loss, "loss diverged at seq {}", a.seq);
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.vtime, b.vtime);
+        assert_eq!(a.conv_staleness, b.conv_staleness);
+        assert_eq!(a.fc_staleness, b.fc_staleness);
+    }
+    // The outcome's headline numbers ARE the report's (what the CLI
+    // table prints and what --json emits).
+    assert_eq!(outcome.final_loss, via_api.final_loss(FINAL_WINDOW));
+    assert_eq!(outcome.final_acc, via_api.final_acc(FINAL_WINDOW));
+    assert_eq!(outcome.virtual_time, via_api.virtual_time);
+    assert_eq!(outcome.iters, 16);
+    assert_eq!(outcome.groups, via_api.groups);
+    assert_eq!(outcome.conv_staleness_mean, via_api.conv_staleness.mean());
+    assert_eq!(outcome.scheduler, "sim-clock");
+}
+
+#[test]
+fn one_call_execute_matches_cold_init() {
+    // execute() inits from the manifest + seed; identical to the
+    // explicit cold-init path.
+    let s = spec(12);
+    let a = s.execute(runtime()).unwrap();
+    let (b, _report, _params) = s.execute_from(runtime(), init()).unwrap();
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.final_acc, b.final_acc);
+    assert_eq!(a.virtual_time, b.virtual_time);
+}
+
+#[test]
+fn real_outcome_roundtrips_and_persists() {
+    let s = spec(12).tag("api-test").eval_every(4);
+    let outcome = s.execute(runtime()).unwrap();
+    assert!(outcome.final_eval_acc.is_some(), "eval cadence 4 must record evals");
+    // JSON roundtrip of a REAL outcome (not a synthetic report).
+    let j = outcome.to_json().dump();
+    let back = RunOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();
+    assert_eq!(back.final_loss, outcome.final_loss);
+    assert_eq!(back.final_acc, outcome.final_acc);
+    assert_eq!(back.virtual_time, outcome.virtual_time);
+    assert_eq!(back.final_eval_acc, outcome.final_eval_acc);
+    assert_eq!(back.predicted_iter_time, outcome.predicted_iter_time);
+    assert_eq!(back.spec.train.steps, 12);
+    // Store roundtrip: append, then look it up by tag and as latest.
+    let dir = omnivore::util::temp_dir("it-api-store").unwrap();
+    let store = RunStore::open(&dir).unwrap();
+    store.append(&outcome).unwrap();
+    let latest = store.latest().unwrap().unwrap();
+    assert_eq!(latest.final_loss, outcome.final_loss);
+    assert_eq!(store.by_tag("api-test").unwrap().len(), 1);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn legacy_train_config_file_drives_a_run() {
+    // A pre-API config file (bare TrainConfig JSON) must still load and
+    // execute — `omnivore train --config old.json` keeps working.
+    let cfg = TrainConfig {
+        arch: "lenet".into(),
+        steps: 8,
+        hyper: omnivore::config::Hyper { lr: 0.03, ..Default::default() },
+        ..TrainConfig::default()
+    };
+    let dir = omnivore::util::temp_dir("it-api-legacy").unwrap();
+    let path = dir.join("old.json");
+    std::fs::write(&path, cfg.to_json().dump()).unwrap();
+    let s = RunSpec::from_json_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(s.train.arch, "lenet");
+    assert_eq!(s.train.steps, 8);
+    assert_eq!(s.scheduler, SchedulerKind::SimClock);
+    let outcome = s.execute(runtime()).unwrap();
+    assert_eq!(outcome.iters, 8);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn spec_file_artifacts_dir_resolution() {
+    // The precedence the CLI applies: explicit flag > spec file > default.
+    let s = RunSpec::default().artifacts_dir("from-spec");
+    let parsed =
+        RunSpec::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+    assert_eq!(parsed.train.artifacts_dir, "from-spec");
+    assert_eq!(
+        omnivore::api::resolve_artifacts_dir(None, Some(&parsed.train.artifacts_dir)),
+        "from-spec"
+    );
+    assert_eq!(
+        omnivore::api::resolve_artifacts_dir(
+            Some("from-flag"),
+            Some(&parsed.train.artifacts_dir)
+        ),
+        "from-flag"
+    );
+}
+
+#[test]
+fn baseline_spec_runs_the_envelope() {
+    // A baseline on the spec applies the competitor's strategy envelope
+    // at execute time: mxnet-sync forces sync + unmerged FC.
+    let s = spec(8).groups(4).baseline(BaselineSystem::MxnetSync);
+    let cfg = s.effective_config();
+    assert_eq!(cfg.strategy, Strategy::Sync);
+    assert_eq!(cfg.fc_mapping, FcMapping::Unmerged);
+    let outcome = s.execute(runtime()).unwrap();
+    assert_eq!(outcome.groups, 1, "baseline envelope must win over the spec's g");
+}
+
+#[test]
+fn scheduler_choice_in_spec_is_honored() {
+    let s = spec(8).scheduler(SchedulerKind::OsThreads);
+    let outcome = s.execute(runtime()).unwrap();
+    assert_eq!(outcome.scheduler, "os-threads");
+    assert_eq!(outcome.iters, 8);
+}

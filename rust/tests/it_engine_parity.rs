@@ -37,14 +37,18 @@ fn init() -> ParamSet {
 
 #[test]
 fn scheduler_kind_selects_engines() {
-    // The by-name dispatch drives the same runs the engine facades do.
-    let (report, _params) = SchedulerKind::SimClock
-        .run(runtime(), cfg(1, 8), EngineOptions::default(), init())
-        .unwrap();
+    // The by-name dispatch drives the same runs the engine facades do;
+    // it now consumes a RunSpec (the experiment API's description).
+    let spec = |c: TrainConfig| omnivore::api::RunSpec {
+        train: c,
+        options: EngineOptions::default(),
+        ..omnivore::api::RunSpec::default()
+    };
+    let (report, _params) =
+        SchedulerKind::SimClock.run(runtime(), &spec(cfg(1, 8)), init()).unwrap();
     assert_eq!(report.records.len(), 8);
-    let (report, _params) = SchedulerKind::OsThreads
-        .run(runtime(), cfg(2, 8), EngineOptions::default(), init())
-        .unwrap();
+    let (report, _params) =
+        SchedulerKind::OsThreads.run(runtime(), &spec(cfg(2, 8)), init()).unwrap();
     assert_eq!(report.records.len(), 8);
 }
 

@@ -5,8 +5,8 @@
 mod common;
 
 use common::runtime;
-use omnivore::config::{cluster, Hyper, TrainConfig};
-use omnivore::engine::EngineOptions;
+use omnivore::api::RunSpec;
+use omnivore::config::Hyper;
 use omnivore::model::ParamSet;
 use omnivore::optimizer::grid_search::{grid_search, GridSpec};
 use omnivore::optimizer::se_model;
@@ -16,14 +16,11 @@ use omnivore::sim::ServiceDist;
 fn trainer(seed: u64) -> EngineTrainer<'static> {
     EngineTrainer::new(
         runtime(),
-        TrainConfig {
-            arch: "lenet".into(),
-            variant: "jnp".into(),
-            cluster: cluster::preset("cpu-s").unwrap(),
-            seed,
-            ..TrainConfig::default()
-        },
-        EngineOptions::default(),
+        RunSpec::new("lenet")
+            .cluster_preset("cpu-s")
+            .unwrap()
+            .seed(seed)
+            .eval_every(0),
     )
 }
 
@@ -34,6 +31,23 @@ fn init() -> ParamSet {
 #[test]
 fn trainer_reports_cluster_size() {
     assert_eq!(trainer(0).n_machines(), 8);
+}
+
+#[test]
+fn trainer_resolves_baseline_instead_of_reapplying_it() {
+    // A baseline envelope left on the trainer's spec would re-apply on
+    // every probe (effective_config forcing e.g. MXNet's fixed strategy
+    // and 0.9 momentum), silently overriding the exact (g, mu) the
+    // optimizer sweeps. The constructor must bake it into `train` once
+    // and clear it.
+    let spec = RunSpec::new("lenet")
+        .cluster_preset("cpu-s")
+        .unwrap()
+        .eval_every(0)
+        .baseline(omnivore::baselines::BaselineSystem::MxnetAsync);
+    let t = EngineTrainer::new(runtime(), spec);
+    assert!(t.spec.baseline.is_none());
+    assert_eq!(t.spec.train.fc_mapping, omnivore::config::FcMapping::Unmerged);
 }
 
 #[test]
@@ -85,7 +99,7 @@ fn async_behaves_like_added_momentum_on_real_engine() {
     // momentum: (g=1, mu=0.9) vs (g=4, mu=0.6) should both train well,
     // while (g=4, mu=0.9) does not (over-momentum).
     let mut t = trainer(0);
-    t.opts = EngineOptions { dist: ServiceDist::Exponential, ..Default::default() };
+    t.spec.options.dist = ServiceDist::Exponential;
     let lr = 0.03;
     let run = |t: &mut EngineTrainer, g: usize, mu: f32| {
         let (rep, _) = t
