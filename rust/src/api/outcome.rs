@@ -7,7 +7,7 @@
 use anyhow::{bail, Result};
 
 use super::spec::RunSpec;
-use crate::engine::{GroupStats, TrainReport};
+use crate::engine::{GroupStats, PlanEpochRecord, TrainReport};
 use crate::util::json::Json;
 
 /// Current RunOutcome schema version (same policy as
@@ -64,6 +64,11 @@ pub struct RunOutcome {
     /// Profile-aware HE-model prediction of the steady-state time per
     /// iteration, when the model could be derived for this spec.
     pub predicted_iter_time: Option<f64>,
+    /// The run's plan-epoch trace (`TrainReport.plan_epochs`): one
+    /// entry on static runs, one per adaptive re-plan otherwise, with
+    /// monotone versions and shares summing to the batch. Absent in
+    /// files written before adaptive planning shipped.
+    pub plan_epochs: Vec<PlanEpochRecord>,
 }
 
 impl RunOutcome {
@@ -107,6 +112,7 @@ impl RunOutcome {
             lit_cache_hits: report.lit_cache_hits,
             lit_cache_misses: report.lit_cache_misses,
             predicted_iter_time,
+            plan_epochs: report.plan_epochs.clone(),
         }
     }
 
@@ -156,6 +162,10 @@ impl RunOutcome {
         if let Some(p) = self.predicted_iter_time {
             fields.push(("predicted_iter_time", num_to_json(p)));
         }
+        fields.push((
+            "plan_epochs",
+            Json::Arr(self.plan_epochs.iter().map(plan_epoch_to_json).collect()),
+        ));
         Json::obj(fields)
     }
 
@@ -213,6 +223,17 @@ impl RunOutcome {
                 .opt("predicted_iter_time")
                 .map(num_from_json)
                 .transpose()?,
+            // Optional: outcomes written before adaptive planning have
+            // no trace (treated as unknown, not as the empty trace of a
+            // zero-record run).
+            plan_epochs: match v.opt("plan_epochs") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(plan_epoch_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![],
+            },
         })
     }
 
@@ -251,6 +272,7 @@ const OUTCOME_FIELDS: &[&str] = &[
     "lit_cache_hits",
     "lit_cache_misses",
     "predicted_iter_time",
+    "plan_epochs",
 ];
 
 /// Non-finite-safe number encoding: a diverged run reports
@@ -283,6 +305,37 @@ fn num_from_json(v: &Json) -> Result<f64> {
 
 fn as_f32(v: &Json) -> Result<f32> {
     Ok(num_from_json(v)? as f32)
+}
+
+fn plan_epoch_to_json(e: &PlanEpochRecord) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(e.version as f64)),
+        ("since_vtime", num_to_json(e.since_vtime)),
+        (
+            "shares",
+            Json::Arr(e.shares.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+        ("iters", Json::Arr(e.iters.iter().map(|&n| Json::Num(n as f64)).collect())),
+    ])
+}
+
+fn plan_epoch_from_json(v: &Json) -> Result<PlanEpochRecord> {
+    Ok(PlanEpochRecord {
+        version: v.get("version")?.as_usize()? as u64,
+        since_vtime: num_from_json(v.get("since_vtime")?)?,
+        shares: v
+            .get("shares")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        iters: v
+            .get("iters")?
+            .as_arr()?
+            .iter()
+            .map(|n| Ok(n.as_usize()? as u64))
+            .collect::<Result<Vec<_>>>()?,
+    })
 }
 
 fn group_stats_to_json(s: &GroupStats) -> Json {
@@ -334,7 +387,14 @@ mod tests {
             .collect();
         let mut r = TrainReport {
             records,
-            evals: vec![EvalRecord { seq: 32, vtime: 16.0, loss: 0.8, acc: 0.55 }],
+            evals: vec![EvalRecord {
+                seq: 32,
+                vtime: 16.0,
+                loss: 0.8,
+                acc: 0.55,
+                group: 0,
+                cost: 0.0,
+            }],
             conv_staleness: StalenessStats {
                 publishes: 40,
                 total_staleness: 40,
@@ -355,6 +415,20 @@ mod tests {
             groups: 2,
             group_size: 4,
             group_stats: vec![],
+            plan_epochs: vec![
+                PlanEpochRecord {
+                    version: 0,
+                    since_vtime: 0.0,
+                    shares: vec![16, 16],
+                    iters: vec![10, 10],
+                },
+                PlanEpochRecord {
+                    version: 1,
+                    since_vtime: 10.5,
+                    shares: vec![24, 8],
+                    iters: vec![10, 10],
+                },
+            ],
         };
         r.recompute_group_stats(&["gpu".into(), "cpu".into()]);
         r.annotate_group_plan(&[24, 8], &[0.4, 0.6]);
@@ -429,9 +503,25 @@ mod tests {
             assert_eq!(a.batch_share, b.batch_share);
             assert_eq!(a.predicted_iter_gap, b.predicted_iter_gap);
         }
+        // The plan-epoch trace round-trips exactly.
+        assert_eq!(o2.plan_epochs, o.plan_epochs);
+        assert_eq!(o2.plan_epochs.len(), 2);
+        assert_eq!(o2.plan_epochs[1].shares, vec![24, 8]);
         // The embedded spec round-trips too.
         assert_eq!(o2.spec.train.arch, "lenet");
         assert_eq!(o2.spec.options.stop_at_train_acc, Some(0.5));
+    }
+
+    #[test]
+    fn outcomes_without_plan_trace_still_parse() {
+        // A pre-adaptive outcome line has no plan_epochs field at all.
+        let mut v = outcome().to_json();
+        match &mut v {
+            Json::Obj(m) => assert!(m.remove("plan_epochs").is_some(), "trace serialized"),
+            other => panic!("outcome must serialize to an object, got {other:?}"),
+        }
+        let o = RunOutcome::from_json(&v).unwrap();
+        assert!(o.plan_epochs.is_empty());
     }
 
     #[test]

@@ -151,6 +151,14 @@ impl RunSpec {
         self
     }
 
+    /// Adaptive batch planning: re-partition shares online from
+    /// measured per-group cadence (versioned plan epochs; see
+    /// `data::PlanController` and the CLI's `--adaptive-batch`).
+    pub fn adaptive_batch(mut self, on: bool) -> Self {
+        self.train.adaptive_batch = on;
+        self
+    }
+
     pub fn artifacts_dir(mut self, dir: &str) -> Self {
         self.train.artifacts_dir = dir.into();
         self
@@ -292,6 +300,20 @@ impl RunSpec {
                         "RunSpec.train.cluster.group_profiles[]",
                         PROFILE_FIELDS,
                     )?;
+                    if let Some(d @ Json::Obj(_)) = p.opt("drift") {
+                        // Unknown kinds fall through to the step list;
+                        // ProfileDrift::from_json rejects the kind
+                        // itself with a clearer error.
+                        let fields = match d.opt("kind").and_then(|k| k.as_str().ok()) {
+                            Some("ramp") => DRIFT_RAMP_FIELDS,
+                            _ => DRIFT_STEP_FIELDS,
+                        };
+                        reject_unknown(
+                            d,
+                            "RunSpec.train.cluster.group_profiles[].drift",
+                            fields,
+                        )?;
+                    }
                 }
             }
         }
@@ -334,6 +356,7 @@ const TRAIN_FIELDS: &[&str] = &[
     "seed",
     "artifacts_dir",
     "dynamic_batch",
+    "adaptive_batch",
 ];
 const HYPER_FIELDS: &[&str] = &["lr", "momentum", "lambda"];
 const CLUSTER_FIELDS: &[&str] = &[
@@ -344,7 +367,11 @@ const CLUSTER_FIELDS: &[&str] = &[
     "device",
     "group_profiles",
 ];
-const PROFILE_FIELDS: &[&str] = &["kind", "conv_speed", "fc_speed"];
+const PROFILE_FIELDS: &[&str] = &["kind", "conv_speed", "fc_speed", "drift"];
+// Per drift kind: a step carrying a ramp's "to" (or vice versa) is a
+// mis-edited schedule that would be silently ignored, not a valid file.
+const DRIFT_STEP_FIELDS: &[&str] = &["kind", "at", "factor"];
+const DRIFT_RAMP_FIELDS: &[&str] = &["kind", "from", "to", "factor"];
 const OPTION_FIELDS: &[&str] = &[
     "eval_every",
     "utilization",
@@ -656,6 +683,39 @@ mod tests {
             .dump()
             .replacen("\"conv_speed\":", "\"conv_sped\":1,\"conv_speed\":", 1);
         assert!(RunSpec::from_json(&Json::parse(&profile).unwrap()).is_err());
+    }
+
+    #[test]
+    fn adaptive_batch_and_drift_roundtrip() {
+        let s = RunSpec::new("lenet")
+            .cluster_preset("drift-s")
+            .unwrap()
+            .groups(4)
+            .adaptive_batch(true);
+        assert!(s.train.adaptive_batch);
+        assert!(s.train.cluster.has_drift());
+        let j = s.to_json().dump();
+        let s2 = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(s2.train.adaptive_batch);
+        assert_eq!(s2.train.cluster, s.train.cluster);
+        // A typo inside a drift schedule fails loudly like every other
+        // level of the versioned schema.
+        let bad = j.replacen("\"factor\":", "\"facter\":1,\"factor\":", 1);
+        let err = RunSpec::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown field"), "{err}");
+        // So does a cross-kind field: a step drift carrying a ramp's
+        // "to" is a mis-edited schedule, not a valid file.
+        let cross = j.replacen("\"factor\":", "\"to\":20.0,\"factor\":", 1);
+        let err = RunSpec::from_json(&Json::parse(&cross).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown field"), "{err}");
+        // Old files without the knob default to off.
+        let old = RunSpec::default()
+            .to_json()
+            .dump()
+            .replacen("\"adaptive_batch\":false,", "", 1);
+        assert_ne!(old, RunSpec::default().to_json().dump(), "field was removed");
+        let s3 = RunSpec::from_json(&Json::parse(&old).unwrap()).unwrap();
+        assert!(!s3.train.adaptive_batch);
     }
 
     #[test]

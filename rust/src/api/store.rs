@@ -64,31 +64,58 @@ impl RunStore {
     /// store; unparseable lines are skipped.
     pub fn load(&self) -> Result<Vec<RunOutcome>> {
         let Some(text) = self.read()? else { return Ok(vec![]) };
-        Ok(text
-            .lines()
-            .filter(|l| !l.trim().is_empty())
-            .filter_map(|l| Json::parse(l).ok())
-            .filter_map(|v| RunOutcome::from_json(&v).ok())
-            .collect())
+        Ok(parsed_lines(&text).collect())
     }
 
-    /// The most recently appended outcome. Scans from the tail, so only
-    /// the lines after the last parseable outcome are parsed — not the
-    /// whole history.
+    /// The most recently appended outcome. Same per-line parser as
+    /// [`Self::load`], run tail-first: only the lines after the last
+    /// parseable outcome are parsed — not the whole history.
     pub fn latest(&self) -> Result<Option<RunOutcome>> {
         let Some(text) = self.read()? else { return Ok(None) };
-        Ok(text
-            .lines()
-            .rev()
-            .filter(|l| !l.trim().is_empty())
-            .filter_map(|l| Json::parse(l).ok())
-            .find_map(|v| RunOutcome::from_json(&v).ok()))
+        Ok(text.lines().rev().find_map(parse_line))
     }
 
-    /// All outcomes recorded under `tag`, in append order.
+    /// All outcomes recorded under `tag`, in append order. Lines whose
+    /// (cheaply peeked) tag does not match are skipped BEFORE the full
+    /// outcome parse, so lookup never materializes outcomes it discards.
     pub fn by_tag(&self, tag: &str) -> Result<Vec<RunOutcome>> {
-        Ok(self.load()?.into_iter().filter(|o| o.tag() == Some(tag)).collect())
+        let Some(text) = self.read()? else { return Ok(vec![]) };
+        Ok(text
+            .lines()
+            .filter_map(|l| {
+                let v = parse_json_line(l)?;
+                if peek_tag(&v) != Some(tag) {
+                    return None;
+                }
+                RunOutcome::from_json(&v).ok()
+            })
+            .collect())
     }
+}
+
+/// One line -> JSON value (empty and unparseable lines skip).
+fn parse_json_line(line: &str) -> Option<Json> {
+    if line.trim().is_empty() {
+        return None;
+    }
+    Json::parse(line).ok()
+}
+
+/// The tag recorded on a serialized outcome, without building the
+/// outcome (`spec.tag` in the line's JSON).
+fn peek_tag(v: &Json) -> Option<&str> {
+    v.opt("spec")?.opt("tag")?.as_str().ok()
+}
+
+/// One line -> outcome; the single parser behind every read path
+/// (corrupt / newer-schema lines skip rather than poison the log).
+fn parse_line(line: &str) -> Option<RunOutcome> {
+    RunOutcome::from_json(&parse_json_line(line)?).ok()
+}
+
+/// Lazy parsed-line iterator over the whole log, append order.
+fn parsed_lines(text: &str) -> impl Iterator<Item = RunOutcome> + '_ {
+    text.lines().filter_map(parse_line)
 }
 
 #[cfg(test)]
@@ -136,6 +163,36 @@ mod tests {
         let all = store.load().unwrap();
         assert_eq!(all.len(), 1);
         assert_eq!(all[0].tag(), Some("ok"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn read_paths_share_one_parser() {
+        // One log with a corrupt line, a newer-schema line, and tagged
+        // outcomes: load/latest/by_tag must agree on what parses, and
+        // by_tag must keep append order.
+        let dir = crate::util::temp_dir("runstore").unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        store.append(&outcome("a", 1)).unwrap();
+        store.append(&outcome("b", 2)).unwrap();
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(store.path())
+                .unwrap();
+            writeln!(f, "{{broken").unwrap();
+            writeln!(f, "{{\"outcome_version\":999,\"spec\":{{\"tag\":\"a\"}}}}").unwrap();
+        }
+        store.append(&outcome("a", 3)).unwrap();
+        assert_eq!(store.load().unwrap().len(), 3);
+        assert_eq!(store.latest().unwrap().unwrap().spec.train.steps, 3);
+        let a = store.by_tag("a").unwrap();
+        assert_eq!(
+            a.iter().map(|o| o.spec.train.steps).collect::<Vec<_>>(),
+            vec![1, 3],
+            "newer-schema line with a matching tag is skipped, order kept"
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 

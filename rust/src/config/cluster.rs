@@ -37,12 +37,101 @@ impl DeviceKind {
     }
 }
 
+/// A scheduled change of a group's effective speed over virtual time —
+/// the runtime drift (thermal throttling, co-tenant contention, cloud
+/// preemption pressure) that OmniLearn (Tyagi & Sharma 2025) and Ma &
+/// Rusu (2020) observe makes any *declared* speed stale mid-run. The
+/// drift multiplies the profile's speed multipliers: `factor` < 1 is a
+/// slowdown (0.333 ≈ a 3x throttle), > 1 a recovery/boost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProfileDrift {
+    /// Speeds multiply by `factor` from virtual time `at` onward (a
+    /// throttle event flipping on).
+    Step { at: f64, factor: f64 },
+    /// The multiplier ramps linearly from 1.0 at `from` to `factor` at
+    /// `to` and stays there (gradual thermal degradation).
+    Ramp { from: f64, to: f64, factor: f64 },
+}
+
+impl ProfileDrift {
+    /// The speed multiplier this schedule applies at virtual time
+    /// `vtime` (1.0 before the drift begins).
+    pub fn factor_at(&self, vtime: f64) -> f64 {
+        match *self {
+            ProfileDrift::Step { at, factor } => {
+                if vtime >= at {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+            ProfileDrift::Ramp { from, to, factor } => {
+                if vtime <= from {
+                    1.0
+                } else if vtime >= to {
+                    factor
+                } else {
+                    1.0 + (factor - 1.0) * (vtime - from) / (to - from)
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ProfileDrift::Step { at, factor } => Json::obj(vec![
+                ("kind", Json::Str("step".into())),
+                ("at", Json::Num(at)),
+                ("factor", Json::Num(factor)),
+            ]),
+            ProfileDrift::Ramp { from, to, factor } => Json::obj(vec![
+                ("kind", Json::Str("ramp".into())),
+                ("from", Json::Num(from)),
+                ("to", Json::Num(to)),
+                ("factor", Json::Num(factor)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let factor = v.get("factor")?.as_f64()?;
+        // The factor multiplies a speed divisor in the timing model: a
+        // zero/negative/non-finite one schedules events at inf/NaN vtime.
+        anyhow::ensure!(
+            factor.is_finite() && factor > 0.0,
+            "drift factor must be finite and > 0, got {factor}"
+        );
+        match v.get("kind")?.as_str()? {
+            "step" => {
+                let at = v.get("at")?.as_f64()?;
+                anyhow::ensure!(at.is_finite() && at >= 0.0, "step drift `at` must be >= 0");
+                Ok(ProfileDrift::Step { at, factor })
+            }
+            "ramp" => {
+                let from = v.get("from")?.as_f64()?;
+                let to = v.get("to")?.as_f64()?;
+                anyhow::ensure!(
+                    from.is_finite() && from >= 0.0 && to.is_finite() && to > from,
+                    "ramp drift needs 0 <= from < to"
+                );
+                Ok(ProfileDrift::Ramp { from, to, factor })
+            }
+            other => anyhow::bail!("unknown drift kind {other:?} (step | ramp)"),
+        }
+    }
+}
+
 /// Relative speed of one compute group's machines, for heterogeneous
 /// clusters (mixed CPU+GPU fleets, straggler groups — the OmniLearn /
 /// Heterogeneous-SGD scenarios the paper's Fig 9 clusters motivate but
 /// treat as homogeneous). Multipliers are relative to the cluster's
 /// baseline machine (`tflops_per_machine`): service time divides by the
 /// multiplier, so 2.0 means the group finishes its phase twice as fast.
+///
+/// An optional [`ProfileDrift`] makes the *effective* speed a function
+/// of virtual time ([`Self::conv_speed_at`]) — the declared multipliers
+/// describe the hardware at rest, the drift describes how it degrades
+/// mid-run (what `--adaptive-batch` exists to chase).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceProfile {
     pub kind: DeviceKind,
@@ -51,12 +140,37 @@ pub struct DeviceProfile {
     pub conv_speed: f64,
     /// FC/GEMM-phase speed multiplier.
     pub fc_speed: f64,
+    /// Scheduled runtime drift of both multipliers (None = steady).
+    pub drift: Option<ProfileDrift>,
 }
 
 impl DeviceProfile {
     /// The cluster's own baseline machine (homogeneous default).
     pub fn baseline(kind: DeviceKind) -> Self {
-        Self { kind, conv_speed: 1.0, fc_speed: 1.0 }
+        Self { kind, conv_speed: 1.0, fc_speed: 1.0, drift: None }
+    }
+
+    /// Attach a drift schedule.
+    pub fn with_drift(mut self, drift: ProfileDrift) -> Self {
+        self.drift = Some(drift);
+        self
+    }
+
+    /// Effective conv-speed multiplier at virtual time `vtime`
+    /// (identical to `conv_speed` when no drift is scheduled).
+    pub fn conv_speed_at(&self, vtime: f64) -> f64 {
+        match self.drift {
+            Some(d) => self.conv_speed * d.factor_at(vtime),
+            None => self.conv_speed,
+        }
+    }
+
+    /// Effective FC-speed multiplier at virtual time `vtime`.
+    pub fn fc_speed_at(&self, vtime: f64) -> f64 {
+        match self.drift {
+            Some(d) => self.fc_speed * d.factor_at(vtime),
+            None => self.fc_speed,
+        }
     }
 
     /// Profile for a device kind relative to a CPU baseline, from the
@@ -68,9 +182,11 @@ impl DeviceProfile {
     /// throughputs add.
     pub fn from_kind(kind: DeviceKind) -> Self {
         match kind {
-            DeviceKind::Cpu => Self { kind, conv_speed: 1.0, fc_speed: 1.0 },
-            DeviceKind::Gpu => Self { kind, conv_speed: 6.6, fc_speed: 4.0 },
-            DeviceKind::Hybrid => Self { kind, conv_speed: 7.6, fc_speed: 4.5 },
+            DeviceKind::Cpu => Self { kind, conv_speed: 1.0, fc_speed: 1.0, drift: None },
+            DeviceKind::Gpu => Self { kind, conv_speed: 6.6, fc_speed: 4.0, drift: None },
+            DeviceKind::Hybrid => {
+                Self { kind, conv_speed: 7.6, fc_speed: 4.5, drift: None }
+            }
         }
     }
 
@@ -78,15 +194,19 @@ impl DeviceProfile {
     /// `slowdown` > 1 means this group takes `slowdown`x longer.
     pub fn straggler(kind: DeviceKind, slowdown: f64) -> Self {
         let s = slowdown.max(1e-9);
-        Self { kind, conv_speed: 1.0 / s, fc_speed: 1.0 / s }
+        Self { kind, conv_speed: 1.0 / s, fc_speed: 1.0 / s, drift: None }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::Str(self.kind.name().into())),
             ("conv_speed", Json::Num(self.conv_speed)),
             ("fc_speed", Json::Num(self.fc_speed)),
-        ])
+        ];
+        if let Some(d) = &self.drift {
+            fields.push(("drift", d.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -106,7 +226,13 @@ impl DeviceProfile {
             fc_speed.is_finite() && fc_speed > 0.0,
             "fc_speed must be finite and > 0, got {fc_speed}"
         );
-        Ok(Self { kind: DeviceKind::parse(v.get("kind")?.as_str()?)?, conv_speed, fc_speed })
+        let drift = v.opt("drift").map(ProfileDrift::from_json).transpose()?;
+        Ok(Self {
+            kind: DeviceKind::parse(v.get("kind")?.as_str()?)?,
+            conv_speed,
+            fc_speed,
+            drift,
+        })
     }
 }
 
@@ -163,11 +289,36 @@ impl ClusterSpec {
         }
     }
 
-    /// Whether any group deviates from the baseline machine.
+    /// Whether any group deviates from the baseline machine. Declared
+    /// speeds only: a cluster whose groups all start at baseline but
+    /// carry a [`ProfileDrift`] is NOT heterogeneous up front — that is
+    /// exactly the case a static plan cannot see and adaptive
+    /// re-planning exists for (see [`Self::has_drift`]).
     pub fn is_heterogeneous(&self) -> bool {
         self.group_profiles
             .iter()
             .any(|p| p.conv_speed != 1.0 || p.fc_speed != 1.0)
+    }
+
+    /// Whether any group's speed is scheduled to drift at runtime.
+    pub fn has_drift(&self) -> bool {
+        self.group_profiles.iter().any(|p| p.drift.is_some())
+    }
+
+    /// The group with the highest effective conv speed at `vtime` —
+    /// where straggler-aware eval placement runs the held-out pass
+    /// (first group wins ties, so homogeneous clusters keep the
+    /// historical group-0 placement).
+    pub fn fastest_group(&self, groups: usize, vtime: f64) -> usize {
+        let mut best = 0;
+        for g in 1..groups {
+            if self.profile_for(g).conv_speed_at(vtime)
+                > self.profile_for(best).conv_speed_at(vtime)
+            {
+                best = g;
+            }
+        }
+        best
     }
 
     /// Total cluster TFLOPS (Fig 9 column).
@@ -244,13 +395,23 @@ pub const CLUSTER_PRESETS: &[(&str, usize, f64, f64, DeviceKind)] = &[
     ("gpu-s", 9, 4.89, 10.0, DeviceKind::Gpu),
 ];
 
+/// Virtual time at which the `drift-s` preset's throttled group steps
+/// down, and the step factor (a 3x slowdown). Mid-run for the short
+/// training configurations the preset targets; override the cluster
+/// spec in JSON for other schedules.
+pub const DRIFT_S_AT: f64 = 6.0;
+pub const DRIFT_S_FACTOR: f64 = 1.0 / 3.0;
+
 /// Look up a preset by name. Beyond the paper's homogeneous Fig 9 table
-/// there are two heterogeneous presets (new scenario class, see
-/// DESIGN.md §Engines):
+/// there are three heterogeneous/drifting presets (new scenario class,
+/// see DESIGN.md §Engines / §Adaptation):
 /// * `hetero-s` — the cpu-s fabric with one GPU-profile group and three
 ///   CPU-profile groups (a mixed CPU+GPU fleet);
 /// * `straggler-s` — cpu-s with one group running at half speed (a
-///   contended/throttled node).
+///   contended/throttled node);
+/// * `drift-s` — cpu-s, homogeneous as declared, but group 0 throttles
+///   3x at vtime [`DRIFT_S_AT`] (the mid-run degradation a static plan
+///   cannot see; what `--adaptive-batch` adapts to).
 pub fn preset(name: &str) -> Option<ClusterSpec> {
     if let Some(spec) = CLUSTER_PRESETS
         .iter()
@@ -276,6 +437,19 @@ pub fn preset(name: &str) -> Option<ClusterSpec> {
             c.name = "straggler-s".into();
             Some(c.with_group_profiles(vec![
                 DeviceProfile::straggler(DeviceKind::Cpu, 2.0),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+                DeviceProfile::baseline(DeviceKind::Cpu),
+            ]))
+        }
+        "drift-s" => {
+            let mut c = preset("cpu-s")?;
+            c.name = "drift-s".into();
+            Some(c.with_group_profiles(vec![
+                DeviceProfile::baseline(DeviceKind::Cpu).with_drift(ProfileDrift::Step {
+                    at: DRIFT_S_AT,
+                    factor: DRIFT_S_FACTOR,
+                }),
                 DeviceProfile::baseline(DeviceKind::Cpu),
                 DeviceProfile::baseline(DeviceKind::Cpu),
                 DeviceProfile::baseline(DeviceKind::Cpu),
@@ -347,6 +521,79 @@ mod tests {
         assert!(c.is_heterogeneous());
         assert!((c.profile_for(0).conv_speed - 0.5).abs() < 1e-12);
         assert_eq!(c.profile_for(1).conv_speed, 1.0);
+    }
+
+    #[test]
+    fn drift_factor_schedules() {
+        let step = ProfileDrift::Step { at: 5.0, factor: 0.25 };
+        assert_eq!(step.factor_at(0.0), 1.0);
+        assert_eq!(step.factor_at(4.999), 1.0);
+        assert_eq!(step.factor_at(5.0), 0.25);
+        assert_eq!(step.factor_at(100.0), 0.25);
+        let ramp = ProfileDrift::Ramp { from: 2.0, to: 6.0, factor: 0.5 };
+        assert_eq!(ramp.factor_at(1.0), 1.0);
+        assert!((ramp.factor_at(4.0) - 0.75).abs() < 1e-12);
+        assert_eq!(ramp.factor_at(6.0), 0.5);
+        assert_eq!(ramp.factor_at(9.0), 0.5);
+    }
+
+    #[test]
+    fn drifting_profile_effective_speeds() {
+        let p = DeviceProfile::from_kind(DeviceKind::Gpu)
+            .with_drift(ProfileDrift::Step { at: 3.0, factor: 0.5 });
+        assert_eq!(p.conv_speed_at(0.0), 6.6);
+        assert!((p.conv_speed_at(3.0) - 3.3).abs() < 1e-12);
+        assert!((p.fc_speed_at(3.0) - 2.0).abs() < 1e-12);
+        // No drift: effective == declared, bit-exactly.
+        let q = DeviceProfile::baseline(DeviceKind::Cpu);
+        assert_eq!(q.conv_speed_at(1e9), q.conv_speed);
+    }
+
+    #[test]
+    fn drift_s_preset_is_homogeneous_as_declared_but_drifts() {
+        let c = preset("drift-s").unwrap();
+        assert!(!c.is_heterogeneous(), "declared speeds are all baseline");
+        assert!(c.has_drift());
+        assert_eq!(c.profile_for(0).conv_speed_at(0.0), 1.0);
+        assert!((c.profile_for(0).conv_speed_at(DRIFT_S_AT) - DRIFT_S_FACTOR).abs() < 1e-12);
+        assert_eq!(c.profile_for(1).conv_speed_at(DRIFT_S_AT), 1.0);
+        // JSON roundtrip carries the drift schedule.
+        let j = c.to_json().dump();
+        let c2 = ClusterSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn drift_json_rejects_bad_schedules() {
+        for bad in [
+            r#"{"kind":"step","at":1.0,"factor":0.0}"#,
+            r#"{"kind":"step","at":-1.0,"factor":0.5}"#,
+            r#"{"kind":"ramp","from":5.0,"to":2.0,"factor":0.5}"#,
+            r#"{"kind":"spike","at":1.0,"factor":0.5}"#,
+        ] {
+            assert!(
+                ProfileDrift::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+        let ok = r#"{"kind":"ramp","from":1.0,"to":4.0,"factor":0.5}"#;
+        let d = ProfileDrift::from_json(&Json::parse(ok).unwrap()).unwrap();
+        let d2 = ProfileDrift::from_json(&Json::parse(&d.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn fastest_group_tracks_drift() {
+        let c = preset("hetero-s").unwrap();
+        assert_eq!(c.fastest_group(4, 0.0), 0); // the GPU group
+        let d = preset("drift-s").unwrap();
+        assert_eq!(d.fastest_group(4, 0.0), 0, "homogeneous: first group wins ties");
+        assert_eq!(
+            d.fastest_group(4, DRIFT_S_AT + 1.0),
+            1,
+            "after the throttle the first non-drifted group is fastest"
+        );
+        assert_eq!(preset("cpu-s").unwrap().fastest_group(4, 0.0), 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 pub mod cluster;
 
-pub use cluster::{ClusterSpec, DeviceKind, DeviceProfile, CLUSTER_PRESETS};
+pub use cluster::{ClusterSpec, DeviceKind, DeviceProfile, ProfileDrift, CLUSTER_PRESETS};
 
 use anyhow::{Context, Result};
 
@@ -134,6 +134,12 @@ pub struct TrainConfig {
     /// (OmniLearn-style dynamic batching; no effect on homogeneous
     /// clusters). See [`crate::data::BatchPlan`].
     pub dynamic_batch: bool,
+    /// Adaptive batch planning: re-partition the batch online from
+    /// measured per-group cadence (versioned plan epochs with
+    /// hysteresis — [`crate::data::PlanController`]). Off, or on a
+    /// steady homogeneous cluster, runs are bit-identical to the static
+    /// plan.
+    pub adaptive_batch: bool,
 }
 
 impl Default for TrainConfig {
@@ -150,6 +156,7 @@ impl Default for TrainConfig {
             seed: 0,
             artifacts_dir: "artifacts".into(),
             dynamic_batch: false,
+            adaptive_batch: false,
         }
     }
 }
@@ -177,6 +184,7 @@ impl TrainConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
             ("dynamic_batch", Json::Bool(self.dynamic_batch)),
+            ("adaptive_batch", Json::Bool(self.adaptive_batch)),
         ])
     }
 
@@ -202,6 +210,11 @@ impl TrainConfig {
                 .unwrap_or(d.artifacts_dir),
             dynamic_batch: v
                 .opt("dynamic_batch")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+            adaptive_batch: v
+                .opt("adaptive_batch")
                 .map(|b| b.as_bool())
                 .transpose()?
                 .unwrap_or(false),

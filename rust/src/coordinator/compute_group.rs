@@ -20,6 +20,7 @@ use anyhow::Result;
 
 use super::merged_fc::FcServer;
 use super::param_server::{ModelSnapshot, ParamServer};
+use crate::data::PlanController;
 use crate::runtime::{from_literal, to_literal, LiteralCache, LiteralSet, Runtime};
 use crate::tensor::HostTensor;
 
@@ -45,6 +46,15 @@ pub struct ConvFwdState {
     pub fc_snapshot: Option<ModelSnapshot>,
     pub activations: HostTensor,
     pub labels: Vec<i32>,
+    /// Plan-epoch version current when this iteration read the model —
+    /// its publishes are weighted by THIS epoch's gradient weight even
+    /// if a newer epoch goes live mid-iteration, so the weighted
+    /// eq. (3)-(4) round stays unbiased across a plan swap.
+    pub plan_version: u64,
+    /// That epoch's gradient weight for this group, resolved once at
+    /// read time (both publishes reuse it instead of re-locking the
+    /// controller).
+    pub grad_weight: f32,
     param_lits: Arc<LiteralSet>,
     images_lit: xla::Literal,
 }
@@ -53,10 +63,10 @@ pub struct ConvFwdState {
 pub struct ComputeGroup {
     pub id: usize,
     pub k: usize,
-    /// Batch-plan gradient weight `share * g / batch` for this group's
-    /// publishes (1.0 on the equal split): unequal shares then still sum
-    /// to an unbiased full-batch gradient per round (data::BatchPlan).
-    grad_weight: f32,
+    /// The run's plan controller: batch shares and gradient weights are
+    /// resolved through it, BY PLAN VERSION at publish time (1.0 on the
+    /// equal split — see data::BatchPlan / data::PlanController).
+    planner: Arc<PlanController>,
     conv_fwd_artifact: String,
     conv_bwd_artifact: String,
     conv_ps: Arc<ParamServer>,
@@ -69,22 +79,30 @@ impl ComputeGroup {
     pub fn new(
         id: usize,
         k: usize,
-        grad_weight: f32,
+        planner: Arc<PlanController>,
         conv_fwd_artifact: String,
         conv_bwd_artifact: String,
         conv_ps: Arc<ParamServer>,
         lit_cache: Arc<LiteralCache>,
     ) -> Self {
-        Self { id, k, grad_weight, conv_fwd_artifact, conv_bwd_artifact, conv_ps, lit_cache }
+        Self { id, k, planner, conv_fwd_artifact, conv_bwd_artifact, conv_ps, lit_cache }
     }
 
     pub fn conv_ps(&self) -> &Arc<ParamServer> {
         &self.conv_ps
     }
 
-    /// This group's batch-plan gradient weight.
+    /// This group's gradient weight under the CURRENT plan epoch (for
+    /// callers outside an iteration; inside one, use
+    /// [`Self::grad_weight_for`] with the iteration's bound version).
     pub fn grad_weight(&self) -> f32 {
-        self.grad_weight
+        self.planner.grad_weight(self.planner.current_version(), self.id)
+    }
+
+    /// Gradient weight under plan epoch `version` — what every publish
+    /// of an iteration that read the model under that epoch must use.
+    pub fn grad_weight_for(&self, version: u64) -> f32 {
+        self.planner.grad_weight(version, self.id)
     }
 
     /// Phase 1: read the conv model (and, if unmerged, the FC model) and
@@ -97,6 +115,11 @@ impl ComputeGroup {
         fc: &FcServer,
     ) -> Result<ConvFwdState> {
         let snapshot = self.conv_ps.read();
+        // Bind the iteration to the plan epoch current at read time (the
+        // version its publishes will be weighted by) and resolve that
+        // epoch's weight once.
+        let plan_version = self.planner.current_version();
+        let grad_weight = self.planner.grad_weight(plan_version, self.id);
         // Unmerged FC: the group reads the FC model at iteration start
         // (it will compute the FC phase itself, against this stale copy).
         let fc_snapshot =
@@ -114,6 +137,8 @@ impl ComputeGroup {
             fc_snapshot,
             activations,
             labels: labels.to_vec(),
+            plan_version,
+            grad_weight,
             param_lits,
             images_lit,
         })
@@ -134,7 +159,7 @@ impl ComputeGroup {
         let outs = rt.execute_refs(&self.conv_bwd_artifact, &lits)?;
         let grads: Vec<HostTensor> =
             outs.iter().map(from_literal).collect::<Result<_>>()?;
-        self.conv_ps.publish_scaled(&grads, state.snapshot.version, self.grad_weight)
+        self.conv_ps.publish_scaled(&grads, state.snapshot.version, state.grad_weight)
     }
 
     /// Convenience: one whole iteration (read → conv fwd → FC step →
@@ -153,7 +178,7 @@ impl ComputeGroup {
             &state.activations,
             &state.labels,
             state.fc_snapshot.clone(),
-            self.grad_weight,
+            state.grad_weight,
         )?;
         let conv_staleness = self.conv_backward_publish(rt, &state, &fc_out.g_act)?;
         Ok(StepOutput {

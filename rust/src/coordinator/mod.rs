@@ -50,22 +50,35 @@ pub struct Topology {
     pub microbatch: usize,
     /// Workers per group.
     pub k: usize,
-    /// Per-group batch shares (FLOPS-proportional under
-    /// `cfg.dynamic_batch` on heterogeneous clusters; the equal split
-    /// otherwise). Slices each group's nominal claim of the global
-    /// batch and sets the groups' gradient weights.
-    pub plan: crate::data::BatchPlan,
+    /// The run's plan controller: the (possibly adaptive) sequence of
+    /// per-group batch-share epochs. Slices each group's nominal claim
+    /// of the global batch and resolves the groups' gradient weights by
+    /// plan version (see `data::PlanController`).
+    pub planner: std::sync::Arc<crate::data::PlanController>,
 }
 
 #[cfg(feature = "xla")]
 impl Topology {
-    /// Build a topology from config + runtime + initial parameters.
-    ///
-    /// Numerics run at the full group batch (one conv call per phase —
-    /// identical to the k-microbatch sum by linearity; see
-    /// compute_group.rs §Perf note); `k = N/g` parameterizes the timing
-    /// model only.
+    /// Build a topology from config + runtime + initial parameters with
+    /// a FIXED plan controller on the config's static plan. Numerics run
+    /// at the full group batch (one conv call per phase — identical to
+    /// the k-microbatch sum by linearity; see compute_group.rs §Perf
+    /// note); `k = N/g` parameterizes the timing model only.
     pub fn build(cfg: &TrainConfig, rt: &Runtime, init: ParamSet) -> Result<Self> {
+        let planner = Arc::new(crate::data::PlanController::fixed(cfg.batch_plan()));
+        Self::build_with_planner(cfg, rt, init, planner)
+    }
+
+    /// [`Self::build`] sharing the caller's plan controller — how the
+    /// engine driver wires the session's (possibly adaptive) controller
+    /// into the groups so timing, shares, and gradient weights can
+    /// never disagree about which epoch is in force.
+    pub fn build_with_planner(
+        cfg: &TrainConfig,
+        rt: &Runtime,
+        init: ParamSet,
+        planner: std::sync::Arc<crate::data::PlanController>,
+    ) -> Result<Self> {
         let m = rt.manifest();
         let g = cfg.groups();
         let k = cfg.group_size();
@@ -91,13 +104,12 @@ impl Topology {
         let conv_lits = Arc::new(LiteralCache::new());
         let fwd = fwd_entry.name.clone();
         let bwd = bwd_entry.name.clone();
-        let plan = cfg.batch_plan();
         let groups = (0..g)
             .map(|id| {
                 ComputeGroup::new(
                     id,
                     k,
-                    plan.grad_weight(id),
+                    planner.clone(),
                     fwd.clone(),
                     bwd.clone(),
                     conv_ps.clone(),
@@ -105,7 +117,7 @@ impl Topology {
                 )
             })
             .collect();
-        Ok(Self { groups, conv_ps, fc, conv_lits, microbatch: cfg.batch, k, plan })
+        Ok(Self { groups, conv_ps, fc, conv_lits, microbatch: cfg.batch, k, planner })
     }
 
     /// Update hyperparameters on both servers (optimizer epoch boundary).

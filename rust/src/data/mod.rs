@@ -10,8 +10,10 @@
 //! momentum) depend on the update process, not on the image corpus.
 
 mod batch_plan;
+mod plan_controller;
 
 pub use batch_plan::BatchPlan;
+pub use plan_controller::{AdaptivePolicy, PlanController, PlanEpoch};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

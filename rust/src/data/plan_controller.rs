@@ -1,0 +1,440 @@
+//! Adaptive batch planning: versioned plan epochs driven by measured
+//! cadence (DESIGN.md §Adaptation).
+//!
+//! PR 3's [`BatchPlan`] is computed once, up front, from *declared*
+//! device profiles — if a declared speed is wrong or a device throttles
+//! mid-run, the plan silently stays wrong for the whole run. The
+//! [`PlanController`] turns the plan into a feedback loop (OmniLearn's
+//! approach, Tyagi & Sharma 2025): it owns a sequence of versioned
+//! [`PlanEpoch`]s, observes measured per-group completion cadence from
+//! the driver (EMA over completion gaps), and republishes revised
+//! FLOPS-proportional shares when the measured cadences diverge — with
+//! hysteresis (divergence threshold δ, minimum observations per group
+//! per epoch, minimum re-plan interval) so shares converge on drifting
+//! hardware instead of oscillating.
+//!
+//! Consistency obligations (the reason this is one object threaded
+//! through every layer rather than a mutable plan):
+//!
+//! * **Timing** — [`crate::sim::TimingModel`] consults the controller's
+//!   *current* epoch for conv work fractions, so a swap takes effect on
+//!   the next sampled phase.
+//! * **Statistics** — gradient weights are resolved **by plan version**
+//!   at publish time ([`Self::grad_weight`]): an iteration that read the
+//!   model under epoch k publishes with epoch k's weight even if k+1 is
+//!   live by then, and within any epoch the g weights sum to g, so the
+//!   weighted eq. (3)-(4) updates stay unbiased across a swap.
+//! * **Reporting** — the full epoch trace ([`Self::epochs`]) lands in
+//!   `TrainReport.plan_epochs` / the `RunOutcome` JSON, with monotone
+//!   versions and shares summing to the batch in every epoch.
+//!
+//! A [`PlanController::fixed`] controller never re-plans and its single
+//! epoch is the static plan — the `adaptive_batch = false` path is
+//! bit-identical to the historical one.
+
+use std::sync::Mutex;
+
+use super::BatchPlan;
+
+/// One published plan revision: the shares in force from `since_vtime`
+/// until the next epoch's `since_vtime`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanEpoch {
+    /// Monotone revision counter, 0 for the initial plan.
+    pub version: u64,
+    pub plan: BatchPlan,
+    /// Virtual time this epoch became current (0.0 for the initial).
+    pub since_vtime: f64,
+}
+
+/// Hysteresis knobs for the re-planning loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptivePolicy {
+    /// Re-plan only when the slowest group's smoothed completion gap
+    /// exceeds the fastest group's by more than this relative margin
+    /// (`max_gap / min_gap > 1 + delta`).
+    pub delta: f64,
+    /// Every group must complete at least this many gap observations
+    /// under the current epoch before a re-plan is considered (the
+    /// "round boundary" granularity: one observation per group ≈ one
+    /// round).
+    pub min_observations: u64,
+    /// Minimum virtual seconds between consecutive re-plans.
+    pub min_interval: f64,
+    /// EMA smoothing factor for per-group completion gaps (weight of
+    /// the newest observation).
+    pub ema_alpha: f64,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        // δ = 25% sits far above service-time noise (the paper measures
+        // ~6% CV on dense CNN iterations) and far below the 2-3x drifts
+        // worth chasing; 4 gaps/group ≈ 4 rounds of warmup per epoch.
+        Self { delta: 0.25, min_observations: 4, min_interval: 0.0, ema_alpha: 0.4 }
+    }
+}
+
+#[derive(Debug)]
+struct ControllerState {
+    epochs: Vec<PlanEpoch>,
+    /// Smoothed completion gap per group (None until first observation).
+    ema_gap: Vec<Option<f64>>,
+    /// Gap observations per group under the current epoch.
+    obs: Vec<u64>,
+    last_replan_vtime: f64,
+}
+
+/// Owner of the run's plan-epoch sequence (see module docs). Shared
+/// (`Arc`) between the session, the timing model, and the compute
+/// groups; all methods take `&self`.
+#[derive(Debug)]
+pub struct PlanController {
+    batch: usize,
+    adaptive: Option<AdaptivePolicy>,
+    /// Fixed controllers serve their single immutable epoch from here,
+    /// so the static path's hot accessors (work fractions on every
+    /// sampled phase, gradient weights on every publish) never touch
+    /// the mutex — matching the zero-synchronization cost of the
+    /// historical cached plan.
+    fixed_plan: Option<BatchPlan>,
+    state: Mutex<ControllerState>,
+}
+
+impl PlanController {
+    /// A frozen controller: one epoch forever, `observe`/`maybe_replan`
+    /// are no-ops. The static-plan path.
+    pub fn fixed(plan: BatchPlan) -> Self {
+        Self::build(plan, None)
+    }
+
+    /// An adaptive controller starting from `initial` (normally the
+    /// config's static plan) under `policy`.
+    pub fn adaptive(initial: BatchPlan, policy: AdaptivePolicy) -> Self {
+        Self::build(initial, Some(policy))
+    }
+
+    fn build(initial: BatchPlan, adaptive: Option<AdaptivePolicy>) -> Self {
+        let groups = initial.groups();
+        let batch = initial.batch();
+        let fixed_plan = if adaptive.is_none() { Some(initial.clone()) } else { None };
+        Self {
+            batch,
+            adaptive,
+            fixed_plan,
+            state: Mutex::new(ControllerState {
+                epochs: vec![PlanEpoch { version: 0, plan: initial, since_vtime: 0.0 }],
+                ema_gap: vec![None; groups],
+                obs: vec![0; groups],
+                // The FIRST re-plan is gated by warmup only;
+                // min_interval spaces CONSECUTIVE re-plans.
+                last_replan_vtime: f64::NEG_INFINITY,
+            }),
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive.is_some()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn groups(&self) -> usize {
+        if let Some(p) = &self.fixed_plan {
+            return p.groups();
+        }
+        self.state.lock().unwrap().ema_gap.len()
+    }
+
+    /// The epoch currently in force.
+    pub fn current(&self) -> PlanEpoch {
+        self.state.lock().unwrap().epochs.last().expect("at least one epoch").clone()
+    }
+
+    pub fn current_version(&self) -> u64 {
+        if self.fixed_plan.is_some() {
+            return 0;
+        }
+        let st = self.state.lock().unwrap();
+        st.epochs.last().expect("at least one epoch").version
+    }
+
+    /// The current epoch's plan (what reports describe as "the" plan).
+    pub fn current_plan(&self) -> BatchPlan {
+        if let Some(p) = &self.fixed_plan {
+            return p.clone();
+        }
+        self.current().plan
+    }
+
+    /// The plan of a specific epoch version (versions are dense from 0,
+    /// so this is an index; out-of-range clamps to the latest — a
+    /// publish can never reference an epoch that does not exist yet).
+    pub fn plan_for(&self, version: u64) -> BatchPlan {
+        if let Some(p) = &self.fixed_plan {
+            return p.clone();
+        }
+        let st = self.state.lock().unwrap();
+        let i = (version as usize).min(st.epochs.len() - 1);
+        st.epochs[i].plan.clone()
+    }
+
+    /// Gradient weight of `group`'s publish computed under epoch
+    /// `version` — resolved by version so a publish read under epoch k
+    /// stays weighted by epoch k after a swap.
+    pub fn grad_weight(&self, version: u64, group: usize) -> f32 {
+        if let Some(p) = &self.fixed_plan {
+            return p.grad_weight(group);
+        }
+        let st = self.state.lock().unwrap();
+        let i = (version as usize).min(st.epochs.len() - 1);
+        st.epochs[i].plan.grad_weight(group)
+    }
+
+    /// Current conv work fraction of `group` (the timing model's input;
+    /// cycles past the group count like [`BatchPlan::share`]).
+    pub fn work_fraction(&self, group: usize) -> f64 {
+        if let Some(p) = &self.fixed_plan {
+            return p.work_fraction(group);
+        }
+        let st = self.state.lock().unwrap();
+        st.epochs.last().expect("at least one epoch").plan.work_fraction(group)
+    }
+
+    /// Current batch share of `group`.
+    pub fn share(&self, group: usize) -> usize {
+        if let Some(p) = &self.fixed_plan {
+            return p.share(group);
+        }
+        let st = self.state.lock().unwrap();
+        st.epochs.last().expect("at least one epoch").plan.share(group)
+    }
+
+    /// Record one measured completion gap for `group` (virtual seconds
+    /// between its successive completions). No-op on fixed controllers
+    /// and for degenerate gaps.
+    pub fn observe(&self, group: usize, gap: f64) {
+        let Some(policy) = self.adaptive else { return };
+        if !gap.is_finite() || gap <= 0.0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if group >= st.ema_gap.len() {
+            return;
+        }
+        let a = policy.ema_alpha.clamp(0.0, 1.0);
+        st.ema_gap[group] = Some(match st.ema_gap[group] {
+            Some(prev) => (1.0 - a) * prev + a * gap,
+            None => gap,
+        });
+        st.obs[group] += 1;
+    }
+
+    /// Consider publishing a revised plan at virtual time `vtime`.
+    /// Returns the new epoch's version when a swap happened. Hysteresis
+    /// (see [`AdaptivePolicy`]): requires warmup observations from every
+    /// group under the current epoch, a minimum interval since the last
+    /// swap, and cadence divergence beyond δ; a candidate identical to
+    /// the current shares restarts the warmup instead of stacking a
+    /// no-op epoch.
+    pub fn maybe_replan(&self, vtime: f64) -> Option<u64> {
+        let policy = self.adaptive?;
+        let mut st = self.state.lock().unwrap();
+        if st.obs.iter().any(|&n| n < policy.min_observations) {
+            return None;
+        }
+        if vtime - st.last_replan_vtime < policy.min_interval {
+            return None;
+        }
+        let gaps: Vec<f64> = st.ema_gap.iter().copied().collect::<Option<Vec<_>>>()?;
+        let (lo, hi) = gaps
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        if !(lo > 0.0 && hi.is_finite()) || hi / lo <= 1.0 + policy.delta {
+            return None;
+        }
+        // Measured per-group throughput (images/virtual-second) under
+        // the current shares is the best available speed estimate.
+        let current = st.epochs.last().expect("at least one epoch").plan.clone();
+        let speeds: Vec<f64> = (0..gaps.len()).map(|g| current.share(g) as f64 / gaps[g]).collect();
+        let candidate = BatchPlan::proportional(self.batch, &speeds);
+        st.obs.fill(0);
+        st.last_replan_vtime = vtime;
+        if candidate.shares() == current.shares() {
+            // Divergence persists but integer shares cannot express a
+            // finer split (e.g. an FC-bound cadence floor): restart the
+            // warmup, publish nothing.
+            return None;
+        }
+        let version = st.epochs.len() as u64;
+        st.epochs.push(PlanEpoch { version, plan: candidate, since_vtime: vtime });
+        Some(version)
+    }
+
+    /// The full epoch trace, oldest first.
+    pub fn epochs(&self) -> Vec<PlanEpoch> {
+        self.state.lock().unwrap().epochs.clone()
+    }
+
+    /// Measured conv-speed multipliers per group, scaled so their sum
+    /// matches the declared multipliers' sum (scale-free throughputs
+    /// anchored to the declared speed mass) — the input
+    /// [`crate::optimizer::he_model::ProfiledHe::recalibrated`] expects.
+    /// None until every group has a smoothed cadence, and on fixed
+    /// controllers.
+    pub fn measured_speed_multipliers(&self, declared: &[f64]) -> Option<Vec<f64>> {
+        if self.adaptive.is_none() {
+            return None;
+        }
+        let st = self.state.lock().unwrap();
+        let gaps: Vec<f64> = st.ema_gap.iter().copied().collect::<Option<Vec<_>>>()?;
+        let current = &st.epochs.last().expect("at least one epoch").plan;
+        let u: Vec<f64> = (0..gaps.len())
+            .map(|g| current.share(g) as f64 / gaps[g].max(1e-12))
+            .collect();
+        let total_u: f64 = u.iter().sum();
+        let total_declared: f64 = (0..gaps.len())
+            .map(|g| declared.get(g % declared.len().max(1)).copied().unwrap_or(1.0))
+            .sum();
+        if !(total_u > 0.0 && total_u.is_finite() && total_declared > 0.0) {
+            return None;
+        }
+        Some(u.into_iter().map(|x| x * total_declared / total_u).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn equal(batch: usize, groups: usize) -> BatchPlan {
+        BatchPlan::equal(batch, groups)
+    }
+
+    #[test]
+    fn fixed_controller_never_replans() {
+        let c = PlanController::fixed(equal(32, 4));
+        assert!(!c.is_adaptive());
+        for i in 0..100 {
+            c.observe(i % 4, if i % 4 == 0 { 10.0 } else { 1.0 });
+            assert_eq!(c.maybe_replan(i as f64), None);
+        }
+        assert_eq!(c.epochs().len(), 1);
+        assert_eq!(c.current_version(), 0);
+        for g in 0..4 {
+            assert_eq!(c.work_fraction(g), 1.0);
+            assert_eq!(c.grad_weight(0, g), 1.0);
+            assert_eq!(c.share(g), 8);
+        }
+    }
+
+    #[test]
+    fn adaptive_stays_put_on_equal_cadence() {
+        let c = PlanController::adaptive(equal(32, 4), AdaptivePolicy::default());
+        for round in 0..20 {
+            for g in 0..4 {
+                c.observe(g, 1.0 + 0.02 * (g as f64)); // well under delta
+            }
+            assert_eq!(c.maybe_replan(round as f64), None, "round {round}");
+        }
+        assert_eq!(c.epochs().len(), 1, "no re-plan on near-equal cadence");
+    }
+
+    #[test]
+    fn adaptive_replans_on_divergence_and_converges() {
+        let c = PlanController::adaptive(equal(32, 4), AdaptivePolicy::default());
+        // Group 0 runs 3x slower than the rest.
+        let mut v = None;
+        for round in 0..10 {
+            for g in 0..4 {
+                c.observe(g, if g == 0 { 3.0 } else { 1.0 });
+            }
+            if let Some(ver) = c.maybe_replan(round as f64) {
+                v = Some(ver);
+                break;
+            }
+        }
+        let v = v.expect("divergence must trigger a re-plan");
+        assert_eq!(v, 1);
+        let plan = c.current_plan();
+        assert_eq!(plan.shares().iter().sum::<usize>(), 32);
+        assert!(
+            plan.share(0) < plan.share(1),
+            "slow group sheds work: {:?}",
+            plan.shares()
+        );
+        // Version-consistent weights: epoch 0 still answers 1.0.
+        assert_eq!(c.grad_weight(0, 0), 1.0);
+        assert!(c.grad_weight(v, 0) < 1.0);
+        // Weights within each epoch sum to g.
+        for e in c.epochs() {
+            let sum: f64 = (0..4).map(|g| e.plan.grad_weight(g) as f64).sum();
+            assert!((sum - 4.0).abs() < 1e-6, "epoch {}: {sum}", e.version);
+        }
+        // Under the new shares cadence equalizes -> no further epoch
+        // (equal gaps reproduce the same integer shares).
+        for round in 0..10 {
+            for g in 0..4 {
+                c.observe(g, 3.0);
+            }
+            assert_eq!(c.maybe_replan(100.0 + round as f64), None);
+        }
+        assert_eq!(c.epochs().len(), 2);
+    }
+
+    #[test]
+    fn hysteresis_warmup_and_interval() {
+        let policy =
+            AdaptivePolicy { min_observations: 3, min_interval: 50.0, ..Default::default() };
+        let c = PlanController::adaptive(equal(32, 2), policy);
+        // Divergent from the start, but fewer than 3 obs per group.
+        for _ in 0..2 {
+            c.observe(0, 4.0);
+            c.observe(1, 1.0);
+        }
+        assert_eq!(c.maybe_replan(10.0), None, "warmup not done");
+        c.observe(0, 4.0);
+        c.observe(1, 1.0);
+        assert!(c.maybe_replan(10.0).is_some());
+        // Immediately diverge again: min_interval blocks the next swap
+        // even after warmup re-completes.
+        for _ in 0..3 {
+            c.observe(0, 8.0);
+            c.observe(1, 1.0);
+        }
+        assert_eq!(c.maybe_replan(30.0), None, "inside min_interval");
+        assert!(c.maybe_replan(61.0).is_some(), "after the interval");
+        let versions: Vec<u64> = c.epochs().iter().map(|e| e.version).collect();
+        assert_eq!(versions, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn identical_candidate_publishes_nothing() {
+        // Cadence diverges but the measured split rounds to the same
+        // integer shares (tiny batch): warmup restarts, no no-op epoch.
+        let c = PlanController::adaptive(equal(2, 2), AdaptivePolicy::default());
+        for _ in 0..8 {
+            c.observe(0, 1.4);
+            c.observe(1, 1.0);
+        }
+        assert_eq!(c.maybe_replan(5.0), None);
+        assert_eq!(c.epochs().len(), 1);
+    }
+
+    #[test]
+    fn measured_speed_multipliers_anchor_to_declared_mass() {
+        let c = PlanController::adaptive(equal(32, 2), AdaptivePolicy::default());
+        assert_eq!(c.measured_speed_multipliers(&[1.0, 1.0]), None, "no cadence yet");
+        c.observe(0, 2.0);
+        c.observe(1, 1.0);
+        let m = c.measured_speed_multipliers(&[1.0, 1.0]).unwrap();
+        // Throughputs 8 and 16 -> multipliers 2/3 and 4/3 (sum 2).
+        assert!((m[0] - 2.0 / 3.0).abs() < 1e-9, "{m:?}");
+        assert!((m[1] - 4.0 / 3.0).abs() < 1e-9, "{m:?}");
+        assert!((m.iter().sum::<f64>() - 2.0).abs() < 1e-9);
+        // Fixed controllers expose nothing.
+        assert_eq!(PlanController::fixed(equal(8, 2)).measured_speed_multipliers(&[1.0]), None);
+    }
+}

@@ -22,22 +22,24 @@
 //! schedulers.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::host_xent;
 use super::options::{EngineOptions, SchedulerKind};
-use super::report::{sort_records, EvalRecord, IterRecord, TrainReport};
+use super::report::{sort_records, EvalRecord, IterRecord, PlanEpochRecord, TrainReport};
 use crate::api::RunSpec;
 use crate::config::TrainConfig;
 use crate::coordinator::{StalenessStats, Topology};
-use crate::data::{Batch, BatchPlan, BatchSequence, SyntheticDataset};
+use crate::data::{
+    AdaptivePolicy, Batch, BatchPlan, BatchSequence, PlanController, SyntheticDataset,
+};
 use crate::model::ParamSet;
 use crate::optimizer::he_model::{HeParams, ProfiledHe};
 use crate::runtime::{from_literal, to_literal, Runtime};
-use crate::sim::TimingModel;
+use crate::sim::{TimingModel, CONV_FWD_FRACTION};
 use crate::util::rng::Rng;
 
 impl SchedulerKind {
@@ -148,6 +150,9 @@ struct SessionState {
     acc_window: Vec<f32>,
     completed: u64,
     virtual_time: f64,
+    /// Last completion vtime per group — the cadence samples the
+    /// adaptive plan controller feeds on.
+    last_group_vtime: Vec<Option<f64>>,
     server: ServerStats,
 }
 
@@ -158,12 +163,14 @@ pub struct TrainSession<'a> {
     opts: EngineOptions,
     data: SyntheticDataset,
     batches: BatchSequence,
-    /// Per-group batch partition (FLOPS-proportional under
-    /// `cfg.dynamic_batch` on heterogeneous clusters): every claimed
-    /// batch index nominally carries each group's share of the global
-    /// batch; the plan also sets the timing model's work fractions and
-    /// the report's per-group shares.
-    plan: BatchPlan,
+    /// The run's plan controller: the per-group batch partition as a
+    /// sequence of versioned epochs. Fixed on the static path
+    /// (`cfg.adaptive_batch = false` — bit-identical to the historical
+    /// one-plan session); adaptive otherwise, re-planning from the
+    /// cadence this session observes in [`Self::complete`]. Shared with
+    /// the topology (gradient weights by version) and the timing model
+    /// (current work fractions).
+    planner: Arc<PlanController>,
     claimed: AtomicU64,
     stopped: AtomicBool,
     state: Mutex<SessionState>,
@@ -178,7 +185,15 @@ impl<'a> TrainSession<'a> {
         let data = SyntheticDataset::for_arch(&cfg.arch, cfg.seed);
         let batches = BatchSequence::for_seed(cfg.seed);
         let plan = cfg.batch_plan();
-        let mut state = SessionState::default();
+        let planner = Arc::new(if cfg.adaptive_batch {
+            PlanController::adaptive(plan, AdaptivePolicy::default())
+        } else {
+            PlanController::fixed(plan)
+        });
+        let mut state = SessionState {
+            last_group_vtime: vec![None; cfg.groups()],
+            ..SessionState::default()
+        };
         state.records.reserve(cfg.steps);
         Self {
             rt,
@@ -186,7 +201,7 @@ impl<'a> TrainSession<'a> {
             opts,
             data,
             batches,
-            plan,
+            planner,
             claimed: AtomicU64::new(0),
             stopped: AtomicBool::new(false),
             state: Mutex::new(state),
@@ -207,23 +222,49 @@ impl<'a> TrainSession<'a> {
         &self.opts
     }
 
-    /// The per-group batch partition in force for this run.
-    pub fn plan(&self) -> &BatchPlan {
-        &self.plan
+    /// The per-group batch partition currently in force (the plan
+    /// controller's latest epoch).
+    pub fn plan(&self) -> BatchPlan {
+        self.planner.current_plan()
     }
 
-    /// Replace the plan with the equal split — for schedulers that do
-    /// not execute per-group shares (see
-    /// [`Scheduler::honors_batch_plan`]). Pre-run only: the driver
-    /// calls this before handing the session to the scheduler.
+    /// The run's plan controller (shared with the topology and timing
+    /// model so every layer agrees on the epoch in force).
+    pub fn planner(&self) -> &Arc<PlanController> {
+        &self.planner
+    }
+
+    /// Replace the plan with a FIXED equal split — for schedulers that
+    /// do not execute per-group shares (see
+    /// [`Scheduler::honors_batch_plan`]); adaptation is disabled too,
+    /// since such a scheduler cannot execute a revised share either.
+    /// Pre-run only: the driver calls this before handing the session
+    /// to the scheduler.
     pub fn reset_plan_equal(&mut self) {
-        self.plan = BatchPlan::equal(self.cfg.batch, self.cfg.groups());
+        self.planner = Arc::new(PlanController::fixed(BatchPlan::equal(
+            self.cfg.batch,
+            self.cfg.groups(),
+        )));
+    }
+
+    /// Freeze the controller on its current plan (no further re-plans) —
+    /// for callers driving a pre-built topology that carries its own
+    /// fixed controller ([`crate::engine::SimTimeEngine::run_topology`]),
+    /// so session timing can never drift from the topology's weights.
+    pub fn freeze_plan(&mut self) {
+        self.planner = Arc::new(PlanController::fixed(self.planner.current_plan()));
     }
 
     /// HE/timing model for this run, with the cluster's per-group device
-    /// profiles attached.
+    /// profiles attached and THIS session's plan controller consulted
+    /// for work fractions (live epochs under `--adaptive-batch`).
     pub fn timing(&self) -> Result<TimingModel> {
-        timing_model(self.rt, &self.cfg, &self.opts)
+        Ok(TimingModel::with_planner(
+            he_params(self.rt, &self.cfg, &self.opts)?,
+            self.opts.dist,
+            self.cfg.cluster.group_profiles.clone(),
+            self.planner.clone(),
+        ))
     }
 
     /// Claim the next iteration slot — `None` once the step budget is
@@ -273,7 +314,7 @@ impl<'a> TrainSession<'a> {
     /// held-out eval) happen after the lock is dropped, so racing OS
     /// threads never serialize on an XLA call.
     pub fn complete(&self, c: Completion, params: &dyn ParamSource) -> Result<()> {
-        let completed = {
+        let (completed, gap) = {
             let mut st = self.state.lock().unwrap();
             let seq = st.completed;
             st.records.push(IterRecord {
@@ -288,6 +329,15 @@ impl<'a> TrainSession<'a> {
             });
             st.completed += 1;
             st.virtual_time = st.virtual_time.max(c.vtime);
+            let gap = st
+                .last_group_vtime
+                .get(c.group)
+                .copied()
+                .flatten()
+                .map(|prev| c.vtime - prev);
+            if let Some(slot) = st.last_group_vtime.get_mut(c.group) {
+                *slot = Some(c.vtime);
+            }
             if let Some(target) = self.opts.stop_at_train_acc {
                 st.acc_window.push(c.acc);
                 let w = 32.min(st.acc_window.len());
@@ -297,8 +347,16 @@ impl<'a> TrainSession<'a> {
                     self.request_stop();
                 }
             }
-            st.completed
+            (st.completed, gap)
         };
+        // Adaptive planning feedback (outside the state mutex; the
+        // controller has its own): feed the measured cadence, then let
+        // hysteresis decide whether a revised epoch goes live. On fixed
+        // controllers both calls are no-ops.
+        if let Some(gap) = gap {
+            self.planner.observe(c.group, gap);
+        }
+        self.planner.maybe_replan(c.vtime);
         if !c.loss.is_finite() || c.loss > 1e4 {
             self.request_stop(); // diverged: stop scheduling new work
         }
@@ -327,8 +385,14 @@ impl<'a> TrainSession<'a> {
         }
         if self.opts.eval_every > 0 && completed % self.opts.eval_every as u64 == 0 {
             let (loss, acc) = self.evaluate(params)?;
+            // Straggler-aware placement: the eval forward runs on the
+            // group whose machines are fastest RIGHT NOW (drift-aware),
+            // off the training clock — record where it ran and what it
+            // cost there instead of charging an arbitrary group.
+            let group = self.cfg.cluster.fastest_group(self.cfg.groups(), c.vtime);
+            let cost = self.eval_cost(group, c.vtime);
             let mut st = self.state.lock().unwrap();
-            st.evals.push(EvalRecord { seq: completed, vtime: c.vtime, loss, acc });
+            st.evals.push(EvalRecord { seq: completed, vtime: c.vtime, loss, acc, group, cost });
         }
         Ok(())
     }
@@ -347,6 +411,17 @@ impl<'a> TrainSession<'a> {
         let outs = self.rt.execute_literals(&name, &lits)?;
         let logits = from_literal(&outs[0])?;
         Ok(host_xent(&logits, &eval.labels))
+    }
+
+    /// Predicted virtual cost of one eval forward pass on `group` at
+    /// `vtime`: the group-batch conv forward at the group's effective
+    /// speed plus one FC service. Best effort — 0.0 when no HE model
+    /// can be derived.
+    fn eval_cost(&self, group: usize, vtime: f64) -> f64 {
+        let Ok(he) = he_params(self.rt, &self.cfg, &self.opts) else { return 0.0 };
+        let k = self.cfg.group_size();
+        let speed = self.cfg.cluster.profile_for(group).conv_speed_at(vtime).max(1e-12);
+        he.t_conv(k) * CONV_FWD_FRACTION / speed + he.t_fc
     }
 
     /// Scheduler hand-off of server-side counters before finalization.
@@ -387,20 +462,42 @@ impl<'a> TrainSession<'a> {
             .map(|gi| self.cfg.cluster.profile_for(gi).kind.name().to_string())
             .collect();
         // Profile-aware cadence predictions for the per-group report,
-        // computed against the SESSION's plan (which a scheduler that
-        // ignores batch plans has reset to the equal split), so the
-        // prediction always describes the run that actually happened.
-        // Best effort: the arch is in the manifest for any run that got
-        // this far, but a prediction failure must not sink the report.
+        // computed against the SESSION's final plan epoch (which a
+        // scheduler that ignores batch plans has reset to the equal
+        // split), so the prediction always describes the run that
+        // actually happened. Under `--adaptive-batch` the model is first
+        // recalibrated from the measured per-group cadence
+        // (`ProfiledHe::recalibrated`), so predictions track the speeds
+        // the hardware actually showed, not the declared profiles. Best
+        // effort: the arch is in the manifest for any run that got this
+        // far, but a prediction failure must not sink the report.
         let k = (n / g.max(1)).max(1);
+        let plan = self.planner.current_plan();
         let predicted: Vec<f64> = profiled_he(self.rt, &self.cfg, &self.opts)
             .map(|phe| {
+                let declared: Vec<f64> =
+                    (0..g).map(|gi| self.cfg.cluster.profile_for(gi).conv_speed).collect();
+                let phe = match self.planner.measured_speed_multipliers(&declared) {
+                    Some(m) => phe.recalibrated(&m),
+                    None => phe,
+                };
                 (0..g)
-                    .map(|gi| phe.group_cycle_planned(gi, k, self.plan.work_fraction(gi)))
+                    .map(|gi| phe.group_cycle_planned(gi, k, plan.work_fraction(gi)))
                     .collect()
             })
             .unwrap_or_default();
-        let shares: Vec<usize> = (0..g).map(|gi| self.plan.share(gi)).collect();
+        let shares: Vec<usize> = (0..g).map(|gi| plan.share(gi)).collect();
+        let plan_epochs: Vec<PlanEpochRecord> = self
+            .planner
+            .epochs()
+            .into_iter()
+            .map(|e| PlanEpochRecord {
+                version: e.version,
+                since_vtime: e.since_vtime,
+                shares: e.plan.shares().to_vec(),
+                iters: vec![],
+            })
+            .collect();
         let server = std::mem::take(&mut st.server);
         let mut report = TrainReport {
             records,
@@ -416,27 +513,37 @@ impl<'a> TrainSession<'a> {
             groups: g,
             group_size: self.cfg.group_size(),
             group_stats: vec![],
+            plan_epochs,
         };
         report.recompute_group_stats(&devices);
         report.annotate_group_plan(&shares, &predicted);
+        report.bin_records_into_epochs();
         report
     }
 }
 
-/// HE/timing model for a config: the `he_override` if given, otherwise
-/// derived from the cluster + architecture. The cluster's declared
+/// The HE parameters a config implies: the `he_override` if given,
+/// otherwise derived from the cluster + architecture — the one
+/// definition shared by the timing model, the profiled model, and the
+/// eval-cost predictor.
+fn he_params(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<HeParams> {
+    let arch = rt.manifest().arch(&cfg.arch)?;
+    Ok(opts
+        .he_override
+        .unwrap_or_else(|| HeParams::derive(&cfg.cluster, arch, cfg.batch, opts.utilization)))
+}
+
+/// HE/timing model for a config ([`he_params`]). The cluster's declared
 /// per-group profile list is handed through verbatim — `TimingModel`
 /// cycles it exactly like [`crate::config::ClusterSpec::profile_for`],
-/// so the two lookups can never disagree — and the batch plan's work
-/// fractions scale each group's conv phases (all 1.0 on the default
-/// equal split: bit-identical to the pre-plan model).
+/// so the two lookups can never disagree — and the STATIC batch plan's
+/// work fractions scale each group's conv phases (all 1.0 on the
+/// default equal split: bit-identical to the pre-plan model; a live
+/// session uses [`TrainSession::timing`], which consults its plan
+/// controller instead).
 pub fn timing_model(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<TimingModel> {
-    let arch = rt.manifest().arch(&cfg.arch)?;
-    let he = opts
-        .he_override
-        .unwrap_or_else(|| HeParams::derive(&cfg.cluster, arch, cfg.batch, opts.utilization));
     Ok(TimingModel::with_plan(
-        he,
+        he_params(rt, cfg, opts)?,
         opts.dist,
         cfg.cluster.group_profiles.clone(),
         cfg.batch_plan().work_fractions(),
@@ -449,11 +556,7 @@ pub fn timing_model(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Re
 /// `ProfiledHe::iteration_time` predicts exactly the cadence the
 /// `SimClock` scheduler measures.
 pub fn profiled_he(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<ProfiledHe> {
-    let arch = rt.manifest().arch(&cfg.arch)?;
-    let he = opts
-        .he_override
-        .unwrap_or_else(|| HeParams::derive(&cfg.cluster, arch, cfg.batch, opts.utilization));
-    Ok(he
+    Ok(he_params(rt, cfg, opts)?
         .with_profiles(cfg.cluster.group_profiles.clone(), cfg.batch)
         .with_dynamic_batch(cfg.dynamic_batch)
         .with_profiled_fc(cfg.fc_mapping == crate::config::FcMapping::Unmerged))
@@ -492,6 +595,18 @@ pub trait Scheduler {
         true
     }
 
+    /// Whether a plan swap under this scheduler FEEDS BACK into the
+    /// cadence the controller measures. True only when the scheduler's
+    /// clock is driven by the plan's work fractions (`SimClock`'s
+    /// timing model). `OsThreads` measures wall-clock over full-batch
+    /// numerics — shares are nominal there, so re-planning would be an
+    /// open loop (the slow group's share ratchets to the floor while
+    /// its measured gap never moves, skewing gradient weights); the
+    /// driver freezes the plan instead.
+    fn adapts_batch_plan(&self) -> bool {
+        false
+    }
+
     fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet>;
 }
 
@@ -506,6 +621,10 @@ pub fn run_scheduler<S: Scheduler + ?Sized>(
     let mut session = TrainSession::new(rt, cfg, opts);
     if !sched.honors_batch_plan() {
         session.reset_plan_equal();
+    } else if !sched.adapts_batch_plan() {
+        // The static plan still executes; only the feedback loop is
+        // disabled (see Scheduler::adapts_batch_plan).
+        session.freeze_plan();
     }
     let params = sched.run(&session, init)?;
     Ok((session.finalize(sched.record_order()), params))

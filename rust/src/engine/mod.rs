@@ -42,7 +42,9 @@ pub use driver::{
     Scheduler, ServerStats, TrainSession,
 };
 pub use options::{EngineOptions, SchedulerKind};
-pub use report::{sort_records, EvalRecord, GroupStats, IterRecord, TrainReport};
+pub use report::{
+    sort_records, EvalRecord, GroupStats, IterRecord, PlanEpochRecord, TrainReport,
+};
 #[cfg(feature = "xla")]
 pub use sim_time::{SimClock, SimTimeEngine};
 #[cfg(feature = "xla")]

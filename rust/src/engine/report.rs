@@ -65,6 +65,31 @@ pub struct EvalRecord {
     pub vtime: f64,
     pub loss: f32,
     pub acc: f32,
+    /// Compute group the eval was placed on — the group with the
+    /// highest effective conv speed at eval time (straggler-aware
+    /// placement; group 0 on homogeneous clusters, the historical
+    /// behavior).
+    pub group: usize,
+    /// Predicted cost of the eval forward pass on that group (virtual
+    /// seconds, off the training clock — eval never stalls training).
+    /// 0.0 when no timing model applies.
+    pub cost: f64,
+}
+
+/// One adaptive plan epoch as the report records it: the per-group
+/// batch shares in force from `since_vtime` until the next epoch (see
+/// [`crate::data::PlanController`]). Static runs have exactly one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanEpochRecord {
+    /// Monotone revision counter (0 = the initial plan).
+    pub version: u64,
+    /// Virtual time this epoch became current.
+    pub since_vtime: f64,
+    /// Per-group batch shares (sum to the global batch).
+    pub shares: Vec<usize>,
+    /// Iterations each group completed while this epoch was current
+    /// (binned by record vtime at finalization).
+    pub iters: Vec<u64>,
 }
 
 /// Everything measured during one training run.
@@ -91,6 +116,10 @@ pub struct TrainReport {
     pub group_size: usize,
     /// Per-group staleness/timing breakdown (see [`GroupStats`]).
     pub group_stats: Vec<GroupStats>,
+    /// The run's plan-epoch trace (one entry on static runs; one per
+    /// adaptive re-plan otherwise). `group_stats.batch_share` describes
+    /// the FINAL epoch; this is the history.
+    pub plan_epochs: Vec<PlanEpochRecord>,
 }
 
 impl TrainReport {
@@ -204,6 +233,30 @@ impl TrainReport {
             if let Some(&p) = predicted.get(s.group) {
                 s.predicted_iter_gap = p;
             }
+        }
+    }
+
+    /// Fill each plan epoch's per-group `iters` from the records: a
+    /// record belongs to the last epoch whose `since_vtime` is at or
+    /// before its completion vtime. Call once `records` and
+    /// `plan_epochs` are both final.
+    pub fn bin_records_into_epochs(&mut self) {
+        let g = self.groups.max(1);
+        for e in self.plan_epochs.iter_mut() {
+            e.iters = vec![0; g];
+        }
+        if self.plan_epochs.is_empty() {
+            return;
+        }
+        for r in &self.records {
+            if r.group >= g {
+                continue;
+            }
+            let i = self
+                .plan_epochs
+                .partition_point(|e| e.since_vtime <= r.vtime)
+                .saturating_sub(1);
+            self.plan_epochs[i].iters[r.group] += 1;
         }
     }
 
@@ -347,6 +400,42 @@ mod tests {
         r.annotate_group_plan(&[16], &[]);
         assert_eq!(r.group_stats[1].batch_share, 0);
         assert_eq!(r.group_stats[1].predicted_iter_gap, 0.0);
+    }
+
+    #[test]
+    fn records_bin_into_plan_epochs_by_vtime() {
+        let mut r = TrainReport {
+            records: vec![
+                grec(0, 0, 1.0),
+                grec(1, 0, 2.0),
+                grec(0, 1, 5.5), // exactly at the swap: belongs to epoch 1
+                grec(1, 1, 7.0),
+                grec(0, 2, 9.0),
+            ],
+            groups: 2,
+            plan_epochs: vec![
+                PlanEpochRecord {
+                    version: 0,
+                    since_vtime: 0.0,
+                    shares: vec![16, 16],
+                    iters: vec![],
+                },
+                PlanEpochRecord {
+                    version: 1,
+                    since_vtime: 5.5,
+                    shares: vec![10, 22],
+                    iters: vec![],
+                },
+            ],
+            ..Default::default()
+        };
+        r.bin_records_into_epochs();
+        assert_eq!(r.plan_epochs[0].iters, vec![1, 1]);
+        assert_eq!(r.plan_epochs[1].iters, vec![2, 1]);
+        // Empty trace: a no-op, not a panic.
+        let mut empty = TrainReport::default();
+        empty.bin_records_into_epochs();
+        assert!(empty.plan_epochs.is_empty());
     }
 
     #[test]

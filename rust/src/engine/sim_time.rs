@@ -91,8 +91,24 @@ impl Scheduler for SimClock {
         "sim-clock"
     }
 
+    /// The event loop's timing model consults the controller's current
+    /// epoch, so a plan swap changes the cadence the controller then
+    /// measures — the feedback loop is closed here.
+    fn adapts_batch_plan(&self) -> bool {
+        true
+    }
+
     fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet> {
-        let topo = Topology::build(session.config(), session.rt(), init)?;
+        // Share the session's plan controller with the topology so the
+        // event loop's timing, the groups' batch shares, and the
+        // publish weights all read the same (possibly adaptive) epoch
+        // sequence.
+        let topo = Topology::build_with_planner(
+            session.config(),
+            session.rt(),
+            init,
+            session.planner().clone(),
+        )?;
         run_events(session, &topo)?;
         session.set_server_stats(ServerStats::from_topology(&topo));
         Ok(topo.current_params())
@@ -145,7 +161,7 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
                     &topo.fc,
                 )?;
                 states[gi].fwd = Some(st);
-                let d = timing.sample_conv_fwd_group_of(gi, k, &mut rng);
+                let d = timing.sample_conv_fwd_group_at(gi, k, ev.time, &mut rng);
                 push!(ev.time + d, gi, EventKind::FcArrive);
             }
             EventKind::FcArrive => {
@@ -160,25 +176,29 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
                 } else {
                     // Unmerged mapping: each group computes the FC phase
                     // on its OWN machines (Fig 16a) — no shared queue,
-                    // and the group's device profile applies.
-                    let d = timing.sample_fc_of(gi, &mut rng);
+                    // and the group's device profile (drift-aware)
+                    // applies.
+                    let d = timing.sample_fc_of_at(gi, ev.time, &mut rng);
                     push!(ev.time + d, gi, EventKind::FcDone);
                 }
             }
             EventKind::FcDone => {
                 let st = states[gi].fwd.as_ref().expect("fwd state set at StartIter");
+                // Weight bound at StartIter (the iteration's plan
+                // epoch) — an adaptive swap between read and publish
+                // must not re-weight in-flight gradients.
                 let out = topo.fc.step(
                     session.rt(),
                     &st.activations,
                     &st.labels,
                     st.fc_snapshot.clone(),
-                    topo.groups[gi].grad_weight(),
+                    st.grad_weight,
                 )?;
                 states[gi].fc_loss = out.loss;
                 states[gi].fc_acc = out.acc;
                 states[gi].fc_staleness = out.staleness;
                 states[gi].g_act = Some(out.g_act);
-                let d = timing.sample_conv_bwd_group_of(gi, k, &mut rng);
+                let d = timing.sample_conv_bwd_group_at(gi, k, ev.time, &mut rng);
                 push!(ev.time + d, gi, EventKind::BwdDone);
             }
             EventKind::BwdDone => {
@@ -245,9 +265,12 @@ impl<'a> SimTimeEngine<'a> {
         run_scheduler(self.rt, self.cfg.clone(), self.opts.clone(), &SimClock, init)
     }
 
-    /// The event loop over a pre-built topology.
+    /// The event loop over a pre-built topology. The topology carries
+    /// its own (fixed) plan controller, so the session's plan is frozen
+    /// to match — Algorithm 1 epoch continuations run the static plan.
     pub fn run_topology(&self, topo: &Topology) -> Result<super::TrainReport> {
-        let session = TrainSession::new(self.rt, self.cfg.clone(), self.opts.clone());
+        let mut session = TrainSession::new(self.rt, self.cfg.clone(), self.opts.clone());
+        session.freeze_plan();
         run_events(&session, topo)?;
         session.set_server_stats(ServerStats::from_topology(topo));
         Ok(session.finalize(RecordOrder::Completion))

@@ -41,7 +41,17 @@ impl Scheduler for OsThreads {
     }
 
     fn run(&self, session: &TrainSession<'_>, init: ParamSet) -> Result<ParamSet> {
-        let topo = Topology::build(session.config(), session.rt(), init)?;
+        // Share the session's plan controller so shares and weights
+        // stay consistent. Note the driver has FROZEN it for this
+        // scheduler (`adapts_batch_plan` = false): wall-clock cadence
+        // over full-batch numerics never responds to a share change,
+        // so adaptive re-planning here would be an open loop.
+        let topo = Topology::build_with_planner(
+            session.config(),
+            session.rt(),
+            init,
+            session.planner().clone(),
+        )?;
         let wall0 = Instant::now();
         let failed = AtomicBool::new(false);
         // First step error, preserved for the caller (cold path only).

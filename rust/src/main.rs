@@ -71,6 +71,7 @@ const TRAIN_FLAGS: &[Flag] = &[
     val("scheduler", "sim|threads|averaging[:TAU]"),
     switch("unmerged-fc"),
     switch("dynamic-batch"),
+    switch("adaptive-batch"),
     switch("threaded"),
     val("baseline", "NAME"),
     val("config", "FILE"),
@@ -89,6 +90,7 @@ const OPTIMIZE_FLAGS: &[Flag] = &[
     val("seed", "S"),
     val("scheduler", "sim|threads|averaging[:TAU]"),
     switch("dynamic-batch"),
+    switch("adaptive-batch"),
     val("runs", "DIR"),
     val("tag", "T"),
     switch("json"),
@@ -308,6 +310,9 @@ fn train(args: &Args) -> Result<()> {
     if cx.switch("dynamic-batch") {
         spec = spec.dynamic_batch(true);
     }
+    if cx.switch("adaptive-batch") {
+        spec = spec.adaptive_batch(true);
+    }
     // `--threaded` alone is a deprecated alias of `--scheduler threads`;
     // combined with a conflicting `--scheduler` it is a hard error. When
     // neither flag is given, the spec file's scheduler stands.
@@ -371,6 +376,18 @@ fn train(args: &Args) -> Result<()> {
         }
         t.print();
     }
+    if outcome.plan_epochs.len() > 1 {
+        let mut t = Table::new(&["epoch", "since", "shares", "iters"]);
+        for e in &outcome.plan_epochs {
+            t.row(&[
+                e.version.to_string(),
+                fmt_secs(e.since_vtime),
+                format!("{:?}", e.shares),
+                format!("{:?}", e.iters),
+            ]);
+        }
+        t.print();
+    }
     println!(
         "runtime: {} executions, {} in XLA, {} compiling",
         outcome.executions,
@@ -388,6 +405,7 @@ fn optimize(args: &Args) -> Result<()> {
         .cluster_preset(&cx.str("cluster", "cpu-l"))?
         .seed(cx.get("seed", 0u64)?)
         .dynamic_batch(cx.switch("dynamic-batch"))
+        .adaptive_batch(cx.switch("adaptive-batch"))
         .eval_every(0)
         .scheduler_name(&cx.str("scheduler", "sim"))?;
     if let Some(t) = cx.opt_str("tag") {

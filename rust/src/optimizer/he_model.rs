@@ -348,6 +348,119 @@ impl ProfiledHe {
     pub fn penalty(&self, g: usize, n: usize) -> f64 {
         self.iteration_time(g, n) / self.iteration_time(1, n)
     }
+
+    /// A model recalibrated from MEASURED per-group conv-speed
+    /// multipliers (same semantics as `DeviceProfile::conv_speed`:
+    /// relative to the cluster baseline): the declared profiles' conv
+    /// speeds are replaced group by group, so predictions track the
+    /// cadence the hardware actually showed — the adaptive driver feeds
+    /// this from `PlanController::measured_speed_multipliers` at report
+    /// time. Non-finite or non-positive entries keep the declared
+    /// speed; an empty slice is the identity.
+    pub fn recalibrated(&self, measured_conv_speed: &[f64]) -> Self {
+        if measured_conv_speed.is_empty() {
+            return self.clone();
+        }
+        let profiles = (0..measured_conv_speed.len())
+            .map(|i| {
+                let mut p = if self.profiles.is_empty() {
+                    DeviceProfile::baseline(crate::config::DeviceKind::Cpu)
+                } else {
+                    self.profiles[i % self.profiles.len()]
+                };
+                let m = measured_conv_speed[i];
+                if m.is_finite() && m > 0.0 {
+                    p.conv_speed = m;
+                }
+                p
+            })
+            .collect();
+        Self { profiles, ..self.clone() }
+    }
+
+    /// Schweitzer-style approximate MVA over the merged FC station:
+    /// each group is a one-customer class with think time `z_i` (its
+    /// conv phases) cycling through a single FIFO server of service
+    /// time `t_fc`. Returns per-class (throughput, residence time at
+    /// the server). The finite-population analogue of the open-system
+    /// `ρ/(1-ρ)` wait: arrivals see the other classes' steady-state
+    /// queue contents.
+    fn fc_mva(&self, g: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let g = g.clamp(1, n.max(1));
+        let k = (n / g).max(1);
+        let s = self.he.t_fc;
+        let w = self.work_fractions(g);
+        let z: Vec<f64> = (0..g)
+            .map(|i| self.he.t_conv(k) * w[i % w.len()] / self.conv_speed(i))
+            .collect();
+        if s <= 0.0 {
+            return (z.iter().map(|&zi| 1.0 / zi.max(1e-300)).collect(), vec![0.0; g]);
+        }
+        let mut q = vec![0.0f64; g];
+        let mut resid = vec![s; g];
+        for _ in 0..200 {
+            let mut next_q = vec![0.0; g];
+            for i in 0..g {
+                let others: f64 = (0..g).filter(|&j| j != i).map(|j| q[j]).sum();
+                resid[i] = s * (1.0 + others);
+                let lam = 1.0 / (z[i] + resid[i]);
+                next_q[i] = lam * resid[i];
+            }
+            // Damped update: the fixed point is contractive but damping
+            // guards convergence at high utilization.
+            for i in 0..g {
+                q[i] = 0.5 * q[i] + 0.5 * next_q[i];
+            }
+        }
+        // Residences consistent with the converged queue contents.
+        for i in 0..g {
+            let others: f64 = (0..g).filter(|&j| j != i).map(|j| q[j]).sum();
+            resid[i] = s * (1.0 + others);
+        }
+        let lam: Vec<f64> = (0..g).map(|i| 1.0 / (z[i] + resid[i])).collect();
+        (lam, resid)
+    }
+
+    /// Expected FC-queue wait per visit under the merged mapping — the
+    /// M/G/1-style `ρ/(1-ρ)` term the queue-free `group_cycle` omits
+    /// (throughput-weighted across groups). Zero at g = 1 (nothing to
+    /// queue behind), zero in the unmerged mapping (no shared server),
+    /// and vanishing at low utilization.
+    pub fn fc_queue_wait(&self, g: usize, n: usize) -> f64 {
+        if self.fc_profiled || g.clamp(1, n.max(1)) <= 1 {
+            return 0.0;
+        }
+        let s = self.he.t_fc;
+        let (lam, resid) = self.fc_mva(g, n);
+        let num: f64 = lam.iter().zip(&resid).map(|(&l, &r)| l * (r - s)).sum();
+        let den: f64 = lam.iter().sum();
+        if den > 0.0 {
+            (num / den).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Predicted system time per iteration INCLUDING the expected FC
+    /// queueing wait: `1 / Σ λ_i` from the finite-population model.
+    /// Unlike [`Self::iteration_time`]'s hard `max(t_fc, ·)` saturation
+    /// cliff, throughput here rolls off smoothly toward the server's
+    /// service rate as utilization approaches 1 (and never exceeds it),
+    /// which is what the simulator measures around the knee. Reduces to
+    /// the queue-free prediction when the wait vanishes; the unmerged
+    /// mapping has no shared server and keeps the queue-free form.
+    pub fn iteration_time_queued(&self, g: usize, n: usize) -> f64 {
+        if self.fc_profiled {
+            return self.iteration_time(g, n);
+        }
+        let (lam, _) = self.fc_mva(g, n);
+        let rate: f64 = lam.iter().sum();
+        if rate > 0.0 {
+            1.0 / rate
+        } else {
+            f64::INFINITY
+        }
+    }
 }
 
 #[cfg(test)]
@@ -548,6 +661,96 @@ mod tests {
         let w = dyn_.work_fractions(g);
         let plan = BatchPlan::proportional(32, &[6.6, 1.0, 1.0, 1.0]);
         assert_eq!(w, plan.work_fractions());
+    }
+
+    #[test]
+    fn recalibrated_replaces_conv_speeds_only() {
+        use crate::config::DeviceKind;
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let declared = he.with_profiles(
+            vec![
+                DeviceProfile::from_kind(DeviceKind::Gpu),
+                DeviceProfile::from_kind(DeviceKind::Cpu),
+            ],
+            32,
+        );
+        // Identity cases: empty slice, or re-feeding the declared speeds.
+        let (g, n, k) = (2, 8, 4);
+        for i in 0..g {
+            assert_eq!(
+                declared.recalibrated(&[]).group_cycle(i, g, n),
+                declared.group_cycle(i, g, n)
+            );
+            assert_eq!(
+                declared.recalibrated(&[6.6, 1.0]).group_cycle(i, g, n),
+                declared.group_cycle(i, g, n)
+            );
+        }
+        // Measured says the "GPU" group actually runs at half its
+        // declared conv speed: its cycle's conv part doubles, its FC
+        // service (fc_speed untouched) does not.
+        let m = declared.recalibrated(&[3.3, 1.0]);
+        let conv_declared = he.t_conv(k) / 6.6;
+        assert!(
+            (m.group_cycle(0, g, n) - (2.0 * conv_declared + 0.1)).abs() < 1e-12,
+            "cycle {}",
+            m.group_cycle(0, g, n)
+        );
+        assert_eq!(m.group_cycle(1, g, n), declared.group_cycle(1, g, n));
+        // Degenerate measurements keep the declared speed.
+        let bad = declared.recalibrated(&[f64::NAN, 0.0]);
+        for i in 0..g {
+            assert_eq!(bad.group_cycle(i, g, n), declared.group_cycle(i, g, n));
+        }
+        // A homogeneous model gains per-group profiles from measurement.
+        let hom = ProfiledHe::homogeneous(he).recalibrated(&[0.5, 1.0]);
+        assert!(hom.group_cycle(0, g, n) > hom.group_cycle(1, g, n));
+    }
+
+    #[test]
+    fn fc_queue_wait_structure() {
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let phe = ProfiledHe::homogeneous(he);
+        let n = 8;
+        // Nothing queues behind a single group.
+        assert_eq!(phe.fc_queue_wait(1, n), 0.0);
+        // More groups -> more contention at the shared server.
+        let w2 = phe.fc_queue_wait(2, n);
+        let w4 = phe.fc_queue_wait(4, n);
+        assert!(w2 > 0.0, "w2 {w2}");
+        assert!(w4 > w2, "w4 {w4} vs w2 {w2}");
+        // Vanishes at low utilization.
+        let light = ProfiledHe::homogeneous(HeParams::measured(1.0, 0.0, 1e-4));
+        assert!(light.fc_queue_wait(4, n) < 1e-3);
+        // The unmerged mapping has no shared server.
+        let unmerged = ProfiledHe::homogeneous(he).with_profiled_fc(true);
+        assert_eq!(unmerged.fc_queue_wait(8, n), 0.0);
+    }
+
+    #[test]
+    fn iteration_time_queued_smooths_the_saturation_cliff() {
+        let he = HeParams::measured(1.0, 0.0, 0.2);
+        let phe = ProfiledHe::homogeneous(he);
+        let n = 8;
+        let mut g = 1;
+        while g <= n {
+            let queued = phe.iteration_time_queued(g, n);
+            let free = phe.iteration_time(g, n);
+            // Queueing can only slow the system, and throughput never
+            // exceeds the server's service rate (no cliff needed).
+            assert!(queued >= free - 1e-12, "g={g}: queued {queued} < free {free}");
+            assert!(queued >= he.t_fc - 1e-12, "g={g}: queued {queued} below t_fc");
+            g *= 2;
+        }
+        // Around/after the knee the queued prediction exceeds the
+        // cliff's flat t_fc floor (a real queue costs something)...
+        assert!(phe.iteration_time_queued(8, n) > he.t_fc);
+        // ...but stays within the pre-saturation envelope: by g=8 it is
+        // far below the synchronous time.
+        assert!(phe.iteration_time_queued(8, n) < phe.iteration_time(1, n));
+        // Unmerged: identical to the queue-free form.
+        let unmerged = ProfiledHe::homogeneous(he).with_profiled_fc(true);
+        assert_eq!(unmerged.iteration_time_queued(4, n), unmerged.iteration_time(4, n));
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 mod timing;
 
-pub use timing::{ServiceDist, TimingModel};
+pub use timing::{ServiceDist, TimingModel, CONV_FWD_FRACTION};
 
 use crate::optimizer::he_model::{HeParams, ProfiledHe};
 use crate::util::rng::Rng;
@@ -90,6 +90,7 @@ impl ClusterSim {
         let mut fc_wait = 0.0f64;
         let mut group_iters = vec![0u64; g];
         let mut cycle_sum = vec![0.0f64; g];
+        let mut last_done: Vec<Option<f64>> = vec![None; g];
         let mut completions: Vec<f64> = Vec::with_capacity(iters as usize);
         for _ in 0..iters {
             // Next group to start its conv fwd is the earliest-ready one.
@@ -101,21 +102,32 @@ impl ClusterSim {
             let t0 = ready[gi];
             // Intra-group barrier: k machines each sample a fwd time;
             // the group advances at the slowest (paper Observation 1).
-            // Heterogeneous clusters scale each group by its profile and
-            // batch-plan work fraction.
-            let fwd = self.timing.sample_conv_fwd_group_of(gi, k, &mut rng);
+            // Heterogeneous clusters scale each group by its profile
+            // (drift-aware at the phase's start time) and batch-plan
+            // work fraction.
+            let fwd = self.timing.sample_conv_fwd_group_at(gi, k, t0, &mut rng);
             let arrive = t0 + fwd;
             let fc_start = fc_free.max(arrive);
             let fc_t = self.timing.sample_fc(&mut rng);
             fc_free = fc_start + fc_t;
             fc_busy += fc_t;
             fc_wait += fc_start - arrive;
-            let bwd = self.timing.sample_conv_bwd_group_of(gi, k, &mut rng);
+            let bwd = self.timing.sample_conv_bwd_group_at(gi, k, fc_free, &mut rng);
             let done = fc_free + bwd;
             ready[gi] = done;
             group_iters[gi] += 1;
             cycle_sum[gi] += fwd + fc_t + bwd;
             completions.push(done);
+            // Adaptive feedback: a planner-backed timing model observes
+            // each group's completion cadence and may publish a revised
+            // plan epoch, which the next sampled phase picks up.
+            if let Some(planner) = self.timing.planner() {
+                if let Some(prev) = last_done[gi] {
+                    planner.observe(gi, done - prev);
+                }
+                last_done[gi] = Some(done);
+                planner.maybe_replan(done);
+            }
         }
         completions.sort_by(|a, b| a.total_cmp(b));
         let total_time = *completions.last().unwrap_or(&0.0);

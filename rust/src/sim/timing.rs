@@ -7,7 +7,10 @@
 //! With no profiles attached the model reduces exactly to the paper's
 //! homogeneous clusters.
 
+use std::sync::Arc;
+
 use crate::config::{DeviceKind, DeviceProfile};
+use crate::data::PlanController;
 use crate::optimizer::he_model::HeParams;
 use crate::util::rng::Rng;
 
@@ -38,20 +41,25 @@ pub struct TimingModel {
     /// Per-group device profiles; empty = homogeneous (all baseline).
     profiles: Vec<DeviceProfile>,
     /// Per-group conv work fractions from the batch plan
-    /// (`share * g / batch`); empty = equal split (all 1.0).
+    /// (`share * g / batch`); empty = equal split (all 1.0). Frozen —
+    /// superseded by `planner` when one is attached.
     work: Vec<f64>,
+    /// Adaptive plan controller: when present, work fractions come from
+    /// its CURRENT epoch at each sample instead of the frozen vector,
+    /// so a mid-run plan swap takes effect on the next sampled phase.
+    planner: Option<Arc<PlanController>>,
 }
 
 impl TimingModel {
     /// Homogeneous model: every group at the cluster baseline speed.
     pub fn new(he: HeParams, dist: ServiceDist) -> Self {
-        Self { he, dist, profiles: vec![], work: vec![] }
+        Self { he, dist, profiles: vec![], work: vec![], planner: None }
     }
 
     /// Heterogeneous model with one profile per compute group (cycles
     /// when there are more groups than profiles).
     pub fn with_profiles(he: HeParams, dist: ServiceDist, profiles: Vec<DeviceProfile>) -> Self {
-        Self { he, dist, profiles, work: vec![] }
+        Self { he, dist, profiles, work: vec![], planner: None }
     }
 
     /// Heterogeneous model with a batch plan in force: group `g`'s conv
@@ -64,7 +72,26 @@ impl TimingModel {
         profiles: Vec<DeviceProfile>,
         work: Vec<f64>,
     ) -> Self {
-        Self { he, dist, profiles, work }
+        Self { he, dist, profiles, work, planner: None }
+    }
+
+    /// Heterogeneous model consulting a live [`PlanController`]: conv
+    /// work fractions come from the controller's current epoch at each
+    /// sample. With a fixed controller this is bit-identical to
+    /// [`Self::with_plan`] on that plan's fractions.
+    pub fn with_planner(
+        he: HeParams,
+        dist: ServiceDist,
+        profiles: Vec<DeviceProfile>,
+        planner: Arc<PlanController>,
+    ) -> Self {
+        Self { he, dist, profiles, work: vec![], planner: Some(planner) }
+    }
+
+    /// The attached plan controller, if any (the adaptive feedback loop
+    /// observes completions through this handle).
+    pub fn planner(&self) -> Option<&Arc<PlanController>> {
+        self.planner.as_ref()
     }
 
     /// Profile of compute group `g`.
@@ -76,8 +103,15 @@ impl TimingModel {
         }
     }
 
-    /// Batch-plan conv work fraction of group `g` (1.0 = equal split).
+    /// Batch-plan conv work fraction of group `g` (1.0 = equal split):
+    /// the live controller's current epoch when one is attached, the
+    /// frozen vector otherwise.
     pub fn work_fraction(&self, g: usize) -> f64 {
+        if let Some(p) = &self.planner {
+            // Cycles past the plan's group count like the frozen vector
+            // (BatchPlan::share's `g % groups`).
+            return p.work_fraction(g);
+        }
         if self.work.is_empty() {
             1.0
         } else {
@@ -109,7 +143,22 @@ impl TimingModel {
     /// 1.0 and equal plans multiply by exactly 1.0, so the homogeneous
     /// path is bit-identical to [`Self::sample_conv_fwd_group`].
     pub fn sample_conv_fwd_group_of(&self, g: usize, k: usize, rng: &mut Rng) -> f64 {
-        self.sample_conv_fwd_group(k, rng) * self.work_fraction(g) / self.profile(g).conv_speed
+        self.sample_conv_fwd_group_at(g, k, 0.0, rng)
+    }
+
+    /// [`Self::sample_conv_fwd_group_of`] at virtual time `vtime`: the
+    /// profile's [`crate::config::ProfileDrift`] schedule (if any)
+    /// scales the effective speed. Without drift this is bit-identical
+    /// at every vtime.
+    pub fn sample_conv_fwd_group_at(
+        &self,
+        g: usize,
+        k: usize,
+        vtime: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.sample_conv_fwd_group(k, rng) * self.work_fraction(g)
+            / self.profile(g).conv_speed_at(vtime)
     }
 
     pub fn sample_conv_bwd(&self, k: usize, rng: &mut Rng) -> f64 {
@@ -123,7 +172,20 @@ impl TimingModel {
     /// Conv backward barrier of group `g`, scaled by its device profile
     /// and batch-plan work fraction.
     pub fn sample_conv_bwd_group_of(&self, g: usize, k: usize, rng: &mut Rng) -> f64 {
-        self.sample_conv_bwd_group(k, rng) * self.work_fraction(g) / self.profile(g).conv_speed
+        self.sample_conv_bwd_group_at(g, k, 0.0, rng)
+    }
+
+    /// [`Self::sample_conv_bwd_group_of`] at virtual time `vtime`
+    /// (drift-aware, see [`Self::sample_conv_fwd_group_at`]).
+    pub fn sample_conv_bwd_group_at(
+        &self,
+        g: usize,
+        k: usize,
+        vtime: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.sample_conv_bwd_group(k, rng) * self.work_fraction(g)
+            / self.profile(g).conv_speed_at(vtime)
     }
 
     /// FC server service time for one group request (the merged FC
@@ -135,7 +197,12 @@ impl TimingModel {
     /// FC service time when the FC phase runs on group `g`'s own
     /// machines (the unmerged mapping), scaled by the group's FC speed.
     pub fn sample_fc_of(&self, g: usize, rng: &mut Rng) -> f64 {
-        self.sample_fc(rng) / self.profile(g).fc_speed
+        self.sample_fc_of_at(g, 0.0, rng)
+    }
+
+    /// [`Self::sample_fc_of`] at virtual time `vtime` (drift-aware).
+    pub fn sample_fc_of_at(&self, g: usize, vtime: f64, rng: &mut Rng) -> f64 {
+        self.sample_fc(rng) / self.profile(g).fc_speed_at(vtime)
     }
 }
 
@@ -269,6 +336,65 @@ mod tests {
                 noplan.sample_conv_fwd_group_of(g, 3, &mut r2)
             );
         }
+    }
+
+    #[test]
+    fn drift_scales_samples_after_onset_only() {
+        use crate::config::ProfileDrift;
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let drifted = DeviceProfile::baseline(DeviceKind::Cpu)
+            .with_drift(ProfileDrift::Step { at: 5.0, factor: 1.0 / 3.0 });
+        let t = TimingModel::with_profiles(he, ServiceDist::Deterministic, vec![drifted]);
+        let mut rng = Rng::seed_from_u64(0);
+        let before = t.sample_conv_fwd_group_at(0, 1, 4.9, &mut rng);
+        let after = t.sample_conv_fwd_group_at(0, 1, 5.0, &mut rng);
+        assert!((after / before - 3.0).abs() < 1e-9, "before {before} after {after}");
+        // The un-timed sampler is the vtime-0 (pre-drift) path.
+        assert_eq!(t.sample_conv_fwd_group_of(0, 1, &mut rng), before);
+        // FC drift applies in the unmerged mapping only.
+        let fc0 = t.sample_fc_of_at(0, 0.0, &mut rng);
+        let fc1 = t.sample_fc_of_at(0, 9.0, &mut rng);
+        assert!((fc1 / fc0 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn planner_backed_model_tracks_epoch_swaps() {
+        use crate::data::{AdaptivePolicy, BatchPlan, PlanController};
+        use std::sync::Arc;
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let planner = Arc::new(PlanController::adaptive(
+            BatchPlan::equal(32, 2),
+            AdaptivePolicy::default(),
+        ));
+        let t = TimingModel::with_planner(
+            he,
+            ServiceDist::Deterministic,
+            vec![],
+            planner.clone(),
+        );
+        // Initial epoch: equal split, fractions exactly 1.0 -> identical
+        // to the plain homogeneous model.
+        let plain = TimingModel::new(he, ServiceDist::Deterministic);
+        let mut r1 = Rng::seed_from_u64(7);
+        let mut r2 = Rng::seed_from_u64(7);
+        assert_eq!(
+            t.sample_conv_fwd_group_of(0, 2, &mut r1),
+            plain.sample_conv_fwd_group_of(0, 2, &mut r2)
+        );
+        // Drive a re-plan: group 0 is 3x slower.
+        for _ in 0..5 {
+            planner.observe(0, 3.0);
+            planner.observe(1, 1.0);
+        }
+        assert!(planner.maybe_replan(10.0).is_some());
+        let w0 = t.work_fraction(0);
+        let w1 = t.work_fraction(1);
+        assert!(w0 < 1.0 && w1 > 1.0, "swap visible through the model: {w0} {w1}");
+        let mut rng = Rng::seed_from_u64(3);
+        let a = t.sample_conv_fwd_group_of(0, 2, &mut rng);
+        let mut rng = Rng::seed_from_u64(3);
+        let b = plain.sample_conv_fwd_group_of(0, 2, &mut rng);
+        assert!((a / b - w0).abs() < 1e-12);
     }
 
     #[test]

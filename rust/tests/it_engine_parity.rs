@@ -146,10 +146,22 @@ fn heterogeneous_cluster_reports_per_group_timing() {
     // the report must say which group ran on what.
     let mut c = cfg(4, 120);
     c.cluster = cluster::preset("hetero-s").unwrap();
-    let opts = EngineOptions { dist: ServiceDist::Deterministic, ..Default::default() };
+    let opts = EngineOptions {
+        dist: ServiceDist::Deterministic,
+        eval_every: 40,
+        ..Default::default()
+    };
     let report = SimTimeEngine::new(runtime(), c, opts).run(init()).unwrap();
     assert_eq!(report.records.len(), 120);
     assert_eq!(report.group_stats.len(), 4);
+    // Straggler-aware eval placement: every held-out eval runs on the
+    // fastest group's machines (the GPU group) and records what it
+    // would cost there.
+    assert!(!report.evals.is_empty());
+    for e in &report.evals {
+        assert_eq!(e.group, 0, "eval placed on group {} not the GPU group", e.group);
+        assert!(e.cost > 0.0, "eval cost not recorded");
+    }
     let gpu = &report.group_stats[0];
     assert_eq!(gpu.device, "gpu");
     for cpu in &report.group_stats[1..] {
@@ -220,6 +232,128 @@ fn dynamic_batch_report_and_prediction() {
     // Equal-split reports still carry their (uniform) shares.
     let eq_shares: Vec<usize> = equal.group_stats.iter().map(|s| s.batch_share).collect();
     assert_eq!(eq_shares, vec![8, 8, 8, 8]);
+}
+
+/// Per-group mean completion gap spread (max − min) over the records at
+/// or after `after` — the measured straggler stall of the steady state.
+fn tail_stall(report: &omnivore::engine::TrainReport, after: f64, groups: usize) -> f64 {
+    let mut last = vec![None; groups];
+    let mut sum = vec![0.0f64; groups];
+    let mut n = vec![0u64; groups];
+    for r in &report.records {
+        if let Some(prev) = last[r.group] {
+            if r.vtime >= after {
+                sum[r.group] += r.vtime - prev;
+                n[r.group] += 1;
+            }
+        }
+        last[r.group] = Some(r.vtime);
+    }
+    let means: Vec<f64> = (0..groups)
+        .filter(|&g| n[g] > 0)
+        .map(|g| sum[g] / n[g] as f64)
+        .collect();
+    means.iter().cloned().fold(0.0f64, f64::max)
+        - means.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+#[test]
+fn adaptive_replanning_recovers_drift_stall() {
+    // The acceptance story: on `drift-s` (declared homogeneous, group 0
+    // throttles 3x at vtime 6) a static plan cannot react — even
+    // `--dynamic-batch` sees identical declared profiles and keeps the
+    // equal split — while adaptive re-planning sheds load off the
+    // throttled group and recovers most of the measured straggler
+    // stall (>= 30% required; in practice far more).
+    let spec = |adaptive: bool| {
+        omnivore::api::RunSpec::new("lenet")
+            .variant("jnp")
+            .cluster_preset("drift-s")
+            .unwrap()
+            .groups(4)
+            .lr(0.03)
+            .momentum(0.6)
+            .steps(160)
+            .seed(0)
+            .eval_every(0)
+            .dist(ServiceDist::Deterministic)
+            .he_override(HeParams::measured(1.0, 0.002, 0.01))
+            .adaptive_batch(adaptive)
+    };
+    let run = |adaptive: bool| {
+        let s = spec(adaptive);
+        let init = s.cold_init(runtime()).unwrap();
+        s.execute_from(runtime(), init).unwrap()
+    };
+    let (static_out, static_rep, _) = run(false);
+    let (adaptive_out, adaptive_rep, _) = run(true);
+    assert_eq!(static_rep.records.len(), 160);
+    assert_eq!(adaptive_rep.records.len(), 160);
+
+    // Static: one epoch, equal shares, big post-drift stall.
+    assert_eq!(static_out.plan_epochs.len(), 1);
+    assert_eq!(static_out.plan_epochs[0].shares, vec![8, 8, 8, 8]);
+    let tail_after = 12.0; // past the step + the adaptation transient
+    let static_stall = tail_stall(&static_rep, tail_after, 4);
+    let adaptive_stall = tail_stall(&adaptive_rep, tail_after, 4);
+    assert!(static_stall > 0.5, "static run shows no drift stall? {static_stall}");
+    assert!(
+        adaptive_stall < 0.7 * static_stall,
+        "adaptive stall {adaptive_stall} vs static {static_stall}: < 30% cut"
+    );
+
+    // The adaptive outcome's plan trace: >= 2 epochs, monotone versions,
+    // every epoch's shares summing to the batch, throttled group shed.
+    let eps = &adaptive_out.plan_epochs;
+    assert!(eps.len() >= 2, "no re-plan recorded: {eps:?}");
+    for (i, e) in eps.iter().enumerate() {
+        assert_eq!(e.version, i as u64, "versions must be dense and monotone");
+        assert_eq!(e.shares.iter().sum::<usize>(), 32, "epoch {i}: {:?}", e.shares);
+        assert_eq!(e.iters.len(), 4);
+    }
+    assert!(eps[0].since_vtime == 0.0 && eps[1].since_vtime > 0.0);
+    let last = eps.last().unwrap();
+    assert!(
+        last.shares[0] < last.shares[1],
+        "throttled group keeps the smallest share: {:?}",
+        last.shares
+    );
+    // Final-epoch shares are what the per-group report describes.
+    let shares: Vec<usize> = adaptive_rep.group_stats.iter().map(|s| s.batch_share).collect();
+    assert_eq!(shares, last.shares);
+
+    // The trace survives the run store (schema-versioned JSON).
+    let dir = omnivore::util::temp_dir("adaptive-trace").unwrap();
+    let store = omnivore::api::RunStore::open(&dir).unwrap();
+    store.append(&adaptive_out).unwrap();
+    let back = store.latest().unwrap().unwrap();
+    assert_eq!(back.plan_epochs, adaptive_out.plan_epochs);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn adaptive_on_steady_homogeneous_cluster_is_bit_identical() {
+    // Hysteresis regression: with nothing drifting and every group at
+    // the same speed, `--adaptive-batch` must never leave the equal
+    // plan — records bit-identical to the static path. (Deterministic
+    // service isolates the hysteresis question from sampling noise;
+    // the noise margin itself is the controller's δ, unit-tested.)
+    let opts = || EngineOptions { dist: ServiceDist::Deterministic, ..Default::default() };
+    let mut c = cfg(2, 48);
+    c.adaptive_batch = true;
+    let adaptive = SimTimeEngine::new(runtime(), c.clone(), opts()).run(init()).unwrap();
+    c.adaptive_batch = false;
+    let fixed = SimTimeEngine::new(runtime(), c, opts()).run(init()).unwrap();
+    assert_eq!(adaptive.records.len(), fixed.records.len());
+    for (a, b) in adaptive.records.iter().zip(&fixed.records) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.vtime, b.vtime, "clock diverged at seq {}", a.seq);
+        assert_eq!(a.loss, b.loss, "loss diverged at seq {}", a.seq);
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.conv_staleness, b.conv_staleness);
+    }
+    assert_eq!(adaptive.plan_epochs.len(), 1, "no epoch beyond the initial plan");
+    assert_eq!(adaptive.plan_epochs[0].shares, vec![16, 16]);
 }
 
 #[test]
