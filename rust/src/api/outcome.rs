@@ -7,7 +7,7 @@
 use anyhow::{bail, Result};
 
 use super::spec::RunSpec;
-use crate::engine::{GroupStats, PlanEpochRecord, TrainReport};
+use crate::engine::{FaultRecord, GroupStats, PlanEpochRecord, TrainReport};
 use crate::util::json::Json;
 
 /// Current RunOutcome schema version (same policy as
@@ -69,6 +69,16 @@ pub struct RunOutcome {
     /// monotone versions and shares summing to the batch. Absent in
     /// files written before adaptive planning shipped.
     pub plan_epochs: Vec<PlanEpochRecord>,
+    /// Fault-schedule events that fired (`TrainReport.fault_events`) —
+    /// empty on fault-free runs and in files written before fault
+    /// injection shipped.
+    pub fault_events: Vec<FaultRecord>,
+    /// Per-group virtual seconds spent crashed (completed windows).
+    pub group_downtime: Vec<f64>,
+    /// Publishes dropped by crash fences (counted, never applied).
+    pub dropped_stale_publishes: u64,
+    /// Checkpoint this run resumed from, if any.
+    pub resumed_from: Option<String>,
 }
 
 impl RunOutcome {
@@ -113,6 +123,10 @@ impl RunOutcome {
             lit_cache_misses: report.lit_cache_misses,
             predicted_iter_time,
             plan_epochs: report.plan_epochs.clone(),
+            fault_events: report.fault_events.clone(),
+            group_downtime: report.group_downtime.clone(),
+            dropped_stale_publishes: report.dropped_stale_publishes,
+            resumed_from: report.resumed_from.clone(),
         }
     }
 
@@ -166,6 +180,19 @@ impl RunOutcome {
             "plan_epochs",
             Json::Arr(self.plan_epochs.iter().map(plan_epoch_to_json).collect()),
         ));
+        fields.push((
+            "fault_events",
+            Json::Arr(self.fault_events.iter().map(fault_to_json).collect()),
+        ));
+        fields.push((
+            "group_downtime",
+            Json::Arr(self.group_downtime.iter().map(|&d| num_to_json(d)).collect()),
+        ));
+        fields
+            .push(("dropped_stale_publishes", Json::Num(self.dropped_stale_publishes as f64)));
+        if let Some(r) = &self.resumed_from {
+            fields.push(("resumed_from", Json::Str(r.clone())));
+        }
         Json::obj(fields)
     }
 
@@ -234,6 +261,33 @@ impl RunOutcome {
                     .collect::<Result<Vec<_>>>()?,
                 None => vec![],
             },
+            // All optional: outcomes written before fault injection
+            // shipped carry none of these (fault-free defaults).
+            fault_events: match v.opt("fault_events") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(fault_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![],
+            },
+            group_downtime: match v.opt("group_downtime") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(num_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![],
+            },
+            dropped_stale_publishes: v
+                .opt("dropped_stale_publishes")
+                .map(|x| Ok::<u64, anyhow::Error>(x.as_usize()? as u64))
+                .transpose()?
+                .unwrap_or(0),
+            resumed_from: v
+                .opt("resumed_from")
+                .map(|r| r.as_str().map(String::from))
+                .transpose()?,
         })
     }
 
@@ -273,6 +327,10 @@ const OUTCOME_FIELDS: &[&str] = &[
     "lit_cache_misses",
     "predicted_iter_time",
     "plan_epochs",
+    "fault_events",
+    "group_downtime",
+    "dropped_stale_publishes",
+    "resumed_from",
 ];
 
 /// Non-finite-safe number encoding: a diverged run reports
@@ -335,6 +393,23 @@ fn plan_epoch_from_json(v: &Json) -> Result<PlanEpochRecord> {
             .iter()
             .map(|n| Ok(n.as_usize()? as u64))
             .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn fault_to_json(f: &FaultRecord) -> Json {
+    let mut fields =
+        vec![("kind", Json::Str(f.kind.clone())), ("at", num_to_json(f.at))];
+    if let Some(g) = f.group {
+        fields.push(("group", Json::Num(g as f64)));
+    }
+    Json::obj(fields)
+}
+
+fn fault_from_json(v: &Json) -> Result<FaultRecord> {
+    Ok(FaultRecord {
+        kind: v.get("kind")?.as_str()?.to_string(),
+        group: v.opt("group").map(|g| g.as_usize()).transpose()?,
+        at: num_from_json(v.get("at")?)?,
     })
 }
 
@@ -429,6 +504,13 @@ mod tests {
                     iters: vec![10, 10],
                 },
             ],
+            fault_events: vec![
+                FaultRecord { kind: "crash".into(), group: Some(0), at: 6.0 },
+                FaultRecord { kind: "restart".into(), group: Some(0), at: 12.0 },
+            ],
+            group_downtime: vec![6.0, 0.0],
+            dropped_stale_publishes: 3,
+            resumed_from: Some("runs/checkpoints/t.ckpt".into()),
         };
         r.recompute_group_stats(&["gpu".into(), "cpu".into()]);
         r.annotate_group_plan(&[24, 8], &[0.4, 0.6]);
@@ -507,6 +589,13 @@ mod tests {
         assert_eq!(o2.plan_epochs, o.plan_epochs);
         assert_eq!(o2.plan_epochs.len(), 2);
         assert_eq!(o2.plan_epochs[1].shares, vec![24, 8]);
+        // So does the fault surface.
+        assert_eq!(o2.fault_events, o.fault_events);
+        assert_eq!(o2.fault_events[0].kind, "crash");
+        assert_eq!(o2.fault_events[0].group, Some(0));
+        assert_eq!(o2.group_downtime, vec![6.0, 0.0]);
+        assert_eq!(o2.dropped_stale_publishes, 3);
+        assert_eq!(o2.resumed_from.as_deref(), Some("runs/checkpoints/t.ckpt"));
         // The embedded spec round-trips too.
         assert_eq!(o2.spec.train.arch, "lenet");
         assert_eq!(o2.spec.options.stop_at_train_acc, Some(0.5));
@@ -514,14 +603,24 @@ mod tests {
 
     #[test]
     fn outcomes_without_plan_trace_still_parse() {
-        // A pre-adaptive outcome line has no plan_epochs field at all.
+        // A pre-adaptive outcome line has no plan_epochs field at all —
+        // and a pre-fault-injection line has none of the fault fields.
         let mut v = outcome().to_json();
         match &mut v {
-            Json::Obj(m) => assert!(m.remove("plan_epochs").is_some(), "trace serialized"),
+            Json::Obj(m) => {
+                assert!(m.remove("plan_epochs").is_some(), "trace serialized");
+                assert!(m.remove("fault_events").is_some(), "faults serialized");
+                assert!(m.remove("group_downtime").is_some(), "downtime serialized");
+                assert!(m.remove("dropped_stale_publishes").is_some(), "drops serialized");
+                assert!(m.remove("resumed_from").is_some(), "resume serialized");
+            }
             other => panic!("outcome must serialize to an object, got {other:?}"),
         }
         let o = RunOutcome::from_json(&v).unwrap();
         assert!(o.plan_epochs.is_empty());
+        assert!(o.fault_events.is_empty() && o.group_downtime.is_empty());
+        assert_eq!(o.dropped_stale_publishes, 0);
+        assert!(o.resumed_from.is_none());
     }
 
     #[test]

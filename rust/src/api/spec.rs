@@ -40,6 +40,10 @@ pub struct RunSpec {
     pub baseline: Option<BaselineSystem>,
     /// Free-form label for run-store lookup ([`super::RunStore::by_tag`]).
     pub tag: Option<String>,
+    /// Checkpoint file to resume from: parameters are restored and the
+    /// spec's step budget is reduced by the steps the checkpoint already
+    /// completed (see [`Self::execute`] / [`Self::initial_state`]).
+    pub resume_from: Option<String>,
 }
 
 impl Default for RunSpec {
@@ -54,6 +58,7 @@ impl Default for RunSpec {
             scheduler: SchedulerKind::SimClock,
             baseline: None,
             tag: None,
+            resume_from: None,
         }
     }
 }
@@ -159,6 +164,13 @@ impl RunSpec {
         self
     }
 
+    /// Inject a fault schedule (crashes, restarts, stalls, FC
+    /// partitions) into the run — see [`crate::config::FaultSchedule`].
+    pub fn faults(mut self, f: crate::config::FaultSchedule) -> Self {
+        self.train.faults = Some(f);
+        self
+    }
+
     pub fn artifacts_dir(mut self, dir: &str) -> Self {
         self.train.artifacts_dir = dir.into();
         self
@@ -188,6 +200,13 @@ impl RunSpec {
 
     pub fn tag(mut self, t: &str) -> Self {
         self.tag = Some(t.into());
+        self
+    }
+
+    /// Resume from a checkpoint file: restore its parameters and charge
+    /// its completed steps against this spec's step budget.
+    pub fn resume_from(mut self, path: &str) -> Self {
+        self.resume_from = Some(path.into());
         self
     }
 
@@ -232,6 +251,18 @@ impl RunSpec {
         self
     }
 
+    /// Save an atomic checkpoint every `n` completed iterations
+    /// (`checkpoint_path` decides where).
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.options.checkpoint_every = n;
+        self
+    }
+
+    pub fn checkpoint_path(mut self, path: &str) -> Self {
+        self.options.checkpoint_path = Some(path.into());
+        self
+    }
+
     // -- semantics ---------------------------------------------------------
 
     /// The config the engines actually run: `train` with the baseline
@@ -258,6 +289,9 @@ impl RunSpec {
         }
         if let Some(t) = &self.tag {
             fields.push(("tag", Json::Str(t.clone())));
+        }
+        if let Some(r) = &self.resume_from {
+            fields.push(("resume_from", Json::Str(r.clone())));
         }
         Json::obj(fields)
     }
@@ -331,7 +365,17 @@ impl RunSpec {
             .map(|b| BaselineSystem::parse(b.as_str()?))
             .transpose()?;
         let tag = v.opt("tag").map(|t| t.as_str().map(String::from)).transpose()?;
-        Ok(Self { spec_version: SPEC_VERSION, train, options, scheduler, baseline, tag })
+        let resume_from =
+            v.opt("resume_from").map(|r| r.as_str().map(String::from)).transpose()?;
+        Ok(Self {
+            spec_version: SPEC_VERSION,
+            train,
+            options,
+            scheduler,
+            baseline,
+            tag,
+            resume_from,
+        })
     }
 
     /// Load a spec (or legacy TrainConfig) from a JSON file.
@@ -343,7 +387,7 @@ impl RunSpec {
 }
 
 const TOP_FIELDS: &[&str] =
-    &["spec_version", "train", "options", "scheduler", "baseline", "tag"];
+    &["spec_version", "train", "options", "scheduler", "baseline", "tag", "resume_from"];
 const TRAIN_FIELDS: &[&str] = &[
     "arch",
     "variant",
@@ -357,6 +401,7 @@ const TRAIN_FIELDS: &[&str] = &[
     "artifacts_dir",
     "dynamic_batch",
     "adaptive_batch",
+    "faults",
 ];
 const HYPER_FIELDS: &[&str] = &["lr", "momentum", "lambda"];
 const CLUSTER_FIELDS: &[&str] = &[
@@ -380,6 +425,8 @@ const OPTION_FIELDS: &[&str] = &[
     "stop_at_train_acc",
     "max_virtual_time",
     "he_override",
+    "checkpoint_every",
+    "checkpoint_path",
 ];
 const HE_FIELDS: &[&str] = &["t_cc", "t_nc", "t_fc"];
 
@@ -424,6 +471,13 @@ fn options_to_json(o: &EngineOptions) -> Json {
                 ("t_fc", Json::Num(he.t_fc)),
             ]),
         ));
+    }
+    // Additive-optional (schema v1 files without them stay byte-stable).
+    if o.checkpoint_every > 0 {
+        fields.push(("checkpoint_every", Json::Num(o.checkpoint_every as f64)));
+    }
+    if let Some(p) = &o.checkpoint_path {
+        fields.push(("checkpoint_path", Json::Str(p.clone())));
     }
     Json::obj(fields)
 }
@@ -483,6 +537,17 @@ fn options_from_json(v: &Json) -> Result<EngineOptions> {
             .transpose()?,
         max_virtual_time: v.opt("max_virtual_time").map(|x| x.as_f64()).transpose()?,
         he_override,
+        checkpoint_every: v
+            .opt("checkpoint_every")
+            .map(|x| x.as_usize())
+            .transpose()?
+            .unwrap_or(d.checkpoint_every),
+        checkpoint_path: v
+            .opt("checkpoint_path")
+            .map(|p| p.as_str().map(String::from))
+            .transpose()?,
+        // Never serialized: a resumed run sets this at execute time.
+        step_offset: 0,
     })
 }
 
@@ -498,12 +563,26 @@ impl RunSpec {
         Ok(crate::model::ParamSet::init(rt.manifest().arch(&cfg.arch)?, cfg.seed))
     }
 
-    /// Run the experiment end to end: init parameters from the runtime's
-    /// manifest, execute under the spec's scheduler, and wrap the report
-    /// in a [`RunOutcome`].
+    /// Starting parameters + steps already completed for this spec: the
+    /// `resume_from` checkpoint when set (restored model, its stored
+    /// step count), a cold start at (manifest init, 0) otherwise.
+    pub fn initial_state(
+        &self,
+        rt: &crate::runtime::Runtime,
+    ) -> Result<(crate::model::ParamSet, u64)> {
+        match &self.resume_from {
+            Some(path) => crate::model::load_checkpoint_state(std::path::Path::new(path))
+                .with_context(|| format!("resuming from checkpoint {path}")),
+            None => Ok((self.cold_init(rt)?, 0)),
+        }
+    }
+
+    /// Run the experiment end to end: restore or init parameters
+    /// ([`Self::initial_state`]), execute under the spec's scheduler,
+    /// and wrap the report in a [`RunOutcome`].
     pub fn execute(&self, rt: &crate::runtime::Runtime) -> Result<super::RunOutcome> {
-        let init = self.cold_init(rt)?;
-        Ok(self.execute_from(rt, init)?.0)
+        let (init, done) = self.initial_state(rt)?;
+        Ok(self.execute_from_step(rt, init, done)?.0)
     }
 
     /// Like [`Self::execute`] but starting from explicit parameters
@@ -516,8 +595,29 @@ impl RunSpec {
         params: crate::model::ParamSet,
     ) -> Result<(super::RunOutcome, crate::engine::TrainReport, crate::model::ParamSet)>
     {
-        let (report, params) = self.scheduler.run(rt, self, params)?;
-        let outcome = self.outcome_of(rt, &report);
+        self.execute_from_step(rt, params, 0)
+    }
+
+    /// [`Self::execute_from`] for a resumed run: `done` steps are
+    /// charged against the spec's step budget (the session trains the
+    /// remainder) and carried as the checkpoint step offset, so a chain
+    /// of resumes converges on ONE total budget instead of restarting
+    /// it. The report records the resume source.
+    pub fn execute_from_step(
+        &self,
+        rt: &crate::runtime::Runtime,
+        params: crate::model::ParamSet,
+        done: u64,
+    ) -> Result<(super::RunOutcome, crate::engine::TrainReport, crate::model::ParamSet)>
+    {
+        let mut spec = self.clone();
+        if done > 0 {
+            spec.train.steps = spec.train.steps.saturating_sub(done as usize);
+            spec.options.step_offset = done;
+        }
+        let (mut report, params) = spec.scheduler.run(rt, &spec, params)?;
+        report.resumed_from = self.resume_from.clone();
+        let outcome = spec.outcome_of(rt, &report);
         Ok((outcome, report, params))
     }
 
@@ -716,6 +816,33 @@ mod tests {
         assert_ne!(old, RunSpec::default().to_json().dump(), "field was removed");
         let s3 = RunSpec::from_json(&Json::parse(&old).unwrap()).unwrap();
         assert!(!s3.train.adaptive_batch);
+    }
+
+    #[test]
+    fn fault_and_resume_fields_roundtrip() {
+        let s = RunSpec::new("lenet")
+            .faults(crate::config::FaultSchedule::preset("faulty-s").unwrap())
+            .checkpoint_every(4)
+            .checkpoint_path("runs/checkpoints/x.ckpt")
+            .resume_from("runs/checkpoints/x.ckpt");
+        let j = s.to_json().dump();
+        let s2 = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s2.train.faults, s.train.faults);
+        assert!(s2.train.faults.is_some());
+        assert_eq!(s2.options.checkpoint_every, 4);
+        assert_eq!(s2.options.checkpoint_path.as_deref(), Some("runs/checkpoints/x.ckpt"));
+        assert_eq!(s2.resume_from.as_deref(), Some("runs/checkpoints/x.ckpt"));
+        assert_eq!(s2.options.step_offset, 0);
+        // A typo'd fault event field fails loudly like every other level.
+        let bad = j.replacen("\"group\":", "\"grp\":1,\"group\":", 1);
+        assert!(RunSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Absent fields default off: no schedule, no resume, no cadence.
+        let plain = RunSpec::default().to_json().dump();
+        assert!(!plain.contains("checkpoint_every") && !plain.contains("resume_from"));
+        let p = RunSpec::from_json(&Json::parse(&plain).unwrap()).unwrap();
+        assert!(p.train.faults.is_none() && p.resume_from.is_none());
+        assert_eq!(p.options.checkpoint_every, 0);
+        assert!(p.options.checkpoint_path.is_none());
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! Fault schedules — scripted membership churn over virtual time.
+//!
+//! The paper treats each node as a black box whose throughput is all
+//! that matters; a production cluster's black boxes crash, stall, and
+//! rejoin (OmniLearn's elastic workers, PAPERS.md). A [`FaultSchedule`]
+//! scripts those events against the simulator's virtual clock the same
+//! way [`super::cluster::ProfileDrift`] scripts speed drift: versioned
+//! JSON, unknown fields rejected, deterministic consumption.
+//!
+//! Semantics (DESIGN.md §Faults):
+//! * `Crash { group, at }` — the group's machines die at `at`. In-flight
+//!   work is lost; any gradient it publishes against a pre-crash plan
+//!   version is *fenced* (dropped and counted) at the parameter servers.
+//! * `Restart { group, at }` — the group rejoins at `at` and is
+//!   re-admitted through the next membership plan epoch.
+//! * `Stall { group, from, to }` — the group makes no *new* progress in
+//!   `[from, to)` (a transient hang); in-flight work completes.
+//! * `FcPartition { from, to }` — the merged-FC network path is down in
+//!   `[from, to)`: FC requests arriving inside the window wait until
+//!   `to`.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Current FaultSchedule schema version (same policy as
+/// `api::SPEC_VERSION`: newer files are rejected, not half-parsed).
+pub const FAULT_VERSION: u64 = 1;
+
+/// The `faulty-s` preset's event times: group 0 crashes at vtime 6 and
+/// rejoins at vtime 12 (mid-run for the short measured-HE runs the
+/// drift/fault presets target).
+pub const FAULTY_S_CRASH_AT: f64 = 6.0;
+pub const FAULTY_S_RESTART_AT: f64 = 12.0;
+
+/// One scripted fault event, in virtual-time seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    Crash { group: usize, at: f64 },
+    Restart { group: usize, at: f64 },
+    Stall { group: usize, from: f64, to: f64 },
+    FcPartition { from: f64, to: f64 },
+}
+
+impl FaultEvent {
+    /// Onset time of the event.
+    pub fn at(&self) -> f64 {
+        match *self {
+            FaultEvent::Crash { at, .. } | FaultEvent::Restart { at, .. } => at,
+            FaultEvent::Stall { from, .. } | FaultEvent::FcPartition { from, .. } => from,
+        }
+    }
+
+    /// The group the event targets (None for cluster-wide events).
+    pub fn group(&self) -> Option<usize> {
+        match *self {
+            FaultEvent::Crash { group, .. }
+            | FaultEvent::Restart { group, .. }
+            | FaultEvent::Stall { group, .. } => Some(group),
+            FaultEvent::FcPartition { .. } => None,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            FaultEvent::Crash { .. } => "crash",
+            FaultEvent::Restart { .. } => "restart",
+            FaultEvent::Stall { .. } => "stall",
+            FaultEvent::FcPartition { .. } => "fc_partition",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            FaultEvent::Crash { group, at } => Json::obj(vec![
+                ("kind", Json::Str("crash".into())),
+                ("group", Json::Num(group as f64)),
+                ("at", Json::Num(at)),
+            ]),
+            FaultEvent::Restart { group, at } => Json::obj(vec![
+                ("kind", Json::Str("restart".into())),
+                ("group", Json::Num(group as f64)),
+                ("at", Json::Num(at)),
+            ]),
+            FaultEvent::Stall { group, from, to } => Json::obj(vec![
+                ("kind", Json::Str("stall".into())),
+                ("group", Json::Num(group as f64)),
+                ("from", Json::Num(from)),
+                ("to", Json::Num(to)),
+            ]),
+            FaultEvent::FcPartition { from, to } => Json::obj(vec![
+                ("kind", Json::Str("fc_partition".into())),
+                ("from", Json::Num(from)),
+                ("to", Json::Num(to)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.get("kind")?.as_str()?;
+        let known: &[&str] = match kind {
+            "crash" | "restart" => &["kind", "group", "at"],
+            "stall" => &["kind", "group", "from", "to"],
+            "fc_partition" => &["kind", "from", "to"],
+            other => bail!("unknown fault kind {other:?} (crash | restart | stall | fc_partition)"),
+        };
+        for key in v.as_obj()?.keys() {
+            if !known.contains(&key.as_str()) {
+                bail!("unknown field {key:?} in FaultEvent({kind}) (schema v{FAULT_VERSION})");
+            }
+        }
+        let time = |key: &str| -> Result<f64> {
+            let t = v.get(key)?.as_f64()?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "fault {kind} `{key}` must be finite and >= 0, got {t}"
+            );
+            Ok(t)
+        };
+        let window = || -> Result<(f64, f64)> {
+            let (from, to) = (time("from")?, time("to")?);
+            anyhow::ensure!(from < to, "fault {kind} needs from < to, got [{from}, {to})");
+            Ok((from, to))
+        };
+        Ok(match kind {
+            "crash" => FaultEvent::Crash { group: v.get("group")?.as_usize()?, at: time("at")? },
+            "restart" => {
+                FaultEvent::Restart { group: v.get("group")?.as_usize()?, at: time("at")? }
+            }
+            "stall" => {
+                let (from, to) = window()?;
+                FaultEvent::Stall { group: v.get("group")?.as_usize()?, from, to }
+            }
+            "fc_partition" => {
+                let (from, to) = window()?;
+                FaultEvent::FcPartition { from, to }
+            }
+            _ => unreachable!(),
+        })
+    }
+}
+
+/// A validated, scripted sequence of fault events.
+///
+/// Invariants enforced at construction (and therefore on every parsed
+/// file): per group, crash/restart events alternate starting with a
+/// crash (no double-crash, no orphan restart, no equal-time pair); a
+/// group's stalls do not overlap each other or its down windows; FC
+/// partitions do not overlap each other.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+    /// Whether a crashed group's in-flight pipeline still *attempts* its
+    /// stale publishes (which the parameter-server fence then drops and
+    /// counts). Default true — the realistic zombie-gradient case. The
+    /// fencing bit-identity test turns it off to prove a fenced publish
+    /// is a structural no-op.
+    pub replay_stale: bool,
+}
+
+impl FaultSchedule {
+    /// Build a schedule, validating the event set.
+    pub fn new(events: Vec<FaultEvent>) -> Result<Self> {
+        Self::validate(&events)?;
+        Ok(Self { events, replay_stale: true })
+    }
+
+    /// No events at all (a structural no-op schedule).
+    pub fn empty() -> Self {
+        Self { events: vec![], replay_stale: true }
+    }
+
+    /// Disable stale-publish replay (see [`Self::replay_stale`]).
+    pub fn without_stale_replay(mut self) -> Self {
+        self.replay_stale = false;
+        self
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Highest group index any event names, plus one (0 when none).
+    pub fn groups_mentioned(&self) -> usize {
+        self.events
+            .iter()
+            .filter_map(|e| e.group())
+            .map(|g| g + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn validate(events: &[FaultEvent]) -> Result<()> {
+        let groups = events.iter().filter_map(|e| e.group()).max().map_or(0, |g| g + 1);
+        for g in 0..groups {
+            // Crash/restart must alternate, crash first, strictly
+            // increasing times — anything else is two overlapping (or
+            // inverted) membership events.
+            let mut updown: Vec<(f64, bool)> = events
+                .iter()
+                .filter_map(|e| match *e {
+                    FaultEvent::Crash { group, at } if group == g => Some((at, false)),
+                    FaultEvent::Restart { group, at } if group == g => Some((at, true)),
+                    _ => None,
+                })
+                .collect();
+            updown.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let mut want_restart = false;
+            let mut prev = f64::NEG_INFINITY;
+            for &(t, is_restart) in &updown {
+                if t <= prev {
+                    bail!("group {g}: overlapping crash/restart events at vtime {t}");
+                }
+                if is_restart != want_restart {
+                    bail!(
+                        "group {g}: {} at vtime {t} without a matching {} before it",
+                        if is_restart { "restart" } else { "crash" },
+                        if is_restart { "crash" } else { "restart" },
+                    );
+                }
+                want_restart = !is_restart;
+                prev = t;
+            }
+            // Stalls must not overlap each other or the down windows.
+            let mut stalls: Vec<(f64, f64)> = events
+                .iter()
+                .filter_map(|e| match *e {
+                    FaultEvent::Stall { group, from, to } if group == g => Some((from, to)),
+                    _ => None,
+                })
+                .collect();
+            stalls.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in stalls.windows(2) {
+                if w[1].0 < w[0].1 {
+                    bail!("group {g}: overlapping stalls [{}, {}) and [{}, {})", w[0].0, w[0].1, w[1].0, w[1].1);
+                }
+            }
+            for &(from, to) in &stalls {
+                let mid = 0.5 * (from + to);
+                if Self::down_windows(events, g).any(|(c, r)| from < r && c < to) {
+                    bail!(
+                        "group {g}: stall [{from}, {to}) overlaps a crash window \
+                         (stall midpoint {mid} inside downtime)"
+                    );
+                }
+            }
+        }
+        let mut parts: Vec<(f64, f64)> = events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::FcPartition { from, to } => Some((from, to)),
+                _ => None,
+            })
+            .collect();
+        parts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in parts.windows(2) {
+            if w[1].0 < w[0].1 {
+                bail!("overlapping fc_partition windows [{}, {}) and [{}, {})", w[0].0, w[0].1, w[1].0, w[1].1);
+            }
+        }
+        Ok(())
+    }
+
+    /// The group's down windows `[crash, restart)` — a crash with no
+    /// restart yields `[crash, +inf)`.
+    fn down_windows(events: &[FaultEvent], group: usize) -> impl Iterator<Item = (f64, f64)> + '_ {
+        let mut updown: Vec<(f64, bool)> = events
+            .iter()
+            .filter_map(move |e| match *e {
+                FaultEvent::Crash { group: g, at } if g == group => Some((at, false)),
+                FaultEvent::Restart { group: g, at } if g == group => Some((at, true)),
+                _ => None,
+            })
+            .collect();
+        updown.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut out = vec![];
+        let mut open: Option<f64> = None;
+        for (t, is_restart) in updown {
+            if is_restart {
+                if let Some(c) = open.take() {
+                    out.push((c, t));
+                }
+            } else {
+                open = Some(t);
+            }
+        }
+        if let Some(c) = open {
+            out.push((c, f64::INFINITY));
+        }
+        out.into_iter()
+    }
+
+    /// Whether `group` is crashed (down) at virtual time `t`.
+    pub fn is_down(&self, group: usize, t: f64) -> bool {
+        Self::down_windows(&self.events, group).any(|(c, r)| t >= c && t < r)
+    }
+
+    /// The crash time of the window containing `t`, if the group is down.
+    pub fn down_since(&self, group: usize, t: f64) -> Option<f64> {
+        Self::down_windows(&self.events, group)
+            .find(|&(c, r)| t >= c && t < r)
+            .map(|(c, _)| c)
+    }
+
+    /// The restart closing the down window containing `t` (None if the
+    /// group is up at `t` or never restarts).
+    pub fn restart_after(&self, group: usize, t: f64) -> Option<f64> {
+        Self::down_windows(&self.events, group)
+            .find(|&(c, r)| t >= c && t < r)
+            .map(|(_, r)| r)
+            .filter(|r| r.is_finite())
+    }
+
+    /// Earliest time >= `t` at which `group` may *start* new work:
+    /// defers out of down windows (to the restart; +inf when the group
+    /// never restarts) and stall windows, iterating to a fixpoint.
+    pub fn delayed_start(&self, group: usize, t: f64) -> f64 {
+        let mut t = t;
+        loop {
+            let mut moved = false;
+            if let Some((_, r)) =
+                Self::down_windows(&self.events, group).find(|&(c, r)| t >= c && t < r)
+            {
+                t = r;
+                moved = true;
+            }
+            if t.is_infinite() {
+                return t;
+            }
+            for e in &self.events {
+                if let FaultEvent::Stall { group: g, from, to } = *e {
+                    if g == group && t >= from && t < to {
+                        t = to;
+                        moved = true;
+                    }
+                }
+            }
+            if !moved {
+                return t;
+            }
+        }
+    }
+
+    /// Earliest time >= `t` at which the (merged) FC path is reachable.
+    pub fn fc_available(&self, t: f64) -> f64 {
+        for e in &self.events {
+            if let FaultEvent::FcPartition { from, to } = *e {
+                if t >= from && t < to {
+                    return to;
+                }
+            }
+        }
+        t
+    }
+
+    /// Total downtime of `group` clipped to `[0, horizon]`.
+    pub fn downtime(&self, group: usize, horizon: f64) -> f64 {
+        Self::down_windows(&self.events, group)
+            .map(|(c, r)| (r.min(horizon) - c.min(horizon)).max(0.0))
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("fault_version", Json::Num(FAULT_VERSION as f64)),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ];
+        if !self.replay_stale {
+            fields.push(("replay_stale", Json::Bool(false)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let version = v.get("fault_version")?.as_usize()? as u64;
+        if version > FAULT_VERSION {
+            bail!(
+                "FaultSchedule version {version} is newer than this binary's \
+                 v{FAULT_VERSION}; refusing to half-parse it"
+            );
+        }
+        for key in v.as_obj()?.keys() {
+            if !["fault_version", "events", "replay_stale"].contains(&key.as_str()) {
+                bail!("unknown field {key:?} in FaultSchedule (schema v{FAULT_VERSION})");
+            }
+        }
+        let events = v
+            .get("events")?
+            .as_arr()?
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut s = Self::new(events)?;
+        if let Some(r) = v.opt("replay_stale") {
+            s.replay_stale = r.as_bool()?;
+        }
+        Ok(s)
+    }
+
+    /// Named presets. `faulty-s`: group 0 crashes at vtime
+    /// [`FAULTY_S_CRASH_AT`] and rejoins at [`FAULTY_S_RESTART_AT`] —
+    /// pair it with the cpu-s cluster for the ROADMAP's churn acceptance
+    /// run.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "faulty-s" => Some(
+                Self::new(vec![
+                    FaultEvent::Crash { group: 0, at: FAULTY_S_CRASH_AT },
+                    FaultEvent::Restart { group: 0, at: FAULTY_S_RESTART_AT },
+                ])
+                .expect("faulty-s preset is valid"),
+            ),
+            _ => None,
+        }
+    }
+
+    /// Resolve a CLI `--faults` value: a preset name, else a path to a
+    /// schedule JSON file.
+    pub fn resolve(s: &str) -> Result<Self> {
+        if let Some(p) = Self::preset(s) {
+            return Ok(p);
+        }
+        if std::path::Path::new(s).exists() {
+            let text = std::fs::read_to_string(s)
+                .map_err(|e| anyhow::anyhow!("reading fault schedule {s}: {e}"))?;
+            return Self::from_json(&Json::parse(&text)?);
+        }
+        bail!("unknown fault schedule {s:?} (preset name or JSON file path)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faulty_s_preset_and_queries() {
+        let f = FaultSchedule::preset("faulty-s").unwrap();
+        assert_eq!(f.events().len(), 2);
+        assert!(!f.is_down(0, 5.9));
+        assert!(f.is_down(0, 6.0));
+        assert!(f.is_down(0, 11.9));
+        assert!(!f.is_down(0, 12.0));
+        assert!(!f.is_down(1, 8.0));
+        assert_eq!(f.down_since(0, 8.0), Some(6.0));
+        assert_eq!(f.restart_after(0, 8.0), Some(12.0));
+        assert_eq!(f.delayed_start(0, 8.0), 12.0);
+        assert_eq!(f.delayed_start(0, 3.0), 3.0);
+        assert_eq!(f.downtime(0, 20.0), 6.0);
+        assert_eq!(f.downtime(0, 9.0), 3.0);
+        assert_eq!(f.downtime(1, 20.0), 0.0);
+        assert_eq!(f.groups_mentioned(), 1);
+        assert!(FaultSchedule::preset("nope").is_none());
+    }
+
+    #[test]
+    fn crash_without_restart_is_forever() {
+        let f =
+            FaultSchedule::new(vec![FaultEvent::Crash { group: 1, at: 2.0 }]).unwrap();
+        assert!(f.is_down(1, 1e12));
+        assert_eq!(f.restart_after(1, 3.0), None);
+        assert!(f.delayed_start(1, 3.0).is_infinite());
+        assert_eq!(f.downtime(1, 10.0), 8.0);
+    }
+
+    #[test]
+    fn stall_and_partition_defer_starts() {
+        let f = FaultSchedule::new(vec![
+            FaultEvent::Stall { group: 0, from: 1.0, to: 2.0 },
+            FaultEvent::FcPartition { from: 4.0, to: 5.0 },
+        ])
+        .unwrap();
+        assert_eq!(f.delayed_start(0, 1.5), 2.0);
+        assert_eq!(f.delayed_start(0, 2.0), 2.0);
+        assert_eq!(f.delayed_start(1, 1.5), 1.5);
+        assert_eq!(f.fc_available(4.5), 5.0);
+        assert_eq!(f.fc_available(5.0), 5.0);
+        assert_eq!(f.fc_available(3.0), 3.0);
+    }
+
+    #[test]
+    fn restart_into_stall_defers_to_fixpoint() {
+        let f = FaultSchedule::new(vec![
+            FaultEvent::Crash { group: 0, at: 1.0 },
+            FaultEvent::Restart { group: 0, at: 3.0 },
+            FaultEvent::Stall { group: 0, from: 2.5, to: 4.0 },
+        ]);
+        // Stall overlapping the down window is rejected as overlapping.
+        assert!(f.is_err());
+        let f = FaultSchedule::new(vec![
+            FaultEvent::Crash { group: 0, at: 1.0 },
+            FaultEvent::Restart { group: 0, at: 3.0 },
+            FaultEvent::Stall { group: 0, from: 3.0, to: 4.0 },
+        ])
+        .unwrap();
+        assert_eq!(f.delayed_start(0, 1.5), 4.0);
+    }
+
+    #[test]
+    fn validation_rejects_overlapping_events() {
+        // Double crash with no restart between.
+        assert!(FaultSchedule::new(vec![
+            FaultEvent::Crash { group: 0, at: 1.0 },
+            FaultEvent::Crash { group: 0, at: 2.0 },
+        ])
+        .is_err());
+        // Orphan restart.
+        assert!(FaultSchedule::new(vec![FaultEvent::Restart { group: 0, at: 1.0 }]).is_err());
+        // Restart before its crash.
+        assert!(FaultSchedule::new(vec![
+            FaultEvent::Restart { group: 0, at: 1.0 },
+            FaultEvent::Crash { group: 0, at: 2.0 },
+        ])
+        .is_err());
+        // Equal-time crash/restart pair.
+        assert!(FaultSchedule::new(vec![
+            FaultEvent::Crash { group: 0, at: 2.0 },
+            FaultEvent::Restart { group: 0, at: 2.0 },
+        ])
+        .is_err());
+        // Overlapping stalls on one group.
+        assert!(FaultSchedule::new(vec![
+            FaultEvent::Stall { group: 0, from: 1.0, to: 3.0 },
+            FaultEvent::Stall { group: 0, from: 2.0, to: 4.0 },
+        ])
+        .is_err());
+        // Overlapping partitions.
+        assert!(FaultSchedule::new(vec![
+            FaultEvent::FcPartition { from: 1.0, to: 3.0 },
+            FaultEvent::FcPartition { from: 2.0, to: 4.0 },
+        ])
+        .is_err());
+        // Same schedule on DIFFERENT groups is fine.
+        assert!(FaultSchedule::new(vec![
+            FaultEvent::Stall { group: 0, from: 1.0, to: 3.0 },
+            FaultEvent::Stall { group: 1, from: 2.0, to: 4.0 },
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_and_rejection() {
+        let f = FaultSchedule::new(vec![
+            FaultEvent::Crash { group: 0, at: 6.0 },
+            FaultEvent::Restart { group: 0, at: 12.0 },
+            FaultEvent::Stall { group: 2, from: 1.0, to: 2.0 },
+            FaultEvent::FcPartition { from: 3.0, to: 4.0 },
+        ])
+        .unwrap();
+        let j = f.to_json().dump();
+        let f2 = FaultSchedule::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(f, f2);
+        assert!(f2.replay_stale);
+        // replay_stale=false round-trips too.
+        let g = f.clone().without_stale_replay();
+        let g2 = FaultSchedule::from_json(&Json::parse(&g.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(g, g2);
+        assert!(!g2.replay_stale);
+        // Unknown top-level field.
+        let bad = j.replacen("\"events\":", "\"eventz\":1,\"events\":", 1);
+        assert!(FaultSchedule::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Unknown per-event field.
+        let bad = j.replacen("\"at\":6", "\"att\":1,\"at\":6", 1);
+        assert!(FaultSchedule::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Cross-kind field: a crash carrying a stall's "to".
+        let bad = j.replacen("\"at\":6", "\"to\":9,\"at\":6", 1);
+        assert!(FaultSchedule::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Unknown kind.
+        let bad = j.replacen("\"crash\"", "\"explode\"", 1);
+        assert!(FaultSchedule::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Newer version refused.
+        let bad = j.replacen(
+            &format!("\"fault_version\":{FAULT_VERSION}"),
+            &format!("\"fault_version\":{}", FAULT_VERSION + 1),
+            1,
+        );
+        let err = FaultSchedule::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        // Bad numbers.
+        for bad in [
+            r#"{"fault_version":1,"events":[{"kind":"crash","group":0,"at":-1.0}]}"#,
+            r#"{"fault_version":1,"events":[{"kind":"stall","group":0,"from":3.0,"to":2.0}]}"#,
+        ] {
+            assert!(FaultSchedule::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn resolve_preset_and_unknown() {
+        assert_eq!(
+            FaultSchedule::resolve("faulty-s").unwrap(),
+            FaultSchedule::preset("faulty-s").unwrap()
+        );
+        assert!(FaultSchedule::resolve("no-such-schedule").is_err());
+    }
+}

@@ -4,8 +4,10 @@
 //! runs can be driven from files (`omnivore train --config run.json`).
 
 pub mod cluster;
+pub mod fault;
 
 pub use cluster::{ClusterSpec, DeviceKind, DeviceProfile, ProfileDrift, CLUSTER_PRESETS};
+pub use fault::{FaultEvent, FaultSchedule, FAULT_VERSION};
 
 use anyhow::{Context, Result};
 
@@ -140,6 +142,10 @@ pub struct TrainConfig {
     /// steady homogeneous cluster, runs are bit-identical to the static
     /// plan.
     pub adaptive_batch: bool,
+    /// Scripted fault schedule (crash/restart/stall/partition events in
+    /// virtual time — [`FaultSchedule`]). None is a structural no-op:
+    /// the run is bit-identical to one without the field.
+    pub faults: Option<FaultSchedule>,
 }
 
 impl Default for TrainConfig {
@@ -157,13 +163,14 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             dynamic_batch: false,
             adaptive_batch: false,
+            faults: None,
         }
     }
 }
 
 impl TrainConfig {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("arch", Json::Str(self.arch.clone())),
             ("variant", Json::Str(self.variant.clone())),
             ("batch", Json::Num(self.batch as f64)),
@@ -185,7 +192,11 @@ impl TrainConfig {
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
             ("dynamic_batch", Json::Bool(self.dynamic_batch)),
             ("adaptive_batch", Json::Bool(self.adaptive_batch)),
-        ])
+        ]);
+        if let (Json::Obj(m), Some(f)) = (&mut j, &self.faults) {
+            m.insert("faults".into(), f.to_json());
+        }
+        j
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -218,6 +229,7 @@ impl TrainConfig {
                 .map(|b| b.as_bool())
                 .transpose()?
                 .unwrap_or(false),
+            faults: v.opt("faults").map(FaultSchedule::from_json).transpose()?,
         })
     }
 
@@ -331,6 +343,22 @@ mod tests {
         let c3 = TrainConfig::from_json(&Json::parse(old).unwrap()).unwrap();
         assert!(!c3.dynamic_batch);
         assert!(!c3.batch_plan().is_proportional());
+    }
+
+    #[test]
+    fn faults_roundtrip_and_absent_default() {
+        let mut c = TrainConfig::default();
+        c.faults = fault::FaultSchedule::preset("faulty-s");
+        let j = c.to_json().dump();
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c.faults, c2.faults);
+        // Pre-existing config files (no "faults" key) parse to None.
+        let mut plain = TrainConfig::default();
+        plain.faults = None;
+        let j = plain.to_json().dump();
+        assert!(!j.contains("faults"));
+        let c3 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(c3.faults.is_none());
     }
 
     #[test]

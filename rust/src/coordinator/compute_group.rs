@@ -145,13 +145,16 @@ impl ComputeGroup {
     }
 
     /// Phase 2 is the FC server's job (see engine); Phase 3: conv
-    /// backward + publish of the group's single summed gradient.
+    /// backward + publish of the group's single summed gradient. Returns
+    /// `None` when the conv server's crash fence dropped the publish (a
+    /// zombie gradient carrying a pre-crash plan version); no fence
+    /// raised — the no-fault case — means every publish applies.
     pub fn conv_backward_publish(
         &self,
         rt: &Runtime,
         state: &ConvFwdState,
         g_act: &HostTensor,
-    ) -> Result<u64> {
+    ) -> Result<Option<u64>> {
         let g_lit = to_literal(g_act)?;
         let mut lits: Vec<&xla::Literal> = vec![&state.images_lit];
         lits.extend(state.param_lits.literals().iter());
@@ -159,7 +162,13 @@ impl ComputeGroup {
         let outs = rt.execute_refs(&self.conv_bwd_artifact, &lits)?;
         let grads: Vec<HostTensor> =
             outs.iter().map(from_literal).collect::<Result<_>>()?;
-        self.conv_ps.publish_scaled(&grads, state.snapshot.version, state.grad_weight)
+        self.conv_ps.publish_scaled_fenced(
+            &grads,
+            state.snapshot.version,
+            state.grad_weight,
+            self.id,
+            state.plan_version,
+        )
     }
 
     /// Convenience: one whole iteration (read → conv fwd → FC step →
@@ -179,8 +188,11 @@ impl ComputeGroup {
             &state.labels,
             state.fc_snapshot.clone(),
             state.grad_weight,
+            self.id,
+            state.plan_version,
         )?;
-        let conv_staleness = self.conv_backward_publish(rt, &state, &fc_out.g_act)?;
+        let conv_staleness =
+            self.conv_backward_publish(rt, &state, &fc_out.g_act)?.unwrap_or(0);
         Ok(StepOutput {
             loss: fc_out.loss,
             acc: fc_out.acc,

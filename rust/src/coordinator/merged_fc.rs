@@ -76,7 +76,11 @@ impl FcServer {
     ///
     /// `grad_scale` is the calling group's batch-plan gradient weight
     /// (`BatchPlan::grad_weight`; 1.0 on the equal split — bit-identical
-    /// to the historical unweighted publish).
+    /// to the historical unweighted publish). `group` and `plan_version`
+    /// identify the publish for the server's crash fence: a publish
+    /// carrying a pre-crash plan version is dropped and counted, not
+    /// applied (no fence raised — the universal no-fault case — means
+    /// every publish passes).
     pub fn step(
         &self,
         rt: &Runtime,
@@ -84,6 +88,8 @@ impl FcServer {
         labels: &[i32],
         stale_read: Option<super::param_server::ModelSnapshot>,
         grad_scale: f32,
+        group: usize,
+        plan_version: u64,
     ) -> Result<FcStepOutput> {
         let _serial = if self.merged { Some(self.serial.lock().unwrap()) } else { None };
         let snap = match (&self.merged, stale_read) {
@@ -104,7 +110,10 @@ impl FcServer {
         let g_act = from_literal(&outs[2])?;
         let grads: Vec<HostTensor> =
             outs[3..].iter().map(from_literal).collect::<Result<_>>()?;
-        let staleness = self.ps.publish_scaled(&grads, snap.version, grad_scale)?;
+        let staleness = self
+            .ps
+            .publish_scaled_fenced(&grads, snap.version, grad_scale, group, plan_version)?
+            .unwrap_or(0);
         Ok(FcStepOutput { loss, acc, g_act, staleness })
     }
 

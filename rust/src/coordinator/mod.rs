@@ -133,6 +133,19 @@ impl Topology {
         (self.conv_ps.staleness_stats(), self.fc.param_server().staleness_stats())
     }
 
+    /// Raise the crash fence for `group` on BOTH servers: publishes it
+    /// issues carrying a plan version older than `min_plan_version` (work
+    /// claimed before its crash) are dropped and counted, not applied.
+    pub fn raise_fence(&self, group: usize, min_plan_version: u64) {
+        self.conv_ps.raise_fence(group, min_plan_version);
+        self.fc.param_server().raise_fence(group, min_plan_version);
+    }
+
+    /// Total publishes dropped by crash fences across both servers.
+    pub fn dropped_stale(&self) -> u64 {
+        self.conv_ps.dropped_stale() + self.fc.param_server().dropped_stale()
+    }
+
     /// Aggregate literal-cache counters (conv + fc) as (hits, misses).
     pub fn lit_cache_stats(&self) -> (u64, u64) {
         let (ch, cm) = self.conv_lits.stats();

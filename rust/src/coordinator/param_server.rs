@@ -173,6 +173,15 @@ struct Meta {
 pub struct ParamServer {
     layout: RwLock<Layout>,
     meta: Mutex<Meta>,
+    /// Per-group publish fences: `fences[g]` is the minimum admissible
+    /// plan version for group `g`'s publishes. Raised when a fault
+    /// schedule crashes a group, so a zombie gradient computed against a
+    /// pre-crash plan epoch is dropped and counted instead of applied
+    /// (DESIGN.md §Faults). Empty (the universal default) means no group
+    /// is fenced.
+    fences: RwLock<Vec<u64>>,
+    /// Publishes dropped by a fence.
+    dropped_stale: AtomicU64,
 }
 
 impl ParamServer {
@@ -193,7 +202,26 @@ impl ParamServer {
                 hyper,
                 stats: StalenessStats::default(),
             }),
+            fences: RwLock::new(Vec::new()),
+            dropped_stale: AtomicU64::new(0),
         }
+    }
+
+    /// Raise group `group`'s publish fence to `min_plan_version` (fences
+    /// only ever move forward). Publishes from that group carrying an
+    /// older plan version are dropped and counted, not applied.
+    pub fn raise_fence(&self, group: usize, min_plan_version: u64) {
+        let mut fences = self.fences.write().unwrap();
+        if fences.len() <= group {
+            fences.resize(group + 1, 0);
+        }
+        fences[group] = fences[group].max(min_plan_version);
+    }
+
+    /// Publishes dropped by a fence since construction (or the last
+    /// [`Self::restore`]).
+    pub fn dropped_stale(&self) -> u64 {
+        self.dropped_stale.load(Ordering::Relaxed)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -319,6 +347,33 @@ impl ParamServer {
         Ok(staleness)
     }
 
+    /// [`Self::publish_scaled`] behind `group`'s fence: if `plan_version`
+    /// (the plan epoch the iteration was *claimed* under) is older than
+    /// the group's fence, the publish is dropped and counted — returning
+    /// `Ok(None)` without touching parameters, velocity, version,
+    /// content id, or staleness stats, so a fenced publish is a
+    /// structural no-op on the server. Otherwise delegates and returns
+    /// `Ok(Some(staleness))`.
+    pub fn publish_scaled_fenced(
+        &self,
+        grads: &[HostTensor],
+        read_version: u64,
+        grad_scale: f32,
+        group: usize,
+        plan_version: u64,
+    ) -> Result<Option<u64>> {
+        {
+            let fences = self.fences.read().unwrap();
+            if let Some(&min) = fences.get(group) {
+                if plan_version < min {
+                    self.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                    return Ok(None);
+                }
+            }
+        }
+        self.publish_scaled(grads, read_version, grad_scale).map(Some)
+    }
+
     /// Replace the hyperparameters (the optimizer retunes between epochs;
     /// velocity is preserved like the paper's continued runs).
     pub fn set_hyper(&self, hyper: Hyper) {
@@ -360,6 +415,8 @@ impl ParamServer {
         meta.version = 0;
         meta.content_id = fresh_content_id();
         meta.stats = StalenessStats::default();
+        self.fences.write().unwrap().clear();
+        self.dropped_stale.store(0, Ordering::Relaxed);
     }
 
     /// Diagnostic: L2 norm of the full parameter vector.
@@ -467,6 +524,37 @@ mod tests {
             b.publish_scaled(&g, b.version(), 1.0).unwrap();
         }
         assert_eq!(a.read().params[0].data(), b.read().params[0].data());
+    }
+
+    #[test]
+    fn fence_drops_stale_publish_without_state_change() {
+        let ps = tiny_ps(0.5, 0.1, 1e-3);
+        let g = vec![HostTensor::new(vec![2], vec![1.0, -1.0]).unwrap()];
+        // No fence raised: the fenced variant is the plain publish.
+        assert_eq!(ps.publish_scaled_fenced(&g, 0, 1.0, 0, 0).unwrap(), Some(0));
+        let before = ps.read();
+        let pubs_before = ps.staleness_stats().publishes;
+        ps.raise_fence(0, 2);
+        // Group 0 publishing under plan epoch 1 < fence 2: dropped, and
+        // NOTHING on the server moves.
+        assert_eq!(ps.publish_scaled_fenced(&g, before.version, 1.0, 0, 1).unwrap(), None);
+        assert_eq!(ps.dropped_stale(), 1);
+        let after = ps.read();
+        assert_eq!(after.version, before.version);
+        assert_eq!(after.content_id, before.content_id);
+        assert_eq!(after.params[0].data(), before.params[0].data());
+        assert_eq!(ps.staleness_stats().publishes, pubs_before);
+        // Another group is unaffected; the fenced group passes again at
+        // plan versions at or past the fence.
+        assert!(ps.publish_scaled_fenced(&g, ps.version(), 1.0, 1, 0).unwrap().is_some());
+        assert!(ps.publish_scaled_fenced(&g, ps.version(), 1.0, 0, 2).unwrap().is_some());
+        // Fences only move forward.
+        ps.raise_fence(0, 1);
+        assert_eq!(ps.publish_scaled_fenced(&g, ps.version(), 1.0, 0, 1).unwrap(), None);
+        // Restore clears fences and the counter.
+        ps.restore(vec![HostTensor::zeros(&[2])]);
+        assert_eq!(ps.dropped_stale(), 0);
+        assert!(ps.publish_scaled_fenced(&g, 0, 1.0, 0, 0).unwrap().is_some());
     }
 
     #[test]

@@ -82,6 +82,31 @@ impl BatchPlan {
         Self { batch, shares, proportional: true }
     }
 
+    /// A membership-masked plan: dead groups (`alive[g] == false`) get
+    /// share 0 (work fraction 0, gradient weight 0 — their compute is
+    /// out of the statistics entirely), and the batch is split over the
+    /// survivors proportionally to `weights` with every survivor floored
+    /// at one image. Used by [`crate::data::PlanController`] when a
+    /// fault schedule removes or re-admits a group; the zero-share
+    /// exception to [`Self::proportional`]'s floor is deliberate — a
+    /// crashed group has no compute to discard.
+    pub fn masked(batch: usize, weights: &[f64], alive: &[bool]) -> Self {
+        let n = weights.len().max(1);
+        let alive_idx: Vec<usize> =
+            (0..n).filter(|&i| alive.get(i).copied().unwrap_or(true)).collect();
+        if alive_idx.is_empty() || alive_idx.len() == n {
+            // Nobody down (or nobody up — degenerate): plain proportional.
+            return Self::proportional(batch, weights);
+        }
+        let sub: Vec<f64> = alive_idx.iter().map(|&i| weights[i]).collect();
+        let sub_plan = Self::proportional(batch, &sub);
+        let mut shares = vec![0usize; n];
+        for (j, &i) in alive_idx.iter().enumerate() {
+            shares[i] = sub_plan.share(j);
+        }
+        Self { batch, shares, proportional: true }
+    }
+
     /// The plan a config implies: FLOPS-proportional over the cluster's
     /// per-group profiles when dynamic batching is on AND the cluster is
     /// actually heterogeneous; the equal split otherwise.
@@ -219,6 +244,26 @@ mod tests {
         let p = BatchPlan::proportional(2, &[6.6, 1.0, 1.0, 1.0]);
         assert!(!p.is_proportional());
         assert_eq!(p.work_fraction(3), 1.0);
+    }
+
+    #[test]
+    fn masked_zeroes_dead_groups_and_keeps_weight_sum() {
+        let p = BatchPlan::masked(32, &[1.0, 1.0, 1.0, 1.0], &[false, true, true, true]);
+        assert!(p.is_proportional());
+        assert_eq!(p.share(0), 0);
+        assert_eq!(p.shares().iter().sum::<usize>(), 32);
+        assert!(p.shares()[1..].iter().all(|&s| s >= 1), "{:?}", p.shares());
+        assert_eq!(p.work_fraction(0), 0.0);
+        assert_eq!(p.grad_weight(0), 0.0);
+        // Round-sum invariant survives the mask: sum of weights == g.
+        let wsum: f64 = (0..4).map(|g| p.work_fraction(g)).sum();
+        assert!((wsum - 4.0).abs() < 1e-9, "sum of work fractions {wsum}");
+        // All alive degenerates to the plain proportional plan.
+        let p = BatchPlan::masked(32, &[2.0, 1.0, 1.0, 1.0], &[true, true, true, true]);
+        assert_eq!(p, BatchPlan::proportional(32, &[2.0, 1.0, 1.0, 1.0]));
+        // All dead degenerates too (nobody to mask).
+        let p = BatchPlan::masked(32, &[1.0, 1.0], &[false, false]);
+        assert_eq!(p.shares().iter().sum::<usize>(), 32);
     }
 
     #[test]

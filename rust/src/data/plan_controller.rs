@@ -32,6 +32,7 @@
 //! epoch is the static plan — the `adaptive_batch = false` path is
 //! bit-identical to the historical one.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use super::BatchPlan;
@@ -83,6 +84,12 @@ struct ControllerState {
     /// Gap observations per group under the current epoch.
     obs: Vec<u64>,
     last_replan_vtime: f64,
+    /// Live-membership mask (fault schedules flip it via
+    /// [`PlanController::set_membership`]); all true without faults.
+    alive: Vec<bool>,
+    /// Each group's share the last time it held one > 0 — the weight
+    /// basis for re-admitting it after a crash.
+    last_live_share: Vec<usize>,
 }
 
 /// Owner of the run's plan-epoch sequence (see module docs). Shared
@@ -98,6 +105,11 @@ pub struct PlanController {
     /// the mutex — matching the zero-synchronization cost of the
     /// historical cached plan.
     fixed_plan: Option<BatchPlan>,
+    /// Set (sticky) once a membership epoch exists: fixed controllers
+    /// then route every accessor through the epoch list instead of the
+    /// lock-free `fixed_plan` fast path. False in every no-fault run, so
+    /// the static path stays bit-identical and lock-free.
+    membership_dirty: AtomicBool,
     state: Mutex<ControllerState>,
 }
 
@@ -118,10 +130,12 @@ impl PlanController {
         let groups = initial.groups();
         let batch = initial.batch();
         let fixed_plan = if adaptive.is_none() { Some(initial.clone()) } else { None };
+        let last_live_share = initial.shares().to_vec();
         Self {
             batch,
             adaptive,
             fixed_plan,
+            membership_dirty: AtomicBool::new(false),
             state: Mutex::new(ControllerState {
                 epochs: vec![PlanEpoch { version: 0, plan: initial, since_vtime: 0.0 }],
                 ema_gap: vec![None; groups],
@@ -129,8 +143,20 @@ impl PlanController {
                 // The FIRST re-plan is gated by warmup only;
                 // min_interval spaces CONSECUTIVE re-plans.
                 last_replan_vtime: f64::NEG_INFINITY,
+                alive: vec![true; groups],
+                last_live_share,
             }),
         }
+    }
+
+    /// Whether the fixed-plan lock-free fast path is still valid (no
+    /// membership epoch has ever been published).
+    #[inline]
+    fn fast_path(&self) -> Option<&BatchPlan> {
+        if self.membership_dirty.load(Ordering::Acquire) {
+            return None;
+        }
+        self.fixed_plan.as_ref()
     }
 
     pub fn is_adaptive(&self) -> bool {
@@ -154,7 +180,7 @@ impl PlanController {
     }
 
     pub fn current_version(&self) -> u64 {
-        if self.fixed_plan.is_some() {
+        if self.fast_path().is_some() {
             return 0;
         }
         let st = self.state.lock().unwrap();
@@ -163,7 +189,7 @@ impl PlanController {
 
     /// The current epoch's plan (what reports describe as "the" plan).
     pub fn current_plan(&self) -> BatchPlan {
-        if let Some(p) = &self.fixed_plan {
+        if let Some(p) = self.fast_path() {
             return p.clone();
         }
         self.current().plan
@@ -173,7 +199,7 @@ impl PlanController {
     /// so this is an index; out-of-range clamps to the latest — a
     /// publish can never reference an epoch that does not exist yet).
     pub fn plan_for(&self, version: u64) -> BatchPlan {
-        if let Some(p) = &self.fixed_plan {
+        if let Some(p) = self.fast_path() {
             return p.clone();
         }
         let st = self.state.lock().unwrap();
@@ -185,7 +211,7 @@ impl PlanController {
     /// `version` — resolved by version so a publish read under epoch k
     /// stays weighted by epoch k after a swap.
     pub fn grad_weight(&self, version: u64, group: usize) -> f32 {
-        if let Some(p) = &self.fixed_plan {
+        if let Some(p) = self.fast_path() {
             return p.grad_weight(group);
         }
         let st = self.state.lock().unwrap();
@@ -196,7 +222,7 @@ impl PlanController {
     /// Current conv work fraction of `group` (the timing model's input;
     /// cycles past the group count like [`BatchPlan::share`]).
     pub fn work_fraction(&self, group: usize) -> f64 {
-        if let Some(p) = &self.fixed_plan {
+        if let Some(p) = self.fast_path() {
             return p.work_fraction(group);
         }
         let st = self.state.lock().unwrap();
@@ -205,7 +231,7 @@ impl PlanController {
 
     /// Current batch share of `group`.
     pub fn share(&self, group: usize) -> usize {
-        if let Some(p) = &self.fixed_plan {
+        if let Some(p) = self.fast_path() {
             return p.share(group);
         }
         let st = self.state.lock().unwrap();
@@ -232,6 +258,45 @@ impl PlanController {
         st.obs[group] += 1;
     }
 
+    /// Flip `group`'s live-membership bit at virtual time `vtime`,
+    /// publishing a forced membership epoch (works on fixed AND adaptive
+    /// controllers — a crash does not care whether the run is adaptive):
+    /// dead groups get share 0 (work fraction 0, gradient weight 0 —
+    /// weighted publishes stay unbiased over the survivors), survivors
+    /// split the batch proportionally to their last live shares. The
+    /// group's cadence state (EMA, observations) is cleared on both
+    /// transitions so a crashed group's stale EMA never poisons the next
+    /// re-plan. Returns the new epoch's version; None if the bit did not
+    /// change.
+    pub fn set_membership(&self, group: usize, alive_now: bool, vtime: f64) -> Option<u64> {
+        let mut st = self.state.lock().unwrap();
+        if group >= st.alive.len() || st.alive[group] == alive_now {
+            return None;
+        }
+        st.alive[group] = alive_now;
+        let weights: Vec<f64> = st.last_live_share.iter().map(|&s| s.max(1) as f64).collect();
+        let alive = st.alive.clone();
+        let plan = BatchPlan::masked(self.batch, &weights, &alive);
+        for g in 0..st.alive.len() {
+            if plan.share(g) > 0 {
+                st.last_live_share[g] = plan.share(g);
+            }
+        }
+        st.ema_gap[group] = None;
+        st.obs[group] = 0;
+        let version = st.epochs.len() as u64;
+        st.epochs.push(PlanEpoch { version, plan, since_vtime: vtime });
+        // Sticky: version-resolved lookups need the epoch list from now
+        // on, even after every group is back.
+        self.membership_dirty.store(true, Ordering::Release);
+        Some(version)
+    }
+
+    /// The current live-membership mask.
+    pub fn membership(&self) -> Vec<bool> {
+        self.state.lock().unwrap().alive.clone()
+    }
+
     /// Consider publishing a revised plan at virtual time `vtime`.
     /// Returns the new epoch's version when a swap happened. Hysteresis
     /// (see [`AdaptivePolicy`]): requires warmup observations from every
@@ -242,24 +307,37 @@ impl PlanController {
     pub fn maybe_replan(&self, vtime: f64) -> Option<u64> {
         let policy = self.adaptive?;
         let mut st = self.state.lock().unwrap();
-        if st.obs.iter().any(|&n| n < policy.min_observations) {
+        let n = st.ema_gap.len();
+        // Warmup, divergence, and speeds consider LIVE groups only: a
+        // crashed group produces no gaps and must not block (or poison)
+        // the survivors' re-plan.
+        if (0..n).any(|g| st.alive[g] && st.obs[g] < policy.min_observations) {
             return None;
         }
         if vtime - st.last_replan_vtime < policy.min_interval {
             return None;
         }
-        let gaps: Vec<f64> = st.ema_gap.iter().copied().collect::<Option<Vec<_>>>()?;
+        let mut gaps = vec![f64::NAN; n];
+        for g in 0..n {
+            if st.alive[g] {
+                gaps[g] = st.ema_gap[g]?;
+            }
+        }
         let (lo, hi) = gaps
             .iter()
+            .filter(|x| !x.is_nan())
             .fold((f64::INFINITY, 0.0f64), |(lo, hi), &x| (lo.min(x), hi.max(x)));
         if !(lo > 0.0 && hi.is_finite()) || hi / lo <= 1.0 + policy.delta {
             return None;
         }
         // Measured per-group throughput (images/virtual-second) under
-        // the current shares is the best available speed estimate.
+        // the current shares is the best available speed estimate; dead
+        // groups stay masked to share 0.
         let current = st.epochs.last().expect("at least one epoch").plan.clone();
-        let speeds: Vec<f64> = (0..gaps.len()).map(|g| current.share(g) as f64 / gaps[g]).collect();
-        let candidate = BatchPlan::proportional(self.batch, &speeds);
+        let speeds: Vec<f64> = (0..n)
+            .map(|g| if st.alive[g] { current.share(g).max(1) as f64 / gaps[g] } else { 0.0 })
+            .collect();
+        let candidate = BatchPlan::masked(self.batch, &speeds, &st.alive);
         st.obs.fill(0);
         st.last_replan_vtime = vtime;
         if candidate.shares() == current.shares() {
@@ -267,6 +345,11 @@ impl PlanController {
             // finer split (e.g. an FC-bound cadence floor): restart the
             // warmup, publish nothing.
             return None;
+        }
+        for g in 0..n {
+            if candidate.share(g) > 0 {
+                st.last_live_share[g] = candidate.share(g);
+            }
         }
         let version = st.epochs.len() as u64;
         st.epochs.push(PlanEpoch { version, plan: candidate, since_vtime: vtime });
@@ -289,19 +372,39 @@ impl PlanController {
             return None;
         }
         let st = self.state.lock().unwrap();
-        let gaps: Vec<f64> = st.ema_gap.iter().copied().collect::<Option<Vec<_>>>()?;
+        let n = st.ema_gap.len();
+        if st.ema_gap.iter().all(|g| g.is_none()) {
+            return None;
+        }
         let current = &st.epochs.last().expect("at least one epoch").plan;
-        let u: Vec<f64> = (0..gaps.len())
-            .map(|g| current.share(g) as f64 / gaps[g].max(1e-12))
+        let decl =
+            |g: usize| declared.get(g % declared.len().max(1)).copied().unwrap_or(1.0);
+        // Observed throughput per group; groups with no cadence under the
+        // current epoch (crashed, or just re-admitted) pass their
+        // declared multiplier through instead of poisoning the whole
+        // vector, and the anchoring mass covers observed groups only.
+        let u: Vec<Option<f64>> = (0..n)
+            .map(|g| st.ema_gap[g].map(|gap| current.share(g).max(1) as f64 / gap.max(1e-12)))
             .collect();
-        let total_u: f64 = u.iter().sum();
-        let total_declared: f64 = (0..gaps.len())
-            .map(|g| declared.get(g % declared.len().max(1)).copied().unwrap_or(1.0))
-            .sum();
+        let mut total_u = 0.0;
+        let mut total_declared = 0.0;
+        for g in 0..n {
+            if let Some(x) = u[g] {
+                total_u += x;
+                total_declared += decl(g);
+            }
+        }
         if !(total_u > 0.0 && total_u.is_finite() && total_declared > 0.0) {
             return None;
         }
-        Some(u.into_iter().map(|x| x * total_declared / total_u).collect())
+        Some(
+            (0..n)
+                .map(|g| match u[g] {
+                    Some(x) => x * total_declared / total_u,
+                    None => decl(g),
+                })
+                .collect(),
+        )
     }
 }
 
@@ -421,6 +524,78 @@ mod tests {
         }
         assert_eq!(c.maybe_replan(5.0), None);
         assert_eq!(c.epochs().len(), 1);
+    }
+
+    #[test]
+    fn membership_epoch_masks_dead_group_and_readmits() {
+        // Works on a FIXED controller: a crash doesn't care whether the
+        // run is adaptive.
+        let c = PlanController::fixed(equal(32, 4));
+        assert_eq!(c.current_version(), 0);
+        let v1 = c.set_membership(0, false, 5.0).expect("crash publishes an epoch");
+        assert_eq!(v1, 1);
+        assert_eq!(c.current_version(), 1);
+        assert_eq!(c.share(0), 0);
+        assert_eq!(c.work_fraction(0), 0.0);
+        // Old-epoch publishes still resolve by version.
+        assert_eq!(c.grad_weight(0, 0), 1.0);
+        assert_eq!(c.grad_weight(1, 0), 0.0);
+        // Survivors' weights still sum to g within the membership epoch.
+        let e = &c.epochs()[1];
+        let wsum: f64 = (0..4).map(|g| e.plan.grad_weight(g) as f64).sum();
+        assert!((wsum - 4.0).abs() < 1e-6, "{wsum}");
+        assert_eq!(e.plan.shares().iter().sum::<usize>(), 32);
+        // Same bit again: no-op.
+        assert_eq!(c.set_membership(0, false, 6.0), None);
+        // Rejoin: re-admitted with a share >= 1 in a fresh epoch.
+        let v2 = c.set_membership(0, true, 12.0).expect("rejoin publishes an epoch");
+        assert_eq!(v2, 2);
+        assert!(c.share(0) >= 1, "rejoined group gets work back: {:?}", c.current_plan());
+        assert_eq!(c.current_plan().shares().iter().sum::<usize>(), 32);
+        assert_eq!(c.membership(), vec![true; 4]);
+    }
+
+    #[test]
+    fn replan_ignores_gap_free_crashed_group() {
+        // Group 2 observes, then crashes: its stale EMA must neither
+        // block nor poison the survivors' next re-plan.
+        let c = PlanController::adaptive(equal(32, 3), AdaptivePolicy::default());
+        c.observe(2, 500.0); // would dominate lo/hi if not cleared
+        c.set_membership(2, false, 1.0);
+        for _ in 0..4 {
+            c.observe(0, 3.0);
+            c.observe(1, 1.0);
+        }
+        let v = c.maybe_replan(5.0).expect("survivors' divergence triggers re-plan");
+        let plan = c.current_plan();
+        assert_eq!(plan.share(2), 0, "dead group stays masked: {:?}", plan.shares());
+        assert!(plan.share(0) < plan.share(1), "slow survivor sheds work");
+        assert_eq!(plan.shares().iter().sum::<usize>(), 32);
+        assert!(v >= 2, "membership epoch then re-plan epoch");
+        // A live but gap-free group (fresh rejoin) DOES gate the warmup.
+        c.set_membership(2, true, 6.0);
+        for _ in 0..4 {
+            c.observe(0, 3.0);
+            c.observe(1, 1.0);
+        }
+        assert_eq!(c.maybe_replan(20.0), None, "rejoined group must warm up first");
+    }
+
+    #[test]
+    fn measured_multipliers_pass_through_unobserved_groups() {
+        let c = PlanController::adaptive(equal(30, 3), AdaptivePolicy::default());
+        c.observe(0, 2.0);
+        c.observe(1, 1.0);
+        // Group 2 gap-free: passes its declared multiplier through,
+        // anchoring mass covers the two observed groups only.
+        let m = c.measured_speed_multipliers(&[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(m[2], 1.0, "{m:?}");
+        // Throughputs 5 and 10 -> observed multipliers 2/3 and 4/3.
+        assert!((m[0] - 2.0 / 3.0).abs() < 1e-9, "{m:?}");
+        assert!((m[1] - 4.0 / 3.0).abs() < 1e-9, "{m:?}");
+        // Nobody observed -> still None.
+        let c2 = PlanController::adaptive(equal(30, 3), AdaptivePolicy::default());
+        assert_eq!(c2.measured_speed_multipliers(&[1.0, 1.0, 1.0]), None);
     }
 
     #[test]

@@ -29,9 +29,11 @@ use anyhow::Result;
 
 use super::host_xent;
 use super::options::{EngineOptions, SchedulerKind};
-use super::report::{sort_records, EvalRecord, IterRecord, PlanEpochRecord, TrainReport};
+use super::report::{
+    sort_records, EvalRecord, FaultRecord, IterRecord, PlanEpochRecord, TrainReport,
+};
 use crate::api::RunSpec;
-use crate::config::TrainConfig;
+use crate::config::{FaultSchedule, TrainConfig};
 use crate::coordinator::{StalenessStats, Topology};
 use crate::data::{
     AdaptivePolicy, Batch, BatchPlan, BatchSequence, PlanController, SyntheticDataset,
@@ -120,13 +122,16 @@ pub struct ServerStats {
     pub fc_staleness: StalenessStats,
     pub lit_cache_hits: u64,
     pub lit_cache_misses: u64,
+    /// Publishes dropped by crash fences (conv + fc servers).
+    pub dropped_stale: u64,
 }
 
 impl ServerStats {
     pub fn from_topology(topo: &Topology) -> Self {
         let (conv_staleness, fc_staleness) = topo.staleness();
         let (lit_cache_hits, lit_cache_misses) = topo.lit_cache_stats();
-        Self { conv_staleness, fc_staleness, lit_cache_hits, lit_cache_misses }
+        let dropped_stale = topo.dropped_stale();
+        Self { conv_staleness, fc_staleness, lit_cache_hits, lit_cache_misses, dropped_stale }
     }
 }
 
@@ -154,6 +159,10 @@ struct SessionState {
     /// adaptive plan controller feeds on.
     last_group_vtime: Vec<Option<f64>>,
     server: ServerStats,
+    /// Fault-schedule events the scheduler reported, in firing order.
+    fault_events: Vec<FaultRecord>,
+    /// Per-group virtual seconds spent crashed (completed windows).
+    downtime: Vec<f64>,
 }
 
 /// The scheduler-independent core of one training run.
@@ -192,6 +201,7 @@ impl<'a> TrainSession<'a> {
         });
         let mut state = SessionState {
             last_group_vtime: vec![None; cfg.groups()],
+            downtime: vec![0.0; cfg.groups()],
             ..SessionState::default()
         };
         state.records.reserve(cfg.steps);
@@ -234,6 +244,31 @@ impl<'a> TrainSession<'a> {
         &self.planner
     }
 
+    /// The run's fault schedule, if any — `None` (the universal
+    /// fault-free case) means schedulers take zero fault branches.
+    pub fn faults(&self) -> Option<&FaultSchedule> {
+        self.cfg.faults.as_ref()
+    }
+
+    /// Record one fault-schedule event firing (scheduler-reported; the
+    /// report's fault timeline).
+    pub fn record_fault(&self, kind: &str, group: Option<usize>, at: f64) {
+        self.state.lock().unwrap().fault_events.push(FaultRecord {
+            kind: kind.to_string(),
+            group,
+            at,
+        });
+    }
+
+    /// Charge `secs` of crash downtime to `group` (a completed
+    /// crash→restart window).
+    pub fn add_downtime(&self, group: usize, secs: f64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(slot) = st.downtime.get_mut(group) {
+            *slot += secs;
+        }
+    }
+
     /// Replace the plan with a FIXED equal split — for schedulers that
     /// do not execute per-group shares (see
     /// [`Scheduler::honors_batch_plan`]); adaptation is disabled too,
@@ -259,12 +294,16 @@ impl<'a> TrainSession<'a> {
     /// profiles attached and THIS session's plan controller consulted
     /// for work fractions (live epochs under `--adaptive-batch`).
     pub fn timing(&self) -> Result<TimingModel> {
-        Ok(TimingModel::with_planner(
+        let tm = TimingModel::with_planner(
             he_params(self.rt, &self.cfg, &self.opts)?,
             self.opts.dist,
             self.cfg.cluster.group_profiles.clone(),
             self.planner.clone(),
-        ))
+        );
+        Ok(match &self.cfg.faults {
+            Some(f) => tm.with_faults(Arc::new(f.clone())),
+            None => tm,
+        })
     }
 
     /// Claim the next iteration slot — `None` once the step budget is
@@ -383,6 +422,17 @@ impl<'a> TrainSession<'a> {
                 dot,
             });
         }
+        if self.opts.checkpoint_every > 0
+            && completed % self.opts.checkpoint_every as u64 == 0
+        {
+            if let Some(path) = &self.opts.checkpoint_path {
+                crate::model::save_checkpoint_at(
+                    &params.current_params(),
+                    self.opts.step_offset + completed,
+                    std::path::Path::new(path),
+                )?;
+            }
+        }
         if self.opts.eval_every > 0 && completed % self.opts.eval_every as u64 == 0 {
             let (loss, acc) = self.evaluate(params)?;
             // Straggler-aware placement: the eval forward runs on the
@@ -499,6 +549,8 @@ impl<'a> TrainSession<'a> {
             })
             .collect();
         let server = std::mem::take(&mut st.server);
+        let fault_events = std::mem::take(&mut st.fault_events);
+        let group_downtime = std::mem::take(&mut st.downtime);
         let mut report = TrainReport {
             records,
             evals,
@@ -514,6 +566,10 @@ impl<'a> TrainSession<'a> {
             group_size: self.cfg.group_size(),
             group_stats: vec![],
             plan_epochs,
+            fault_events,
+            group_downtime,
+            dropped_stale_publishes: server.dropped_stale,
+            resumed_from: None,
         };
         report.recompute_group_stats(&devices);
         report.annotate_group_plan(&shares, &predicted);
@@ -542,12 +598,16 @@ fn he_params(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<He
 /// session uses [`TrainSession::timing`], which consults its plan
 /// controller instead).
 pub fn timing_model(rt: &Runtime, cfg: &TrainConfig, opts: &EngineOptions) -> Result<TimingModel> {
-    Ok(TimingModel::with_plan(
+    let tm = TimingModel::with_plan(
         he_params(rt, cfg, opts)?,
         opts.dist,
         cfg.cluster.group_profiles.clone(),
         cfg.batch_plan().work_fractions(),
-    ))
+    );
+    Ok(match &cfg.faults {
+        Some(f) => tm.with_faults(std::sync::Arc::new(f.clone())),
+        None => tm,
+    })
 }
 
 /// The profile-aware HE model for a config — the same parameters the

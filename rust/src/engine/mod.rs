@@ -43,7 +43,8 @@ pub use driver::{
 };
 pub use options::{EngineOptions, SchedulerKind};
 pub use report::{
-    sort_records, EvalRecord, GroupStats, IterRecord, PlanEpochRecord, TrainReport,
+    sort_records, EvalRecord, FaultRecord, GroupStats, IterRecord, PlanEpochRecord,
+    TrainReport,
 };
 #[cfg(feature = "xla")]
 pub use sim_time::{SimClock, SimTimeEngine};

@@ -29,6 +29,17 @@ pub struct EngineOptions {
     pub max_virtual_time: Option<f64>,
     /// Override the derived HE parameters (measured-timing runs).
     pub he_override: Option<HeParams>,
+    /// Save an atomic checkpoint of the full model every this many
+    /// completed iterations (0 = never). Requires `checkpoint_path`.
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints are written (the same file is
+    /// atomically replaced each time).
+    pub checkpoint_path: Option<String>,
+    /// Steps already completed before this session (a resumed run):
+    /// added to the completion count stamped into checkpoints so a
+    /// chain of resumes keeps one monotone step budget. Internal — set
+    /// by [`crate::api::RunSpec::execute_from_step`], never serialized.
+    pub step_offset: u64,
 }
 
 impl Default for EngineOptions {
@@ -41,6 +52,9 @@ impl Default for EngineOptions {
             stop_at_train_acc: None,
             max_virtual_time: None,
             he_override: None,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            step_offset: 0,
         }
     }
 }

@@ -92,6 +92,19 @@ pub struct PlanEpochRecord {
     pub iters: Vec<u64>,
 }
 
+/// One fault-schedule event as it fired during the run (crash, restart,
+/// stall onset, FC partition onset) — the report's fault timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRecord {
+    /// Event kind ("crash", "restart", "stall", "fc_partition").
+    pub kind: String,
+    /// Affected compute group (None for cluster-wide events like an FC
+    /// partition).
+    pub group: Option<usize>,
+    /// Virtual time the event fired.
+    pub at: f64,
+}
+
 /// Everything measured during one training run.
 #[derive(Clone, Debug, Default)]
 pub struct TrainReport {
@@ -120,6 +133,19 @@ pub struct TrainReport {
     /// adaptive re-plan otherwise). `group_stats.batch_share` describes
     /// the FINAL epoch; this is the history.
     pub plan_epochs: Vec<PlanEpochRecord>,
+    /// Fault-schedule events that fired during the run, in virtual-time
+    /// order (empty on fault-free runs).
+    pub fault_events: Vec<FaultRecord>,
+    /// Per-group virtual seconds spent crashed (completed crash→restart
+    /// windows; empty on fault-free runs).
+    pub group_downtime: Vec<f64>,
+    /// Publishes dropped by crash fences across both parameter servers —
+    /// zombie gradients from crashed groups that were counted, not
+    /// applied.
+    pub dropped_stale_publishes: u64,
+    /// Checkpoint this run resumed from, if any (stamped by
+    /// [`crate::api::RunSpec::execute_from_step`]).
+    pub resumed_from: Option<String>,
 }
 
 impl TrainReport {

@@ -33,7 +33,7 @@ use super::driver::{
     run_scheduler, Completion, RecordOrder, Scheduler, ServerStats, TrainSession,
 };
 use super::options::EngineOptions;
-use crate::config::{FcMapping, TrainConfig};
+use crate::config::{FaultEvent, FcMapping, TrainConfig};
 use crate::coordinator::{ConvFwdState, Topology};
 use crate::model::ParamSet;
 use crate::runtime::Runtime;
@@ -47,6 +47,11 @@ enum EventKind {
     FcArrive,
     FcDone,
     BwdDone,
+    /// Fault-schedule event `events()[idx]` fires (crash, restart, stall
+    /// onset, FC partition onset). Pre-pushed at schedule load, with
+    /// seqs below every StartIter so a fault at time t takes effect
+    /// before work scheduled at t.
+    FaultAt(usize),
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -81,6 +86,11 @@ struct GroupState {
     fc_loss: f32,
     fc_acc: f32,
     fc_staleness: u64,
+    /// The chain in flight was started before its group crashed: its
+    /// events still fire (the machines died mid-iteration), but its
+    /// publishes hit the crash fence, it never completes an iteration,
+    /// and it never re-claims.
+    zombie: bool,
 }
 
 /// The discrete-event virtual-clock scheduler.
@@ -134,6 +144,16 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
             seq += 1;
         }};
     }
+    // Fault schedule, if any. `None` — the universal fault-free case —
+    // takes ZERO fault branches below: no extra events, no extra rng
+    // draws, bit-identical to the historical loop. (An EMPTY schedule is
+    // structurally identical too: every fault guard is per-event.)
+    let faults = session.faults();
+    if let Some(f) = faults {
+        for (idx, fev) in f.events().iter().enumerate() {
+            push!(fev.at(), fev.group().unwrap_or(0), EventKind::FaultAt(idx));
+        }
+    }
     for gi in 0..g {
         if session.try_claim().is_some() {
             push!(0.0, gi, EventKind::StartIter);
@@ -142,6 +162,15 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
     let mut states: Vec<GroupState> = (0..g).map(|_| GroupState::default()).collect();
     let mut local_index = vec![0u64; g];
     let mut fc_free = 0.0f64;
+    // Live-membership tracking (all no-ops without a schedule). Each
+    // group circulates ONE scheduling token (StartIter → … → BwdDone →
+    // StartIter); a crash mid-iteration kills the token with the zombie
+    // chain (`token_lost`), and the matching restart re-issues it. A
+    // crash while the token is a *pending* StartIter just defers it to
+    // the restart time instead.
+    let mut down = vec![false; g];
+    let mut down_since = vec![0.0f64; g];
+    let mut token_lost = vec![false; g];
 
     while let Some(Reverse(ev)) = heap.pop() {
         // A stop rule fired after this StartIter was scheduled: drain
@@ -152,6 +181,19 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
         let gi = ev.group;
         match ev.kind {
             EventKind::StartIter => {
+                // A down or stalled group starts nothing: defer the
+                // token to the first instant the schedule lets this
+                // group run (the restart / stall end), or drop it if
+                // the group never comes back.
+                if let Some(f) = faults {
+                    let eff = f.delayed_start(gi, ev.time);
+                    if eff > ev.time {
+                        if eff.is_finite() {
+                            push!(eff, gi, EventKind::StartIter);
+                        }
+                        continue;
+                    }
+                }
                 // Read models NOW (virtual-time ordered) + conv fwd.
                 let batch = session.next_batch();
                 let st = topo.groups[gi].conv_forward(
@@ -168,11 +210,22 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
                 if merged_fc {
                     // FIFO FC queue: the merged FC server is ONE machine
                     // shared by every group (zero FC staleness falls out
-                    // of this serialization).
-                    let fc_start = fc_free.max(ev.time);
+                    // of this serialization). A partitioned FC is
+                    // unreachable until the partition heals; a zombie
+                    // request samples its service time (same rng draws
+                    // whether or not stale replay is on) but never
+                    // occupies the server.
+                    let mut fc_start = fc_free.max(ev.time);
+                    if let Some(f) = faults {
+                        fc_start = fc_start.max(f.fc_available(ev.time));
+                    }
                     let d = timing.sample_fc(&mut rng);
-                    fc_free = fc_start + d;
-                    push!(fc_free, gi, EventKind::FcDone);
+                    if states[gi].zombie {
+                        push!(ev.time + d, gi, EventKind::FcDone);
+                    } else {
+                        fc_free = fc_start + d;
+                        push!(fc_free, gi, EventKind::FcDone);
+                    }
                 } else {
                     // Unmerged mapping: each group computes the FC phase
                     // on its OWN machines (Fig 16a) — no shared queue,
@@ -184,28 +237,72 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
             }
             EventKind::FcDone => {
                 let st = states[gi].fwd.as_ref().expect("fwd state set at StartIter");
-                // Weight bound at StartIter (the iteration's plan
-                // epoch) — an adaptive swap between read and publish
-                // must not re-weight in-flight gradients.
-                let out = topo.fc.step(
-                    session.rt(),
-                    &st.activations,
-                    &st.labels,
-                    st.fc_snapshot.clone(),
-                    st.grad_weight,
-                )?;
-                states[gi].fc_loss = out.loss;
-                states[gi].fc_acc = out.acc;
-                states[gi].fc_staleness = out.staleness;
-                states[gi].g_act = Some(out.g_act);
+                if states[gi].zombie {
+                    // A crashed group's FC step: with stale replay on
+                    // (the default, modeling gradients already on the
+                    // wire) the numerics run and the fence drops the
+                    // publish — counted, not applied. With replay off
+                    // the numerics are skipped entirely. Both modes
+                    // make the SAME timing rng draws, so the two sims
+                    // stay bit-identical.
+                    if faults.map_or(true, |f| f.replay_stale) {
+                        let out = topo.fc.step(
+                            session.rt(),
+                            &st.activations,
+                            &st.labels,
+                            st.fc_snapshot.clone(),
+                            st.grad_weight,
+                            gi,
+                            st.plan_version,
+                        )?;
+                        states[gi].g_act = Some(out.g_act);
+                    }
+                } else {
+                    // Weight bound at StartIter (the iteration's plan
+                    // epoch) — an adaptive swap between read and publish
+                    // must not re-weight in-flight gradients.
+                    let out = topo.fc.step(
+                        session.rt(),
+                        &st.activations,
+                        &st.labels,
+                        st.fc_snapshot.clone(),
+                        st.grad_weight,
+                        gi,
+                        st.plan_version,
+                    )?;
+                    states[gi].fc_loss = out.loss;
+                    states[gi].fc_acc = out.acc;
+                    states[gi].fc_staleness = out.staleness;
+                    states[gi].g_act = Some(out.g_act);
+                }
                 let d = timing.sample_conv_bwd_group_at(gi, k, ev.time, &mut rng);
                 push!(ev.time + d, gi, EventKind::BwdDone);
             }
             EventKind::BwdDone => {
                 let st = states[gi].fwd.take().expect("fwd state");
+                if states[gi].zombie {
+                    // End of a zombie chain: the conv publish (if stale
+                    // replay computed one) hits the fence, the
+                    // iteration never completes, and the group's
+                    // scheduling token dies here — the restart event
+                    // re-issues it (or immediately, if the group is
+                    // already back up).
+                    if let Some(g_act) = states[gi].g_act.take() {
+                        let _ = topo.groups[gi]
+                            .conv_backward_publish(session.rt(), &st, &g_act)?;
+                    }
+                    states[gi].zombie = false;
+                    if down[gi] {
+                        token_lost[gi] = true;
+                    } else if session.try_claim().is_some() {
+                        push!(ev.time, gi, EventKind::StartIter);
+                    }
+                    continue;
+                }
                 let g_act = states[gi].g_act.take().expect("g_act");
-                let conv_staleness =
-                    topo.groups[gi].conv_backward_publish(session.rt(), &st, &g_act)?;
+                let conv_staleness = topo.groups[gi]
+                    .conv_backward_publish(session.rt(), &st, &g_act)?
+                    .unwrap_or(0);
                 let li = local_index[gi];
                 local_index[gi] += 1;
                 session.complete(
@@ -222,6 +319,44 @@ fn run_events(session: &TrainSession<'_>, topo: &Topology) -> Result<()> {
                 )?;
                 if session.try_claim().is_some() {
                     push!(ev.time, gi, EventKind::StartIter);
+                }
+            }
+            EventKind::FaultAt(idx) => {
+                let f = faults.expect("fault events exist only with a schedule");
+                let fev = f.events()[idx];
+                session.record_fault(fev.kind_name(), fev.group(), ev.time);
+                match fev {
+                    FaultEvent::Crash { group, at } => {
+                        down[group] = true;
+                        down_since[group] = at;
+                        // Work already in flight becomes a zombie chain:
+                        // its events still fire, but everything it
+                        // publishes carries the pre-crash plan version
+                        // and the fence raised here drops it.
+                        if states[group].fwd.is_some() {
+                            states[group].zombie = true;
+                        }
+                        if let Some(v) =
+                            session.planner().set_membership(group, false, at)
+                        {
+                            topo.raise_fence(group, v);
+                        }
+                    }
+                    FaultEvent::Restart { group, at } => {
+                        down[group] = false;
+                        session.planner().set_membership(group, true, at);
+                        session.add_downtime(group, at - down_since[group]);
+                        if token_lost[group] {
+                            token_lost[group] = false;
+                            if session.try_claim().is_some() {
+                                push!(at, group, EventKind::StartIter);
+                            }
+                        }
+                    }
+                    // Stall and partition windows act through
+                    // `delayed_start` / `fc_available` at the points
+                    // they gate; the onset event only records them.
+                    FaultEvent::Stall { .. } | FaultEvent::FcPartition { .. } => {}
                 }
             }
         }

@@ -29,7 +29,7 @@ use omnivore::api::{
     resolve_artifacts_dir, scheduler_from_flags, RunOutcome, RunSpec, RunStore,
     DEFAULT_RUNS_DIR,
 };
-use omnivore::config::Strategy;
+use omnivore::config::{FaultSchedule, Strategy};
 use omnivore::metrics::{fmt_secs, Table};
 use omnivore::model::ParamSet;
 use omnivore::optimizer::bayesian::BayesianOptimizer;
@@ -73,6 +73,9 @@ const TRAIN_FLAGS: &[Flag] = &[
     switch("dynamic-batch"),
     switch("adaptive-batch"),
     switch("threaded"),
+    val("faults", "PRESET|FILE"),
+    val("checkpoint-every", "N"),
+    val("resume", "TAG|PATH"),
     val("baseline", "NAME"),
     val("config", "FILE"),
     val("csv", "PATH"),
@@ -327,11 +330,34 @@ fn train(args: &Args) -> Result<()> {
     let json_out = cx.switch("json");
     let csv = cx.opt_str("csv");
     let runs_dir = cx.str("runs", DEFAULT_RUNS_DIR);
+    // Fault injection + recovery flags (PRESET like `faulty-s`, or a
+    // FaultSchedule JSON file). Checkpoints default to
+    // `<runs>/checkpoints/<tag|latest>.ckpt`; `--resume` accepts that
+    // same tag shorthand or an explicit file path.
+    if let Some(f) = cx.opt_str("faults") {
+        spec = spec.faults(FaultSchedule::resolve(&f)?);
+    }
+    let checkpoint_every = cx.get("checkpoint-every", 0usize)?;
+    if checkpoint_every > 0 {
+        spec = spec.checkpoint_every(checkpoint_every);
+        if spec.options.checkpoint_path.is_none() {
+            let name = spec.tag.clone().unwrap_or_else(|| "latest".into());
+            spec = spec.checkpoint_path(&format!("{runs_dir}/checkpoints/{name}.ckpt"));
+        }
+    }
+    if let Some(r) = cx.opt_str("resume") {
+        let path = if std::path::Path::new(&r).is_file() {
+            r
+        } else {
+            format!("{runs_dir}/checkpoints/{r}.ckpt")
+        };
+        spec = spec.resume_from(&path);
+    }
     let rt = load_runtime(&cx, &mut spec)?;
     cx.finish()?;
 
-    let init = spec.cold_init(&rt)?;
-    let (outcome, report, _params) = spec.execute_from(&rt, init)?;
+    let (init, done) = spec.initial_state(&rt)?;
+    let (outcome, report, _params) = spec.execute_from_step(&rt, init, done)?;
     store_outcome(&runs_dir, &outcome)?;
     if let Some(path) = csv {
         std::fs::write(&path, report.to_csv())?;
@@ -353,6 +379,25 @@ fn train(args: &Args) -> Result<()> {
         outcome.conv_staleness_mean,
         outcome.fc_staleness_mean,
     );
+    if let Some(src) = &outcome.resumed_from {
+        println!("resumed: {} steps already done from {src}", done);
+    }
+    if !outcome.fault_events.is_empty() {
+        let crashes =
+            outcome.fault_events.iter().filter(|e| e.kind == "crash").count();
+        println!(
+            "faults: {} events ({} crashes) | dropped stale publishes {} | downtime {}",
+            outcome.fault_events.len(),
+            crashes,
+            outcome.dropped_stale_publishes,
+            outcome
+                .group_downtime
+                .iter()
+                .map(|&d| fmt_secs(d))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+    }
     if spec.effective_config().cluster.is_heterogeneous() {
         let mut t = Table::new(&[
             "group",

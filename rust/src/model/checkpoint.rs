@@ -1,6 +1,15 @@
 //! Checkpoint format: a tiny self-describing binary container
-//! (magic, n_conv, tensor count, then per tensor: rank, dims, f32 data).
-//! Written at every optimizer epoch boundary (Algorithm 1 line 8).
+//! (magic, n_conv, [v2: completed_steps,] tensor count, then per tensor:
+//! rank, dims, f32 data). v2 (`OMNIVCK2`) adds the completed-step count
+//! so a killed run can resume with the right remaining budget; v1 files
+//! still load (steps = 0).
+//!
+//! Writes are atomic: the file is written to `<path>.tmp`, fsynced, and
+//! renamed into place, so a crash mid-write never leaves a torn
+//! checkpoint behind (DESIGN.md §Faults). Reads are hardened against
+//! corrupt or hostile headers: rank, per-dim sizes, and the element
+//! product are all capped and checked against the remaining file length
+//! *before* any allocation.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -10,56 +19,126 @@ use anyhow::{bail, Context, Result};
 use super::ParamSet;
 use crate::tensor::HostTensor;
 
-const MAGIC: &[u8; 8] = b"OMNIVCK1";
+const MAGIC_V1: &[u8; 8] = b"OMNIVCK1";
+const MAGIC_V2: &[u8; 8] = b"OMNIVCK2";
 
-/// Serialize a ParamSet to `path`.
+/// Sanity caps for parsed headers: no real tensor in this repo comes
+/// close (caffenet8 FC weights are ~38M elements).
+const MAX_RANK: usize = 8;
+const MAX_DIM: usize = 1 << 31;
+const MAX_TENSORS: usize = 1 << 16;
+
+/// Serialize a ParamSet to `path` (v2 layout, steps = 0). Atomic.
 pub fn save_checkpoint(params: &ParamSet, path: &Path) -> Result<()> {
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating checkpoint {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(params.n_conv() as u64).to_le_bytes())?;
-    f.write_all(&(params.tensors().len() as u64).to_le_bytes())?;
-    for t in params.tensors() {
-        f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
-        for &d in t.shape() {
-            f.write_all(&(d as u64).to_le_bytes())?;
+    save_checkpoint_at(params, 0, path)
+}
+
+/// Serialize a ParamSet plus the number of completed optimizer steps to
+/// `path`, atomically (tmp + fsync + rename).
+pub fn save_checkpoint_at(params: &ParamSet, completed_steps: u64, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
         }
-        let bytes = unsafe {
-            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
-        };
-        f.write_all(bytes)?;
     }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint {}", tmp.display()))?;
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&(params.n_conv() as u64).to_le_bytes())?;
+        f.write_all(&completed_steps.to_le_bytes())?;
+        f.write_all(&(params.tensors().len() as u64).to_le_bytes())?;
+        for t in params.tensors() {
+            f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
     Ok(())
 }
 
-/// Load a ParamSet from `path`.
+/// Load a ParamSet from `path` (v1 or v2; step count discarded).
 pub fn load_checkpoint(path: &Path) -> Result<ParamSet> {
+    load_checkpoint_state(path).map(|(p, _)| p)
+}
+
+/// Load a ParamSet and the completed-step count it was saved at
+/// (0 for v1 files, which predate the field).
+pub fn load_checkpoint_state(path: &Path) -> Result<(ParamSet, u64)> {
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("stat checkpoint {}", path.display()))?
+        .len();
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not an omnivore checkpoint", path.display());
+    let v2 = match &magic {
+        m if m == MAGIC_V1 => false,
+        m if m == MAGIC_V2 => true,
+        _ => bail!("{} is not an omnivore checkpoint", path.display()),
+    };
+    fn next_u64(f: &mut std::fs::File, consumed: &mut u64) -> Result<u64> {
+        *consumed += 8;
+        read_u64(f)
     }
-    let n_conv = read_u64(&mut f)? as usize;
-    let n_tensors = read_u64(&mut f)? as usize;
-    let mut tensors = Vec::with_capacity(n_tensors);
-    for _ in 0..n_tensors {
-        let rank = read_u64(&mut f)? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(read_u64(&mut f)? as usize);
+    let mut consumed = 8u64;
+    let n_conv = next_u64(&mut f, &mut consumed)? as usize;
+    let completed_steps = if v2 { next_u64(&mut f, &mut consumed)? } else { 0 };
+    let n_tensors = next_u64(&mut f, &mut consumed)? as usize;
+    if n_tensors > MAX_TENSORS {
+        bail!("checkpoint claims {n_tensors} tensors (cap {MAX_TENSORS}); corrupt header");
+    }
+    let mut tensors = Vec::with_capacity(n_tensors.min(1024));
+    for i in 0..n_tensors {
+        let rank = next_u64(&mut f, &mut consumed)? as usize;
+        if rank > MAX_RANK {
+            bail!("tensor {i}: rank {rank} exceeds cap {MAX_RANK}; corrupt header");
         }
-        let n: usize = shape.iter().product();
-        let mut bytes = vec![0u8; n * 4];
+        let mut shape = Vec::with_capacity(rank);
+        let mut n: usize = 1;
+        for _ in 0..rank {
+            let d = next_u64(&mut f, &mut consumed)? as usize;
+            if d > MAX_DIM {
+                bail!("tensor {i}: dim {d} exceeds cap {MAX_DIM}; corrupt header");
+            }
+            n = n
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("tensor {i}: element count overflows"))?;
+            shape.push(d);
+        }
+        let data_bytes = (n as u64)
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("tensor {i}: byte count overflows"))?;
+        // The claimed payload must fit in what's left of the file —
+        // checked BEFORE allocating, so a garbage header can't drive an
+        // unbounded allocation.
+        if data_bytes > file_len.saturating_sub(consumed) {
+            bail!(
+                "tensor {i}: claims {data_bytes} data bytes but only {} remain in {}",
+                file_len.saturating_sub(consumed),
+                path.display()
+            );
+        }
+        let mut bytes = vec![0u8; data_bytes as usize];
         f.read_exact(&mut bytes)?;
+        consumed += data_bytes;
         let data: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         tensors.push(HostTensor::new(shape, data)?);
     }
-    ParamSet::from_tensors(tensors, n_conv)
+    Ok((ParamSet::from_tensors(tensors, n_conv)?, completed_steps))
 }
 
 fn read_u64(f: &mut impl Read) -> Result<u64> {
@@ -72,17 +151,60 @@ fn read_u64(f: &mut impl Read) -> Result<u64> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn params() -> ParamSet {
         let t1 = HostTensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]).unwrap();
         let t2 = HostTensor::new(vec![3], vec![9.0, 8.0, 7.0]).unwrap();
-        let p = ParamSet::from_tensors(vec![t1, t2], 1).unwrap();
+        ParamSet::from_tensors(vec![t1, t2], 1).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = params();
         let dir = crate::util::temp_dir("ckpt").unwrap();
         let path = dir.join("ck.bin");
         save_checkpoint(&p, &path).unwrap();
         let p2 = load_checkpoint(&path).unwrap();
         assert_eq!(p, p2);
         assert_eq!(p2.n_conv(), 1);
+        // No .tmp left behind after the rename.
+        assert!(!path.with_extension("tmp").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn roundtrip_with_steps_and_nested_dir() {
+        let p = params();
+        let dir = crate::util::temp_dir("ckpt-v2").unwrap();
+        let path = dir.join("deep/nested/ck.bin");
+        save_checkpoint_at(&p, 42, &path).unwrap();
+        let (p2, steps) = load_checkpoint_state(&path).unwrap();
+        assert_eq!(p, p2);
+        assert_eq!(steps, 42);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn loads_legacy_v1_with_zero_steps() {
+        let p = params();
+        let dir = crate::util::temp_dir("ckpt-v1").unwrap();
+        let path = dir.join("ck.bin");
+        // Hand-write a v1 file (the old layout, no step count).
+        let mut buf: Vec<u8> = MAGIC_V1.to_vec();
+        buf.extend((p.n_conv() as u64).to_le_bytes());
+        buf.extend((p.tensors().len() as u64).to_le_bytes());
+        for t in p.tensors() {
+            buf.extend((t.shape().len() as u64).to_le_bytes());
+            for &d in t.shape() {
+                buf.extend((d as u64).to_le_bytes());
+            }
+            for &x in t.data() {
+                buf.extend(x.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, buf).unwrap();
+        let (p2, steps) = load_checkpoint_state(&path).unwrap();
+        assert_eq!(p, p2);
+        assert_eq!(steps, 0);
         let _ = std::fs::remove_dir_all(dir);
     }
 
@@ -92,6 +214,49 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"notacheckpointfile").unwrap();
         assert!(load_checkpoint(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_hostile_headers_before_allocating() {
+        let dir = crate::util::temp_dir("ckpt-hostile").unwrap();
+
+        // Claims one rank-1 tensor of 2^60 elements in a 50-byte file:
+        // the old loader would try to allocate 2^62 bytes.
+        let mut huge: Vec<u8> = MAGIC_V2.to_vec();
+        huge.extend(1u64.to_le_bytes()); // n_conv
+        huge.extend(0u64.to_le_bytes()); // steps
+        huge.extend(1u64.to_le_bytes()); // n_tensors
+        huge.extend(1u64.to_le_bytes()); // rank
+        huge.extend((1u64 << 60).to_le_bytes()); // dim
+        let p = dir.join("huge.bin");
+        std::fs::write(&p, &huge).unwrap();
+        let err = load_checkpoint(&p).unwrap_err().to_string();
+        assert!(err.contains("cap") || err.contains("remain"), "{err}");
+
+        // Absurd rank.
+        let mut ranky: Vec<u8> = MAGIC_V2.to_vec();
+        ranky.extend(1u64.to_le_bytes());
+        ranky.extend(0u64.to_le_bytes());
+        ranky.extend(1u64.to_le_bytes());
+        ranky.extend(10_000u64.to_le_bytes()); // rank
+        let p = dir.join("ranky.bin");
+        std::fs::write(&p, &ranky).unwrap();
+        assert!(load_checkpoint(&p).unwrap_err().to_string().contains("rank"));
+
+        // Modest dims whose product still exceeds the file length.
+        let mut short: Vec<u8> = MAGIC_V2.to_vec();
+        short.extend(1u64.to_le_bytes());
+        short.extend(0u64.to_le_bytes());
+        short.extend(1u64.to_le_bytes());
+        short.extend(2u64.to_le_bytes()); // rank 2
+        short.extend(1000u64.to_le_bytes());
+        short.extend(1000u64.to_le_bytes());
+        short.extend([0u8; 16]); // only 16 data bytes, not 4M
+        let p = dir.join("short.bin");
+        std::fs::write(&p, &short).unwrap();
+        assert!(load_checkpoint(&p).unwrap_err().to_string().contains("remain"));
+
         let _ = std::fs::remove_dir_all(dir);
     }
 }

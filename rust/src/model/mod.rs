@@ -7,7 +7,9 @@
 
 mod checkpoint;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_checkpoint_state, save_checkpoint, save_checkpoint_at,
+};
 
 use anyhow::Result;
 

@@ -92,14 +92,33 @@ impl ClusterSim {
         let mut cycle_sum = vec![0.0f64; g];
         let mut last_done: Vec<Option<f64>> = vec![None; g];
         let mut completions: Vec<f64> = Vec::with_capacity(iters as usize);
+        let has_faults = self.timing.faults().is_some();
         for _ in 0..iters {
             // Next group to start its conv fwd is the earliest-ready one.
-            let (gi, _) = ready
-                .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.total_cmp(b.1))
-                .expect("g >= 1");
-            let t0 = ready[gi];
+            // Under a fault schedule, each group's effective start defers
+            // out of its crash/stall windows first (a group that never
+            // restarts goes to +inf and drops out of the race).
+            let (gi, t0) = if has_faults {
+                let eff: Vec<f64> =
+                    (0..g).map(|i| self.timing.fault_delayed_start(i, ready[i])).collect();
+                let (gi, &t) = eff
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .expect("g >= 1");
+                if !t.is_finite() {
+                    // Every group is down forever: the cluster is dead.
+                    break;
+                }
+                (gi, t)
+            } else {
+                let (gi, _) = ready
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .expect("g >= 1");
+                (gi, ready[gi])
+            };
             // Intra-group barrier: k machines each sample a fwd time;
             // the group advances at the slowest (paper Observation 1).
             // Heterogeneous clusters scale each group by its profile
@@ -107,7 +126,12 @@ impl ClusterSim {
             // work fraction.
             let fwd = self.timing.sample_conv_fwd_group_at(gi, k, t0, &mut rng);
             let arrive = t0 + fwd;
-            let fc_start = fc_free.max(arrive);
+            // An FC network partition holds arriving requests until it
+            // heals (no-op outside partition windows).
+            let fc_start = match self.timing.faults() {
+                Some(f) => fc_free.max(arrive).max(f.fc_available(arrive)),
+                None => fc_free.max(arrive),
+            };
             let fc_t = self.timing.sample_fc(&mut rng);
             fc_free = fc_start + fc_t;
             fc_busy += fc_t;
@@ -336,6 +360,38 @@ mod tests {
             planned.straggler_stall(),
             equal.straggler_stall()
         );
+    }
+
+    #[test]
+    fn fault_schedule_pauses_group_in_timing_sim() {
+        use crate::config::{FaultEvent, FaultSchedule};
+        use std::sync::Arc;
+        let faulty = Arc::new(FaultSchedule::preset("faulty-s").unwrap());
+        let sim = ClusterSim::new(
+            TimingModel::new(he(), ServiceDist::Deterministic).with_faults(faulty),
+            8,
+        );
+        let r = sim.run(4, 200, 9);
+        assert_eq!(r.group_iters.iter().sum::<u64>(), 200);
+        assert!(
+            r.group_iters[0] < r.group_iters[1],
+            "crashed group lost its [6, 12) window: {:?}",
+            r.group_iters
+        );
+        // A cluster where every group dies forever stops early instead
+        // of spinning on an unreachable iteration budget.
+        let all_dead = Arc::new(
+            FaultSchedule::new(
+                (0..4).map(|g| FaultEvent::Crash { group: g, at: 1.0 }).collect(),
+            )
+            .unwrap(),
+        );
+        let sim = ClusterSim::new(
+            TimingModel::new(he(), ServiceDist::Deterministic).with_faults(all_dead),
+            8,
+        );
+        let r = sim.run(4, 200, 9);
+        assert!(r.group_iters.iter().sum::<u64>() < 200, "{:?}", r.group_iters);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{DeviceKind, DeviceProfile};
+use crate::config::{DeviceKind, DeviceProfile, FaultSchedule};
 use crate::data::PlanController;
 use crate::optimizer::he_model::HeParams;
 use crate::util::rng::Rng;
@@ -48,18 +48,44 @@ pub struct TimingModel {
     /// its CURRENT epoch at each sample instead of the frozen vector,
     /// so a mid-run plan swap takes effect on the next sampled phase.
     planner: Option<Arc<PlanController>>,
+    /// Scripted fault schedule (crash/stall/partition windows in virtual
+    /// time); None — the universal no-fault default — changes nothing.
+    faults: Option<Arc<FaultSchedule>>,
 }
 
 impl TimingModel {
     /// Homogeneous model: every group at the cluster baseline speed.
     pub fn new(he: HeParams, dist: ServiceDist) -> Self {
-        Self { he, dist, profiles: vec![], work: vec![], planner: None }
+        Self { he, dist, profiles: vec![], work: vec![], planner: None, faults: None }
+    }
+
+    /// Attach a fault schedule (builder-style; see [`Self::faults`]).
+    pub fn with_faults(mut self, faults: Arc<FaultSchedule>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// The attached fault schedule, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultSchedule>> {
+        self.faults.as_ref()
+    }
+
+    /// Earliest virtual time >= `t` at which group `g` may start new
+    /// work under the fault schedule: crash windows defer to the restart
+    /// (or +inf when the group never restarts), stall windows to their
+    /// end. `t` itself without a schedule — the no-fault path never pays
+    /// for this feature.
+    pub fn fault_delayed_start(&self, g: usize, t: f64) -> f64 {
+        match &self.faults {
+            Some(f) => f.delayed_start(g, t),
+            None => t,
+        }
     }
 
     /// Heterogeneous model with one profile per compute group (cycles
     /// when there are more groups than profiles).
     pub fn with_profiles(he: HeParams, dist: ServiceDist, profiles: Vec<DeviceProfile>) -> Self {
-        Self { he, dist, profiles, work: vec![], planner: None }
+        Self { he, dist, profiles, work: vec![], planner: None, faults: None }
     }
 
     /// Heterogeneous model with a batch plan in force: group `g`'s conv
@@ -72,7 +98,7 @@ impl TimingModel {
         profiles: Vec<DeviceProfile>,
         work: Vec<f64>,
     ) -> Self {
-        Self { he, dist, profiles, work, planner: None }
+        Self { he, dist, profiles, work, planner: None, faults: None }
     }
 
     /// Heterogeneous model consulting a live [`PlanController`]: conv
@@ -85,7 +111,7 @@ impl TimingModel {
         profiles: Vec<DeviceProfile>,
         planner: Arc<PlanController>,
     ) -> Self {
-        Self { he, dist, profiles, work: vec![], planner: Some(planner) }
+        Self { he, dist, profiles, work: vec![], planner: Some(planner), faults: None }
     }
 
     /// The attached plan controller, if any (the adaptive feedback loop
@@ -395,6 +421,19 @@ mod tests {
         let mut rng = Rng::seed_from_u64(3);
         let b = plain.sample_conv_fwd_group_of(0, 2, &mut rng);
         assert!((a / b - w0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_schedule_defers_starts() {
+        let he = HeParams::measured(1.0, 0.0, 0.1);
+        let f = Arc::new(crate::config::FaultSchedule::preset("faulty-s").unwrap());
+        let t = TimingModel::new(he, ServiceDist::Deterministic).with_faults(f);
+        assert_eq!(t.fault_delayed_start(0, 3.0), 3.0, "before the crash: untouched");
+        assert_eq!(t.fault_delayed_start(0, 7.0), 12.0, "down window defers to restart");
+        assert_eq!(t.fault_delayed_start(1, 7.0), 7.0, "other groups unaffected");
+        let plain = TimingModel::new(he, ServiceDist::Deterministic);
+        assert!(plain.faults().is_none());
+        assert_eq!(plain.fault_delayed_start(0, 7.0), 7.0);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 mod common;
 
 use common::runtime;
-use omnivore::config::{cluster, Hyper, Strategy, TrainConfig};
+use omnivore::config::{cluster, FaultSchedule, Hyper, Strategy, TrainConfig};
 use omnivore::data::SyntheticDataset;
 use omnivore::engine::{
     AveragingEngine, EngineOptions, SchedulerKind, SimTimeEngine, ThreadedEngine,
@@ -354,6 +354,164 @@ fn adaptive_on_steady_homogeneous_cluster_is_bit_identical() {
     }
     assert_eq!(adaptive.plan_epochs.len(), 1, "no epoch beyond the initial plan");
     assert_eq!(adaptive.plan_epochs[0].shares, vec![16, 16]);
+}
+
+/// Deterministic cpu-s spec the fault/recovery acceptance tests share:
+/// measured conv-bound HE params so the crash window (vtime 6..12) lands
+/// mid-run and every event time is reproducible.
+fn det_spec(steps: usize) -> omnivore::api::RunSpec {
+    omnivore::api::RunSpec::new("lenet")
+        .variant("jnp")
+        .cluster_preset("cpu-s")
+        .unwrap()
+        .groups(4)
+        .lr(0.03)
+        .momentum(0.6)
+        .steps(steps)
+        .seed(0)
+        .eval_every(0)
+        .dist(ServiceDist::Deterministic)
+        .he_override(HeParams::measured(1.0, 0.002, 0.01))
+}
+
+fn run_spec(
+    s: &omnivore::api::RunSpec,
+) -> (omnivore::api::RunOutcome, omnivore::engine::TrainReport) {
+    let init = s.cold_init(runtime()).unwrap();
+    let (out, rep, _params) = s.execute_from(runtime(), init).unwrap();
+    (out, rep)
+}
+
+/// Mean loss over the last 32 completed iterations.
+fn window32(r: &omnivore::engine::TrainReport) -> f64 {
+    let n = r.records.len();
+    assert!(n >= 32, "only {n} records");
+    r.records[n - 32..].iter().map(|x| x.loss as f64).sum::<f64>() / 32.0
+}
+
+#[test]
+fn crash_and_rejoin_stays_within_five_percent_of_undisturbed() {
+    // The churn acceptance (ROADMAP): on `faulty-s` (cpu-s, group 0
+    // crashes at vtime 6 and rejoins at 12) the dead group's share
+    // re-partitions to the survivors, its zombie gradients are fenced
+    // (dropped and counted, never applied), and the window-32 final
+    // loss lands within 5% of the undisturbed run.
+    let (calm_out, calm_rep) = run_spec(&det_spec(160));
+    let (fault_out, fault_rep) =
+        run_spec(&det_spec(160).faults(FaultSchedule::preset("faulty-s").unwrap()));
+    assert_eq!(calm_rep.records.len(), 160);
+    // The chain in flight at the crash dies a zombie — its claim is the
+    // one iteration the step budget loses.
+    assert_eq!(fault_rep.records.len(), 159);
+    // The fence fired and counted; the calm run never fences.
+    assert!(fault_out.dropped_stale_publishes > 0, "no fenced publish counted");
+    assert_eq!(calm_out.dropped_stale_publishes, 0);
+    // Both fault events surfaced, in time order, with their group.
+    let kinds: Vec<&str> =
+        fault_out.fault_events.iter().map(|e| e.kind.as_str()).collect();
+    assert_eq!(kinds, ["crash", "restart"]);
+    assert!(fault_out.fault_events.iter().all(|e| e.group == Some(0)));
+    assert_eq!(fault_out.fault_events[0].at, 6.0);
+    assert_eq!(fault_out.fault_events[1].at, 12.0);
+    assert!((fault_out.group_downtime[0] - 6.0).abs() < 1e-9, "{:?}", fault_out.group_downtime);
+    assert!(fault_out.group_downtime[1..].iter().all(|&d| d == 0.0));
+    assert!(calm_out.group_downtime.iter().all(|&d| d == 0.0));
+    // Membership epochs: initial plan, share -> 0 at the crash, restored
+    // at the restart — all summing to the global batch.
+    let eps = &fault_out.plan_epochs;
+    assert_eq!(eps.len(), 3, "{eps:?}");
+    assert_eq!(eps[1].shares[0], 0, "crashed group must shed its whole share");
+    assert!(eps[2].shares[0] > 0, "rejoined group must get work back");
+    for e in eps {
+        assert_eq!(e.shares.iter().sum::<usize>(), 32, "{:?}", e.shares);
+    }
+    // Six virtual seconds of downtime must not cost final loss.
+    let (c, f) = (window32(&calm_rep), window32(&fault_rep));
+    assert!(
+        ((f - c) / c).abs() < 0.05,
+        "faulty window-32 loss {f} vs undisturbed {c}"
+    );
+}
+
+#[test]
+fn stale_replay_fence_is_bit_identical_to_no_replay() {
+    // Fencing proof: with stale replay ON the crashed group's in-flight
+    // gradients are computed and *attempted* (the fence drops and counts
+    // them); with replay OFF they are never attempted. If any record
+    // differs between the two runs, a "dropped" publish actually touched
+    // the model.
+    let (replay_out, replay_rep) =
+        run_spec(&det_spec(96).faults(FaultSchedule::preset("faulty-s").unwrap()));
+    let (silent_out, silent_rep) = run_spec(
+        &det_spec(96)
+            .faults(FaultSchedule::preset("faulty-s").unwrap().without_stale_replay()),
+    );
+    assert!(replay_out.dropped_stale_publishes > 0, "replay mode never hit the fence");
+    assert_eq!(silent_out.dropped_stale_publishes, 0, "no-replay mode published?");
+    assert_eq!(replay_rep.records.len(), silent_rep.records.len());
+    for (a, b) in replay_rep.records.iter().zip(&silent_rep.records) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.group, b.group);
+        assert_eq!(a.vtime, b.vtime, "clock diverged at seq {}", a.seq);
+        assert_eq!(a.loss, b.loss, "a fenced publish moved the model at seq {}", a.seq);
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.conv_staleness, b.conv_staleness);
+        assert_eq!(a.fc_staleness, b.fc_staleness);
+    }
+}
+
+#[test]
+fn empty_fault_schedule_is_structurally_inert() {
+    // `faults: None` takes zero fault branches; an EMPTY schedule takes
+    // all the guards but no events. Both must be bit-identical — extra
+    // rng draws or reordered events would show up immediately.
+    let (bare_out, bare_rep) = run_spec(&det_spec(48));
+    let (empty_out, empty_rep) = run_spec(&det_spec(48).faults(FaultSchedule::empty()));
+    assert!(empty_out.fault_events.is_empty());
+    assert_eq!(empty_out.dropped_stale_publishes, 0);
+    assert_eq!(bare_rep.records.len(), empty_rep.records.len());
+    for (a, b) in bare_rep.records.iter().zip(&empty_rep.records) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.group, b.group);
+        assert_eq!(a.vtime, b.vtime, "clock diverged at seq {}", a.seq);
+        assert_eq!(a.loss, b.loss, "loss diverged at seq {}", a.seq);
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.conv_staleness, b.conv_staleness);
+    }
+    assert_eq!(bare_out.virtual_time, empty_out.virtual_time);
+}
+
+#[test]
+fn checkpoint_resume_reaches_the_uninterrupted_loss_window() {
+    // Recovery through the driver: train 80 steps with periodic
+    // checkpoints, then resume the full 160-step budget from the file —
+    // only the remaining 80 run, the outcome says where it resumed from,
+    // and the final loss window matches the uninterrupted run (velocity
+    // is not checkpointed; its transient decays well within 80 steps).
+    let dir = omnivore::util::temp_dir("fault-resume").unwrap();
+    let ck = dir.join("half.ckpt");
+    let ck_str = ck.to_str().unwrap();
+    let (full_out, full_rep) = run_spec(&det_spec(160));
+    assert!(full_out.resumed_from.is_none());
+    let (_half_out, half_rep) =
+        run_spec(&det_spec(80).checkpoint_every(40).checkpoint_path(ck_str));
+    assert_eq!(half_rep.records.len(), 80);
+    let (_params, steps) = omnivore::model::load_checkpoint_state(&ck).unwrap();
+    assert_eq!(steps, 80, "checkpoint must carry the completed-step count");
+
+    let resumed = det_spec(160).resume_from(ck_str);
+    let rt = runtime();
+    let (init, done) = resumed.initial_state(rt).unwrap();
+    assert_eq!(done, 80);
+    let (res_out, res_rep, _params) = resumed.execute_from_step(rt, init, done).unwrap();
+    assert_eq!(res_rep.records.len(), 80, "resume must run only the remaining budget");
+    assert_eq!(res_out.resumed_from.as_deref(), Some(ck_str));
+    let (f, r) = (window32(&full_rep), window32(&res_rep));
+    assert!(
+        ((r - f) / f).abs() < 0.10,
+        "resumed window-32 loss {r} vs uninterrupted {f}"
+    );
+    let _ = std::fs::remove_dir_all(dir);
 }
 
 #[test]

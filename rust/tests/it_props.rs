@@ -8,13 +8,17 @@ mod common;
 use std::sync::Arc;
 
 use omnivore::baselines::flops_proportional_split;
-use omnivore::config::{cluster, DeviceKind, DeviceProfile, Hyper, ProfileDrift};
+use omnivore::config::{
+    cluster, DeviceKind, DeviceProfile, FaultEvent, FaultSchedule, Hyper, ProfileDrift,
+    FAULT_VERSION,
+};
 use omnivore::coordinator::ParamServer;
 use omnivore::data::{AdaptivePolicy, BatchPlan, PlanController, SyntheticDataset};
 use omnivore::optimizer::se_model;
 use omnivore::optimizer::{HeParams, ProfiledHe};
 use omnivore::sim::{ClusterSim, ServiceDist, TimingModel};
 use omnivore::tensor::HostTensor;
+use omnivore::util::json::Json;
 use omnivore::util::prop::{arb_vec, for_all_seeds};
 
 #[test]
@@ -492,6 +496,111 @@ fn dynamic_shares_cut_straggler_stall_on_presets() {
             );
         }
     }
+}
+
+#[test]
+fn fault_schedule_constructor_and_parser_agree_on_any_candidate() {
+    // Random candidate event sets (valid and invalid alike): the
+    // validating constructor and the versioned JSON parser must accept
+    // exactly the same sets, and every accepted schedule must survive a
+    // dump/parse round-trip bit-for-bit.
+    for_all_seeds(60, 0xfa117, |rng, seed| {
+        let n_ev = rng.below(6);
+        let mut events = Vec::with_capacity(n_ev);
+        for _ in 0..n_ev {
+            let group = rng.below(3);
+            // Quarter-second grid: exact in f64 and in the JSON dump.
+            let t = rng.below(40) as f64 * 0.25;
+            let span = 0.25 + rng.below(12) as f64 * 0.25;
+            events.push(match rng.below(4) {
+                0 => FaultEvent::Crash { group, at: t },
+                1 => FaultEvent::Restart { group, at: t },
+                2 => FaultEvent::Stall { group, from: t, to: t + span },
+                _ => FaultEvent::FcPartition { from: t, to: t + span },
+            });
+        }
+        let constructed = FaultSchedule::new(events.clone());
+        // Hand-assemble the file a user would write for these events.
+        let dumped = Json::obj(vec![
+            ("fault_version", Json::Num(FAULT_VERSION as f64)),
+            ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+        ])
+        .dump();
+        let parsed = FaultSchedule::from_json(&Json::parse(&dumped).unwrap());
+        match constructed {
+            Ok(f) => {
+                let p = parsed.unwrap_or_else(|e| panic!("seed {seed:#x}: {e}"));
+                assert_eq!(f, p, "seed {seed:#x}: parse != construct");
+                let back =
+                    FaultSchedule::from_json(&Json::parse(&f.to_json().dump()).unwrap())
+                        .unwrap();
+                assert_eq!(f, back, "seed {seed:#x}: dump/parse round-trip");
+            }
+            Err(_) => assert!(
+                parsed.is_err(),
+                "seed {seed:#x}: parser accepted an event set the constructor rejects"
+            ),
+        }
+    });
+}
+
+#[test]
+fn param_server_fence_drops_are_structural_noops() {
+    // Property twin of the engine's gradient fencing: a publish carrying
+    // a plan version below its group's fence is dropped and counted,
+    // leaving parameters, version, and staleness accounting bit-identical
+    // to a server that never saw it. Unfenced groups pass regardless.
+    for_all_seeds(30, 0xfe9ce, |rng, seed| {
+        let mk = || {
+            ParamServer::new(
+                vec![HostTensor::zeros(&[8])],
+                Hyper { lr: 0.05, momentum: 0.7, lambda: 0.0 },
+            )
+        };
+        let (fenced, clean) = (mk(), mk());
+        let fence_at = 1 + rng.below(4) as u64;
+        fenced.raise_fence(0, fence_at);
+        let mut dropped = 0u64;
+        for _ in 0..40 {
+            let g = vec![HostTensor::new(vec![8], arb_vec(rng, 8, 1.0)).unwrap()];
+            let pv = rng.below(8) as u64;
+            let s = fenced
+                .publish_scaled_fenced(&g, fenced.version(), 1.0, 0, pv)
+                .unwrap();
+            if pv < fence_at {
+                assert!(s.is_none(), "seed {seed:#x}: fenced publish applied");
+                dropped += 1;
+            } else {
+                assert!(s.is_some(), "seed {seed:#x}: unfenced publish dropped");
+                clean
+                    .publish_scaled_fenced(&g, clean.version(), 1.0, 0, pv)
+                    .unwrap();
+            }
+        }
+        // Force at least one drop and one cross-group pass-through.
+        let g = vec![HostTensor::new(vec![8], arb_vec(rng, 8, 1.0)).unwrap()];
+        assert!(fenced
+            .publish_scaled_fenced(&g, fenced.version(), 1.0, 0, 0)
+            .unwrap()
+            .is_none());
+        dropped += 1;
+        for ps in [&fenced, &clean] {
+            assert!(
+                ps.publish_scaled_fenced(&g, ps.version(), 1.0, 1, 0).unwrap().is_some(),
+                "seed {seed:#x}: fence on group 0 must not block group 1"
+            );
+        }
+        assert_eq!(fenced.dropped_stale(), dropped, "seed {seed:#x}");
+        assert_eq!(clean.dropped_stale(), 0, "seed {seed:#x}");
+        assert_eq!(fenced.version(), clean.version(), "seed {seed:#x}: version skew");
+        assert_eq!(
+            fenced.read().params[0].data(),
+            clean.read().params[0].data(),
+            "seed {seed:#x}: fenced drops must not move parameters"
+        );
+        let (a, b) = (fenced.staleness_stats(), clean.staleness_stats());
+        assert_eq!(a.publishes, b.publishes, "seed {seed:#x}: drops counted as publishes");
+    });
 }
 
 #[test]
