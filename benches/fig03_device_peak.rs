@@ -3,11 +3,14 @@
 //! batched lowering (b_p = b), and a raw GEMM upper bound.
 //!
 //! Reproduction: the batching effect is MEASURED on this host by timing
-//! the `convbench_bp{1,b}` and `gemmbench` artifacts; the per-device "%
-//! of peak" rows are then projected for the paper's Fig 9 devices using
-//! the measured utilization ratios (the substitution is documented in
-//! DESIGN.md — we cannot rent 2016 EC2 instances, but the RATIO between
-//! strategies is what the figure demonstrates).
+//! the `convchunk`/`gemmbench` artifacts on the native CPU backend
+//! (DESIGN.md §Backends — real blocked GEMM + im2col, not a stub); the
+//! per-device "% of peak" rows are then projected for the paper's Fig 9
+//! devices using the measured utilization ratios (the substitution is
+//! documented in DESIGN.md — we cannot rent 2016 EC2 instances, but the
+//! RATIO between strategies is what the figure demonstrates). A thread
+//! sweep of the raw GEMM shows how far this host's "device peak" is
+//! from its single-core peak (the paper's multi-socket axis).
 
 #[path = "support/mod.rs"]
 mod support;
@@ -56,12 +59,30 @@ fn main() {
     let serial_gflops = conv_gflop / t_serial;
     let batched_gflops = conv_gflop / t_batched;
     let gemm_gflops = gemm_gflop / t_gemm;
-    println!("measured on this host:");
+    println!("measured on this host ({} backend):", rt.executed_backend_name());
     println!("  conv b_p=1  (Caffe strategy):    {serial_gflops:>8.2} GFLOP/s");
     println!("  conv b_p=32 (Omnivore strategy): {batched_gflops:>8.2} GFLOP/s");
     println!("  raw GEMM 512^3 (upper bound):    {gemm_gflops:>8.2} GFLOP/s");
     let speedup = t_serial / t_batched;
     println!("  batching speedup: {speedup:.2}x (paper: ~3x on conv kernels, >5.5x end-to-end CPU)");
+
+    // Thread sweep of the raw native GEMM: this host's single-core vs
+    // all-core "peak" (the denominator the paper's %peak columns use).
+    use omnivore::backend::kernels as k;
+    let aa: Vec<f32> = a.data().to_vec();
+    let bb: Vec<f32> = b.data().to_vec();
+    let max_t = k::default_threads();
+    let mut sweep: Vec<usize> = [1usize, 2, 4, max_t].into_iter().filter(|&t| t <= max_t).collect();
+    sweep.dedup();
+    println!("  raw GEMM thread sweep:");
+    for &t in &sweep {
+        let gp = k::GemmParams::with_threads(t);
+        let secs = bench(&format!("gemm 512^3 t{t}"), 1, 4, || {
+            std::hint::black_box(k::gemm(&aa, &bb, n, n, n, &gp));
+        })
+        .mean_secs;
+        println!("    {t:>2} threads: {:>8.2} GFLOP/s", gemm_gflop / secs);
+    }
 
     // The paper's Fig 3 table, with our host-measured equivalents beside
     // the paper's reported utilizations. The magnitude of the 2016

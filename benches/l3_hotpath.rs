@@ -1,7 +1,9 @@
-//! L3 coordinator hot-path microbenchmarks (DESIGN.md §Perf): the
-//! coordinator must not be the bottleneck — parameter-server updates,
-//! literal conversions, event-loop overhead, and the fraction of a
-//! training run spent outside XLA execution.
+//! L3 hot-path microbenchmarks (DESIGN.md §Perf): the coordinator must
+//! not be the bottleneck, and the native kernels it dispatches to must
+//! be measured — parameter-server updates, literal conversions, the
+//! native CPU kernels themselves (GEMM thread sweep, conv b_p sweep,
+//! pool, softmax+xent), and the fraction of a training run spent
+//! outside kernel execution.
 //!
 //! Headline rows (the PR acceptance numbers):
 //! * `param_server publish` scalars/s at the caffenet8 conv-model size —
@@ -10,11 +12,18 @@
 //! * `param_server read` (COW snapshot) latency — Arc bumps instead of
 //!   an O(scalars) clone under the lock;
 //! * sharded parallel publish scaling on a large (1M+ scalar) model;
-//! * version-keyed literal-cache hit vs. full reconversion.
+//! * version-keyed literal-cache hit vs. full reconversion;
+//! * native blocked GEMM GFLOP/s vs thread count, and conv GFLOP/s vs
+//!   the paper's b_p lowering knob (DESIGN.md §Backends).
+//!
+//! Besides the CSV, this bench writes `results/BENCH_l3.json` — the
+//! machine-readable throughput rows that `tools/check_bench_regression.py`
+//! diffs against the committed `BENCH_l3.json` baseline in CI.
 
 #[path = "support/mod.rs"]
 mod support;
 
+use omnivore::backend::kernels as k;
 use omnivore::config::Hyper;
 use omnivore::coordinator::ParamServer;
 use omnivore::metrics::Table;
@@ -23,6 +32,10 @@ use omnivore::runtime::{to_literal, LiteralCache};
 use omnivore::tensor::HostTensor;
 use omnivore::util::bench::{bench, row};
 use omnivore::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize, std: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * std) as f32).collect()
+}
 
 fn main() {
     support::banner("L3 hot path", "coordinator microbenchmarks + XLA share of a real run");
@@ -103,7 +116,116 @@ fn main() {
         s4.mean_secs / s5.mean_secs
     );
 
-    // 3. End-to-end share: coordinator vs XLA in a real run.
+    // 2c. Native CPU kernels (DESIGN.md §Backends) — the compute the
+    // coordinator overhead is measured against. GEMM across a thread
+    // sweep (scoped-thread row panels), conv across the paper's b_p
+    // lowering knob, plus the two cheap kernels for completeness.
+    let mut jrows: Vec<support::BenchRow> = vec![];
+
+    // Blocked GEMM: 256^3 across threads (the calibration row is the
+    // single-thread 256^3 run — see tools/check_bench_regression.py),
+    // then 512^3 at the default thread count.
+    let (gm, gk, gn) = (256usize, 256usize, 256usize);
+    let ga = randv(&mut rng, gm * gk, 1.0);
+    let gb = randv(&mut rng, gk * gn, 1.0);
+    let gemm_gf = 2.0 * (gm * gk * gn) as f64 / 1e9;
+    let max_t = k::default_threads();
+    let mut sweep: Vec<usize> = [1usize, 2, 4, max_t].into_iter().filter(|&t| t <= max_t).collect();
+    sweep.dedup();
+    println!("native blocked GEMM {gm}x{gk}x{gn} (thread sweep):");
+    for &t in &sweep {
+        let gp = k::GemmParams::with_threads(t);
+        let s = bench(&format!("gemm 256^3 ({t} threads)"), 2, 8, || {
+            std::hint::black_box(k::gemm(&ga, &gb, gm, gk, gn, &gp));
+        });
+        println!("{}  [{:.2} GFLOP/s]", row(&s), gemm_gf / s.mean_secs);
+        jrows.push(support::BenchRow {
+            key: format!("gemm_256x256x256_t{t}"),
+            kernel: "gemm".into(),
+            shape: "256x256x256".into(),
+            b_p: 0,
+            threads: t,
+            gflops: gemm_gf / s.mean_secs,
+            mean_secs: s.mean_secs,
+        });
+    }
+    let g512 = 2.0 * 512f64.powi(3) / 1e9;
+    let ga5 = randv(&mut rng, 512 * 512, 1.0);
+    let gb5 = randv(&mut rng, 512 * 512, 1.0);
+    let gp = k::GemmParams::default();
+    let s512 = bench(&format!("gemm 512^3 ({max_t} threads)"), 1, 5, || {
+        std::hint::black_box(k::gemm(&ga5, &gb5, 512, 512, 512, &gp));
+    });
+    println!("{}  [{:.2} GFLOP/s]", row(&s512), g512 / s512.mean_secs);
+    jrows.push(support::BenchRow {
+        key: format!("gemm_512x512x512_t{max_t}"),
+        kernel: "gemm".into(),
+        shape: "512x512x512".into(),
+        b_p: 0,
+        threads: max_t,
+        gflops: g512 / s512.mean_secs,
+        mean_secs: s512.mean_secs,
+    });
+
+    // Conv across b_p (paper Fig 4 knob): same 32-image chunk, lowered
+    // b_p images at a time. b_p = b should win on CPU (one large GEMM).
+    let (cb, ch, cw, cin, ck, cout) = (32usize, 16usize, 16usize, 32usize, 5usize, 64usize);
+    let cx = randv(&mut rng, cb * ch * cw * cin, 1.0);
+    let cwt = randv(&mut rng, ck * ck * cin * cout, 0.1);
+    let conv_gf = k::conv_gflops(cb, ch, cw, ck, ck, cin, cout);
+    println!("native conv 32x16x16x32 * 5x5x32x64 (b_p sweep, {max_t} threads):");
+    for bp in [1usize, 2, 4, 8, 16, 32] {
+        let s = bench(&format!("conv b_p={bp}"), 1, 3, || {
+            std::hint::black_box(k::conv2d_same(&cx, &cwt, cb, ch, cw, cin, ck, ck, cout, bp, &gp));
+        });
+        println!("{}  [{:.2} GFLOP/s]", row(&s), conv_gf / s.mean_secs);
+        jrows.push(support::BenchRow {
+            key: format!("conv_16x16x32x64_bp{bp}"),
+            kernel: "conv".into(),
+            shape: "32x16x16x32*5x5x32x64".into(),
+            b_p: bp,
+            threads: max_t,
+            gflops: conv_gf / s.mean_secs,
+            mean_secs: s.mean_secs,
+        });
+    }
+
+    // Max-pool and fused softmax+xent (bandwidth-bound; GFLOP/s here is
+    // element-ops/s for trend tracking, not arithmetic throughput).
+    let px = randv(&mut rng, 32 * 32 * 32 * 64, 1.0);
+    let sp = bench("maxpool2x2 32x32x32x64", 2, 10, || {
+        std::hint::black_box(k::maxpool2x2(&px, 32, 32, 32, 64));
+    });
+    let pool_ops = (32 * 32 * 32 * 64) as f64 / 1e9;
+    println!("{}  [{:.2} Gelem/s]", row(&sp), pool_ops / sp.mean_secs);
+    jrows.push(support::BenchRow {
+        key: "pool_32x32x32x64".into(),
+        kernel: "pool".into(),
+        shape: "32x32x32x64".into(),
+        b_p: 0,
+        threads: 1,
+        gflops: pool_ops / sp.mean_secs,
+        mean_secs: sp.mean_secs,
+    });
+    let logits = randv(&mut rng, 256 * 10, 1.0);
+    let labels: Vec<i32> = (0..256).map(|i| (i % 10) as i32).collect();
+    let sx = bench("softmax_xent 256x10", 2, 20, || {
+        std::hint::black_box(k::softmax_xent(&logits, &labels, 256, 10));
+    });
+    let xent_ops = (256 * 10) as f64 / 1e9;
+    println!("{}  [{:.3} Gelem/s]", row(&sx), xent_ops / sx.mean_secs);
+    jrows.push(support::BenchRow {
+        key: "softmax_xent_256x10".into(),
+        kernel: "softmax_xent".into(),
+        shape: "256x10".into(),
+        b_p: 0,
+        threads: 1,
+        gflops: xent_ops / sx.mean_secs,
+        mean_secs: sx.mean_secs,
+    });
+    support::write_bench_json("BENCH_l3.json", "l3_hotpath", false, &jrows);
+
+    // 3. End-to-end share: coordinator vs kernel execution in a real run.
     let spec = support::spec(
         "lenet",
         support::preset("cpu-s"),
@@ -112,14 +234,15 @@ fn main() {
         support::scaled(48),
     );
     let before = rt.stats();
-    let (_outcome, report) = support::run(&rt, &spec);
+    let (outcome, report) = support::run(&rt, &spec);
     let after = rt.stats();
     let xla = after.execute_secs - before.execute_secs;
     let wall = report.wallclock_secs;
     let coord = wall - xla;
     let mut t = Table::new(&["metric", "value"]);
+    t.row(&["backend".into(), outcome.backend.clone()]);
     t.row(&["run wall time".into(), format!("{wall:.2}s")]);
-    t.row(&["XLA execute time".into(), format!("{xla:.2}s")]);
+    t.row(&["kernel execute time".into(), format!("{xla:.2}s")]);
     t.row(&["coordinator overhead".into(), format!("{coord:.2}s ({:.1}%)", coord / wall * 100.0)]);
     t.row(&["iterations".into(), report.records.len().to_string()]);
     t.row(&[

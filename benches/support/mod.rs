@@ -101,6 +101,51 @@ pub fn write_results(name: &str, contents: &str) {
     println!("[csv] {path}");
 }
 
+/// One machine-readable benchmark row for the `BENCH_*.json` perf
+/// trajectory (ROADMAP: perf claims as CI artifacts, not prose). Keyed
+/// by kernel, shape, `b_p`, and threads so the CI regression check
+/// (`tools/check_bench_regression.py`) can diff row-by-row.
+pub struct BenchRow {
+    /// Unique row key, stable across runs (the diff join key).
+    pub key: String,
+    pub kernel: String,
+    pub shape: String,
+    pub b_p: usize,
+    pub threads: usize,
+    /// Throughput in GFLOP/s (the regression-checked metric).
+    pub gflops: f64,
+    /// Mean seconds per call (context only, machine-dependent).
+    pub mean_secs: f64,
+}
+
+/// Write `results/<name>` in the BENCH_*.json schema. `bootstrap` marks
+/// a file seeded without trustworthy absolute numbers (e.g. committed
+/// from a build box that can't run Rust): the CI diff treats bootstrap
+/// baselines as shape-only.
+pub fn write_bench_json(name: &str, bench: &str, bootstrap: bool, rows: &[BenchRow]) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    out.push_str(&format!("  \"bootstrap\": {bootstrap},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"key\": \"{}\", \"kernel\": \"{}\", \"shape\": \"{}\", \
+             \"b_p\": {}, \"threads\": {}, \"gflops\": {:.6}, \"mean_secs\": {:.9}}}{}\n",
+            r.key,
+            r.kernel,
+            r.shape,
+            r.b_p,
+            r.threads,
+            r.gflops,
+            r.mean_secs,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    write_results(name, &out);
+}
+
 /// Banner tying the binary to the paper artifact it regenerates.
 pub fn banner(id: &str, what: &str) {
     println!("================================================================");

@@ -4,8 +4,19 @@
 //! (DESIGN.md §API).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Execution goes through a pluggable backend (DESIGN.md §Backends).
+//! The default `auto` policy runs every kernel on the native CPU
+//! backend — no compiled artifacts needed — and falls back to the
+//! PJRT path per artifact when one is available. Force a choice with
+//! `RunSpec::backend("stub"|"native"|"auto")`, or `--backend` on the
+//! CLI. The measuring benches (`cargo bench --bench l3_hotpath`,
+//! `--bench fig04_batching`) time those kernels for real and emit
+//! `results/BENCH_l3.json` / `results/BENCH_fig04.json`;
+//! `tools/check_bench_regression.py` diffs them against the committed
+//! baselines at the repo root.
 
 use omnivore::api::{RunSpec, RunStore};
 use omnivore::metrics::fmt_secs;

@@ -1,0 +1,160 @@
+"""Generate checked-in golden tensors for the native Rust CPU kernels.
+
+The Rust `backend::kernels` module (DESIGN.md §Backends) must agree with
+the pure-jnp oracles in `ref.py` — the same ground truth the Pallas
+kernels are tested against. This script evaluates the oracles on small
+deterministic inputs and writes `goldens/*.json` (inputs AND outputs,
+row-major flat arrays) for `rust/tests/it_backend.rs` to replay at a
+1e-4 tolerance.
+
+Run from the repo root (regenerating is only needed when ref.py or the
+case list changes):
+
+    python3 -m python.compile.kernels.gen_goldens
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .. import model
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "goldens"
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _flat(a):
+    return [float(v) for v in np.asarray(a, dtype=np.float32).ravel()]
+
+
+def _randn(rng, shape, std=1.0):
+    return (std * rng.standard_normal(shape)).astype(np.float32)
+
+
+def _write(name, payload):
+    OUT_DIR.mkdir(exist_ok=True)
+    path = OUT_DIR / name
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {path}")
+
+
+def gen_gemm():
+    cases = []
+    # Includes ragged shapes (nothing divides the 128/512 tiles) — the
+    # pick_tile near-equal split must not change results.
+    for m, k, n in [(8, 8, 8), (7, 13, 5), (33, 17, 9)]:
+        rng = _rng(m * 1000 + k * 10 + n)
+        a, b = _randn(rng, (m, k)), _randn(rng, (k, n))
+        c = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+        cases.append(
+            {"name": f"gemm_{m}x{k}x{n}", "m": m, "k": k, "n": n,
+             "a": _flat(a), "b": _flat(b), "c": _flat(c)}
+        )
+    _write("gemm.json", {"kernel": "gemm", "cases": cases})
+
+
+def gen_conv():
+    cases = []
+    for b, h, w, cin, k, cout in [(2, 8, 8, 3, 3, 4), (1, 4, 4, 1, 5, 2),
+                                  (3, 6, 6, 2, 3, 3)]:
+        rng = _rng(b * 100 + h + cin + k + cout)
+        x = _randn(rng, (b, h, w, cin))
+        wt = _randn(rng, (k, k, cin, cout), std=0.5)
+        y = ref.conv2d_same_ref(jnp.asarray(x), jnp.asarray(wt))
+        cases.append(
+            {"name": f"conv_{b}x{h}x{w}x{cin}_k{k}_c{cout}",
+             "b": b, "h": h, "w": w, "cin": cin, "k": k, "cout": cout,
+             "x": _flat(x), "wt": _flat(wt), "y": _flat(y)}
+        )
+    _write("conv.json", {"kernel": "conv2d_same", "cases": cases})
+
+
+def gen_pool():
+    cases = []
+    for b, h, w, c in [(2, 4, 4, 3), (1, 8, 6, 2)]:
+        rng = _rng(b * 10 + h + w + c)
+        x = _randn(rng, (b, h, w, c))
+        y = ref.maxpool2x2_ref(jnp.asarray(x))
+        cases.append(
+            {"name": f"pool_{b}x{h}x{w}x{c}", "b": b, "h": h, "w": w, "c": c,
+             "x": _flat(x), "y": _flat(y)}
+        )
+    _write("pool.json", {"kernel": "maxpool2x2", "cases": cases})
+
+
+def gen_softmax_xent():
+    cases = []
+    for b, n in [(4, 10), (3, 7)]:
+        rng = _rng(b * 10 + n)
+        logits = _randn(rng, (b, n))
+        labels = rng.integers(0, n, size=b).astype(np.int32)
+        loss, grad, acc = ref.softmax_xent_ref(
+            jnp.asarray(logits), jnp.asarray(labels)
+        )
+        cases.append(
+            {"name": f"softmax_xent_{b}x{n}", "b": b, "n": n,
+             "logits": _flat(logits), "labels": [int(v) for v in labels],
+             "loss": float(loss), "acc": float(acc), "grad": _flat(grad)}
+        )
+    _write("softmax_xent.json", {"kernel": "softmax_xent", "cases": cases})
+
+
+def gen_full_step():
+    # A tiny custom Arch exercising the whole fused step (the exact graph
+    # NativeBackend's full_step arm composes): feat = 2*2*3 = 12.
+    arch = model.Arch("tiny", 8, 8, 1, 2, 3, 4, 3, k=3)
+    b = 2
+    rng = _rng(7)
+    x = _randn(rng, (b, arch.h, arch.w, arch.cin))
+    labels = rng.integers(0, arch.ncls, size=b).astype(np.int32)
+    params = [
+        _randn(rng, shape, std=0.3) if name.startswith("w")
+        else _randn(rng, shape, std=0.1)
+        for name, shape in arch.param_shapes()
+    ]
+    jparams = [jnp.asarray(p) for p in params]
+    (act,) = model.conv_fwd(model.JNP, arch, jnp.asarray(x), *jparams[:4])
+    outs = model.full_step(
+        model.JNP, arch, jnp.asarray(x), jnp.asarray(labels), *jparams
+    )
+    loss, acc, *grads = outs
+    logits = model.infer(model.JNP, arch, jnp.asarray(x), *jparams)[0]
+    names = [n for n, _ in arch.param_shapes()]
+    _write(
+        "full_step.json",
+        {
+            "kernel": "full_step",
+            "arch": {"h": arch.h, "w": arch.w, "cin": arch.cin,
+                     "c1": arch.c1, "c2": arch.c2, "f1": arch.f1,
+                     "ncls": arch.ncls, "k": arch.k, "feat": arch.feat},
+            "batch": b,
+            "x": _flat(x),
+            "labels": [int(v) for v in labels],
+            "params": {n: _flat(p) for n, p in zip(names, params)},
+            "act": _flat(act),
+            "logits": _flat(logits),
+            "loss": float(loss),
+            "acc": float(acc),
+            "grads": {f"g{n}": _flat(g) for n, g in zip(names, grads)},
+        },
+    )
+
+
+def main():
+    jax.config.update("jax_platform_name", "cpu")
+    gen_gemm()
+    gen_conv()
+    gen_pool()
+    gen_softmax_xent()
+    gen_full_step()
+
+
+if __name__ == "__main__":
+    main()

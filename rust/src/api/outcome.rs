@@ -28,6 +28,10 @@ pub struct RunOutcome {
     pub spec: RunSpec,
     /// Resolved scheduler name (`sim-clock`, `os-threads`, ...).
     pub scheduler: String,
+    /// Backend that actually executed the run's artifacts ("native",
+    /// "stub", "mixed"; the policy name if nothing executed). Files
+    /// written before pluggable backends default to "stub".
+    pub backend: String,
     /// Iterations completed.
     pub iters: u64,
     /// Mean train loss / accuracy over the last [`FINAL_WINDOW`] records.
@@ -87,6 +91,7 @@ impl RunOutcome {
     pub fn from_report(
         spec: &RunSpec,
         scheduler: &str,
+        backend: &str,
         report: &TrainReport,
         predicted_iter_time: Option<f64>,
     ) -> Self {
@@ -95,6 +100,7 @@ impl RunOutcome {
             outcome_version: OUTCOME_VERSION,
             spec: spec.clone(),
             scheduler: scheduler.into(),
+            backend: backend.into(),
             iters: report.records.len() as u64,
             final_loss: report.final_loss(FINAL_WINDOW),
             final_acc: report.final_acc(FINAL_WINDOW),
@@ -135,6 +141,7 @@ impl RunOutcome {
             ("outcome_version", Json::Num(self.outcome_version as f64)),
             ("spec", self.spec.to_json()),
             ("scheduler", Json::Str(self.scheduler.clone())),
+            ("backend", Json::Str(self.backend.clone())),
             ("iters", Json::Num(self.iters as f64)),
             ("final_loss", num_to_json(self.final_loss as f64)),
             ("final_acc", num_to_json(self.final_acc as f64)),
@@ -219,6 +226,13 @@ impl RunOutcome {
             outcome_version: OUTCOME_VERSION,
             spec: RunSpec::from_json(v.get("spec")?)?,
             scheduler: v.get("scheduler")?.as_str()?.to_string(),
+            // Absent in files written before pluggable backends: the
+            // stub was the only executor then.
+            backend: v
+                .opt("backend")
+                .map(|b| b.as_str().map(String::from))
+                .transpose()?
+                .unwrap_or_else(|| "stub".into()),
             iters: v.get("iters")?.as_usize()? as u64,
             final_loss: as_f32(v.get("final_loss")?)?,
             final_acc: as_f32(v.get("final_acc")?)?,
@@ -301,6 +315,7 @@ const OUTCOME_FIELDS: &[&str] = &[
     "outcome_version",
     "spec",
     "scheduler",
+    "backend",
     "iters",
     "final_loss",
     "final_acc",
@@ -519,7 +534,7 @@ mod tests {
 
     fn outcome() -> RunOutcome {
         let spec = RunSpec::new("lenet").groups(2).stop_at_train_acc(0.5).tag("t");
-        RunOutcome::from_report(&spec, "sim-clock", &report(), Some(0.55))
+        RunOutcome::from_report(&spec, "sim-clock", "native", &report(), Some(0.55))
     }
 
     #[test]
@@ -549,6 +564,7 @@ mod tests {
         let o2 = RunOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(o2.outcome_version, OUTCOME_VERSION);
         assert_eq!(o2.scheduler, o.scheduler);
+        assert_eq!(o2.backend, "native");
         assert_eq!(o2.iters, o.iters);
         assert_eq!(o2.final_loss, o.final_loss);
         assert_eq!(o2.final_acc, o.final_acc);
@@ -613,10 +629,14 @@ mod tests {
                 assert!(m.remove("group_downtime").is_some(), "downtime serialized");
                 assert!(m.remove("dropped_stale_publishes").is_some(), "drops serialized");
                 assert!(m.remove("resumed_from").is_some(), "resume serialized");
+                // Pre-backend files carried no backend field; the stub
+                // was the only executor then.
+                assert!(m.remove("backend").is_some(), "backend serialized");
             }
             other => panic!("outcome must serialize to an object, got {other:?}"),
         }
         let o = RunOutcome::from_json(&v).unwrap();
+        assert_eq!(o.backend, "stub");
         assert!(o.plan_epochs.is_empty());
         assert!(o.fault_events.is_empty() && o.group_downtime.is_empty());
         assert_eq!(o.dropped_stale_publishes, 0);
@@ -628,7 +648,8 @@ mod tests {
         // An empty/diverged report has final_loss = inf; bare `inf` is
         // not valid JSON, so the tagged-string encoding must carry it.
         let spec = RunSpec::new("lenet");
-        let o = RunOutcome::from_report(&spec, "sim-clock", &TrainReport::default(), None);
+        let o =
+            RunOutcome::from_report(&spec, "sim-clock", "auto", &TrainReport::default(), None);
         assert!(o.final_loss.is_infinite());
         let j = o.to_json().dump();
         let o2 = RunOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();

@@ -44,6 +44,10 @@ pub struct RunSpec {
     /// spec's step budget is reduced by the steps the checkpoint already
     /// completed (see [`Self::execute`] / [`Self::initial_state`]).
     pub resume_from: Option<String>,
+    /// Execution backend policy: "stub", "native", or "auto" (None =
+    /// auto — native for supported artifact kinds, stub otherwise). See
+    /// [`crate::backend::BackendChoice`] and DESIGN.md §Backends.
+    pub backend: Option<String>,
 }
 
 impl Default for RunSpec {
@@ -59,6 +63,7 @@ impl Default for RunSpec {
             baseline: None,
             tag: None,
             resume_from: None,
+            backend: None,
         }
     }
 }
@@ -210,6 +215,21 @@ impl RunSpec {
         self
     }
 
+    /// Execution backend policy by name (`stub`, `native`, `auto`).
+    pub fn backend(mut self, name: &str) -> Result<Self> {
+        crate::backend::BackendChoice::parse(name)?;
+        self.backend = Some(name.into());
+        Ok(self)
+    }
+
+    /// The parsed backend policy (`Auto` when unset).
+    pub fn backend_choice(&self) -> Result<crate::backend::BackendChoice> {
+        match &self.backend {
+            Some(name) => crate::backend::BackendChoice::parse(name),
+            None => Ok(crate::backend::BackendChoice::default()),
+        }
+    }
+
     pub fn options(mut self, o: EngineOptions) -> Self {
         self.options = o;
         self
@@ -293,6 +313,10 @@ impl RunSpec {
         if let Some(r) = &self.resume_from {
             fields.push(("resume_from", Json::Str(r.clone())));
         }
+        // Additive-optional (schema v1 files without it stay byte-stable).
+        if let Some(b) = &self.backend {
+            fields.push(("backend", Json::Str(b.clone())));
+        }
         Json::obj(fields)
     }
 
@@ -367,6 +391,14 @@ impl RunSpec {
         let tag = v.opt("tag").map(|t| t.as_str().map(String::from)).transpose()?;
         let resume_from =
             v.opt("resume_from").map(|r| r.as_str().map(String::from)).transpose()?;
+        let backend = v
+            .opt("backend")
+            .map(|b| -> Result<String> {
+                let name = b.as_str()?;
+                crate::backend::BackendChoice::parse(name)?;
+                Ok(name.to_string())
+            })
+            .transpose()?;
         Ok(Self {
             spec_version: SPEC_VERSION,
             train,
@@ -375,6 +407,7 @@ impl RunSpec {
             baseline,
             tag,
             resume_from,
+            backend,
         })
     }
 
@@ -386,8 +419,16 @@ impl RunSpec {
     }
 }
 
-const TOP_FIELDS: &[&str] =
-    &["spec_version", "train", "options", "scheduler", "baseline", "tag", "resume_from"];
+const TOP_FIELDS: &[&str] = &[
+    "spec_version",
+    "train",
+    "options",
+    "scheduler",
+    "baseline",
+    "tag",
+    "resume_from",
+    "backend",
+];
 const TRAIN_FIELDS: &[&str] = &[
     "arch",
     "variant",
@@ -615,6 +656,7 @@ impl RunSpec {
             spec.train.steps = spec.train.steps.saturating_sub(done as usize);
             spec.options.step_offset = done;
         }
+        rt.set_backend_choice(spec.backend_choice()?);
         let (mut report, params) = spec.scheduler.run(rt, &spec, params)?;
         report.resumed_from = self.resume_from.clone();
         let outcome = spec.outcome_of(rt, &report);
@@ -635,7 +677,13 @@ impl RunSpec {
         let predicted = crate::engine::profiled_he(rt, &cfg, &self.options)
             .ok()
             .map(|phe| phe.iteration_time(cfg.groups(), cfg.conv_machines()));
-        super::RunOutcome::from_report(self, self.scheduler.name(), report, predicted)
+        super::RunOutcome::from_report(
+            self,
+            self.scheduler.name(),
+            rt.executed_backend_name(),
+            report,
+            predicted,
+        )
     }
 }
 
@@ -843,6 +891,30 @@ mod tests {
         assert!(p.train.faults.is_none() && p.resume_from.is_none());
         assert_eq!(p.options.checkpoint_every, 0);
         assert!(p.options.checkpoint_path.is_none());
+    }
+
+    #[test]
+    fn backend_field_roundtrips_and_validates() {
+        let s = RunSpec::new("lenet").backend("native").unwrap();
+        let j = s.to_json().dump();
+        assert!(j.contains("\"backend\":\"native\""), "{j}");
+        let s2 = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s2.backend.as_deref(), Some("native"));
+        assert_eq!(
+            s2.backend_choice().unwrap(),
+            crate::backend::BackendChoice::Native
+        );
+        // Absent field: auto, and not serialized (schema-additive).
+        let plain = RunSpec::default();
+        assert!(!plain.to_json().dump().contains("backend"));
+        assert_eq!(
+            plain.backend_choice().unwrap(),
+            crate::backend::BackendChoice::Auto
+        );
+        // Bogus values fail at build AND at parse time.
+        assert!(RunSpec::new("x").backend("gpu").is_err());
+        let bad = j.replacen("\"native\"", "\"gpu\"", 1);
+        assert!(RunSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

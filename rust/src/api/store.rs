@@ -126,7 +126,7 @@ mod tests {
 
     fn outcome(tag: &str, steps: usize) -> RunOutcome {
         let spec = RunSpec::new("lenet").steps(steps).tag(tag);
-        RunOutcome::from_report(&spec, "sim-clock", &TrainReport::default(), None)
+        RunOutcome::from_report(&spec, "sim-clock", "auto", &TrainReport::default(), None)
     }
 
     #[test]

@@ -1,0 +1,670 @@
+//! Native CPU kernels for the four hot ops (paper §III) — blocked/tiled
+//! f32 GEMM, conv via im2col lowering with the `b_p` batching knob,
+//! 2x2 max-pool, and fused softmax + cross-entropy — pure functions over
+//! `&[f32]` slices so the [`super::NativeBackend`], the benches, and the
+//! parity tests all drive exactly the same code.
+//!
+//! Ports of `python/compile/kernels/{gemm,conv_gemm,pool,softmax_xent}.py`
+//! with the paper's CPU schedule instead of the Pallas/TPU one:
+//!
+//! * GEMM is **C-tile stationary**: for each (i, j) output tile, the
+//!   accumulator tile stays hot while the k loop streams A/B stripes —
+//!   the OpenBLAS cache-blocking shape the paper assumes (§III-A).
+//! * Tiles come from [`pick_tile`]'s near-equal split, so ragged shapes
+//!   (K = 800 with max 512 -> 2x400) never pad (python gemm.py).
+//! * Row-panel parallelism via `std::thread::scope`: threads own disjoint
+//!   row ranges of C, so there is no reduction race and the result is
+//!   **bitwise invariant to thread count, tile sizes, and `b_p`** — each
+//!   output element always accumulates in ascending-k order.
+//! * Conv lowers all `b_p` images into one D-hat and runs ONE large GEMM
+//!   per chunk (paper Fig 2): `b_p = b` is the CPU strategy (max tile
+//!   utilization, b x the lowering memory), `b_p = 1` the GPU/Caffe
+//!   strategy (Fig 4's tradeoff).
+
+/// Round `x` up to a multiple of `m`.
+fn ceil_to(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Largest 8-aligned tile <= `max_tile` that splits `n` evenly-ish.
+///
+/// Naive `min(max_tile, n)` pads the last tile: K=800 with max 512 ->
+/// tiles of 512 + 288 (21.9% wasted MACs against a 512 accumulator).
+/// Splitting into ceil(n/max_tile) near-equal tiles (800 -> 2x400)
+/// eliminates the waste. Must match python/compile/kernels/gemm.py.
+pub fn pick_tile(n: usize, max_tile: usize) -> usize {
+    if n <= max_tile {
+        return ceil_to(n.max(1), 8);
+    }
+    let n_tiles = n.div_ceil(max_tile);
+    ceil_to(n.div_ceil(n_tiles), 8)
+}
+
+/// Blocked-GEMM schedule knobs. Defaults match the python kernels
+/// (`DEFAULT_BM/BN/BK`); `threads` defaults to the host parallelism.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmParams {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+    pub threads: usize,
+}
+
+impl Default for GemmParams {
+    fn default() -> Self {
+        Self { bm: 128, bn: 128, bk: 512, threads: default_threads() }
+    }
+}
+
+impl GemmParams {
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: threads.max(1), ..Self::default() }
+    }
+}
+
+/// Worker threads for kernel row panels: `OMNIVORE_THREADS` if set, else
+/// the host's available parallelism, capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("OMNIVORE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
+}
+
+/// Run `f` over `rows` split into at most `threads` contiguous row
+/// panels of `c` (row width `cols`). Each panel is a disjoint `&mut`
+/// slice, so the scoped threads never race; panel boundaries do not
+/// change any output element's accumulation order.
+fn par_row_panels<F>(c: &mut [f32], rows: usize, cols: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(c.len(), rows * cols);
+    // At least 8 rows per panel: tiny panels cost more to spawn than run.
+    let t = threads.max(1).min(rows.div_ceil(8)).max(1);
+    if t <= 1 {
+        f(0, rows, c);
+        return;
+    }
+    let base = rows / t;
+    let extra = rows % t;
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest = c;
+        let mut row0 = 0usize;
+        for i in 0..t {
+            let take = base + usize::from(i < extra);
+            let (panel, tail) = rest.split_at_mut(take * cols);
+            rest = tail;
+            s.spawn(move || fr(row0, take, panel));
+            row0 += take;
+        }
+    });
+}
+
+/// C = A @ B into `c`: a [m,k] row-major, b [k,n] row-major, c [m,n].
+///
+/// C-tile-stationary blocked schedule over [`pick_tile`] tiles with
+/// row-panel threading. Every `c[i,j]` accumulates `a[i,kk]*b[kk,j]` in
+/// ascending-kk order regardless of tiling or thread count, so the
+/// result is bitwise identical across schedules.
+pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: &GemmParams) {
+    assert_eq!(a.len(), m * k, "gemm: A shape");
+    assert_eq!(b.len(), k * n, "gemm: B shape");
+    assert_eq!(c.len(), m * n, "gemm: C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = if 2 * m * k * n < (1 << 16) { 1 } else { p.threads };
+    let tn = pick_tile(n, p.bn).min(n.max(1));
+    let tk = pick_tile(k.max(1), p.bk);
+    par_row_panels(c, m, n, threads, |row0, nrows, panel| {
+        let tm = pick_tile(nrows, p.bm);
+        let mut acc = vec![0f32; tm * tn];
+        let mut i0 = 0;
+        while i0 < nrows {
+            let il = tm.min(nrows - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let jl = tn.min(n - j0);
+                acc[..il * jl].iter_mut().for_each(|v| *v = 0.0);
+                let mut k0 = 0;
+                while k0 < k {
+                    let kl = tk.min(k - k0);
+                    for ii in 0..il {
+                        let arow = &a[(row0 + i0 + ii) * k + k0..][..kl];
+                        let crow = &mut acc[ii * jl..][..jl];
+                        for (kk, &av) in arow.iter().enumerate() {
+                            let brow = &b[(k0 + kk) * n + j0..][..jl];
+                            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                                *cv += av * bv;
+                            }
+                        }
+                    }
+                    k0 += kl;
+                }
+                for ii in 0..il {
+                    panel[(i0 + ii) * n + j0..][..jl]
+                        .copy_from_slice(&acc[ii * jl..][..jl]);
+                }
+                j0 += jl;
+            }
+            i0 += il;
+        }
+    });
+}
+
+/// Allocating wrapper over [`gemm_into`].
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: &GemmParams) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    gemm_into(&mut c, a, b, m, k, n, p);
+    c
+}
+
+/// C += A^T @ B: a [p_rows, m], b [p_rows, n], c [m, n] accumulated IN
+/// PLACE in ascending-p order (weight gradients: D-hat^T @ g-hat). The
+/// in-place, p-ascending accumulation makes chunked callers (conv wgrad
+/// over `b_p` chunks) bitwise independent of the chunking.
+pub fn gemm_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], p_rows: usize, m: usize, n: usize, threads: usize) {
+    assert_eq!(a.len(), p_rows * m, "gemm_tn: A shape");
+    assert_eq!(b.len(), p_rows * n, "gemm_tn: B shape");
+    assert_eq!(c.len(), m * n, "gemm_tn: C shape");
+    let threads = if 2 * p_rows * m * n < (1 << 16) { 1 } else { threads };
+    par_row_panels(c, m, n, threads, |row0, nrows, panel| {
+        for pp in 0..p_rows {
+            let brow = &b[pp * n..][..n];
+            for ii in 0..nrows {
+                let av = a[pp * m + row0 + ii];
+                if av != 0.0 {
+                    let crow = &mut panel[ii * n..][..n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// C = A @ B^T: a [m,k], b [n,k], c [m,n] (activation gradients:
+/// `g @ W^T` without materializing the transpose). Row-wise dot products
+/// accumulate in ascending-k order.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "gemm_nt: A shape");
+    assert_eq!(b.len(), n * k, "gemm_nt: B shape");
+    let mut c = vec![0f32; m * n];
+    let threads = if 2 * m * k * n < (1 << 16) { 1 } else { threads };
+    par_row_panels(&mut c, m, n, threads, |row0, nrows, panel| {
+        for ii in 0..nrows {
+            let arow = &a[(row0 + ii) * k..][..k];
+            let crow = &mut panel[ii * n..][..n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..][..k];
+                let mut s = 0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    s += av * bv;
+                }
+                *cv = s;
+            }
+        }
+    });
+    c
+}
+
+/// Lowering step (paper Fig 2): write D-hat rows for `b` NHWC images
+/// into `dhat` ([b*h*w, kh*kw*cin], (kh, kw, cin) row-major — matching
+/// `im2col_ref` / the HWIO weight reshape). SAME padding, stride 1, odd
+/// kernels. Every element of `dhat` is written (padding zones zeroed).
+pub fn im2col_into(dhat: &mut [f32], x: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize) {
+    let kkc = kh * kw * cin;
+    assert_eq!(dhat.len(), b * h * w * kkc, "im2col: D-hat shape");
+    assert_eq!(x.len(), b * h * w * cin, "im2col: x shape");
+    let (ph, pw) = (kh / 2, kw / 2);
+    for img in 0..b {
+        let xi = &x[img * h * w * cin..][..h * w * cin];
+        for y in 0..h {
+            for xw in 0..w {
+                let drow = &mut dhat[((img * h + y) * w + xw) * kkc..][..kkc];
+                for ki in 0..kh {
+                    let iy = (y + ki).wrapping_sub(ph);
+                    for kj in 0..kw {
+                        let ix = (xw + kj).wrapping_sub(pw);
+                        let dst = &mut drow[(ki * kw + kj) * cin..][..cin];
+                        if iy < h && ix < w {
+                            dst.copy_from_slice(&xi[(iy * w + ix) * cin..][..cin]);
+                        } else {
+                            dst.iter_mut().for_each(|v| *v = 0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Normalize the `b_p` knob: 0 (or > b) means the paper's CPU pick
+/// `b_p = b`; a non-divisor falls back to the largest divisor of `b`
+/// below it (the python kernel asserts instead; the runtime must not).
+pub fn normalize_bp(b: usize, b_p: usize) -> usize {
+    if b_p == 0 || b_p >= b {
+        return b.max(1);
+    }
+    let mut bp = b_p;
+    while b % bp != 0 {
+        bp -= 1;
+    }
+    bp
+}
+
+/// SAME stride-1 conv via lowering + batched GEMM (paper §III, Fig 2).
+/// x [b,h,w,cin], w [kh,kw,cin,cout] (HWIO) -> [b,h,w,cout].
+///
+/// `b_p` images are lowered per chunk into one D-hat feeding ONE GEMM of
+/// `b_p*h*w` rows; the result is bitwise b_p-invariant (each output row
+/// belongs to exactly one image) — only the schedule and the D-hat
+/// footprint (`4*b_p*h*w*kh*kw*cin` bytes) change.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same(x: &[f32], wt: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize, cout: usize, b_p: usize, p: &GemmParams) -> Vec<f32> {
+    assert_eq!(x.len(), b * h * w * cin, "conv: x shape");
+    assert_eq!(wt.len(), kh * kw * cin * cout, "conv: w shape");
+    let b_p = normalize_bp(b, b_p);
+    let kkc = kh * kw * cin;
+    let rows = b_p * h * w;
+    let mut out = vec![0f32; b * h * w * cout];
+    let mut dhat = vec![0f32; rows * kkc];
+    let mut c0 = 0;
+    while c0 < b {
+        im2col_into(&mut dhat, &x[c0 * h * w * cin..][..b_p * h * w * cin], b_p, h, w, cin, kh, kw);
+        gemm_into(&mut out[c0 * h * w * cout..][..rows * cout], &dhat, wt, rows, kkc, cout, p);
+        c0 += b_p;
+    }
+    out
+}
+
+/// dL/dw for SAME stride-1 conv as chunked `D-hat^T @ g-hat` GEMMs
+/// (the paper's lowering applied to the backward pass). x [b,h,w,cin],
+/// g [b,h,w,cout] -> [kh,kw,cin,cout] flat. In-place p-ascending
+/// accumulation keeps the result bitwise b_p-invariant.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_wgrad(x: &[f32], g: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize, cout: usize, b_p: usize, p: &GemmParams) -> Vec<f32> {
+    assert_eq!(x.len(), b * h * w * cin, "wgrad: x shape");
+    assert_eq!(g.len(), b * h * w * cout, "wgrad: g shape");
+    let b_p = normalize_bp(b, b_p);
+    let kkc = kh * kw * cin;
+    let rows = b_p * h * w;
+    let mut gw = vec![0f32; kkc * cout];
+    let mut dhat = vec![0f32; rows * kkc];
+    let mut c0 = 0;
+    while c0 < b {
+        im2col_into(&mut dhat, &x[c0 * h * w * cin..][..rows * cin], b_p, h, w, cin, kh, kw);
+        let ghat = &g[c0 * h * w * cout..][..rows * cout];
+        gemm_tn_acc(&mut gw, &dhat, ghat, rows, kkc, cout, p.threads);
+        c0 += b_p;
+    }
+    gw
+}
+
+/// HWIO kernel -> 180-degree-rotated, in/out-swapped kernel for the
+/// input-gradient conv (`_flip_w` in python model.py):
+/// out[i,j,o,c] = w[kh-1-i, kw-1-j, c, o]. Returns [kh,kw,cout,cin] flat.
+pub fn flip_w(wt: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<f32> {
+    assert_eq!(wt.len(), kh * kw * cin * cout, "flip_w: shape");
+    let mut out = vec![0f32; kh * kw * cout * cin];
+    for i in 0..kh {
+        for j in 0..kw {
+            for c in 0..cin {
+                for o in 0..cout {
+                    out[((i * kw + j) * cout + o) * cin + c] =
+                        wt[(((kh - 1 - i) * kw + (kw - 1 - j)) * cin + c) * cout + o];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2x2 stride-2 max pool. x [b,h,w,c] (h, w even) -> [b,h/2,w/2,c].
+pub fn maxpool2x2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * h * w * c, "pool: x shape");
+    assert!(h % 2 == 0 && w % 2 == 0, "pool: odd spatial dims");
+    let (h2, w2) = (h / 2, w / 2);
+    let mut out = vec![0f32; b * h2 * w2 * c];
+    for img in 0..b {
+        for y in 0..h2 {
+            for xw in 0..w2 {
+                let orow = &mut out[((img * h2 + y) * w2 + xw) * c..][..c];
+                for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let irow = &x[((img * h + 2 * y + dy) * w + 2 * xw + dx) * c..][..c];
+                    if dy == 0 && dx == 0 {
+                        orow.copy_from_slice(irow);
+                    } else {
+                        for (o, &v) in orow.iter_mut().zip(irow) {
+                            if v > *o {
+                                *o = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max-pool backward: route pooled grads to max positions; ties (exact
+/// float equality) receive the gradient in every tied position — the
+/// `gu * (x == yu)` rule of python model.py `_maxpool_bwd`.
+pub fn maxpool2x2_bwd(x: &[f32], y: &[f32], g: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (h2, w2) = (h / 2, w / 2);
+    assert_eq!(x.len(), b * h * w * c, "pool_bwd: x shape");
+    assert_eq!(y.len(), b * h2 * w2 * c, "pool_bwd: y shape");
+    assert_eq!(g.len(), y.len(), "pool_bwd: g shape");
+    let mut out = vec![0f32; x.len()];
+    for img in 0..b {
+        for yy in 0..h2 {
+            for xw in 0..w2 {
+                let base = ((img * h2 + yy) * w2 + xw) * c;
+                for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let idx = ((img * h + 2 * yy + dy) * w + 2 * xw + dx) * c;
+                    for cc in 0..c {
+                        if x[idx + cc] == y[base + cc] {
+                            out[idx + cc] = g[base + cc];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fused softmax + cross-entropy: logits [b,n], labels [b] ->
+/// (mean loss, accuracy, grad [b,n] already divided by b). Matches
+/// `softmax_xent_ref`: max-subtracted logsumexp, first-occurrence argmax.
+pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, n: usize) -> (f32, f32, Vec<f32>) {
+    assert_eq!(logits.len(), b * n, "xent: logits shape");
+    assert_eq!(labels.len(), b, "xent: labels shape");
+    let mut grad = vec![0f32; b * n];
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits[i * n..][..n];
+        let mut zmax = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &z) in row.iter().enumerate() {
+            if z > zmax {
+                zmax = z;
+                argmax = j;
+            }
+        }
+        let mut sum = 0f32;
+        for &z in row {
+            sum += (z - zmax).exp();
+        }
+        let lse = sum.ln();
+        let y = labels[i] as usize;
+        loss += (lse - (row[y] - zmax)) as f64;
+        if argmax == y {
+            correct += 1;
+        }
+        let grow = &mut grad[i * n..][..n];
+        for (j, gz) in grow.iter_mut().enumerate() {
+            let p = ((row[j] - zmax) - lse).exp();
+            let onehot = if j == y { 1.0 } else { 0.0 };
+            *gz = (p - onehot) / b as f32;
+        }
+    }
+    ((loss / b as f64) as f32, correct as f32 / b as f32, grad)
+}
+
+/// y += bias broadcast over rows: y [rows, c], bias [c].
+pub fn bias_add(y: &mut [f32], bias: &[f32], rows: usize, c: usize) {
+    assert_eq!(y.len(), rows * c, "bias_add: y shape");
+    assert_eq!(bias.len(), c, "bias_add: bias shape");
+    for r in 0..rows {
+        for (v, &bv) in y[r * c..][..c].iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+/// ReLU in place.
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// g *= (z > 0): ReLU backward mask.
+pub fn relu_bwd_inplace(g: &mut [f32], z: &[f32]) {
+    assert_eq!(g.len(), z.len(), "relu_bwd: shape");
+    for (gv, &zv) in g.iter_mut().zip(z) {
+        if zv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Column sums: x [rows, c] -> [c] (bias gradients).
+pub fn colsum(x: &[f32], rows: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * c, "colsum: shape");
+    let mut out = vec![0f32; c];
+    for r in 0..rows {
+        for (o, &v) in out.iter_mut().zip(&x[r * c..][..c]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// D-hat footprint in bytes at a given `b_p` (paper Fig 4c memory curve).
+pub fn lowered_bytes(b_p: usize, h: usize, w: usize, kh: usize, kw: usize, cin: usize) -> usize {
+    4 * b_p * h * w * kh * kw * cin
+}
+
+/// FLOP count of a SAME conv as GFLOP (2 MACs per multiply-add).
+pub fn conv_gflops(b: usize, h: usize, w: usize, kh: usize, kw: usize, cin: usize, cout: usize) -> f64 {
+    2.0 * (b * h * w) as f64 * cout as f64 * (kh * kw * cin) as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pick_tile_near_equal_split() {
+        // The documented 800/512 case: 2 tiles of 400, NOT 512 + 288.
+        assert_eq!(pick_tile(800, 512), 400);
+        // <= max: round up to 8.
+        assert_eq!(pick_tile(10, 128), 16);
+        assert_eq!(pick_tile(512, 512), 512);
+        assert_eq!(pick_tile(128, 128), 128);
+        // 1000 -> 2 tiles -> 500 -> 504 (8-aligned), covering in 504+496.
+        assert_eq!(pick_tile(1000, 512), 504);
+        assert_eq!(pick_tile(1, 128), 8);
+    }
+
+    #[test]
+    fn gemm_matches_naive_ragged() {
+        // Ragged in every dimension (not multiples of any tile).
+        let (m, k, n) = (13, 57, 9);
+        let a = randv(m * k, 1);
+        let b = randv(k * n, 2);
+        let c = gemm(&a, &b, m, k, n, &GemmParams::with_threads(1));
+        let want = gemm_naive(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_invariant_to_threads_and_tiles() {
+        let (m, k, n) = (64, 800, 24);
+        let a = randv(m * k, 3);
+        let b = randv(k * n, 4);
+        let base = gemm(&a, &b, m, k, n, &GemmParams { bm: 128, bn: 128, bk: 512, threads: 1 });
+        for threads in [2, 4, 7] {
+            for (bm, bn, bk) in [(128, 128, 512), (32, 16, 64), (8, 8, 8), (256, 256, 1024)] {
+                let c = gemm(&a, &b, m, k, n, &GemmParams { bm, bn, bk, threads });
+                assert_eq!(c, base, "threads={threads} tiles=({bm},{bn},{bk})");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tn_and_nt_match_naive() {
+        let (p, m, n) = (17, 11, 7);
+        let a = randv(p * m, 5); // [p, m]
+        let b = randv(p * n, 6); // [p, n]
+        let mut c = vec![0f32; m * n];
+        gemm_tn_acc(&mut c, &a, &b, p, m, n, 1);
+        // naive A^T @ B
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                for pp in 0..p {
+                    s += a[pp * m + i] * b[pp * n + j];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-4);
+            }
+        }
+        let (m2, k2, n2) = (9, 13, 5);
+        let a2 = randv(m2 * k2, 7);
+        let b2 = randv(n2 * k2, 8); // [n, k]
+        let c2 = gemm_nt(&a2, &b2, m2, k2, n2, 1);
+        for i in 0..m2 {
+            for j in 0..n2 {
+                let mut s = 0f32;
+                for kk in 0..k2 {
+                    s += a2[i * k2 + kk] * b2[j * k2 + kk];
+                }
+                assert!((c2[i * n2 + j] - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    fn conv_naive(x: &[f32], wt: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize, cout: usize) -> Vec<f32> {
+        let (ph, pw) = (kh / 2, kw / 2);
+        let mut out = vec![0f32; b * h * w * cout];
+        for img in 0..b {
+            for y in 0..h {
+                for xw in 0..w {
+                    for o in 0..cout {
+                        let mut s = 0f32;
+                        for ki in 0..kh {
+                            for kj in 0..kw {
+                                let iy = (y + ki).wrapping_sub(ph);
+                                let ix = (xw + kj).wrapping_sub(pw);
+                                if iy < h && ix < w {
+                                    for c in 0..cin {
+                                        s += x[((img * h + iy) * w + ix) * cin + c]
+                                            * wt[((ki * kw + kj) * cin + c) * cout + o];
+                                    }
+                                }
+                            }
+                        }
+                        out[((img * h + y) * w + xw) * cout + o] = s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive_and_is_bp_invariant() {
+        let (b, h, w, cin, kh, kw, cout) = (4, 6, 6, 3, 3, 3, 5);
+        let x = randv(b * h * w * cin, 9);
+        let wt = randv(kh * kw * cin * cout, 10);
+        let p = GemmParams::with_threads(2);
+        let want = conv_naive(&x, &wt, b, h, w, cin, kh, kw, cout);
+        let full = conv2d_same(&x, &wt, b, h, w, cin, kh, kw, cout, b, &p);
+        for (a, e) in full.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        for bp in [1, 2, 4, 0, 99] {
+            let y = conv2d_same(&x, &wt, b, h, w, cin, kh, kw, cout, bp, &p);
+            assert_eq!(y, full, "b_p={bp} must be bitwise invariant");
+        }
+    }
+
+    #[test]
+    fn wgrad_is_bp_invariant() {
+        let (b, h, w, cin, kh, kw, cout) = (4, 4, 4, 2, 3, 3, 3);
+        let x = randv(b * h * w * cin, 11);
+        let g = randv(b * h * w * cout, 12);
+        let p = GemmParams::with_threads(1);
+        let full = conv_wgrad(&x, &g, b, h, w, cin, kh, kw, cout, b, &p);
+        for bp in [1, 2] {
+            let gw = conv_wgrad(&x, &g, b, h, w, cin, kh, kw, cout, bp, &p);
+            assert_eq!(gw, full, "b_p={bp}");
+        }
+    }
+
+    #[test]
+    fn pool_and_bwd_route_max() {
+        // One image, 2x2 -> 1x1, single channel.
+        let x = [1.0f32, 3.0, 2.0, 0.5];
+        let y = maxpool2x2(&x, 1, 2, 2, 1);
+        assert_eq!(y, vec![3.0]);
+        let g = maxpool2x2_bwd(&x, &y, &[2.0], 1, 2, 2, 1);
+        assert_eq!(g, vec![0.0, 2.0, 0.0, 0.0]);
+        // Ties: every tied position receives the gradient.
+        let xt = [7.0f32, 7.0, 1.0, 0.0];
+        let yt = maxpool2x2(&xt, 1, 2, 2, 1);
+        let gt = maxpool2x2_bwd(&xt, &yt, &[1.0], 1, 2, 2, 1);
+        assert_eq!(gt, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn xent_uniform_and_confident() {
+        let (loss, acc, grad) = softmax_xent(&[0.0; 8], &[0, 1], 2, 4);
+        assert!((loss - (4f32).ln()).abs() < 1e-5);
+        assert!((acc - 0.5).abs() < 1e-6); // first-occurrence argmax = 0
+        // Uniform softmax grad: (1/n - onehot)/b.
+        assert!((grad[0] - (0.25 - 1.0) / 2.0).abs() < 1e-6);
+        assert!((grad[1] - 0.25 / 2.0).abs() < 1e-6);
+        let (loss2, acc2, _) = softmax_xent(&[10.0, 0.0, 0.0], &[0], 1, 3);
+        assert!(loss2 < 1e-3);
+        assert_eq!(acc2, 1.0);
+    }
+
+    #[test]
+    fn flip_w_rotates_and_swaps() {
+        // k=1: flip is a pure [cin,cout] -> [cout,cin] transpose.
+        let wt = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [1,1,2,3]
+        let f = flip_w(&wt, 1, 1, 2, 3);
+        assert_eq!(f, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]); // [1,1,3,2]
+    }
+
+    #[test]
+    fn normalize_bp_rules() {
+        assert_eq!(normalize_bp(32, 0), 32);
+        assert_eq!(normalize_bp(32, 99), 32);
+        assert_eq!(normalize_bp(32, 8), 8);
+        assert_eq!(normalize_bp(32, 7), 4); // largest divisor <= 7
+        assert_eq!(normalize_bp(1, 1), 1);
+    }
+}

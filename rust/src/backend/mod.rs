@@ -1,0 +1,178 @@
+//! Pluggable execution backends for compiled artifacts.
+//!
+//! The paper treats each device as a black box with a measured rate; this
+//! module is that boundary in code. A [`Backend`] turns a manifest
+//! [`ArtifactEntry`] plus input literals into output literals. Two
+//! implementations ship today:
+//!
+//! * [`StubBackend`] — the original path: compile the artifact's HLO text
+//!   through the vendored PJRT surface and execute it there. With the
+//!   offline stub this compiles but refuses to execute; against a real
+//!   PJRT build it runs on whatever device the client owns.
+//! * [`NativeBackend`] — pure-Rust CPU kernels (blocked GEMM, im2col conv
+//!   with the paper's `b_p` lowering knob, max-pool, fused
+//!   softmax+cross-entropy) that execute the same artifact kinds for
+//!   real. See [`kernels`] for the schedule details.
+//!
+//! Selection is per artifact and per device group: `--backend auto`
+//! (default) picks native whenever the artifact's kind is supported and
+//! falls back to the stub otherwise, so adding a new artifact kind
+//! degrades to the old behavior instead of breaking.
+
+use anyhow::{bail, Result};
+
+#[cfg(feature = "xla")]
+use crate::runtime::{ArtifactEntry, Runtime};
+
+pub mod kernels;
+#[cfg(feature = "xla")]
+mod native;
+
+#[cfg(feature = "xla")]
+pub use native::NativeBackend;
+
+/// Artifact kinds the native backend can execute (kept available to the
+/// pure layers so `RunSpec` validation can reason about it offline).
+pub const NATIVE_KINDS: &[&str] = &[
+    "conv_fwd", "conv_bwd", "fc_step", "full_step", "infer", "convchunk", "convbench",
+    "gemm",
+];
+
+/// An execution engine for compiled artifacts.
+///
+/// Implementations must be `Send + Sync`: one instance is shared by every
+/// compute group and the merged-FC server across scheduler threads.
+#[cfg(feature = "xla")]
+pub trait Backend: Send + Sync {
+    /// Stable short name recorded in run outcomes ("stub", "native").
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can execute the given artifact.
+    fn supports(&self, entry: &ArtifactEntry) -> bool;
+
+    /// Execute the artifact on the given inputs, returning one literal
+    /// per manifest output in order.
+    fn execute(
+        &self,
+        rt: &Runtime,
+        entry: &ArtifactEntry,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>>;
+}
+
+/// User-facing backend selection policy (`--backend`, `RunSpec.backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Per artifact: native when its kind is supported, stub otherwise.
+    #[default]
+    Auto,
+    /// Always the PJRT(-stub) path.
+    Stub,
+    /// Always the native CPU kernels; unsupported kinds error.
+    Native,
+}
+
+impl BackendChoice {
+    /// Parse a `--backend` / `RunSpec.backend` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "stub" => Ok(Self::Stub),
+            "native" => Ok(Self::Native),
+            other => bail!("unknown backend {other:?} (expected stub|native|auto)"),
+        }
+    }
+
+    /// The canonical spelling of this choice.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Stub => "stub",
+            Self::Native => "native",
+        }
+    }
+}
+
+/// A resolved backend identity — what [`BackendChoice::Auto`] collapses
+/// to once an artifact (and the device kind that will run it) is known.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSel {
+    Stub,
+    Native,
+}
+
+impl BackendSel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Stub => "stub",
+            Self::Native => "native",
+        }
+    }
+}
+
+/// The PJRT(-stub) path: compile the artifact's HLO and execute it on the
+/// runtime's PJRT client. Kept as a thin wrapper so the compile cache and
+/// executable ownership stay inside [`Runtime`].
+#[derive(Debug, Default)]
+pub struct StubBackend;
+
+#[cfg(feature = "xla")]
+impl Backend for StubBackend {
+    fn name(&self) -> &'static str {
+        "stub"
+    }
+
+    fn supports(&self, _entry: &ArtifactEntry) -> bool {
+        // The stub compiles anything with an HLO file; whether execution
+        // succeeds depends on the linked PJRT being real.
+        true
+    }
+
+    fn execute(
+        &self,
+        rt: &Runtime,
+        entry: &ArtifactEntry,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        rt.stub_execute_refs(&entry.name, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses_and_round_trips() {
+        for s in ["auto", "stub", "native"] {
+            assert_eq!(BackendChoice::parse(s).unwrap().name(), s);
+        }
+        assert!(BackendChoice::parse("gpu").is_err());
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[cfg(feature = "xla")]
+    #[test]
+    fn native_supports_known_kinds_only() {
+        let entry = |kind: &str| ArtifactEntry {
+            name: "t".into(),
+            file: "t.hlo".into(),
+            inputs: vec![],
+            outputs: vec![],
+            arch: None,
+            variant: None,
+            kind: kind.into(),
+            batch: None,
+            b_p: None,
+            n: None,
+            gflops: None,
+            lowered_bytes: None,
+        };
+        let nb = NativeBackend;
+        for k in NATIVE_KINDS {
+            assert!(nb.supports(&entry(k)), "{k}");
+        }
+        assert!(!nb.supports(&entry("mystery_op")));
+        assert!(StubBackend.supports(&entry("mystery_op")));
+    }
+}

@@ -1,0 +1,372 @@
+//! [`NativeBackend`] — pure-Rust CPU execution of the manifest's
+//! artifact kinds over the blocked kernels in [`super::kernels`].
+//!
+//! Shapes are read from the input literals themselves (not the manifest
+//! entry), so one dispatcher serves every arch and batch size; the entry
+//! contributes only its `kind` and the `b_p` lowering knob. The math is
+//! a line-for-line port of python/compile/model.py (conv phase, recompute
+//! -vjp conv backward, fused FC step) — parity against goldens generated
+//! from those kernels is asserted to <= 1e-4 in `tests/it_backend.rs`.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::kernels as k;
+use super::{Backend, NATIVE_KINDS};
+use crate::runtime::{ArtifactEntry, Runtime};
+
+/// The native CPU kernel backend.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+fn dims_of(l: &xla::Literal) -> Result<Vec<usize>> {
+    match l.shape()? {
+        xla::Shape::Array(a) => Ok(a.dims().iter().map(|&d| d as usize).collect()),
+        other => bail!("native backend expects array literals, got {other:?}"),
+    }
+}
+
+fn f32_of(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+fn i32_of(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+fn lit(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn scalar(v: f32) -> Result<xla::Literal> {
+    lit(&[], &[v])
+}
+
+/// The two-phase CNN's dimensions, derived from the input literals
+/// (x [b,h,w,cin], wc1 [k,k,cin,c1], wc2 [k,k,c1,c2], wf1 [feat,f1],
+/// wf2 [f1,ncls]) the way python model.Arch derives them.
+#[derive(Clone, Copy, Debug)]
+struct Dims {
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    c1: usize,
+    c2: usize,
+    feat: usize,
+}
+
+impl Dims {
+    fn conv(x: &[usize], wc1: &[usize], wc2: &[usize]) -> Result<Self> {
+        ensure!(x.len() == 4 && wc1.len() == 4 && wc2.len() == 4, "conv input ranks");
+        let (b, h, w, cin) = (x[0], x[1], x[2], x[3]);
+        ensure!(wc1[2] == cin, "wc1 cin {} != x cin {cin}", wc1[2]);
+        ensure!(wc1[0] == wc1[1] && wc1[0] == wc2[0], "square kernels");
+        ensure!(wc2[2] == wc1[3], "wc2 cin != c1");
+        ensure!(h % 4 == 0 && w % 4 == 0, "two pool2 stages need h,w % 4 == 0");
+        let (c1, c2) = (wc1[3], wc2[3]);
+        Ok(Self { b, h, w, cin, k: wc1[0], c1, c2, feat: (h / 4) * (w / 4) * c2 })
+    }
+}
+
+/// Forward conv-phase intermediates kept for the recompute backward.
+struct ConvTrace {
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    p1: Vec<f32>,
+    z2: Vec<f32>,
+    a2: Vec<f32>,
+    p2: Vec<f32>,
+}
+
+fn conv_phase(
+    x: &[f32],
+    wc1: &[f32],
+    bc1: &[f32],
+    wc2: &[f32],
+    bc2: &[f32],
+    d: Dims,
+    b_p: usize,
+    gp: &k::GemmParams,
+) -> ConvTrace {
+    let (h2, w2) = (d.h / 2, d.w / 2);
+    let mut z1 = k::conv2d_same(x, wc1, d.b, d.h, d.w, d.cin, d.k, d.k, d.c1, b_p, gp);
+    k::bias_add(&mut z1, bc1, d.b * d.h * d.w, d.c1);
+    let mut a1 = z1.clone();
+    k::relu_inplace(&mut a1);
+    let p1 = k::maxpool2x2(&a1, d.b, d.h, d.w, d.c1);
+    let mut z2 = k::conv2d_same(&p1, wc2, d.b, h2, w2, d.c1, d.k, d.k, d.c2, b_p, gp);
+    k::bias_add(&mut z2, bc2, d.b * h2 * w2, d.c2);
+    let mut a2 = z2.clone();
+    k::relu_inplace(&mut a2);
+    let p2 = k::maxpool2x2(&a2, d.b, h2, w2, d.c2);
+    ConvTrace { z1, a1, p1, z2, a2, p2 }
+}
+
+/// Chain rule back through pool/relu/conv twice (model.py `conv_bwd`).
+/// Returns (gwc1, gbc1, gwc2, gbc2) flat.
+#[allow(clippy::too_many_arguments)]
+fn conv_backward(
+    x: &[f32],
+    wc2: &[f32],
+    t: &ConvTrace,
+    g_act: &[f32],
+    d: Dims,
+    b_p: usize,
+    gp: &k::GemmParams,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (h2, w2) = (d.h / 2, d.w / 2);
+    // g_act [b, feat] IS g_p2 [b, h/4, w/4, c2] (row-major reshape).
+    let mut g_a2 = k::maxpool2x2_bwd(&t.a2, &t.p2, g_act, d.b, h2, w2, d.c2);
+    k::relu_bwd_inplace(&mut g_a2, &t.z2); // now g_z2
+    let gwc2 = k::conv_wgrad(&t.p1, &g_a2, d.b, h2, w2, d.c1, d.k, d.k, d.c2, b_p, gp);
+    let gbc2 = k::colsum(&g_a2, d.b * h2 * w2, d.c2);
+    let wflip = k::flip_w(wc2, d.k, d.k, d.c1, d.c2);
+    let g_p1 = k::conv2d_same(&g_a2, &wflip, d.b, h2, w2, d.c2, d.k, d.k, d.c1, b_p, gp);
+    let mut g_a1 = k::maxpool2x2_bwd(&t.a1, &t.p1, &g_p1, d.b, d.h, d.w, d.c1);
+    k::relu_bwd_inplace(&mut g_a1, &t.z1); // now g_z1
+    let gwc1 = k::conv_wgrad(x, &g_a1, d.b, d.h, d.w, d.cin, d.k, d.k, d.c1, b_p, gp);
+    let gbc1 = k::colsum(&g_a1, d.b * d.h * d.w, d.c1);
+    (gwc1, gbc1, gwc2, gbc2)
+}
+
+/// FC forward keeping pre-activations (model.py `_fc_phase`).
+fn fc_forward(
+    act: &[f32],
+    wf1: &[f32],
+    bf1: &[f32],
+    wf2: &[f32],
+    bf2: &[f32],
+    b: usize,
+    feat: usize,
+    f1: usize,
+    ncls: usize,
+    gp: &k::GemmParams,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut z1 = k::gemm(act, wf1, b, feat, f1, gp);
+    k::bias_add(&mut z1, bf1, b, f1);
+    let mut h = z1.clone();
+    k::relu_inplace(&mut h);
+    let mut logits = k::gemm(&h, wf2, b, f1, ncls, gp);
+    k::bias_add(&mut logits, bf2, b, ncls);
+    (z1, h, logits)
+}
+
+/// Fused FC fwd + bwd + loss (model.py `fc_step`). Returns
+/// (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2).
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn fc_step(
+    act: &[f32],
+    labels: &[i32],
+    wf1: &[f32],
+    bf1: &[f32],
+    wf2: &[f32],
+    bf2: &[f32],
+    b: usize,
+    feat: usize,
+    f1: usize,
+    ncls: usize,
+    gp: &k::GemmParams,
+) -> (f32, f32, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (z1, h, logits) = fc_forward(act, wf1, bf1, wf2, bf2, b, feat, f1, ncls, gp);
+    let (loss, acc, g_logits) = k::softmax_xent(&logits, labels, b, ncls);
+    let mut gwf2 = vec![0f32; f1 * ncls];
+    k::gemm_tn_acc(&mut gwf2, &h, &g_logits, b, f1, ncls, gp.threads);
+    let gbf2 = k::colsum(&g_logits, b, ncls);
+    let mut g_h = k::gemm_nt(&g_logits, wf2, b, ncls, f1, gp.threads);
+    k::relu_bwd_inplace(&mut g_h, &z1); // now g_z1
+    let mut gwf1 = vec![0f32; feat * f1];
+    k::gemm_tn_acc(&mut gwf1, act, &g_h, b, feat, f1, gp.threads);
+    let gbf1 = k::colsum(&g_h, b, f1);
+    let g_act = k::gemm_nt(&g_h, wf1, b, f1, feat, gp.threads);
+    (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2)
+}
+
+/// Read (dims, data) for a conv-parameter quad [wc1, bc1, wc2, bc2].
+fn conv_quad(
+    lits: &[&xla::Literal],
+) -> Result<(Vec<usize>, Vec<usize>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let wc1d = dims_of(lits[0])?;
+    let wc2d = dims_of(lits[2])?;
+    Ok((
+        wc1d,
+        wc2d,
+        f32_of(lits[0])?,
+        f32_of(lits[1])?,
+        f32_of(lits[2])?,
+        f32_of(lits[3])?,
+    ))
+}
+
+/// FC dims from wf1 [feat, f1] and wf2 [f1, ncls].
+fn fc_dims(wf1: &xla::Literal, wf2: &xla::Literal) -> Result<(usize, usize, usize)> {
+    let d1 = dims_of(wf1)?;
+    let d2 = dims_of(wf2)?;
+    ensure!(d1.len() == 2 && d2.len() == 2 && d1[1] == d2[0], "fc weight shapes");
+    Ok((d1[0], d1[1], d2[1]))
+}
+
+impl NativeBackend {
+    fn run(&self, entry: &ArtifactEntry, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let gp = k::GemmParams::default();
+        let bp_knob = entry.b_p.unwrap_or(0);
+        match entry.kind.as_str() {
+            "conv_fwd" => {
+                ensure!(inputs.len() == 5, "conv_fwd takes (x, wc1, bc1, wc2, bc2)");
+                let xd = dims_of(inputs[0])?;
+                let (wc1d, wc2d, wc1, bc1, wc2, bc2) = conv_quad(&inputs[1..5])?;
+                let d = Dims::conv(&xd, &wc1d, &wc2d)?;
+                let b_p = k::normalize_bp(d.b, bp_knob);
+                let x = f32_of(inputs[0])?;
+                let t = conv_phase(&x, &wc1, &bc1, &wc2, &bc2, d, b_p, &gp);
+                Ok(vec![lit(&[d.b, d.feat], &t.p2)?])
+            }
+            "conv_bwd" => {
+                ensure!(inputs.len() == 6, "conv_bwd takes (x, conv params, g_act)");
+                let xd = dims_of(inputs[0])?;
+                let (wc1d, wc2d, wc1, bc1, wc2, bc2) = conv_quad(&inputs[1..5])?;
+                let d = Dims::conv(&xd, &wc1d, &wc2d)?;
+                let b_p = k::normalize_bp(d.b, bp_knob);
+                let x = f32_of(inputs[0])?;
+                let g_act = f32_of(inputs[5])?;
+                ensure!(g_act.len() == d.b * d.feat, "g_act shape");
+                let t = conv_phase(&x, &wc1, &bc1, &wc2, &bc2, d, b_p, &gp);
+                let (gwc1, gbc1, gwc2, gbc2) =
+                    conv_backward(&x, &wc2, &t, &g_act, d, b_p, &gp);
+                Ok(vec![
+                    lit(&wc1d, &gwc1)?,
+                    lit(&[d.c1], &gbc1)?,
+                    lit(&wc2d, &gwc2)?,
+                    lit(&[d.c2], &gbc2)?,
+                ])
+            }
+            "fc_step" => {
+                ensure!(inputs.len() == 6, "fc_step takes (act, labels, fc params)");
+                let ad = dims_of(inputs[0])?;
+                ensure!(ad.len() == 2, "act rank");
+                let (feat, f1, ncls) = fc_dims(inputs[2], inputs[4])?;
+                ensure!(ad[1] == feat, "act feat {} != wf1 feat {feat}", ad[1]);
+                let act = f32_of(inputs[0])?;
+                let labels = i32_of(inputs[1])?;
+                ensure!(labels.len() == ad[0], "labels length");
+                let (wf1, bf1, wf2, bf2) = (
+                    f32_of(inputs[2])?,
+                    f32_of(inputs[3])?,
+                    f32_of(inputs[4])?,
+                    f32_of(inputs[5])?,
+                );
+                let (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2) =
+                    fc_step(&act, &labels, &wf1, &bf1, &wf2, &bf2, ad[0], feat, f1, ncls, &gp);
+                Ok(vec![
+                    scalar(loss)?,
+                    scalar(acc)?,
+                    lit(&ad, &g_act)?,
+                    lit(&[feat, f1], &gwf1)?,
+                    lit(&[f1], &gbf1)?,
+                    lit(&[f1, ncls], &gwf2)?,
+                    lit(&[ncls], &gbf2)?,
+                ])
+            }
+            "full_step" | "infer" => {
+                let infer = entry.kind == "infer";
+                let np = if infer { 9 } else { 10 };
+                ensure!(inputs.len() == np, "{} takes x{} and 8 params", entry.kind, if infer { "" } else { ", labels" });
+                let xd = dims_of(inputs[0])?;
+                let poff = if infer { 1 } else { 2 };
+                let (wc1d, wc2d, wc1, bc1, wc2, bc2) = conv_quad(&inputs[poff..poff + 4])?;
+                let d = Dims::conv(&xd, &wc1d, &wc2d)?;
+                let b_p = k::normalize_bp(d.b, bp_knob);
+                let (feat, f1, ncls) = fc_dims(inputs[poff + 4], inputs[poff + 6])?;
+                ensure!(feat == d.feat, "fc feat {feat} != conv feat {}", d.feat);
+                let x = f32_of(inputs[0])?;
+                let (wf1, bf1, wf2, bf2) = (
+                    f32_of(inputs[poff + 4])?,
+                    f32_of(inputs[poff + 5])?,
+                    f32_of(inputs[poff + 6])?,
+                    f32_of(inputs[poff + 7])?,
+                );
+                let t = conv_phase(&x, &wc1, &bc1, &wc2, &bc2, d, b_p, &gp);
+                if infer {
+                    let (_, _, logits) =
+                        fc_forward(&t.p2, &wf1, &bf1, &wf2, &bf2, d.b, feat, f1, ncls, &gp);
+                    return Ok(vec![lit(&[d.b, ncls], &logits)?]);
+                }
+                let labels = i32_of(inputs[1])?;
+                ensure!(labels.len() == d.b, "labels length");
+                let (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2) =
+                    fc_step(&t.p2, &labels, &wf1, &bf1, &wf2, &bf2, d.b, feat, f1, ncls, &gp);
+                let (gwc1, gbc1, gwc2, gbc2) =
+                    conv_backward(&x, &wc2, &t, &g_act, d, b_p, &gp);
+                Ok(vec![
+                    scalar(loss)?,
+                    scalar(acc)?,
+                    lit(&wc1d, &gwc1)?,
+                    lit(&[d.c1], &gbc1)?,
+                    lit(&wc2d, &gwc2)?,
+                    lit(&[d.c2], &gbc2)?,
+                    lit(&[feat, f1], &gwf1)?,
+                    lit(&[f1], &gbf1)?,
+                    lit(&[f1, ncls], &gwf2)?,
+                    lit(&[ncls], &gbf2)?,
+                ])
+            }
+            "convchunk" | "convbench" => {
+                ensure!(inputs.len() == 2, "{} takes (x, w)", entry.kind);
+                let xd = dims_of(inputs[0])?;
+                let wd = dims_of(inputs[1])?;
+                ensure!(xd.len() == 4 && wd.len() == 4, "conv bench ranks");
+                let (b, h, w, cin) = (xd[0], xd[1], xd[2], xd[3]);
+                ensure!(wd[2] == cin, "bench w cin");
+                let b_p = k::normalize_bp(b, bp_knob);
+                let x = f32_of(inputs[0])?;
+                let wt = f32_of(inputs[1])?;
+                let y = k::conv2d_same(&x, &wt, b, h, w, cin, wd[0], wd[1], wd[3], b_p, &gp);
+                Ok(vec![lit(&[b, h, w, wd[3]], &y)?])
+            }
+            "gemm" => {
+                ensure!(inputs.len() == 2, "gemm takes (a, b)");
+                let adim = dims_of(inputs[0])?;
+                let bdim = dims_of(inputs[1])?;
+                ensure!(
+                    adim.len() == 2 && bdim.len() == 2 && adim[1] == bdim[0],
+                    "gemm shapes {adim:?} x {bdim:?}"
+                );
+                let a = f32_of(inputs[0])?;
+                let b = f32_of(inputs[1])?;
+                let c = k::gemm(&a, &b, adim[0], adim[1], bdim[1], &gp);
+                Ok(vec![lit(&[adim[0], bdim[1]], &c)?])
+            }
+            other => bail!(
+                "native backend has no kernel for artifact kind {other:?} \
+                 (supported: {NATIVE_KINDS:?})"
+            ),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, entry: &ArtifactEntry) -> bool {
+        NATIVE_KINDS.contains(&entry.kind.as_str())
+    }
+
+    fn execute(
+        &self,
+        _rt: &Runtime,
+        entry: &ArtifactEntry,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.run(entry, inputs)
+            .with_context(|| format!("native backend executing {}", entry.name))
+    }
+}

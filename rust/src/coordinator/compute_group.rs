@@ -20,6 +20,7 @@ use anyhow::Result;
 
 use super::merged_fc::FcServer;
 use super::param_server::{ModelSnapshot, ParamServer};
+use crate::backend::BackendSel;
 use crate::data::PlanController;
 use crate::runtime::{from_literal, to_literal, LiteralCache, LiteralSet, Runtime};
 use crate::tensor::HostTensor;
@@ -73,9 +74,13 @@ pub struct ComputeGroup {
     /// Conv-snapshot literal cache, shared across the groups of one
     /// topology (keyed by snapshot content id, so sharing is safe).
     lit_cache: Arc<LiteralCache>,
+    /// Execution backend, resolved once at topology build for this
+    /// group's `DeviceKind` (paper: device as a black box).
+    backend: BackendSel,
 }
 
 impl ComputeGroup {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         k: usize,
@@ -84,12 +89,27 @@ impl ComputeGroup {
         conv_bwd_artifact: String,
         conv_ps: Arc<ParamServer>,
         lit_cache: Arc<LiteralCache>,
+        backend: BackendSel,
     ) -> Self {
-        Self { id, k, planner, conv_fwd_artifact, conv_bwd_artifact, conv_ps, lit_cache }
+        Self {
+            id,
+            k,
+            planner,
+            conv_fwd_artifact,
+            conv_bwd_artifact,
+            conv_ps,
+            lit_cache,
+            backend,
+        }
     }
 
     pub fn conv_ps(&self) -> &Arc<ParamServer> {
         &self.conv_ps
+    }
+
+    /// The backend this group's conv phases execute on.
+    pub fn backend(&self) -> BackendSel {
+        self.backend
     }
 
     /// This group's gradient weight under the CURRENT plan epoch (for
@@ -129,7 +149,7 @@ impl ComputeGroup {
         let images_lit = to_literal(images)?;
         let mut lits: Vec<&xla::Literal> = vec![&images_lit];
         lits.extend(param_lits.literals().iter());
-        let outs = rt.execute_refs(&self.conv_fwd_artifact, &lits)?;
+        let outs = rt.execute_refs_on(self.backend, &self.conv_fwd_artifact, &lits)?;
         anyhow::ensure!(outs.len() == 1, "conv_fwd arity");
         let activations = from_literal(&outs[0])?;
         Ok(ConvFwdState {
@@ -159,7 +179,7 @@ impl ComputeGroup {
         let mut lits: Vec<&xla::Literal> = vec![&state.images_lit];
         lits.extend(state.param_lits.literals().iter());
         lits.push(&g_lit);
-        let outs = rt.execute_refs(&self.conv_bwd_artifact, &lits)?;
+        let outs = rt.execute_refs_on(self.backend, &self.conv_bwd_artifact, &lits)?;
         let grads: Vec<HostTensor> =
             outs.iter().map(from_literal).collect::<Result<_>>()?;
         self.conv_ps.publish_scaled_fenced(

@@ -15,6 +15,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::param_server::ParamServer;
+use crate::backend::BackendSel;
 use crate::config::Hyper;
 use crate::runtime::{from_literal, labels_literal, to_literal, LiteralCache, Runtime};
 use crate::tensor::HostTensor;
@@ -41,21 +42,36 @@ pub struct FcServer {
     /// Version-keyed cache of the FC parameter literals (DESIGN.md
     /// §Perf): reused whenever the FC model is unchanged between steps.
     lit_cache: LiteralCache,
+    /// Execution backend for the FC step, resolved once at topology
+    /// build for the FC machine's `DeviceKind`.
+    backend: BackendSel,
 }
 
 impl FcServer {
-    pub fn new(fc_params: Vec<HostTensor>, hyper: Hyper, merged: bool, artifact: String) -> Self {
+    pub fn new(
+        fc_params: Vec<HostTensor>,
+        hyper: Hyper,
+        merged: bool,
+        artifact: String,
+        backend: BackendSel,
+    ) -> Self {
         Self {
             ps: Arc::new(ParamServer::new(fc_params, hyper)),
             merged,
             artifact,
             serial: std::sync::Mutex::new(()),
             lit_cache: LiteralCache::new(),
+            backend,
         }
     }
 
     pub fn is_merged(&self) -> bool {
         self.merged
+    }
+
+    /// The backend this server's FC steps execute on.
+    pub fn backend(&self) -> BackendSel {
+        self.backend
     }
 
     pub fn param_server(&self) -> &Arc<ParamServer> {
@@ -102,7 +118,7 @@ impl FcServer {
         let param_lits = self.lit_cache.get_or_convert(snap.content_id, &snap.params)?;
         let mut lits: Vec<&xla::Literal> = vec![&act_lit, &labels_lit];
         lits.extend(param_lits.literals().iter());
-        let outs = rt.execute_refs(&self.artifact, &lits)?;
+        let outs = rt.execute_refs_on(self.backend, &self.artifact, &lits)?;
         // outputs: loss, acc, g_act, gwf1, gbf1, gwf2, gbf2
         anyhow::ensure!(outs.len() == 3 + snap.params.len(), "fc_step arity");
         let loss = from_literal(&outs[0])?.scalar()?;

@@ -92,6 +92,14 @@ impl Topology {
             .phase_artifact(&cfg.arch, &cfg.variant, "fc_step", cfg.batch)
             .with_context(|| format!("fc_step artifact at batch {}", cfg.batch))?;
 
+        // Resolve each server's backend up front (per DeviceKind, paper's
+        // "device as a black box"): the FC server runs on the cluster's
+        // FC machine, each group on its own device profile. A policy that
+        // cannot execute an artifact fails here, not mid-training.
+        let fc_backend = rt
+            .backend_for(cfg.cluster.device, fc_entry)
+            .with_context(|| format!("resolving backend for {}", fc_entry.name))?;
+
         let hyper = cfg.hyper;
         let (conv_params, fc_params) = init.split();
         let conv_ps = Arc::new(ParamServer::new(conv_params, hyper));
@@ -100,13 +108,26 @@ impl Topology {
             hyper,
             cfg.fc_mapping == FcMapping::Merged,
             fc_entry.name.clone(),
+            fc_backend,
         ));
         let conv_lits = Arc::new(LiteralCache::new());
         let fwd = fwd_entry.name.clone();
         let bwd = bwd_entry.name.clone();
         let groups = (0..g)
             .map(|id| {
-                ComputeGroup::new(
+                let kind = cfg.cluster.profile_for(id).kind;
+                let backend = rt
+                    .backend_for(kind, fwd_entry)
+                    .and_then(|sel| {
+                        // fwd and bwd share a kind family; resolving both
+                        // keeps a future kind split honest.
+                        rt.backend_for(kind, bwd_entry).map(|b| {
+                            debug_assert_eq!(sel, b);
+                            sel
+                        })
+                    })
+                    .with_context(|| format!("resolving backend for group {id}"))?;
+                Ok(ComputeGroup::new(
                     id,
                     k,
                     planner.clone(),
@@ -114,9 +135,10 @@ impl Topology {
                     bwd.clone(),
                     conv_ps.clone(),
                     conv_lits.clone(),
-                )
+                    backend,
+                ))
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
         Ok(Self { groups, conv_ps, fc, conv_lits, microbatch: cfg.batch, k, planner })
     }
 

@@ -31,6 +31,7 @@
 //! paper's Algorithm 1), and the `omnivore` CLI (`rust/src/main.rs`).
 
 pub mod api;
+pub mod backend;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

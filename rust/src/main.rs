@@ -57,7 +57,7 @@ const fn switch(name: &'static str) -> Flag {
 }
 
 /// Flags every subcommand accepts.
-const GLOBAL_FLAGS: &[Flag] = &[val("artifacts", "DIR")];
+const GLOBAL_FLAGS: &[Flag] = &[val("artifacts", "DIR"), val("backend", "stub|native|auto")];
 
 const TRAIN_FLAGS: &[Flag] = &[
     val("arch", "A"),
@@ -139,7 +139,8 @@ const SUBCOMMANDS: &[(&str, &[Flag])] = &[
 /// Render the usage text from the flag tables.
 fn usage() -> String {
     let mut out = String::from(
-        "usage: omnivore [--artifacts DIR] <train|optimize|sweep|simulate|bayesian|info> [flags]\n",
+        "usage: omnivore [--artifacts DIR] [--backend stub|native|auto] \
+         <train|optimize|sweep|simulate|bayesian|info> [flags]\n",
     );
     for (name, flags) in SUBCOMMANDS {
         let mut line = format!("  {name}:");
@@ -252,12 +253,20 @@ fn main() -> Result<()> {
 /// Load the runtime with the artifacts-dir precedence: explicit
 /// `--artifacts` flag > spec/config file > default. The resolved dir is
 /// written back into the spec so the stored outcome records what ran.
+/// Same precedence for `--backend` (flag > spec field > auto); the
+/// resolved policy lands in the spec so the outcome records it.
 fn load_runtime(cx: &Cx, spec: &mut RunSpec) -> Result<Runtime> {
     let explicit = cx.opt_str("artifacts");
     let dir =
         resolve_artifacts_dir(explicit.as_deref(), Some(&spec.train.artifacts_dir));
     spec.train.artifacts_dir = dir.clone();
-    Runtime::load(&dir)
+    if let Some(backend) = cx.opt_str("backend") {
+        omnivore::backend::BackendChoice::parse(&backend)?;
+        spec.backend = Some(backend);
+    }
+    let rt = Runtime::load(&dir)?;
+    rt.set_backend_choice(spec.backend_choice()?);
+    Ok(rt)
 }
 
 fn store_outcome(runs_dir: &str, outcome: &RunOutcome) -> Result<()> {

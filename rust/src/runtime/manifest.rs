@@ -211,6 +211,187 @@ impl Manifest {
     pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactEntry> {
         self.artifacts.iter().filter(|a| a.kind == kind).collect()
     }
+
+    /// Sorted artifact names, for actionable "not found" errors.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The manifest `python/compile/aot.py` would emit for the three
+    /// reference architectures, constructed in-process.
+    ///
+    /// The native backend executes artifacts from their manifest entry
+    /// alone (kind + shapes), so no HLO files or `artifacts/` directory
+    /// are needed; `Runtime::load` falls back to this when
+    /// `manifest.json` is absent. The `file` fields still name the HLO
+    /// paths aot.py would write, so the stub backend fails with a
+    /// missing-file error rather than a schema error.
+    pub fn builtin() -> Self {
+        let f32s = |shape: &[usize]| TensorSpec { shape: shape.to_vec(), dtype: "float32".into() };
+        let i32s = |shape: &[usize]| TensorSpec { shape: shape.to_vec(), dtype: "int32".into() };
+        let numel = |s: &[usize]| s.iter().product::<usize>();
+
+        // (name, h, w, cin, c1, c2, f1, ncls) — python/compile/model.ARCHS.
+        let arch_rows: [(&str, usize, usize, usize, usize, usize, usize, usize); 3] = [
+            ("lenet", 28, 28, 1, 16, 32, 128, 10),
+            ("cifar", 32, 32, 3, 32, 64, 256, 10),
+            ("caffenet8", 32, 32, 3, 32, 64, 256, 8),
+        ];
+
+        let mut archs = HashMap::new();
+        let mut artifacts = Vec::new();
+        for &(name, h, w, cin, c1, c2, f1, ncls) in &arch_rows {
+            let k = 5usize;
+            let feat = (h / 4) * (w / 4) * c2;
+            let shapes: [(&str, Vec<usize>); 8] = [
+                ("wc1", vec![k, k, cin, c1]),
+                ("bc1", vec![c1]),
+                ("wc2", vec![k, k, c1, c2]),
+                ("bc2", vec![c2]),
+                ("wf1", vec![feat, f1]),
+                ("bf1", vec![f1]),
+                ("wf2", vec![f1, ncls]),
+                ("bf2", vec![ncls]),
+            ];
+            let params: Vec<ParamSpec> = shapes
+                .iter()
+                .map(|(n, s)| ParamSpec { name: (*n).into(), shape: s.clone() })
+                .collect();
+            let bytes = |ps: &[ParamSpec]| 4 * ps.iter().map(|p| numel(&p.shape)).sum::<usize>();
+            let info = ArchInfo {
+                input: vec![h, w, cin],
+                ncls,
+                feat,
+                k,
+                n_conv_params: 4,
+                conv_bytes: bytes(&params[..4]),
+                fc_bytes: bytes(&params[4..]),
+                params,
+            };
+            let conv_ps: Vec<TensorSpec> = shapes[..4].iter().map(|(_, s)| f32s(s)).collect();
+            let fc_ps: Vec<TensorSpec> = shapes[4..].iter().map(|(_, s)| f32s(s)).collect();
+            let all_ps: Vec<TensorSpec> = shapes.iter().map(|(_, s)| f32s(s)).collect();
+            let grads = |ps: &[TensorSpec]| ps.to_vec();
+            for variant in ["jnp", "pallas"] {
+                for b in [4usize, 8, 16, 32] {
+                    let x = f32s(&[b, h, w, cin]);
+                    let act = f32s(&[b, feat]);
+                    let labels = i32s(&[b]);
+                    let scalar = f32s(&[]);
+                    let kinds: [(&str, Vec<TensorSpec>, Vec<TensorSpec>); 5] = [
+                        (
+                            "conv_fwd",
+                            [vec![x.clone()], conv_ps.clone()].concat(),
+                            vec![act.clone()],
+                        ),
+                        (
+                            "conv_bwd",
+                            [vec![x.clone()], conv_ps.clone(), vec![act.clone()]].concat(),
+                            grads(&conv_ps),
+                        ),
+                        (
+                            "fc_step",
+                            [vec![act.clone(), labels.clone()], fc_ps.clone()].concat(),
+                            [
+                                vec![scalar.clone(), scalar.clone(), act.clone()],
+                                grads(&fc_ps),
+                            ]
+                            .concat(),
+                        ),
+                        (
+                            "full_step",
+                            [vec![x.clone(), labels.clone()], all_ps.clone()].concat(),
+                            [vec![scalar.clone(), scalar.clone()], grads(&all_ps)].concat(),
+                        ),
+                        ("infer", [vec![x.clone()], all_ps.clone()].concat(), vec![
+                            f32s(&[b, ncls]),
+                        ]),
+                    ];
+                    for (kind, inputs, outputs) in kinds {
+                        // 2*N_out*K macs per conv, both layers, fwd only.
+                        let conv_flops = 2.0
+                            * (b * h * w * k * k * cin * c1
+                                + b * (h / 2) * (w / 2) * k * k * c1 * c2)
+                                as f64;
+                        artifacts.push(ArtifactEntry {
+                            name: format!("{name}_{variant}_{kind}_b{b}"),
+                            file: format!("{name}_{variant}_{kind}_b{b}.hlo.txt"),
+                            inputs,
+                            outputs,
+                            arch: Some(name.into()),
+                            variant: Some(variant.into()),
+                            kind: kind.into(),
+                            batch: Some(b),
+                            // CPU strategy: lower the whole microbatch at
+                            // once (paper §III).
+                            b_p: Some(b),
+                            n: None,
+                            gflops: Some(conv_flops * 1e-9),
+                            lowered_bytes: None,
+                        });
+                    }
+                }
+            }
+            archs.insert(name.to_string(), info);
+        }
+
+        // Single-conv bench artifacts (fig 3/4/11): x (b,16,16,32) ⊛
+        // w (5,5,32,64), SAME padding.
+        let (bh, bw, bcin, bcout, bk) = (16usize, 16usize, 32usize, 64usize, 5usize);
+        let chunk_gflops =
+            |b: usize| 2.0 * (b * bh * bw * bk * bk * bcin * bcout) as f64 * 1e-9;
+        let chunk_lowered = |b: usize| 4 * b * bh * bw * bk * bk * bcin;
+        for bp in [1usize, 32] {
+            artifacts.push(ArtifactEntry {
+                name: format!("convbench_bp{bp}"),
+                file: format!("convbench_bp{bp}.hlo.txt"),
+                inputs: vec![f32s(&[32, bh, bw, bcin]), f32s(&[bk, bk, bcin, bcout])],
+                outputs: vec![f32s(&[32, bh, bw, bcout])],
+                arch: None,
+                variant: None,
+                kind: "convbench".into(),
+                batch: Some(32),
+                b_p: Some(bp),
+                n: None,
+                gflops: Some(chunk_gflops(32)),
+                lowered_bytes: Some(chunk_lowered(bp)),
+            });
+        }
+        for bp in [1usize, 2, 4, 8, 16, 32] {
+            artifacts.push(ArtifactEntry {
+                name: format!("convchunk_jnp_b{bp}"),
+                file: format!("convchunk_jnp_b{bp}.hlo.txt"),
+                inputs: vec![f32s(&[bp, bh, bw, bcin]), f32s(&[bk, bk, bcin, bcout])],
+                outputs: vec![f32s(&[bp, bh, bw, bcout])],
+                arch: None,
+                variant: Some("jnp".into()),
+                kind: "convchunk".into(),
+                batch: Some(bp),
+                b_p: Some(bp),
+                n: None,
+                gflops: Some(chunk_gflops(bp)),
+                lowered_bytes: Some(chunk_lowered(bp)),
+            });
+        }
+        artifacts.push(ArtifactEntry {
+            name: "gemmbench_xla_512".into(),
+            file: "gemmbench_xla_512.hlo.txt".into(),
+            inputs: vec![f32s(&[512, 512]), f32s(&[512, 512])],
+            outputs: vec![f32s(&[512, 512])],
+            arch: None,
+            variant: None,
+            kind: "gemm".into(),
+            batch: None,
+            b_p: None,
+            n: Some(512),
+            gflops: Some(2.0 * 512f64.powi(3) * 1e-9),
+            lowered_bytes: None,
+        });
+
+        Self { group_batch: 32, archs, artifacts }
+    }
 }
 
 #[cfg(test)]
@@ -258,6 +439,60 @@ mod tests {
         assert_eq!(m.pick_batch("lenet", "jnp", "conv_fwd", 5), Some(16));
         assert_eq!(m.pick_batch("lenet", "jnp", "conv_fwd", 99), Some(16));
         assert_eq!(m.pick_batch("lenet", "jnp", "conv_bwd", 4), None);
+    }
+
+    #[test]
+    fn builtin_covers_every_phase_artifact() {
+        let m = Manifest::builtin();
+        assert_eq!(m.group_batch, 32);
+        for arch in ["lenet", "cifar", "caffenet8"] {
+            let info = m.arch(arch).unwrap();
+            assert_eq!(info.params.len(), 8, "{arch}");
+            assert_eq!(info.n_conv_params, 4, "{arch}");
+            for variant in ["jnp", "pallas"] {
+                for kind in ["conv_fwd", "conv_bwd", "fc_step", "full_step", "infer"] {
+                    assert_eq!(
+                        m.batches_for(arch, variant, kind),
+                        vec![4, 8, 16, 32],
+                        "{arch}/{variant}/{kind}"
+                    );
+                }
+            }
+        }
+        // The fig 3/4/11 bench entries.
+        for name in ["convbench_bp1", "convbench_bp32", "gemmbench_xla_512"] {
+            m.entry(name).unwrap();
+        }
+        assert_eq!(m.by_kind("convchunk").len(), 6);
+        // Shape plumbing matches the coordinator's expectations.
+        let e = m.phase_artifact("lenet", "jnp", "conv_fwd", 8).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![8, 28, 28, 1]);
+        assert_eq!(e.outputs[0].shape, vec![8, 1568]);
+        let fc = m.phase_artifact("cifar", "jnp", "fc_step", 32).unwrap();
+        assert_eq!(fc.inputs.len(), 2 + 4);
+        assert_eq!(fc.outputs.len(), 3 + 4);
+        assert_eq!(fc.inputs[1].dtype, "int32");
+        let fs = m.phase_artifact("caffenet8", "pallas", "full_step", 4).unwrap();
+        assert_eq!(fs.inputs.len(), 2 + 8);
+        assert_eq!(fs.outputs.len(), 2 + 8);
+        assert_eq!(fs.outputs[2].shape, vec![5, 5, 3, 32]);
+        // conv_bytes/fc_bytes are 4x the parameter numels.
+        let lenet = m.arch("lenet").unwrap();
+        assert_eq!(lenet.feat, 1568);
+        assert_eq!(
+            lenet.conv_bytes,
+            4 * (5 * 5 * 16 + 16 + 5 * 5 * 16 * 32 + 32)
+        );
+    }
+
+    #[test]
+    fn builtin_names_are_unique_and_listed() {
+        let m = Manifest::builtin();
+        let names = m.artifact_names();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "duplicate artifact names");
+        assert_eq!(names.len(), 3 * 2 * 5 * 4 + 2 + 6 + 1);
     }
 
     #[test]

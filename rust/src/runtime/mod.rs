@@ -40,9 +40,13 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 #[cfg(feature = "xla")]
+use crate::backend::{Backend, BackendChoice, BackendSel, NativeBackend, StubBackend};
+#[cfg(feature = "xla")]
+use crate::config::DeviceKind;
+#[cfg(feature = "xla")]
 use crate::tensor::HostTensor;
 
-/// Counters for the L3 perf story: how much time goes to XLA execution
+/// Counters for the L3 perf story: how much time goes to kernel execution
 /// vs. everything else the coordinator does.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct RuntimeStats {
@@ -75,6 +79,12 @@ pub struct Runtime {
     executions: AtomicU64,
     execute_nanos: AtomicU64,
     compile_nanos: AtomicU64,
+    /// `--backend` / `RunSpec.backend` policy (default [`BackendChoice::Auto`]).
+    backend_choice: Mutex<BackendChoice>,
+    native: NativeBackend,
+    stub: StubBackend,
+    native_execs: AtomicU64,
+    stub_execs: AtomicU64,
 }
 
 // SAFETY: see "Thread safety" above — PJRT CPU execution is thread-safe;
@@ -88,9 +98,18 @@ unsafe impl Sync for Runtime {}
 impl Runtime {
     /// Open the artifacts directory, parse the manifest, create the PJRT
     /// CPU client. No artifact is compiled yet.
+    ///
+    /// When the directory has no `manifest.json`, the built-in manifest
+    /// (the same inventory aot.py emits) is used: the native backend
+    /// executes from manifest entries alone, so a checkout with no
+    /// generated `artifacts/` still trains end to end.
     pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = artifacts_dir.into();
-        let manifest = Manifest::load(&dir)?;
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(&dir)?
+        } else {
+            Manifest::builtin()
+        };
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
             client,
@@ -100,11 +119,94 @@ impl Runtime {
             executions: AtomicU64::new(0),
             execute_nanos: AtomicU64::new(0),
             compile_nanos: AtomicU64::new(0),
+            backend_choice: Mutex::new(BackendChoice::Auto),
+            native: NativeBackend,
+            stub: StubBackend,
+            native_execs: AtomicU64::new(0),
+            stub_execs: AtomicU64::new(0),
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Set the backend selection policy (CLI `--backend`, `RunSpec.backend`).
+    pub fn set_backend_choice(&self, choice: BackendChoice) {
+        *self.backend_choice.lock().unwrap() = choice;
+    }
+
+    pub fn backend_choice(&self) -> BackendChoice {
+        *self.backend_choice.lock().unwrap()
+    }
+
+    /// Resolve the policy against one artifact: `Auto` collapses to
+    /// native when the artifact's kind has a native kernel, stub
+    /// otherwise; `Native` on an unsupported kind is an upfront error
+    /// (better at topology build than mid-training).
+    pub fn select(&self, entry: &ArtifactEntry) -> Result<BackendSel> {
+        match self.backend_choice() {
+            BackendChoice::Stub => Ok(BackendSel::Stub),
+            BackendChoice::Native => {
+                anyhow::ensure!(
+                    self.native.supports(entry),
+                    "backend native cannot execute artifact {:?} (kind {:?}; native kinds: {:?})",
+                    entry.name,
+                    entry.kind,
+                    crate::backend::NATIVE_KINDS,
+                );
+                Ok(BackendSel::Native)
+            }
+            BackendChoice::Auto => Ok(if self.native.supports(entry) {
+                BackendSel::Native
+            } else {
+                BackendSel::Stub
+            }),
+        }
+    }
+
+    /// Per-device-group backend resolution. The native kernels are
+    /// CPU-only, but they also *simulate* GPU/hybrid groups faithfully
+    /// (the math is device-independent; the engine's virtual clock owns
+    /// device speed), so today every `DeviceKind` maps through the same
+    /// policy. A real GPU PJRT backend would branch on `kind` here —
+    /// this is the one seam that change needs.
+    pub fn backend_for(&self, kind: DeviceKind, entry: &ArtifactEntry) -> Result<BackendSel> {
+        let _ = kind;
+        self.select(entry)
+    }
+
+    /// Which backend actually executed this run: "native", "stub",
+    /// "mixed" if both ran, or the policy name if nothing executed yet.
+    pub fn executed_backend_name(&self) -> &'static str {
+        let n = self.native_execs.load(Ordering::Relaxed) > 0;
+        let s = self.stub_execs.load(Ordering::Relaxed) > 0;
+        match (n, s) {
+            (true, true) => "mixed",
+            (true, false) => "native",
+            (false, true) => "stub",
+            (false, false) => self.backend_choice().name(),
+        }
+    }
+
+    /// Manifest lookup with an actionable error: names the artifact, the
+    /// active backend policy, and what the manifest does offer.
+    fn entry_rich(&self, name: &str) -> Result<&ArtifactEntry> {
+        if let Ok(e) = self.manifest.entry(name) {
+            return Ok(e);
+        }
+        let names = self.manifest.artifact_names();
+        let shown = 16.min(names.len());
+        let mut listing = names[..shown].join(", ");
+        if names.len() > shown {
+            listing.push_str(&format!(", ... ({} more)", names.len() - shown));
+        }
+        anyhow::bail!(
+            "artifact {name:?} not in manifest at {} (backend {}; {} artifacts available: {listing})",
+            self.dir.display(),
+            self.backend_choice().name(),
+            names.len(),
+        )
     }
 
     /// Compile (and cache) an artifact by manifest name; returns the
@@ -127,7 +229,7 @@ impl Runtime {
         if let Some(exe) = *slot {
             return Ok(exe);
         }
-        let entry = self.manifest.entry(name)?;
+        let entry = self.entry_rich(name)?;
         let path = self.dir.join(&entry.file);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
@@ -151,37 +253,67 @@ impl Runtime {
         name: &str,
         inputs: &[xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
-        let exe = self.compile(name)?;
-        let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {name}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {name}"))?;
-        let outs = tuple.to_tuple()?;
-        self.executions.fetch_add(1, Ordering::Relaxed);
-        self.execute_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Ok(outs)
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.execute_refs(name, &refs)
     }
 
     /// Execute with pre-converted literal references (hot path: callers
-    /// cache input literals across calls instead of re-converting).
+    /// cache input literals across calls instead of re-converting),
+    /// resolving the backend per artifact from the active policy.
     pub fn execute_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.compile(name)?;
+        let sel = self.select(self.entry_rich(name)?)?;
+        self.execute_refs_on(sel, name, inputs)
+    }
+
+    /// Execute on an already-resolved backend (compute groups and the
+    /// merged-FC server resolve once at topology build, then pin).
+    pub fn execute_refs_on(
+        &self,
+        sel: BackendSel,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let entry = self.entry_rich(name)?;
+        let backend: &dyn Backend = match sel {
+            BackendSel::Native => &self.native,
+            BackendSel::Stub => &self.stub,
+        };
         let t0 = Instant::now();
+        let outs = backend.execute(self, entry, inputs).with_context(|| {
+            let hint = if sel == BackendSel::Stub && self.native.supports(entry) {
+                " (hint: `--backend native` executes this kind without a real PJRT)"
+            } else {
+                ""
+            };
+            format!("executing {name} on {} backend{hint}", sel.name())
+        })?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.execute_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match sel {
+            BackendSel::Native => &self.native_execs,
+            BackendSel::Stub => &self.stub_execs,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        Ok(outs)
+    }
+
+    /// The raw PJRT path ([`StubBackend`] body): compile the artifact's
+    /// HLO and run it on the client. Counters are owned by the caller
+    /// (`execute_refs_on`), which times every backend uniformly.
+    pub(crate) fn stub_execute_refs(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.compile(name)?;
         let result = exe
             .execute::<&xla::Literal>(inputs)
             .with_context(|| format!("executing {name}"))?;
         let tuple = result[0][0]
             .to_literal_sync()
             .with_context(|| format!("fetching result of {name}"))?;
-        let outs = tuple.to_tuple()?;
-        self.executions.fetch_add(1, Ordering::Relaxed);
-        self.execute_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Ok(outs)
+        Ok(tuple.to_tuple()?)
     }
 
     /// Execute with f32 host tensors only.

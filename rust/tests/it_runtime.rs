@@ -131,7 +131,16 @@ fn unknown_artifact_errors_cleanly() {
 
 #[test]
 fn compile_cache_reused() {
+    // Compilation is the stub/PJRT path's concern: it needs the HLO text
+    // on disk. The native backend executes from the manifest alone, so a
+    // checkout without generated artifacts skips this one.
     let rt = runtime();
+    let entry = rt.manifest().entry("lenet_jnp_infer_b32").unwrap();
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join(&entry.file).exists() {
+        eprintln!("skipping compile_cache_reused: run `make artifacts` to emit HLO text");
+        return;
+    }
     rt.compile("lenet_jnp_infer_b32").unwrap();
     let before = rt.stats().compile_secs;
     rt.compile("lenet_jnp_infer_b32").unwrap();

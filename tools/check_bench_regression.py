@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_*.json against its committed baseline.
+
+Usage: check_bench_regression.py BASELINE FRESH [--tolerance 0.15]
+
+Schema (written by benches/support write_bench_json): {"bench", "bootstrap",
+"rows": [{"key", "kernel", "shape", "b_p", "threads", "gflops", "mean_secs"}]}.
+
+Checks, in order:
+
+1. PHYSICS (always, on the fresh run): the paper's b_p effect must hold —
+   for at least one conv shape, the b_p = b row beats the b_p = 1 row
+   (one large lowered GEMM >= many small ones, paper Fig 4). A fresh run
+   where batching stopped winning is a kernel regression no matter what
+   the baseline says.
+2. THROUGHPUT DIFF (only against a non-bootstrap baseline): per row key
+   present in BOTH files, normalized throughput (row gflops / calibration
+   row gflops, calibration = single-thread 256^3 GEMM) must not drop more
+   than --tolerance below the baseline's. Normalizing by the calibration
+   row makes the diff about the SHAPE of the perf profile, not the CI
+   machine of the week. Rows only in one file warn (thread sweeps are
+   machine-dependent) — they never fail the build.
+
+A baseline with "bootstrap": true was seeded without trustworthy absolute
+numbers (e.g. committed from a box that cannot run the Rust toolchain):
+step 2 is skipped with a warning. Refresh the baseline by copying the
+fresh results file over it once step 1 passes on real hardware.
+"""
+
+import argparse
+import json
+import sys
+
+CALIBRATION_KEY = "gemm_256x256x256_t1"
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["key"]: r for r in doc.get("rows", [])}
+    if not rows:
+        sys.exit(f"error: {path} has no rows")
+    return doc, rows
+
+
+def check_bp_effect(rows, label):
+    """Paper Fig 4: b_p = b beats b_p = 1 on >= 1 conv shape."""
+    by_shape = {}
+    for r in rows.values():
+        if r.get("kernel") == "conv" and r.get("b_p", 0) > 0:
+            by_shape.setdefault(r["shape"], []).append(r)
+    if not by_shape:
+        print(f"warning: {label} has no conv b_p sweep; skipping b_p check")
+        return True
+    wins = []
+    for shape, group in sorted(by_shape.items()):
+        group.sort(key=lambda r: r["b_p"])
+        lo, hi = group[0], group[-1]
+        if lo["b_p"] == hi["b_p"]:
+            continue
+        ratio = hi["gflops"] / lo["gflops"] if lo["gflops"] else float("inf")
+        ok = hi["gflops"] > lo["gflops"]
+        wins.append(ok)
+        print(
+            f"  b_p effect [{shape}]: b_p={hi['b_p']} {hi['gflops']:.2f} GFLOP/s "
+            f"vs b_p={lo['b_p']} {lo['gflops']:.2f} ({ratio:.2f}x) "
+            f"{'OK' if ok else 'NO WIN'}"
+        )
+    if not any(wins):
+        print(f"FAIL: {label}: b_p=b no longer beats b_p=1 on any conv shape")
+        return False
+    return True
+
+
+def check_regressions(base_rows, fresh_rows, tolerance):
+    cal_b = base_rows.get(CALIBRATION_KEY)
+    cal_f = fresh_rows.get(CALIBRATION_KEY)
+    if not cal_b or not cal_f:
+        print(
+            f"warning: calibration row {CALIBRATION_KEY!r} missing "
+            "(baseline and fresh must share it); comparing raw GFLOP/s"
+        )
+        norm_b = norm_f = 1.0
+    else:
+        norm_b, norm_f = cal_b["gflops"], cal_f["gflops"]
+    shared = sorted(set(base_rows) & set(fresh_rows) - {CALIBRATION_KEY})
+    only_base = sorted(set(base_rows) - set(fresh_rows))
+    only_fresh = sorted(set(fresh_rows) - set(base_rows))
+    for k in only_base:
+        print(f"warning: row {k!r} in baseline but not in fresh run (machine-dependent sweep?)")
+    for k in only_fresh:
+        print(f"note: new row {k!r} not in baseline yet")
+    ok = True
+    for k in shared:
+        b = base_rows[k]["gflops"] / norm_b
+        f = fresh_rows[k]["gflops"] / norm_f
+        drop = 1.0 - f / b if b else 0.0
+        status = "ok"
+        if drop > tolerance:
+            status = f"REGRESSION ({drop:.0%} > {tolerance:.0%})"
+            ok = False
+        print(f"  {k}: baseline {b:.3f} fresh {f:.3f} (normalized) {status}")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="max allowed normalized throughput drop per row")
+    args = ap.parse_args()
+
+    base_doc, base_rows = load(args.baseline)
+    _fresh_doc, fresh_rows = load(args.fresh)
+
+    print(f"checking {args.fresh} against {args.baseline}")
+    ok = check_bp_effect(fresh_rows, args.fresh)
+
+    if base_doc.get("bootstrap"):
+        print(
+            f"baseline {args.baseline} is bootstrap (seeded off-toolchain): "
+            "skipping throughput diff.\n"
+            f"refresh it with: cp {args.fresh} {args.baseline}"
+        )
+    else:
+        ok = check_regressions(base_rows, fresh_rows, args.tolerance) and ok
+
+    if not ok:
+        sys.exit(1)
+    print("bench check passed")
+
+
+if __name__ == "__main__":
+    main()
