@@ -1,0 +1,460 @@
+//! omnifuzz: deterministic structure-aware fuzzing of the untrusted
+//! omnivore surfaces (DESIGN.md §Analysis). No cargo-fuzz/libfuzzer —
+//! cases derive from `omnivore::util::rng::Rng` with a fixed seed, so a
+//! CI smoke run is exactly reproducible and any finding is replayable
+//! from its printed case number.
+//!
+//! Surfaces and oracles:
+//!
+//! * `runspec` / `fault` / `drift` — grammar-level mutations of
+//!   RunSpec / FaultSchedule / ProfileDrift JSON plus raw byte
+//!   corruption. Oracle: no panic, validation errors only, and
+//!   parse -> serialize -> parse is a fixpoint.
+//! * `checkpoint` — byte-level corruption of `OMNIVCK2` containers.
+//!   Oracle: no panic, bounded allocation, errors only.
+//! * `plan` — random PlanController event sequences, via the
+//!   `data::plan_script` grammar and the direct API. Oracle: epoch
+//!   shares always sum to the batch (plus the `invariants` feature's
+//!   internal checks, which this binary always builds with).
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage error. Minimized findings
+//! land in `fuzz/corpus/` by hand and replay forever as regression
+//! tests (`rust/tests/it_fuzz_regressions.rs`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::process::ExitCode;
+
+use anyhow::Result;
+use omnivore::api::RunSpec;
+use omnivore::config::{ClusterSpec, FaultSchedule, ProfileDrift};
+use omnivore::data::{plan_script, AdaptivePolicy, BatchPlan, PlanController};
+use omnivore::model::{load_checkpoint_state, save_checkpoint_at, ParamSet};
+use omnivore::tensor::HostTensor;
+use omnivore::util::cli::Args;
+use omnivore::util::json::Json;
+use omnivore::util::rng::Rng;
+
+/// Findings printed in full per surface; the rest are only counted.
+const MAX_REPORTS: usize = 5;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(0) => {
+            println!("omnifuzz: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(n) => {
+            println!("omnifuzz: {n} finding(s)");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("omnifuzz: {e}");
+            eprintln!("usage: omnifuzz [--surface all|runspec|fault|drift|checkpoint|plan]");
+            eprintln!("                [--cases N] [--seed S]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<usize> {
+    let args = Args::from_env()?;
+    let surface = args.str("surface", "all");
+    let cases = args.get("cases", 10_000usize)?;
+    let seed = args.get("seed", 1u64)?;
+    args.finish()?;
+    // Keep thousands of expected-Err cases from spraying panic
+    // backtraces; every finding is reported with its case number and
+    // input below.
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let all = surface == "all";
+    let mut findings = 0usize;
+    let mut ran = 0usize;
+    for (name, fuzz) in [
+        ("runspec", fuzz_runspec as fn(usize, u64) -> Result<usize>),
+        ("fault", fuzz_fault),
+        ("drift", fuzz_drift),
+        ("checkpoint", fuzz_checkpoint),
+        ("plan", fuzz_plan),
+    ] {
+        if !(all || surface == name) {
+            continue;
+        }
+        ran += 1;
+        let n = fuzz(cases, seed).map_err(|e| anyhow::anyhow!("{name}: harness error: {e}"))?;
+        println!("omnifuzz: {name}: {cases} cases, {n} finding(s)");
+        findings += n;
+    }
+    anyhow::ensure!(ran > 0, "unknown surface {surface:?}");
+    Ok(findings)
+}
+
+fn case_rng(seed: u64, salt: u64, case: usize) -> Rng {
+    Rng::seed_from_u64(seed ^ salt ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn report(surface: &str, case: usize, shown: &mut usize, msg: &str, input: &str) {
+    *shown += 1;
+    if *shown > MAX_REPORTS {
+        return;
+    }
+    let input: String = input.chars().take(240).collect();
+    println!("omnifuzz: FINDING [{surface}] case {case}: {msg}");
+    println!("omnifuzz:   input: {input}");
+}
+
+// ---------------------------------------------------------------------------
+// JSON grammar mutations
+// ---------------------------------------------------------------------------
+
+fn hostile_scalar(rng: &mut Rng) -> Json {
+    match rng.below(10) {
+        0 => Json::Num(1e308),
+        1 => Json::Num(-1e308),
+        2 => Json::Num(4_294_967_296.0),
+        3 => Json::Num(-1.0),
+        4 => Json::Num(0.0),
+        5 => Json::Num(rng.f64()),
+        6 => Json::Str("f".repeat(rng.below(64))),
+        7 => Json::Null,
+        8 => Json::Arr(vec![]),
+        _ => Json::Bool(rng.bool()),
+    }
+}
+
+/// One grammar-level mutation at a random node: insert an unknown key,
+/// drop a key, append an element, or replace the node with a hostile
+/// scalar.
+fn mutate(v: &mut Json, rng: &mut Rng, depth: usize) {
+    let descend = depth < 4 && rng.bool();
+    match v {
+        Json::Obj(m) if descend && !m.is_empty() => {
+            let keys: Vec<String> = m.keys().cloned().collect();
+            let k = &keys[rng.below(keys.len())];
+            mutate(m.get_mut(k).expect("key just listed"), rng, depth + 1);
+        }
+        Json::Arr(a) if descend && !a.is_empty() => {
+            let i = rng.below(a.len());
+            mutate(&mut a[i], rng, depth + 1);
+        }
+        node => {
+            let op = rng.below(4);
+            let s = hostile_scalar(rng);
+            match node {
+                Json::Obj(m) if op == 0 => {
+                    m.insert(format!("fuzz_{}", rng.below(1000)), s);
+                }
+                Json::Obj(m) if op == 1 && !m.is_empty() => {
+                    let keys: Vec<String> = m.keys().cloned().collect();
+                    m.remove(&keys[rng.below(keys.len())]);
+                }
+                Json::Arr(a) if op == 2 => a.push(s),
+                other => *other = s,
+            }
+        }
+    }
+}
+
+/// Serialize a mutated seed; a quarter of cases additionally corrupt
+/// raw bytes, so the `Json::parse` layer itself gets exercised.
+fn mutated_text(seeds: &[Json], rng: &mut Rng) -> String {
+    let mut v = seeds[rng.below(seeds.len())].clone();
+    for _ in 0..1 + rng.below(4) {
+        mutate(&mut v, rng, 0);
+    }
+    let mut bytes = v.dump().into_bytes();
+    if rng.below(4) == 0 && !bytes.is_empty() {
+        for _ in 0..1 + rng.below(8) {
+            let i = rng.below(bytes.len());
+            bytes[i] = rng.next_u64() as u8;
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// The shared oracle for a JSON parse surface. `parse_dump` validates a
+/// parsed document and re-serializes it; this panics (= a finding) if a
+/// serialized accepted value fails to re-parse, re-validate, or reach a
+/// serialization fixpoint.
+fn check_json_case(name: &str, parse_dump: fn(&Json) -> Result<Json>, text: &str) {
+    let Ok(v) = Json::parse(text) else { return };
+    let Ok(d1) = parse_dump(&v).map(|j| j.dump()) else { return };
+    let v2 = Json::parse(&d1)
+        .unwrap_or_else(|e| panic!("accepted {name} serialized to unparseable JSON: {e}"));
+    let d2 = parse_dump(&v2)
+        .unwrap_or_else(|e| panic!("serialized {name} fails its own validation: {e}"))
+        .dump();
+    assert_eq!(d1, d2, "{name}: parse -> serialize -> parse is not a fixpoint");
+}
+
+fn fuzz_json_surface(
+    name: &'static str,
+    salt: u64,
+    seeds: Vec<Json>,
+    parse_dump: fn(&Json) -> Result<Json>,
+    cases: usize,
+    seed: u64,
+) -> Result<usize> {
+    anyhow::ensure!(!seeds.is_empty(), "no seeds for {name}");
+    // Every seed must pass the oracle unmutated, or the fuzzer is
+    // testing nothing.
+    for (i, s) in seeds.iter().enumerate() {
+        let text = s.dump();
+        parse_dump(s).map_err(|e| anyhow::anyhow!("{name} seed {i} rejected: {e}"))?;
+        check_json_case(name, parse_dump, &text);
+    }
+    let mut findings = 0;
+    let mut shown = 0;
+    for case in 0..cases {
+        let mut rng = case_rng(seed, salt, case);
+        let text = mutated_text(&seeds, &mut rng);
+        if let Err(e) = catch_unwind(AssertUnwindSafe(|| {
+            check_json_case(name, parse_dump, &text);
+        })) {
+            findings += 1;
+            report(name, case, &mut shown, &panic_msg(e), &text);
+        }
+    }
+    Ok(findings)
+}
+
+// ---------------------------------------------------------------------------
+// Surfaces
+// ---------------------------------------------------------------------------
+
+fn fuzz_runspec(cases: usize, seed: u64) -> Result<usize> {
+    // Seed 0: a legacy bare-TrainConfig document (the lenient path).
+    let legacy = RunSpec::default().train.to_json();
+    // Seed 1: the same run in the versioned envelope.
+    let versioned = RunSpec::from_json(&legacy)?.to_json();
+    // Seed 2: versioned, with a full cluster object, drift, and faults.
+    let mut rich = versioned.clone();
+    if let Json::Obj(top) = &mut rich {
+        if let Some(Json::Obj(train)) = top.get_mut("train") {
+            let mut cluster = ClusterSpec::from_json(&Json::Str("gpu-s".into()))?.to_json();
+            if let Json::Obj(c) = &mut cluster {
+                c.insert(
+                    "group_profiles".into(),
+                    Json::Arr(vec![
+                        Json::Str("gpu".into()),
+                        Json::parse(
+                            r#"{"kind":"cpu","conv_speed":1.0,"fc_speed":1.0,
+                                "drift":{"kind":"step","at":6.0,"factor":0.333}}"#,
+                        )?,
+                    ]),
+                );
+            }
+            train.insert("cluster".into(), cluster);
+            let faults = FaultSchedule::preset("faulty-s")
+                .ok_or_else(|| anyhow::anyhow!("faulty-s preset missing"))?;
+            train.insert("faults".into(), faults.to_json());
+        }
+    }
+    let seeds = vec![legacy, versioned, rich];
+    fuzz_json_surface("runspec", 0x57ec, seeds, runspec_parse_dump, cases, seed)
+}
+
+fn runspec_parse_dump(v: &Json) -> Result<Json> {
+    RunSpec::from_json(v).map(|s| s.to_json())
+}
+
+fn fuzz_fault(cases: usize, seed: u64) -> Result<usize> {
+    let preset = FaultSchedule::preset("faulty-s")
+        .ok_or_else(|| anyhow::anyhow!("faulty-s preset missing"))?;
+    let seeds = vec![
+        preset.to_json(),
+        Json::parse(
+            r#"{"fault_version":1,"replay_stale":false,
+                "events":[{"kind":"stall","group":1,"from":2.0,"to":3.5},
+                          {"kind":"crash","group":0,"at":4.0},
+                          {"kind":"restart","group":0,"at":9.0},
+                          {"kind":"fc_partition","from":5.0,"to":6.0}]}"#,
+        )?,
+    ];
+    fuzz_json_surface("fault", 0xfa17, seeds, fault_parse_dump, cases, seed)
+}
+
+fn fault_parse_dump(v: &Json) -> Result<Json> {
+    FaultSchedule::from_json(v).map(|s| s.to_json())
+}
+
+fn fuzz_drift(cases: usize, seed: u64) -> Result<usize> {
+    let seeds = vec![
+        Json::parse(r#"{"kind":"step","at":6.0,"factor":0.333}"#)?,
+        Json::parse(r#"{"kind":"ramp","from":2.0,"to":10.0,"factor":0.5}"#)?,
+    ];
+    fuzz_json_surface("drift", 0xd21f7, seeds, drift_parse_dump, cases, seed)
+}
+
+fn drift_parse_dump(v: &Json) -> Result<Json> {
+    ProfileDrift::from_json(v).map(|d| d.to_json())
+}
+
+fn fuzz_checkpoint(cases: usize, seed: u64) -> Result<usize> {
+    let dir = omnivore::util::temp_dir("omnifuzz-ckpt")?;
+    let params = ParamSet::from_tensors(
+        vec![
+            HostTensor::new(vec![2, 3], vec![1.0, -2.0, 0.5, 3.25, 0.0, -0.125])?,
+            HostTensor::new(vec![4], vec![9.0, 8.0, 7.0, 6.0])?,
+        ],
+        1,
+    )?;
+    let seed_path = dir.join("seed.ckpt");
+    save_checkpoint_at(&params, 7, &seed_path)?;
+    load_checkpoint_state(&seed_path).map_err(|e| anyhow::anyhow!("seed must load: {e}"))?;
+    let base = std::fs::read(&seed_path)?;
+    let case_path = dir.join("case.ckpt");
+
+    let mut findings = 0;
+    let mut shown = 0;
+    for case in 0..cases {
+        let mut rng = case_rng(seed, 0xc4ec, case);
+        let mut bytes = base.clone();
+        for _ in 0..1 + rng.below(4) {
+            if bytes.is_empty() {
+                bytes.push(rng.next_u64() as u8);
+                continue;
+            }
+            match rng.below(4) {
+                // Flip one byte (magic, header field, or payload).
+                0 => {
+                    let i = rng.below(bytes.len());
+                    bytes[i] = rng.next_u64() as u8;
+                }
+                // Truncate anywhere (torn write).
+                1 => bytes.truncate(rng.below(bytes.len() + 1)),
+                // Splice a hostile u64 over a header-sized window.
+                2 if bytes.len() >= 8 => {
+                    let i = rng.below(bytes.len() - 7);
+                    let v = match rng.below(4) {
+                        0 => u64::MAX,
+                        1 => 1 << 60,
+                        2 => rng.next_u64(),
+                        _ => rng.below(1 << 20) as u64,
+                    };
+                    bytes[i..i + 8].copy_from_slice(&v.to_le_bytes());
+                }
+                // Append garbage (over-long file).
+                _ => bytes.extend((0..rng.below(24)).map(|_| rng.next_u64() as u8)),
+            }
+        }
+        std::fs::write(&case_path, &bytes)?;
+        if let Err(e) = catch_unwind(AssertUnwindSafe(|| {
+            // Err is the expected outcome; Ok means the corruption kept
+            // the container valid. Only a panic is a finding.
+            let _ = load_checkpoint_state(&case_path);
+        })) {
+            findings += 1;
+            let input = format!("{} bytes", bytes.len());
+            report("checkpoint", case, &mut shown, &panic_msg(e), &input);
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+    Ok(findings)
+}
+
+fn fuzz_plan(cases: usize, seed: u64) -> Result<usize> {
+    let mut findings = 0;
+    let mut shown = 0;
+    for case in 0..cases {
+        let mut rng = case_rng(seed, 0x91a2, case);
+        let via_script = rng.bool();
+        let outcome = if via_script {
+            let script = random_script(&mut rng);
+            let text = script.dump();
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                // Validation errors are fine; replay panics only when
+                // the shares-sum oracle breaks.
+                let _ = plan_script::replay(&script);
+            }));
+            (r, text)
+        } else {
+            let r = catch_unwind(AssertUnwindSafe(|| drive_controller(&mut rng)));
+            (r, format!("direct-API sequence (case {case})"))
+        };
+        if let (Err(e), text) = outcome {
+            findings += 1;
+            report("plan", case, &mut shown, &panic_msg(e), &text);
+        }
+    }
+    Ok(findings)
+}
+
+/// A random (often hostile) plan script for [`plan_script::replay`].
+fn random_script(rng: &mut Rng) -> Json {
+    let batch = [0usize, 1, 7, 32, 1 << 10, 1 << 16, 1 << 20][rng.below(7)];
+    let groups = [0usize, 1, 2, 5, 8, 256, 300][rng.below(7)];
+    let mut events = Vec::new();
+    for _ in 0..rng.below(16) {
+        let g = Json::Num(rng.below(10) as f64);
+        let t = Json::Num(hostile_f64(rng));
+        let ev = match rng.below(4) {
+            0 => vec![Json::Str("observe".into()), g, t],
+            1 => vec![Json::Str("member".into()), g, Json::Bool(rng.bool()), t],
+            2 => vec![Json::Str("replan".into()), t],
+            _ => vec![Json::Str("warp".into()), t], // unknown kind: must Err
+        };
+        events.push(Json::Arr(ev));
+    }
+    let mut fields = vec![
+        ("batch", Json::Num(batch as f64)),
+        ("groups", Json::Num(groups as f64)),
+        ("events", Json::Arr(events)),
+    ];
+    if rng.bool() {
+        fields.push(("adaptive", Json::Bool(rng.bool())));
+    }
+    let mut v = Json::obj(fields);
+    if rng.below(4) == 0 {
+        mutate(&mut v, rng, 0);
+    }
+    v
+}
+
+fn hostile_f64(rng: &mut Rng) -> f64 {
+    const POOL: [f64; 9] =
+        [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, 0.0, 1e-12, 0.5, 3.5, 1e12];
+    POOL[rng.below(POOL.len())]
+}
+
+/// Drive a controller through random (partly hostile) API calls,
+/// asserting the plan oracle after every call. Panics are findings.
+fn drive_controller(rng: &mut Rng) {
+    let batch = 1 + rng.below(64);
+    let groups = 1 + rng.below(8);
+    let plan = BatchPlan::equal(batch, groups);
+    let ctrl = if rng.bool() {
+        PlanController::adaptive(plan, AdaptivePolicy::default())
+    } else {
+        PlanController::fixed(plan)
+    };
+    for _ in 0..40 {
+        let g = rng.below(groups + 2); // sometimes out of range
+        match rng.below(4) {
+            0 | 1 => ctrl.observe(g, hostile_f64(rng)),
+            2 => {
+                ctrl.set_membership(g, rng.bool(), hostile_f64(rng));
+            }
+            _ => {
+                ctrl.maybe_replan(hostile_f64(rng));
+            }
+        }
+        let shares = ctrl.current_plan().shares().to_vec();
+        let sum: usize = shares.iter().sum();
+        assert_eq!(sum, batch, "plan oracle violated: shares {shares:?}");
+    }
+    // The epoch trace must stay densely versioned.
+    for (i, e) in ctrl.epochs().iter().enumerate() {
+        assert_eq!(e.version as usize, i, "epoch versions not dense");
+    }
+}

@@ -34,13 +34,10 @@ fn i32_of(l: &xla::Literal) -> Result<Vec<i32>> {
 }
 
 fn lit(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
         dims,
-        bytes,
+        crate::tensor::f32_bytes(data),
     )?)
 }
 

@@ -37,6 +37,29 @@ impl DeviceKind {
     }
 }
 
+/// The full-object [`ClusterSpec`] schema (`api::spec::CLUSTER_FIELDS`
+/// mirrors this list for the embedded form).
+const CLUSTER_SPEC_FIELDS: &[&str] = &[
+    "name",
+    "machines",
+    "tflops_per_machine",
+    "network_gbits",
+    "device",
+    "group_profiles",
+];
+
+/// Unknown-field rejection for the standalone object parsers below,
+/// mirroring `api::spec`'s strict surface: a misspelled knob must fail
+/// loudly instead of being silently ignored.
+fn reject_unknown(v: &Json, ctx: &str, known: &[&str]) -> Result<()> {
+    for key in v.as_obj()?.keys() {
+        if !known.contains(&key.as_str()) {
+            anyhow::bail!("unknown field {key:?} in {ctx}");
+        }
+    }
+    Ok(())
+}
+
 /// A scheduled change of a group's effective speed over virtual time —
 /// the runtime drift (thermal throttling, co-tenant contention, cloud
 /// preemption pressure) that OmniLearn (Tyagi & Sharma 2025) and Ma &
@@ -103,11 +126,13 @@ impl ProfileDrift {
         );
         match v.get("kind")?.as_str()? {
             "step" => {
+                reject_unknown(v, "ProfileDrift(step)", &["kind", "at", "factor"])?;
                 let at = v.get("at")?.as_f64()?;
                 anyhow::ensure!(at.is_finite() && at >= 0.0, "step drift `at` must be >= 0");
                 Ok(ProfileDrift::Step { at, factor })
             }
             "ramp" => {
+                reject_unknown(v, "ProfileDrift(ramp)", &["kind", "from", "to", "factor"])?;
                 let from = v.get("from")?.as_f64()?;
                 let to = v.get("to")?.as_f64()?;
                 anyhow::ensure!(
@@ -214,6 +239,7 @@ impl DeviceProfile {
         if let Json::Str(s) = v {
             return Ok(Self::from_kind(DeviceKind::parse(s)?));
         }
+        reject_unknown(v, "DeviceProfile", &["kind", "conv_speed", "fc_speed", "drift"])?;
         let conv_speed = v.get("conv_speed")?.as_f64()?;
         let fc_speed = v.get("fc_speed")?.as_f64()?;
         // Speeds are divisors in the timing model: a zero, negative, or
@@ -364,6 +390,7 @@ impl ClusterSpec {
             return preset(name)
                 .ok_or_else(|| anyhow::anyhow!("unknown cluster preset {name:?}"));
         }
+        reject_unknown(v, "ClusterSpec", CLUSTER_SPEC_FIELDS)?;
         let group_profiles = match v.opt("group_profiles") {
             Some(Json::Arr(items)) => {
                 items.iter().map(DeviceProfile::from_json).collect::<Result<Vec<_>>>()?
@@ -371,9 +398,18 @@ impl ClusterSpec {
             Some(other) => anyhow::bail!("group_profiles must be an array, got {other:?}"),
             None => vec![],
         };
+        let machines = v.get("machines")?.as_usize()?;
+        // Group counts derive from the machine count and size per-group
+        // vectors everywhere downstream, so a hostile spec must not get
+        // to pick an unbounded allocation (fuzz finding; replayed by
+        // fuzz/corpus/runspec/bad_huge_machines.json).
+        anyhow::ensure!(
+            (1..=MAX_MACHINES).contains(&machines),
+            "machines {machines} outside 1..={MAX_MACHINES}"
+        );
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
-            machines: v.get("machines")?.as_usize()?,
+            machines,
             tflops_per_machine: v.get("tflops_per_machine")?.as_f64()?,
             network_gbits: v.get("network_gbits")?.as_f64()?,
             device: DeviceKind::parse(v.get("device")?.as_str()?)?,
@@ -381,6 +417,11 @@ impl ClusterSpec {
         })
     }
 }
+
+/// Cap on parseable cluster sizes (the paper's largest cluster is 33
+/// machines; 2^20 leaves four orders of magnitude of headroom while
+/// keeping every machine-count-proportional allocation bounded).
+pub const MAX_MACHINES: usize = 1 << 20;
 
 /// Paper Fig 9 presets. TFLOPS and link speeds are the paper's; the
 /// discrete-event simulator consumes these directly, so the HE curves are
@@ -493,6 +534,43 @@ mod tests {
     #[test]
     fn unknown_preset_none() {
         assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn hostile_machine_counts_rejected() {
+        let spec = |machines: &str| {
+            ClusterSpec::from_json(
+                &Json::parse(&format!(
+                    r#"{{"name":"x","machines":{machines},"tflops_per_machine":1.0,
+                        "network_gbits":1.0,"device":"cpu"}}"#
+                ))
+                .unwrap(),
+            )
+        };
+        assert!(spec("9").is_ok());
+        assert!(spec("0").unwrap_err().to_string().contains("machines"));
+        assert!(spec("99999999").unwrap_err().to_string().contains("machines"));
+    }
+
+    #[test]
+    fn unknown_fields_rejected_on_standalone_parsers() {
+        let cluster = Json::parse(
+            r#"{"name":"x","machines":2,"tflops_per_machine":1.0,
+                "network_gbits":1.0,"device":"cpu","machnes":3}"#,
+        )
+        .unwrap();
+        let err = ClusterSpec::from_json(&cluster).unwrap_err().to_string();
+        assert!(err.contains("machnes"), "{err}");
+        let profile = Json::parse(r#"{"kind":"gpu","conv_speed":2.0,"fc_speed":2.0,"x":1}"#)
+            .unwrap();
+        assert!(DeviceProfile::from_json(&profile).unwrap_err().to_string().contains("x"));
+        // A step drift carrying a ramp's field is a mis-edited schedule.
+        let drift =
+            Json::parse(r#"{"kind":"step","at":1.0,"factor":0.5,"to":9.0}"#).unwrap();
+        assert!(ProfileDrift::from_json(&drift).unwrap_err().to_string().contains("to"));
+        // The shorthand forms stay accepted.
+        assert!(ClusterSpec::from_json(&Json::Str("cpu-s".into())).is_ok());
+        assert!(DeviceProfile::from_json(&Json::Str("gpu".into())).is_ok());
     }
 
     #[test]

@@ -33,6 +33,14 @@ pub const FAULT_VERSION: u64 = 1;
 pub const FAULTY_S_CRASH_AT: f64 = 6.0;
 pub const FAULTY_S_RESTART_AT: f64 = 12.0;
 
+/// Cap on parseable group indices: `ParamServer::raise_fence` resizes
+/// its fence vector to `group + 1`, so a hostile schedule must not get
+/// to name group 2^50 (fuzz finding; replayed by
+/// `fuzz/corpus/fault/bad_huge_group.json`). Out-of-range-but-capped
+/// groups stay accepted — schedules are validated before the cluster's
+/// group count is known, and extra groups are structural no-ops.
+pub const MAX_FAULT_GROUP: usize = 1 << 16;
+
 /// One scripted fault event, in virtual-time seconds.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultEvent {
@@ -122,14 +130,20 @@ impl FaultEvent {
             anyhow::ensure!(from < to, "fault {kind} needs from < to, got [{from}, {to})");
             Ok((from, to))
         };
+        let group = || -> Result<usize> {
+            let g = v.get("group")?.as_usize()?;
+            anyhow::ensure!(
+                g <= MAX_FAULT_GROUP,
+                "fault {kind} group {g} exceeds cap {MAX_FAULT_GROUP}"
+            );
+            Ok(g)
+        };
         Ok(match kind {
-            "crash" => FaultEvent::Crash { group: v.get("group")?.as_usize()?, at: time("at")? },
-            "restart" => {
-                FaultEvent::Restart { group: v.get("group")?.as_usize()?, at: time("at")? }
-            }
+            "crash" => FaultEvent::Crash { group: group()?, at: time("at")? },
+            "restart" => FaultEvent::Restart { group: group()?, at: time("at")? },
             "stall" => {
                 let (from, to) = window()?;
-                FaultEvent::Stall { group: v.get("group")?.as_usize()?, from, to }
+                FaultEvent::Stall { group: group()?, from, to }
             }
             "fc_partition" => {
                 let (from, to) = window()?;
@@ -455,6 +469,20 @@ mod tests {
         assert_eq!(f.downtime(1, 20.0), 0.0);
         assert_eq!(f.groups_mentioned(), 1);
         assert!(FaultSchedule::preset("nope").is_none());
+    }
+
+    #[test]
+    fn hostile_group_indices_rejected() {
+        let ev = |group: &str| {
+            FaultEvent::from_json(
+                &Json::parse(&format!(r#"{{"kind":"crash","group":{group},"at":1.0}}"#))
+                    .unwrap(),
+            )
+        };
+        assert!(ev("3").is_ok());
+        assert!(ev("65536").is_ok(), "at the cap");
+        assert!(ev("65537").unwrap_err().to_string().contains("cap"));
+        assert!(ev("4294967296").is_err());
     }
 
     #[test]

@@ -9,9 +9,18 @@ pub mod fault;
 pub use cluster::{ClusterSpec, DeviceKind, DeviceProfile, ProfileDrift, CLUSTER_PRESETS};
 pub use fault::{FaultEvent, FaultSchedule, FAULT_VERSION};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::util::json::Json;
+
+/// Allocation-driving caps on every parsed `TrainConfig` — the lenient
+/// legacy bare-config path included. A config file may be hostile, and
+/// `batch`/`steps` size buffers and loop bounds downstream, so leniency
+/// about *fields* must still bound *sizes* (the same policy as the
+/// checkpoint loader's header caps). Fuzz finding; replayed by
+/// `fuzz/corpus/runspec/bad_huge_batch_legacy.json`.
+pub const MAX_BATCH: usize = 1 << 22;
+pub const MAX_STEPS: usize = 100_000_000;
 
 /// SGD hyperparameters of paper eq. (4):
 /// `V <- mu V - eta (grad + lambda W);  W <- W + V`.
@@ -201,10 +210,14 @@ impl TrainConfig {
 
     pub fn from_json(v: &Json) -> Result<Self> {
         let d = TrainConfig::default();
+        let batch = v.get("batch")?.as_usize()?;
+        ensure!((1..=MAX_BATCH).contains(&batch), "batch {batch} outside 1..={MAX_BATCH}");
+        let steps = v.get("steps")?.as_usize()?;
+        ensure!(steps <= MAX_STEPS, "steps {steps} exceeds cap {MAX_STEPS}");
         Ok(Self {
             arch: v.get("arch")?.as_str()?.to_string(),
             variant: v.get("variant")?.as_str()?.to_string(),
-            batch: v.get("batch")?.as_usize()?,
+            batch,
             strategy: Strategy::from_json(v.get("strategy")?)?,
             fc_mapping: match v.opt("fc_mapping").map(|m| m.as_str()).transpose()? {
                 Some("unmerged") => FcMapping::Unmerged,
@@ -212,7 +225,7 @@ impl TrainConfig {
             },
             hyper: v.opt("hyper").map(Hyper::from_json).transpose()?.unwrap_or(d.hyper),
             cluster: ClusterSpec::from_json(v.get("cluster")?)?,
-            steps: v.get("steps")?.as_usize()?,
+            steps,
             seed: v.opt("seed").map(|s| s.as_usize()).transpose()?.unwrap_or(0) as u64,
             artifacts_dir: v
                 .opt("artifacts_dir")
@@ -359,6 +372,23 @@ mod tests {
         assert!(!j.contains("faults"));
         let c3 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert!(c3.faults.is_none());
+    }
+
+    #[test]
+    fn hostile_sizes_rejected_on_the_lenient_path() {
+        // The legacy bare-config path is lenient about fields but must
+        // still bound allocation-driving sizes.
+        let base = r#"{"arch":"caffenet8","variant":"jnp","strategy":"sync",
+                       "cluster":"cpu-s","batch":BATCH,"steps":STEPS}"#;
+        let parse = |batch: &str, steps: &str| {
+            TrainConfig::from_json(
+                &Json::parse(&base.replace("BATCH", batch).replace("STEPS", steps)).unwrap(),
+            )
+        };
+        assert!(parse("32", "10").is_ok());
+        assert!(parse("0", "10").unwrap_err().to_string().contains("batch"));
+        assert!(parse("999999999", "10").unwrap_err().to_string().contains("batch"));
+        assert!(parse("32", "999999999999").unwrap_err().to_string().contains("steps"));
     }
 
     #[test]

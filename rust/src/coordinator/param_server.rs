@@ -57,6 +57,62 @@ fn fresh_content_id() -> u64 {
     NEXT_CONTENT_ID.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Thread-local lock-order tracking (`invariants` feature; DESIGN.md
+/// §Analysis). The documented order is layout -> at most one
+/// `shard.data` at a time -> `meta`, so each acquisition site registers
+/// a token here and inversions panic at the acquiring site instead of
+/// deadlocking two publishers. Tokens are declared *before* the guard
+/// they track, so drop order (reverse declaration) releases the token
+/// only after the mutex guard is gone.
+#[cfg(feature = "invariants")]
+mod lock_order {
+    use std::cell::Cell;
+
+    thread_local! {
+        static SHARD_HELD: Cell<u32> = const { Cell::new(0) };
+        static META_HELD: Cell<u32> = const { Cell::new(0) };
+    }
+
+    pub struct ShardToken;
+
+    pub fn shard() -> ShardToken {
+        META_HELD.with(|m| {
+            assert_eq!(
+                m.get(),
+                0,
+                "lock-order inversion: shard.data acquired while holding meta"
+            );
+        });
+        SHARD_HELD.with(|s| {
+            assert_eq!(s.get(), 0, "nested shard-lock acquisition (deadlock risk)");
+            s.set(s.get() + 1);
+        });
+        ShardToken
+    }
+
+    impl Drop for ShardToken {
+        fn drop(&mut self) {
+            SHARD_HELD.with(|s| s.set(s.get() - 1));
+        }
+    }
+
+    pub struct MetaToken;
+
+    pub fn meta() -> MetaToken {
+        META_HELD.with(|m| {
+            assert_eq!(m.get(), 0, "nested meta-lock acquisition (deadlock risk)");
+            m.set(m.get() + 1);
+        });
+        MetaToken
+    }
+
+    impl Drop for MetaToken {
+        fn drop(&mut self) {
+            META_HELD.with(|m| m.set(m.get() - 1));
+        }
+    }
+}
+
 /// Read handle: a consistent snapshot of the model plus its version.
 ///
 /// Snapshot tensors share storage with the live model copy-on-write, so
@@ -215,7 +271,13 @@ impl ParamServer {
         if fences.len() <= group {
             fences.resize(group + 1, 0);
         }
-        fences[group] = fences[group].max(min_plan_version);
+        let prev = fences[group];
+        fences[group] = prev.max(min_plan_version);
+        // Fence monotonicity is what makes a drop decision permanent:
+        // the max() above enforces it by construction, and the invariant
+        // pins that construction against future edits.
+        #[cfg(feature = "invariants")]
+        assert!(fences[group] >= prev, "fence for group {group} moved backward");
     }
 
     /// Publishes dropped by a fence since construction (or the last
@@ -236,6 +298,8 @@ impl ParamServer {
     pub fn read(&self) -> ModelSnapshot {
         let mut layout = self.layout.write().unwrap();
         let (version, content_id) = {
+            #[cfg(feature = "invariants")]
+            let _order = lock_order::meta();
             let meta = self.meta.lock().unwrap();
             (meta.version, meta.content_id)
         };
@@ -246,6 +310,18 @@ impl ParamServer {
             for (slot, &ti) in shard.idx.iter().enumerate() {
                 params[ti] = Some(data.params[slot].clone());
             }
+        }
+        // Non-torn COW snapshot: holding the layout write lock excludes
+        // every publisher, so meta cannot have advanced between stamping
+        // (version, content_id) above and assembling the tensors here.
+        #[cfg(feature = "invariants")]
+        {
+            let meta = self.meta.lock().unwrap();
+            assert_eq!(
+                (meta.version, meta.content_id),
+                (version, content_id),
+                "torn COW snapshot: the model advanced during read()"
+            );
         }
         ModelSnapshot {
             params: params.into_iter().map(|t| t.expect("layout covers every tensor")).collect(),
@@ -292,10 +368,14 @@ impl ParamServer {
             );
         }
         let (mu, eta, lambda) = {
+            #[cfg(feature = "invariants")]
+            let _order = lock_order::meta();
             let meta = self.meta.lock().unwrap();
             (meta.hyper.momentum, meta.hyper.lr, meta.hyper.lambda)
         };
         let apply = |shard: &Shard| {
+            #[cfg(feature = "invariants")]
+            let _order = lock_order::shard();
             let mut data = shard.data.lock().unwrap();
             let ShardData { params, velocity } = &mut *data;
             for (slot, &ti) in shard.idx.iter().enumerate() {
@@ -332,8 +412,20 @@ impl ParamServer {
                 apply(shard);
             }
         }
+        #[cfg(feature = "invariants")]
+        let _order = lock_order::meta();
         let mut meta = self.meta.lock().unwrap();
-        let staleness = meta.version - read_version;
+        // A read_version from the future would wrap the subtraction and
+        // poison the staleness histogram; saturate (harmless for every
+        // valid caller — snapshots only ever lag the server) and pin the
+        // precondition under the invariants feature.
+        #[cfg(feature = "invariants")]
+        assert!(
+            read_version <= meta.version,
+            "publish claims read_version {read_version}, but the server is at v{}",
+            meta.version
+        );
+        let staleness = meta.version.saturating_sub(read_version);
         meta.version += 1;
         meta.content_id = fresh_content_id();
         meta.stats.publishes += 1;
@@ -437,11 +529,15 @@ impl ParamServer {
         let layout = self.layout.read().unwrap();
         ensure!(deltas.len() == layout.shapes.len(), "delta arity mismatch");
         for shard in &layout.shards {
+            #[cfg(feature = "invariants")]
+            let _order = lock_order::shard();
             let mut data = shard.data.lock().unwrap();
             for (slot, &ti) in shard.idx.iter().enumerate() {
                 axpy(scale, deltas[ti].data(), data.params[slot].data_mut());
             }
         }
+        #[cfg(feature = "invariants")]
+        let _order = lock_order::meta();
         let mut meta = self.meta.lock().unwrap();
         meta.version += 1;
         meta.content_id = fresh_content_id();

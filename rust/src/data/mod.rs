@@ -11,6 +11,7 @@
 
 mod batch_plan;
 mod plan_controller;
+pub mod plan_script;
 
 pub use batch_plan::BatchPlan;
 pub use plan_controller::{AdaptivePolicy, PlanController, PlanEpoch};

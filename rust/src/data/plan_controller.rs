@@ -92,6 +92,35 @@ struct ControllerState {
     last_live_share: Vec<usize>,
 }
 
+/// Protocol invariants on a freshly-pushed epoch (`invariants` feature;
+/// DESIGN.md §Analysis): versions dense from 0, shares summing to the
+/// batch (the fuzzer's plan oracle), gradient weights summing to the
+/// group count so weighted eq. (3)-(4) updates stay unbiased.
+#[cfg(feature = "invariants")]
+fn check_latest_epoch(batch: usize, epochs: &[PlanEpoch]) {
+    let e = epochs.last().expect("at least one epoch");
+    assert_eq!(
+        e.version as usize,
+        epochs.len() - 1,
+        "plan epoch versions must be dense from 0"
+    );
+    let shares: usize = e.plan.shares().iter().sum();
+    assert_eq!(
+        shares,
+        batch,
+        "epoch v{} shares {:?} must sum to the batch",
+        e.version,
+        e.plan.shares()
+    );
+    let g = e.plan.groups();
+    let wsum: f64 = (0..g).map(|i| e.plan.grad_weight(i) as f64).sum();
+    assert!(
+        (wsum - g as f64).abs() < 1e-3 * g as f64,
+        "epoch v{}: gradient weights sum to {wsum}, want {g}",
+        e.version
+    );
+}
+
 /// Owner of the run's plan-epoch sequence (see module docs). Shared
 /// (`Arc`) between the session, the timing model, and the compute
 /// groups; all methods take `&self`.
@@ -131,7 +160,7 @@ impl PlanController {
         let batch = initial.batch();
         let fixed_plan = if adaptive.is_none() { Some(initial.clone()) } else { None };
         let last_live_share = initial.shares().to_vec();
-        Self {
+        let ctrl = Self {
             batch,
             adaptive,
             fixed_plan,
@@ -146,7 +175,10 @@ impl PlanController {
                 alive: vec![true; groups],
                 last_live_share,
             }),
-        }
+        };
+        #[cfg(feature = "invariants")]
+        check_latest_epoch(ctrl.batch, &ctrl.state.lock().unwrap().epochs);
+        ctrl
     }
 
     /// Whether the fixed-plan lock-free fast path is still valid (no
@@ -286,6 +318,8 @@ impl PlanController {
         st.obs[group] = 0;
         let version = st.epochs.len() as u64;
         st.epochs.push(PlanEpoch { version, plan, since_vtime: vtime });
+        #[cfg(feature = "invariants")]
+        check_latest_epoch(self.batch, &st.epochs);
         // Sticky: version-resolved lookups need the epoch list from now
         // on, even after every group is back.
         self.membership_dirty.store(true, Ordering::Release);
@@ -353,6 +387,8 @@ impl PlanController {
         }
         let version = st.epochs.len() as u64;
         st.epochs.push(PlanEpoch { version, plan: candidate, since_vtime: vtime });
+        #[cfg(feature = "invariants")]
+        check_latest_epoch(self.batch, &st.epochs);
         Some(version)
     }
 

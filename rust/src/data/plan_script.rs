@@ -1,0 +1,134 @@
+//! Replayable [`PlanController`] event scripts — the shared grammar
+//! between the deterministic fuzzer (`fuzz/`) and the corpus regression
+//! tests (`rust/tests/it_fuzz_regressions.rs`).
+//!
+//! A script is a JSON object:
+//!
+//! ```json
+//! {"batch": 32, "groups": 4, "adaptive": true,
+//!  "events": [["observe", 0, 1.5],
+//!             ["member", 0, false, 3.0],
+//!             ["replan", 4.0]]}
+//! ```
+//!
+//! Replay drives a fresh controller through the events in order and
+//! asserts the plan oracle after every event: **the current epoch's
+//! shares always sum to the batch**. Malformed scripts return an error
+//! (the fuzzer's "validation errors only" oracle); an oracle violation
+//! panics, because it means the controller itself broke its contract.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{AdaptivePolicy, BatchPlan, PlanController};
+use crate::util::json::Json;
+
+/// Script-level size caps, in the spirit of the config caps: a hostile
+/// script must not get to pick the allocation sizes.
+pub const MAX_SCRIPT_BATCH: usize = 1 << 16;
+pub const MAX_SCRIPT_GROUPS: usize = 256;
+pub const MAX_SCRIPT_EVENTS: usize = 100_000;
+
+/// Replay `script`, returning the driven controller (so callers can
+/// inspect the final epoch trace). See the module docs for the grammar.
+pub fn replay(script: &Json) -> Result<PlanController> {
+    let batch = script.get("batch")?.as_usize()?;
+    ensure!(
+        (1..=MAX_SCRIPT_BATCH).contains(&batch),
+        "batch {batch} outside 1..={MAX_SCRIPT_BATCH}"
+    );
+    let groups = script.get("groups")?.as_usize()?;
+    ensure!(
+        (1..=MAX_SCRIPT_GROUPS).contains(&groups),
+        "groups {groups} outside 1..={MAX_SCRIPT_GROUPS}"
+    );
+    let adaptive = script.opt("adaptive").map(|b| b.as_bool()).transpose()?.unwrap_or(false);
+    let plan = BatchPlan::equal(batch, groups);
+    let ctrl = if adaptive {
+        PlanController::adaptive(plan, AdaptivePolicy::default())
+    } else {
+        PlanController::fixed(plan)
+    };
+    let events = script.get("events")?.as_arr()?;
+    ensure!(events.len() <= MAX_SCRIPT_EVENTS, "script has {} events", events.len());
+    for (i, ev) in events.iter().enumerate() {
+        let ev = ev.as_arr().with_context(|| format!("event {i} must be an array"))?;
+        let kind = ev
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("event {i} is empty"))?
+            .as_str()
+            .with_context(|| format!("event {i} kind"))?;
+        match (kind, ev.len()) {
+            ("observe", 3) => ctrl.observe(ev[1].as_usize()?, ev[2].as_f64()?),
+            ("member", 4) => {
+                ctrl.set_membership(ev[1].as_usize()?, ev[2].as_bool()?, ev[3].as_f64()?);
+            }
+            ("replan", 2) => {
+                ctrl.maybe_replan(ev[1].as_f64()?);
+            }
+            (other, n) => bail!("event {i}: unknown form [{other:?}; {n}]"),
+        }
+        // The documented oracle, checked after EVERY event regardless of
+        // the `invariants` feature: shares sum to the batch.
+        let plan = ctrl.current_plan();
+        let sum: usize = plan.shares().iter().sum();
+        assert_eq!(
+            sum,
+            batch,
+            "plan oracle violated after event {i} ({kind}): shares {:?}",
+            plan.shares()
+        );
+    }
+    Ok(ctrl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replays_membership_churn() {
+        let script = Json::parse(
+            r#"{"batch":32,"groups":4,
+                "events":[["member",0,false,5.0],
+                          ["member",0,true,12.0],
+                          ["observe",1,1.0],
+                          ["replan",13.0]]}"#,
+        )
+        .unwrap();
+        let c = replay(&script).unwrap();
+        assert_eq!(c.epochs().len(), 3, "crash + rejoin epochs");
+        assert_eq!(c.current_plan().shares().iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn rejects_malformed_scripts() {
+        let bad = [
+            r#"{"batch":0,"groups":4,"events":[]}"#,
+            r#"{"batch":32,"groups":0,"events":[]}"#,
+            r#"{"batch":32,"groups":4,"events":[["explode"]]}"#,
+            r#"{"batch":32,"groups":4,"events":[["observe",0]]}"#,
+            r#"{"batch":32,"groups":4,"events":[17]}"#,
+            r#"{"batch":32,"groups":4}"#,
+        ];
+        for s in bad {
+            assert!(replay(&Json::parse(s).unwrap()).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn hostile_but_wellformed_events_are_absorbed() {
+        // Out-of-range groups and degenerate gaps are no-ops by the
+        // controller's contract; the oracle must hold throughout.
+        let script = Json::parse(
+            r#"{"batch":8,"groups":2,"adaptive":true,
+                "events":[["observe",99,1.0],
+                          ["observe",0,-5.0],
+                          ["observe",0,0.0],
+                          ["member",99,false,1.0],
+                          ["replan",-1.0]]}"#,
+        )
+        .unwrap();
+        let c = replay(&script).unwrap();
+        assert_eq!(c.epochs().len(), 1, "nothing published");
+    }
+}

@@ -55,10 +55,7 @@ pub fn save_checkpoint_at(params: &ParamSet, completed_steps: u64, path: &Path) 
             for &d in t.shape() {
                 f.write_all(&(d as u64).to_le_bytes())?;
             }
-            let bytes = unsafe {
-                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
-            };
-            f.write_all(bytes)?;
+            f.write_all(crate::tensor::f32_bytes(t.data()))?;
         }
         f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
     }

@@ -6,23 +6,19 @@ use crate::tensor::HostTensor;
 
 /// f32 HostTensor -> Literal.
 pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    let bytes: &[u8] = bytemuck_cast_f32(t.data());
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
         t.shape(),
-        bytes,
+        crate::tensor::f32_bytes(t.data()),
     )?)
 }
 
 /// i32 labels -> Literal (rank-1).
 pub fn labels_literal(labels: &[i32]) -> Result<xla::Literal> {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(labels.as_ptr() as *const u8, labels.len() * 4)
-    };
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::S32,
         &[labels.len()],
-        bytes,
+        crate::tensor::i32_bytes(labels),
     )?)
 }
 
@@ -35,11 +31,6 @@ pub fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
     };
     let data = l.to_vec::<f32>()?;
     HostTensor::new(dims, data)
-}
-
-fn bytemuck_cast_f32(data: &[f32]) -> &[u8] {
-    // f32 -> u8 reinterpretation is always valid (no alignment increase).
-    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
 }
 
 #[cfg(test)]

@@ -10,3 +10,49 @@ pub use host::HostTensor;
 pub use ops::{
     axpy, dot, l2_norm, momentum_sgd_step, momentum_sgd_step_scaled, scale, sub_into,
 };
+
+/// View an f32 slice as raw bytes (host byte order — both the checkpoint
+/// writer and the PJRT literal constructors consume host-endian data).
+///
+/// The single sanctioned f32 reinterpretation site: checkpointing and
+/// literal conversion route through here instead of scattering their own
+/// `unsafe` blocks (omnilint's unsafe-safety-comment lint keeps it so).
+pub fn f32_bytes(data: &[f32]) -> &[u8] {
+    // SAFETY: every f32 bit pattern is a valid sequence of u8s, u8's
+    // alignment (1) is never stricter than f32's, and the length covers
+    // exactly the source slice: size_of_val(data) = 4 * data.len().
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data)) }
+}
+
+/// View an i32 slice as raw bytes (host byte order); see [`f32_bytes`].
+pub fn i32_bytes(data: &[i32]) -> &[u8] {
+    // SAFETY: as in `f32_bytes` — plain-old-data source, alignment only
+    // ever relaxes (4 -> 1), length covers exactly the source slice.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data)) }
+}
+
+#[cfg(test)]
+mod byte_tests {
+    #[test]
+    fn f32_bytes_match_le_encoding() {
+        let data = [1.0f32, -2.0, 0.5];
+        let bytes = super::f32_bytes(&data);
+        let expect: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        if cfg!(target_endian = "little") {
+            assert_eq!(bytes, &expect[..]);
+        }
+        assert_eq!(bytes.len(), 12);
+        assert!(super::f32_bytes(&[]).is_empty());
+    }
+
+    #[test]
+    fn i32_bytes_match_le_encoding() {
+        let data = [7i32, -1, 1 << 20];
+        let bytes = super::i32_bytes(&data);
+        let expect: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        if cfg!(target_endian = "little") {
+            assert_eq!(bytes, &expect[..]);
+        }
+        assert_eq!(bytes.len(), 12);
+    }
+}

@@ -19,9 +19,15 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Nesting cap for hostile inputs: deeper than any document this repo
+/// produces by two orders of magnitude, and far shallower than what it
+/// takes to overflow the recursive-descent parser's stack (fuzz finding;
+/// replayed by `fuzz/corpus/runspec/bad_deep_nesting.json`).
+const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -169,9 +175,18 @@ impl Json {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        Ok(())
+    }
+
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len()
             && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
@@ -280,15 +295,25 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        Ok(Json::Num(text.parse::<f64>()?))
+        let x = text.parse::<f64>()?;
+        // Overflowing literals ("1e999") parse to infinity, which the
+        // writer cannot represent — parse -> dump -> parse would fail.
+        // Rejecting here keeps every accepted number round-trippable
+        // (fuzz fixpoint oracle; RFC 8259 has no non-finite numbers).
+        if !x.is_finite() {
+            bail!("number {text:?} does not fit a finite f64");
+        }
+        Ok(Json::Num(x))
     }
 
     fn array(&mut self) -> Result<Json> {
+        self.descend()?;
         self.eat("[")?;
         let mut v = vec![];
         self.skip_ws();
         if self.peek()? == b']' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -299,6 +324,7 @@ impl<'a> Parser<'a> {
                 b',' => self.pos += 1,
                 b']' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 c => bail!("expected , or ] got {:?}", c as char),
@@ -307,11 +333,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
+        self.descend()?;
         self.eat("{")?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek()? == b'}' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -327,6 +355,7 @@ impl<'a> Parser<'a> {
                 b',' => self.pos += 1,
                 b'}' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 c => bail!("expected , or }} got {:?}", c as char),
@@ -372,6 +401,29 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn rejects_nonfinite_numbers() {
+        // "1e999" overflows to +inf, which dump() cannot represent as
+        // valid JSON — accepted numbers must round-trip.
+        assert!(Json::parse("1e999").unwrap_err().to_string().contains("finite"));
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse(r#"{"steps":1e999}"#).is_err());
+        // Large-but-finite still parses and round-trips.
+        let v = Json::parse("1e308").unwrap();
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_deep_nesting() {
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&deep).unwrap_err().to_string().contains("nested deeper"));
+        let mixed = "{\"a\":".repeat(MAX_DEPTH + 1) + "1" + &"}".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&mixed).is_err());
+        // At the cap: fine (the cap is about hostile inputs, not shape).
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

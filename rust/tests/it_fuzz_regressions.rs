@@ -1,0 +1,102 @@
+//! Replays `fuzz/corpus/` through the matching untrusted parse surfaces
+//! (DESIGN.md §Analysis). Every `ok_*` file must parse cleanly (and,
+//! for the JSON surfaces, reach a parse → serialize → parse fixpoint);
+//! every `bad_*` file must be rejected with a validation `Err`. A panic
+//! or a flipped outcome on any corpus file is a regression against a
+//! previously-minimized fuzzer finding.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use omnivore::api::RunSpec;
+use omnivore::config::{FaultSchedule, ProfileDrift};
+use omnivore::data::plan_script;
+use omnivore::model::load_checkpoint_state;
+use omnivore::util::json::Json;
+
+fn corpus(sub: &str) -> Vec<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fuzz/corpus").join(sub);
+    let mut files: Vec<PathBuf> = fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .map(|e| e.expect("corpus dir entry").path())
+        .filter(|p| p.is_file())
+        .collect();
+    files.sort();
+    assert!(!files.is_empty(), "empty corpus {}", dir.display());
+    files
+}
+
+/// `ok_` files must be accepted, `bad_` files rejected; anything else
+/// in the corpus is a naming mistake.
+fn expect_ok(path: &Path) -> bool {
+    let name = path.file_name().expect("file name").to_string_lossy();
+    if name.starts_with("ok_") {
+        true
+    } else {
+        assert!(name.starts_with("bad_"), "corpus file {name} must be named ok_* or bad_*");
+        false
+    }
+}
+
+fn check_json_surface(sub: &str, parse_dump: fn(&Json) -> anyhow::Result<Json>) {
+    for path in corpus(sub) {
+        let name = path.display();
+        let text = fs::read_to_string(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let outcome = Json::parse(&text).and_then(|v| parse_dump(&v));
+        if expect_ok(&path) {
+            let d1 = outcome.unwrap_or_else(|e| panic!("{name}: must parse: {e}")).dump();
+            let v2 = Json::parse(&d1).unwrap_or_else(|e| panic!("{name}: reparse: {e}"));
+            let d2 = parse_dump(&v2).unwrap_or_else(|e| panic!("{name}: revalidate: {e}")).dump();
+            assert_eq!(d1, d2, "{name}: parse -> serialize -> parse is not a fixpoint");
+        } else {
+            assert!(outcome.is_err(), "{name}: hostile input was accepted");
+        }
+    }
+}
+
+#[test]
+fn runspec_corpus() {
+    check_json_surface("runspec", |v| RunSpec::from_json(v).map(|s| s.to_json()));
+}
+
+#[test]
+fn fault_corpus() {
+    check_json_surface("fault", |v| FaultSchedule::from_json(v).map(|s| s.to_json()));
+}
+
+#[test]
+fn drift_corpus() {
+    check_json_surface("drift", |v| ProfileDrift::from_json(v).map(|d| d.to_json()));
+}
+
+#[test]
+fn checkpoint_corpus() {
+    for path in corpus("checkpoint") {
+        let name = path.display();
+        let outcome = load_checkpoint_state(&path);
+        if expect_ok(&path) {
+            let (params, steps) =
+                outcome.unwrap_or_else(|e| panic!("{name}: must load: {e}"));
+            assert!(params.num_params() > 0, "{name}: loaded an empty ParamSet");
+            if path.file_name().is_some_and(|n| n == "ok_tiny.ckpt") {
+                assert_eq!(steps, 3, "{name}: was saved at step 3");
+            }
+        } else {
+            assert!(outcome.is_err(), "{name}: corrupt container was accepted");
+        }
+    }
+}
+
+#[test]
+fn plan_corpus() {
+    for path in corpus("plan") {
+        let name = path.display();
+        let text = fs::read_to_string(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let outcome = Json::parse(&text).and_then(|v| plan_script::replay(&v).map(|_| ()));
+        if expect_ok(&path) {
+            outcome.unwrap_or_else(|e| panic!("{name}: must replay: {e}"));
+        } else {
+            assert!(outcome.is_err(), "{name}: hostile script was accepted");
+        }
+    }
+}

@@ -1,0 +1,714 @@
+//! omnilint: repo-invariant static analysis for the omnivore tree
+//! (DESIGN.md §Analysis).
+//!
+//! Dependency-free on purpose — it must build offline, fast, and before
+//! anything else in CI. It does not parse Rust; it strips comments and
+//! string literals to a same-shape "code only" text and then enforces
+//! textual invariants that the codebase maintains by convention:
+//!
+//! * `schema-guards` — every versioned-JSON surface keeps its
+//!   unknown-field rejection and future-version refusal, and any file
+//!   declaring a `*_VERSION` schema constant compares against it.
+//! * `fenced-publish` — gradient publishes happen only inside
+//!   `coordinator/param_server.rs`; everyone else must route through
+//!   `publish_scaled_fenced` so the fault fences cannot be bypassed.
+//! * `sim-wallclock` — the deterministic simulation domain never reads
+//!   wall clocks (`Instant::now` / `SystemTime`).
+//! * `nested-shard-lock` — inside `coordinator/`, no shard lock is
+//!   taken while a shard or meta lock is held (the documented order is
+//!   layout -> one shard -> meta).
+//! * `unsafe-safety-comment` — every `unsafe` token carries a
+//!   `// SAFETY:` comment within the preceding 8 lines.
+//!
+//! Violations can be waived in `lint.toml` at the repo root; a waiver
+//! without a reason, or one that matches nothing, is itself a violation.
+//! Exit status: 0 clean, 1 violations, 2 usage/IO error.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may sit
+/// (covers a shared comment above paired `unsafe impl Send`/`Sync`).
+const SAFETY_LOOKBACK: usize = 8;
+
+#[derive(Debug)]
+struct Violation {
+    /// Repo-relative path with `/` separators.
+    path: String,
+    /// 1-based; 0 for whole-file findings.
+    line: usize,
+    lint: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.lint, self.msg)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Waiver {
+    lint: String,
+    path: String,
+    reason: String,
+    /// Declaration line in lint.toml, for reporting.
+    line: usize,
+    used: std::cell::Cell<bool>,
+}
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        // tools/omnilint/ -> tools/ -> repo root.
+        None => Path::new(env!("CARGO_MANIFEST_DIR")).join("../.."),
+    };
+    let src_root = root.join("rust/src");
+    if !src_root.is_dir() {
+        eprintln!("omnilint: {} is not a repo root (no rust/src)", root.display());
+        return ExitCode::from(2);
+    }
+
+    let (waivers, mut violations) = match load_waivers(&root.join("lint.toml")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("omnilint: bad lint.toml: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let files = match walk_rs(&src_root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("omnilint: walking {}: {e}", src_root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let mut sources = Vec::new();
+    for path in files {
+        let raw = match std::fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("omnilint: reading {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = rel_path(&root, &path);
+        let code = strip_noncode(&raw);
+        sources.push(SourceFile { rel, raw, code });
+    }
+
+    violations.extend(lint_schema_guards(&sources));
+    violations.extend(lint_fenced_publish(&sources));
+    violations.extend(lint_sim_wallclock(&sources));
+    violations.extend(lint_nested_shard_lock(&sources));
+    violations.extend(lint_unsafe_safety(&sources));
+
+    // Waive, then flag unused waivers (a waiver that matches nothing is
+    // stale documentation and must be deleted, not accumulated).
+    violations.retain(|v| {
+        !waivers.iter().any(|w| {
+            let hit = w.lint == v.lint && v.path.ends_with(&w.path);
+            if hit {
+                w.used.set(true);
+            }
+            hit
+        })
+    });
+    for w in &waivers {
+        if !w.used.get() {
+            violations.push(Violation {
+                path: "lint.toml".into(),
+                line: w.line,
+                lint: "unused-waiver",
+                msg: format!("waiver ({} on {}) matches no violation", w.lint, w.path),
+            });
+        }
+    }
+
+    if violations.is_empty() {
+        println!("omnilint: clean ({} files, {} waivers)", sources.len(), waivers.len());
+        ExitCode::SUCCESS
+    } else {
+        violations.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+        for v in &violations {
+            println!("{v}");
+        }
+        println!("omnilint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+struct SourceFile {
+    rel: String,
+    raw: String,
+    /// Same line structure as `raw`, with comment and string-literal
+    /// contents blanked to spaces.
+    code: String,
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let p = path.strip_prefix(root).unwrap_or(path);
+    p.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn walk_rs(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Replace comment bodies and string/char-literal contents with spaces,
+/// preserving byte-for-byte line structure so line numbers in findings
+/// match the original file. Handles `//`, nested `/* */`, `"…"` with
+/// escapes, raw strings `r#"…"#`, char literals (including `b'…'`), and
+/// the char-vs-lifetime ambiguity of `'`.
+fn strip_noncode(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let blank = |out: &mut Vec<u8>, c: u8| out.push(if c == b'\n' { b'\n' } else { b' ' });
+    let mut i = 0;
+    while i < b.len() {
+        if b[i..].starts_with(b"//") {
+            while i < b.len() && b[i] != b'\n' {
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+        } else if b[i..].starts_with(b"/*") {
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i..].starts_with(b"/*") {
+                    depth += 1;
+                    blank(&mut out, b' ');
+                    blank(&mut out, b' ');
+                    i += 2;
+                } else if b[i..].starts_with(b"*/") {
+                    depth -= 1;
+                    blank(&mut out, b' ');
+                    blank(&mut out, b' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+        } else if b[i] == b'r' && matches!(b.get(i + 1), Some(b'"' | b'#')) {
+            // Raw string r"…" / r#"…"# / r##"…"## (also reached for
+            // br"…" via the b branch below falling through per byte).
+            let start = i;
+            i += 1;
+            let mut hashes = 0;
+            while b.get(i) == Some(&b'#') {
+                hashes += 1;
+                i += 1;
+            }
+            if b.get(i) == Some(&b'"') {
+                i += 1;
+                let closer = format!("\"{}", "#".repeat(hashes)).into_bytes();
+                while i < b.len() && !b[i..].starts_with(&closer) {
+                    i += 1;
+                }
+                i = (i + closer.len()).min(b.len());
+                for &c in &b[start..i] {
+                    blank(&mut out, c);
+                }
+            } else {
+                // `r#ident` raw identifier, not a string: emit as code.
+                out.extend_from_slice(&b[start..i]);
+            }
+        } else if b[i] == b'"' {
+            blank(&mut out, b'"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if b[i] == b'"' {
+                    blank(&mut out, b'"');
+                    i += 1;
+                    break;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+        } else if b[i] == b'\'' {
+            // Char literal iff it escapes or closes within two bytes;
+            // otherwise it is a lifetime and stays code.
+            let is_char = b.get(i + 1) == Some(&b'\\') || b.get(i + 2) == Some(&b'\'');
+            if is_char {
+                blank(&mut out, b'\'');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        blank(&mut out, b[i]);
+                        blank(&mut out, b[i + 1]);
+                        i += 2;
+                    } else if b[i] == b'\'' {
+                        blank(&mut out, b'\'');
+                        i += 1;
+                        break;
+                    } else {
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                }
+            } else {
+                out.push(b'\'');
+                i += 1;
+            }
+        } else {
+            out.push(b[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).expect("blanking only replaces bytes with ASCII")
+}
+
+/// Does `code` contain `word` with non-identifier bytes on both sides?
+fn has_word(code: &str, word: &str) -> bool {
+    let ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(off) = code[from..].find(word) {
+        let at = from + off;
+        let pre = at.checked_sub(1).map(|j| b[j]);
+        let post = b.get(at + word.len()).copied();
+        if !pre.is_some_and(ident) && !post.is_some_and(ident) {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Lint 1: schema-guards
+// ---------------------------------------------------------------------------
+
+/// Required markers per versioned-JSON surface. Raw-source substrings:
+/// deliberately blunt, so renaming or deleting a guard breaks the build
+/// here instead of silently widening the parse surface.
+const SCHEMA_MARKERS: &[(&str, &[&str])] = &[
+    (
+        "rust/src/api/spec.rs",
+        &[
+            "reject_unknown(",
+            "> SPEC_VERSION",
+            "CLUSTER_FIELDS",
+            "PROFILE_FIELDS",
+            "DRIFT_STEP_FIELDS",
+            "DRIFT_RAMP_FIELDS",
+        ],
+    ),
+    ("rust/src/api/outcome.rs", &["unknown field", "> OUTCOME_VERSION"]),
+    ("rust/src/config/fault.rs", &["unknown field", "> FAULT_VERSION"]),
+    ("rust/src/model/checkpoint.rs", &["MAX_RANK", "MAX_DIM", "MAX_TENSORS"]),
+];
+
+fn lint_schema_guards(sources: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (path, markers) in SCHEMA_MARKERS {
+        let Some(f) = sources.iter().find(|f| f.rel == *path) else {
+            out.push(Violation {
+                path: (*path).into(),
+                line: 0,
+                lint: "schema-guards",
+                msg: "versioned-JSON surface file is missing".into(),
+            });
+            continue;
+        };
+        for m in *markers {
+            if !f.raw.contains(m) {
+                out.push(Violation {
+                    path: f.rel.clone(),
+                    line: 0,
+                    lint: "schema-guards",
+                    msg: format!("required schema guard {m:?} not found"),
+                });
+            }
+        }
+    }
+    // Generic rule: declaring a schema-version constant obliges the file
+    // to refuse future versions by comparing against it.
+    for f in sources {
+        for (i, line) in f.code.lines().enumerate() {
+            let Some(at) = line.find("const ") else { continue };
+            let rest = &line[at + "const ".len()..];
+            let ident: String =
+                rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+            if ident.ends_with("_VERSION") && !f.code.contains(&format!("> {ident}")) {
+                out.push(Violation {
+                    path: f.rel.clone(),
+                    line: i + 1,
+                    lint: "schema-guards",
+                    msg: format!(
+                        "declares {ident} but never rejects versions above it (`> {ident}`)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lint 2: fenced-publish
+// ---------------------------------------------------------------------------
+
+/// The only file allowed to call `.publish(` / `.publish_scaled(`: the
+/// server's own impl and unit tests. (`.publish_scaled_fenced(` matches
+/// neither pattern — the `_f` breaks both.)
+const PUBLISH_HOME: &str = "rust/src/coordinator/param_server.rs";
+
+fn lint_fenced_publish(sources: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in sources {
+        if f.rel == PUBLISH_HOME {
+            continue;
+        }
+        for (i, line) in f.code.lines().enumerate() {
+            if line.contains(".publish(") || line.contains(".publish_scaled(") {
+                out.push(Violation {
+                    path: f.rel.clone(),
+                    line: i + 1,
+                    lint: "fenced-publish",
+                    msg: "unfenced gradient publish; route through publish_scaled_fenced"
+                        .into(),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lint 3: sim-wallclock
+// ---------------------------------------------------------------------------
+
+/// The deterministic simulation domain: identical inputs must give
+/// identical traces, so wall clocks are banned. `engine/threaded.rs`
+/// (real-time scheduler) and `util/bench.rs` are deliberately outside.
+const SIM_DOMAIN: &[&str] =
+    &["rust/src/sim/", "rust/src/engine/sim_time.rs", "rust/src/data/plan_controller.rs"];
+
+fn lint_sim_wallclock(sources: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in sources {
+        if !SIM_DOMAIN.iter().any(|d| f.rel.starts_with(d)) {
+            continue;
+        }
+        for (i, line) in f.code.lines().enumerate() {
+            for pat in ["Instant::now", "SystemTime"] {
+                if line.contains(pat) {
+                    out.push(Violation {
+                        path: f.rel.clone(),
+                        line: i + 1,
+                        lint: "sim-wallclock",
+                        msg: format!("{pat} inside the deterministic sim domain"),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lint 4: nested-shard-lock
+// ---------------------------------------------------------------------------
+
+/// Conservative brace-scoped model of guard lifetimes in `coordinator/`:
+/// a guard acquired at brace depth d is considered held until the block
+/// at depth d closes. Acquiring a shard lock (`.data.lock(`) while a
+/// shard or meta guard is live, or a meta lock (`.meta.lock(`) while a
+/// meta guard is live, is the deadlock/inversion shape the runtime
+/// `lock_order` tokens catch dynamically — this catches it at lint time.
+fn lint_nested_shard_lock(sources: &[SourceFile]) -> Vec<Violation> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Kind {
+        Shard,
+        Meta,
+    }
+    let mut out = Vec::new();
+    for f in sources {
+        if !f.rel.starts_with("rust/src/coordinator/") {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut held: Vec<(Kind, usize)> = Vec::new();
+        for (ln, line) in f.code.lines().enumerate() {
+            let b = line.as_bytes();
+            for (col, &c) in b.iter().enumerate() {
+                match c {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth = depth.saturating_sub(1);
+                        held.retain(|&(_, d)| d <= depth);
+                    }
+                    b'.' => {
+                        let kind = if line[col..].starts_with(".data.lock(") {
+                            Some(Kind::Shard)
+                        } else if line[col..].starts_with(".meta.lock(") {
+                            Some(Kind::Meta)
+                        } else {
+                            None
+                        };
+                        let Some(kind) = kind else { continue };
+                        let conflict = held.iter().any(|&(h, _)| match kind {
+                            // Second shard, or shard after meta: both
+                            // break the layout -> shard -> meta order.
+                            Kind::Shard => true,
+                            Kind::Meta => h == Kind::Meta,
+                        });
+                        if conflict {
+                            out.push(Violation {
+                                path: f.rel.clone(),
+                                line: ln + 1,
+                                lint: "nested-shard-lock",
+                                msg: "lock acquired while a shard/meta guard may be held \
+                                      (order is layout -> one shard -> meta)"
+                                    .into(),
+                            });
+                        }
+                        held.push((kind, depth));
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lint 5: unsafe-safety-comment
+// ---------------------------------------------------------------------------
+
+fn lint_unsafe_safety(sources: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in sources {
+        let raw_lines: Vec<&str> = f.raw.lines().collect();
+        for (i, line) in f.code.lines().enumerate() {
+            if !has_word(line, "unsafe") {
+                continue;
+            }
+            let from = i.saturating_sub(SAFETY_LOOKBACK);
+            let documented = raw_lines[from..=i.min(raw_lines.len() - 1)]
+                .iter()
+                .any(|l| l.contains("SAFETY:"));
+            if !documented {
+                out.push(Violation {
+                    path: f.rel.clone(),
+                    line: i + 1,
+                    lint: "unsafe-safety-comment",
+                    msg: format!(
+                        "`unsafe` without a // SAFETY: comment within {SAFETY_LOOKBACK} lines"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Waivers
+// ---------------------------------------------------------------------------
+
+/// Parse the `[[waiver]]` entries of lint.toml (a deliberately tiny TOML
+/// subset: table arrays of `key = "value"` lines, `#` comments). Returns
+/// the waivers plus violations for malformed entries (a waiver with no
+/// reason documents nothing).
+fn load_waivers(path: &Path) -> Result<(Vec<Waiver>, Vec<Violation>), String> {
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut violations = Vec::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Ok((waivers, violations)); // no lint.toml: no waivers
+    };
+    for (i, raw_line) in text.lines().enumerate() {
+        let line = match raw_line.find('#') {
+            Some(h) => &raw_line[..h],
+            None => raw_line,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[waiver]]" {
+            waivers.push(Waiver { line: i + 1, ..Waiver::default() });
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            return Err(format!("line {}: expected [[waiver]] or key = \"value\"", i + 1));
+        };
+        let val = val.trim();
+        let Some(val) = val.strip_prefix('"').and_then(|v| v.strip_suffix('"')) else {
+            return Err(format!("line {}: value must be double-quoted", i + 1));
+        };
+        let val = val.to_string();
+        let Some(w) = waivers.last_mut() else {
+            return Err(format!("line {}: key outside a [[waiver]] block", i + 1));
+        };
+        match key.trim() {
+            "lint" => w.lint = val,
+            "path" => w.path = val,
+            "reason" => w.reason = val,
+            other => return Err(format!("line {}: unknown key {other:?}", i + 1)),
+        }
+    }
+    for w in &waivers {
+        if w.lint.is_empty() || w.path.is_empty() || w.reason.trim().is_empty() {
+            violations.push(Violation {
+                path: "lint.toml".into(),
+                line: w.line,
+                lint: "undocumented-waiver",
+                msg: "waiver needs non-empty lint, path, and reason".into(),
+            });
+        }
+    }
+    Ok((waivers, violations))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_blanks_comments_and_strings() {
+        let src = "let x = \"unsafe\"; // unsafe here\nlet y = 'u'; /* unsafe */ z";
+        let code = strip_noncode(src);
+        assert!(!code.contains("unsafe"));
+        assert!(code.contains("let x ="));
+        assert!(code.contains('z'));
+        assert_eq!(src.lines().count(), code.lines().count());
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_lifetimes_and_bytes() {
+        let code = strip_noncode("r#\"unsafe \" quote\"# fn f<'a>(x: &'a u8) { b'\\n'; }");
+        assert!(!code.contains("unsafe"));
+        assert!(code.contains("fn f<'a>(x: &'a u8)"));
+        let code = strip_noncode("match c { b' ' | b'\\t' => unsafe_site() }");
+        assert!(code.contains("unsafe_site"), "{code}");
+        assert!(!code.contains("b' '"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(has_word("x=unsafe{", "unsafe"));
+        assert!(!has_word("unsafely", "unsafe"));
+        assert!(!has_word("not_unsafe", "unsafe"));
+    }
+
+    fn file(rel: &str, raw: &str) -> SourceFile {
+        SourceFile { rel: rel.into(), raw: raw.into(), code: strip_noncode(raw) }
+    }
+
+    #[test]
+    fn version_const_needs_guard() {
+        let f = file("rust/src/x.rs", "pub const FOO_VERSION: u64 = 1;\n");
+        let v = lint_schema_guards(std::slice::from_ref(&f));
+        assert!(v.iter().any(|v| v.msg.contains("FOO_VERSION")), "{v:?}");
+        let ok = file(
+            "rust/src/x.rs",
+            "pub const FOO_VERSION: u64 = 1;\nif version > FOO_VERSION { }\n",
+        );
+        let v = lint_schema_guards(std::slice::from_ref(&ok));
+        assert!(!v.iter().any(|v| v.msg.contains("FOO_VERSION")), "{v:?}");
+    }
+
+    #[test]
+    fn publish_outside_home_flagged() {
+        let bad = file("rust/src/engine/driver.rs", "ps.publish_scaled(&g, v, 1.0);\n");
+        assert_eq!(lint_fenced_publish(std::slice::from_ref(&bad)).len(), 1);
+        let fenced =
+            file("rust/src/engine/driver.rs", "ps.publish_scaled_fenced(&g, v, 1.0, 0, 0);\n");
+        assert!(lint_fenced_publish(std::slice::from_ref(&fenced)).is_empty());
+        let home = file("rust/src/coordinator/param_server.rs", "self.publish(&g, v);\n");
+        assert!(lint_fenced_publish(std::slice::from_ref(&home)).is_empty());
+    }
+
+    #[test]
+    fn wallclock_in_sim_domain_flagged() {
+        let bad = file("rust/src/sim/timing.rs", "let t = Instant::now();\n");
+        assert_eq!(lint_sim_wallclock(std::slice::from_ref(&bad)).len(), 1);
+        let ok = file("rust/src/engine/threaded.rs", "let t = Instant::now();\n");
+        assert!(lint_sim_wallclock(std::slice::from_ref(&ok)).is_empty());
+    }
+
+    #[test]
+    fn nested_locks_flagged_by_scope() {
+        let bad = file(
+            "rust/src/coordinator/x.rs",
+            "fn f(&self) {\n  let a = self.meta.lock();\n  let b = other.meta.lock();\n}\n",
+        );
+        assert_eq!(lint_nested_shard_lock(std::slice::from_ref(&bad)).len(), 1);
+        // Sequential inner scopes release before re-acquiring.
+        let ok = file(
+            "rust/src/coordinator/x.rs",
+            "fn f(&self) {\n  { let a = self.meta.lock(); }\n  let b = self.meta.lock();\n}\n",
+        );
+        assert!(lint_nested_shard_lock(std::slice::from_ref(&ok)).is_empty());
+        // Meta under shard breaks the documented order.
+        let inv = file(
+            "rust/src/coordinator/x.rs",
+            "fn f(&self) {\n  let a = s.meta.lock();\n  let b = s.data.lock();\n}\n",
+        );
+        assert_eq!(lint_nested_shard_lock(std::slice::from_ref(&inv)).len(), 1);
+    }
+
+    #[test]
+    fn undocumented_unsafe_flagged() {
+        let bad = file("rust/src/x.rs", "fn f() {\n  unsafe { g() }\n}\n");
+        assert_eq!(lint_unsafe_safety(std::slice::from_ref(&bad)).len(), 1);
+        let ok = file("rust/src/x.rs", "// SAFETY: g has no preconditions\nunsafe { g() }\n");
+        assert!(lint_unsafe_safety(std::slice::from_ref(&ok)).is_empty());
+        // The word inside a comment or string is not an unsafe token.
+        let doc = file("rust/src/x.rs", "// mentions unsafe\nlet s = \"unsafe\";\n");
+        assert!(lint_unsafe_safety(std::slice::from_ref(&doc)).is_empty());
+    }
+
+    #[test]
+    fn waiver_parsing_and_validation() {
+        let dir = std::env::temp_dir().join("omnilint_waiver_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("lint.toml");
+        std::fs::write(
+            &p,
+            "# header\n[[waiver]]\nlint = \"sim-wallclock\"\npath = \"rust/src/sim/x.rs\"\n\
+             reason = \"calibration shim\"\n[[waiver]]\nlint = \"fenced-publish\"\n\
+             path = \"rust/src/y.rs\"\nreason = \"\"\n",
+        )
+        .unwrap();
+        let (ws, vs) = load_waivers(&p).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(vs.len(), 1, "empty reason is a violation: {vs:?}");
+        assert!(load_waivers(&dir.join("absent.toml")).unwrap().0.is_empty());
+        assert!(load_waivers(&{
+            std::fs::write(&p, "lint = \"x\"\n").unwrap();
+            p.clone()
+        })
+        .is_err());
+    }
+}
