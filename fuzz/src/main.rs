@@ -16,11 +16,18 @@
 //!   `data::plan_script` grammar and the direct API. Oracle: epoch
 //!   shares always sum to the batch (plus the `invariants` feature's
 //!   internal checks, which this binary always builds with).
+//! * `serve` — raw HTTP/1.1 request bytes against the daemon's
+//!   hand-rolled parser (`serve::http`): mutated request lines,
+//!   hostile headers, oversized/truncated bodies, spliced junk.
+//!   Oracle: no panic, and parsing the stream dripped one byte per
+//!   read agrees exactly with parsing it from a single buffer
+//!   (slowloris delivery cannot change what a request means).
 //!
 //! Exit status: 0 clean, 1 findings, 2 usage error. Minimized findings
 //! land in `fuzz/corpus/` by hand and replay forever as regression
 //! tests (`rust/tests/it_fuzz_regressions.rs`).
 
+use std::io::Read;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::process::ExitCode;
 
@@ -29,6 +36,7 @@ use omnivore::api::RunSpec;
 use omnivore::config::{ClusterSpec, FaultSchedule, ProfileDrift};
 use omnivore::data::{plan_script, AdaptivePolicy, BatchPlan, PlanController};
 use omnivore::model::{load_checkpoint_state, save_checkpoint_at, ParamSet};
+use omnivore::serve::http as serve_http;
 use omnivore::tensor::HostTensor;
 use omnivore::util::cli::Args;
 use omnivore::util::json::Json;
@@ -49,7 +57,9 @@ fn main() -> ExitCode {
         }
         Err(e) => {
             eprintln!("omnifuzz: {e}");
-            eprintln!("usage: omnifuzz [--surface all|runspec|fault|drift|checkpoint|plan]");
+            eprintln!(
+                "usage: omnifuzz [--surface all|runspec|fault|drift|checkpoint|plan|serve]"
+            );
             eprintln!("                [--cases N] [--seed S]");
             ExitCode::from(2)
         }
@@ -76,6 +86,7 @@ fn run() -> Result<usize> {
         ("drift", fuzz_drift),
         ("checkpoint", fuzz_checkpoint),
         ("plan", fuzz_plan),
+        ("serve", fuzz_serve),
     ] {
         if !(all || surface == name) {
             continue;
@@ -385,6 +396,153 @@ fn fuzz_plan(cases: usize, seed: u64) -> Result<usize> {
         if let (Err(e), text) = outcome {
             findings += 1;
             report("plan", case, &mut shown, &panic_msg(e), &text);
+        }
+    }
+    Ok(findings)
+}
+
+/// Body cap used for the serve surface — small enough that the cap
+/// itself gets exercised by the mutations.
+const SERVE_MAX_BODY: usize = 4096;
+
+/// Reader that yields one byte per read: the slowloris delivery shape
+/// the parser must be indifferent to.
+struct Drip<'a>(&'a [u8]);
+
+impl Read for Drip<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self.0.split_first() {
+            Some((&b, rest)) if !buf.is_empty() => {
+                buf[0] = b;
+                self.0 = rest;
+                Ok(1)
+            }
+            _ => Ok(0),
+        }
+    }
+}
+
+/// Canonical requests for every endpoint the daemon routes — each must
+/// parse, or the mutations start from garbage and test nothing.
+fn serve_seeds() -> Vec<Vec<u8>> {
+    vec![
+        b"GET /healthz HTTP/1.1\r\nHost: f\r\n\r\n".to_vec(),
+        b"GET /fleet HTTP/1.1\r\nHost: f\r\nX-Omnivore-Client: fuzz\r\n\r\n".to_vec(),
+        b"GET /runs/r1/events HTTP/1.1\r\nHost: f\r\n\r\n".to_vec(),
+        b"POST /runs HTTP/1.1\r\nHost: f\r\nX-Omnivore-Client: fuzz\r\n\
+          Content-Length: 26\r\n\r\n{\"arch\":\"lenet\",\"steps\":4}"
+            .to_vec(),
+        b"DELETE /runs/r2 HTTP/1.1\r\nHost: f\r\n\r\n".to_vec(),
+    ]
+}
+
+/// Collapse a parse result into a comparable signature. Every field
+/// that routing or the API could observe is included, so buffered and
+/// dripped delivery must agree on all of it.
+fn serve_sig(r: Result<serve_http::Request, serve_http::ParseError>) -> String {
+    use serve_http::ParseError;
+    match r {
+        Ok(req) => format!(
+            "ok {:?} {} headers={:?} body={:?}",
+            req.method, req.path, req.headers, req.body
+        ),
+        Err(ParseError::Closed) => "err closed".into(),
+        Err(ParseError::Truncated) => "err truncated".into(),
+        Err(ParseError::Bad(why)) => format!("err bad: {why}"),
+        Err(ParseError::TooLarge(what)) => format!("err toolarge: {what}"),
+        Err(ParseError::Io(_)) => "err io".into(),
+    }
+}
+
+fn serve_sig_buffered(bytes: &[u8]) -> String {
+    serve_sig(serve_http::read_request(&mut std::io::Cursor::new(bytes), SERVE_MAX_BODY))
+}
+
+fn serve_sig_dripped(bytes: &[u8]) -> String {
+    serve_sig(serve_http::read_request(&mut Drip(bytes), SERVE_MAX_BODY))
+}
+
+/// Mutate a seed request at the byte level: flips, truncation, spliced
+/// hostile HTTP fragments, duplicated slices, long-token floods, junk.
+fn mutated_request(seeds: &[Vec<u8>], rng: &mut Rng) -> Vec<u8> {
+    const SNIPPETS: [&[u8]; 8] = [
+        b"\r\n\r\n",
+        b" HTTP/9.9",
+        b"\0",
+        b"Content-Length: 99999999999\r\n",
+        b"content-length: -5\r\n",
+        b": no-name\r\n",
+        b"\r\n",
+        b"\tx",
+    ];
+    let mut b = seeds[rng.below(seeds.len())].clone();
+    for _ in 0..1 + rng.below(4) {
+        if b.is_empty() {
+            b.push(rng.next_u64() as u8);
+            continue;
+        }
+        match rng.below(6) {
+            // Flip one byte anywhere (method, path, header, body).
+            0 => {
+                let i = rng.below(b.len());
+                b[i] = rng.next_u64() as u8;
+            }
+            // Truncate (torn request).
+            1 => b.truncate(rng.below(b.len() + 1)),
+            // Splice a hostile HTTP fragment.
+            2 => {
+                let s = SNIPPETS[rng.below(SNIPPETS.len())];
+                let i = rng.below(b.len() + 1);
+                b.splice(i..i, s.iter().copied());
+            }
+            // Duplicate a random slice (repeated headers, double heads).
+            3 => {
+                let i = rng.below(b.len());
+                let j = i + rng.below(b.len() - i + 1);
+                let dup = b[i..j].to_vec();
+                let at = rng.below(b.len() + 1);
+                b.splice(at..at, dup);
+            }
+            // Long-token flood (oversized method/path/header value).
+            4 => {
+                let i = rng.below(b.len() + 1);
+                let n = 1 + rng.below(2048);
+                b.splice(i..i, (0..n).map(|_| b'A'));
+            }
+            // Raw junk bytes.
+            _ => {
+                let i = rng.below(b.len() + 1);
+                let junk: Vec<u8> = (0..1 + rng.below(16)).map(|_| rng.next_u64() as u8).collect();
+                b.splice(i..i, junk);
+            }
+        }
+    }
+    b
+}
+
+fn fuzz_serve(cases: usize, seed: u64) -> Result<usize> {
+    let seeds = serve_seeds();
+    for (i, s) in seeds.iter().enumerate() {
+        let sig = serve_sig_buffered(s);
+        anyhow::ensure!(sig.starts_with("ok "), "serve seed {i} must parse, got: {sig}");
+        anyhow::ensure!(
+            sig == serve_sig_dripped(s),
+            "serve seed {i}: buffered and dripped delivery disagree"
+        );
+    }
+    let mut findings = 0;
+    let mut shown = 0;
+    for case in 0..cases {
+        let mut rng = case_rng(seed, 0x5e24e, case);
+        let bytes = mutated_request(&seeds, &mut rng);
+        if let Err(e) = catch_unwind(AssertUnwindSafe(|| {
+            let buffered = serve_sig_buffered(&bytes);
+            let dripped = serve_sig_dripped(&bytes);
+            assert_eq!(buffered, dripped, "delivery chunking changed the parse");
+        })) {
+            findings += 1;
+            let input = String::from_utf8_lossy(&bytes).into_owned();
+            report("serve", case, &mut shown, &panic_msg(e), &input);
         }
     }
     Ok(findings)

@@ -589,6 +589,9 @@ fn options_from_json(v: &Json) -> Result<EngineOptions> {
             .transpose()?,
         // Never serialized: a resumed run sets this at execute time.
         step_offset: 0,
+        // Never serialized either: a live sink is execution context
+        // (the serve daemon attaches one), not experiment description.
+        progress: Default::default(),
     })
 }
 

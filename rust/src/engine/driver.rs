@@ -258,6 +258,13 @@ impl<'a> TrainSession<'a> {
             group,
             at,
         });
+        if self.opts.progress.is_set() {
+            self.opts.progress.emit(crate::engine::ProgressEvent::Fault {
+                kind: kind.to_string(),
+                group,
+                at,
+            });
+        }
     }
 
     /// Charge `secs` of crash downtime to `group` (a completed
@@ -395,7 +402,21 @@ impl<'a> TrainSession<'a> {
         if let Some(gap) = gap {
             self.planner.observe(c.group, gap);
         }
-        self.planner.maybe_replan(c.vtime);
+        if self.planner.maybe_replan(c.vtime).is_some() && self.opts.progress.is_set() {
+            // A revised epoch just went live: stream it as committed
+            // (under racing OsThreads the controller may already hold a
+            // newer epoch — report what is in force, exactly like the
+            // finalized report's epoch list will).
+            let e = self.planner.current();
+            self.opts.progress.emit(crate::engine::ProgressEvent::PlanEpoch {
+                version: e.version,
+                since_vtime: e.since_vtime,
+                shares: e.plan.shares().to_vec(),
+            });
+        }
+        if self.opts.progress.cancelled() {
+            self.request_stop(); // cooperative cancellation (e.g. serve DELETE)
+        }
         if !c.loss.is_finite() || c.loss > 1e4 {
             self.request_stop(); // diverged: stop scheduling new work
         }
@@ -441,8 +462,25 @@ impl<'a> TrainSession<'a> {
             // cost there instead of charging an arbitrary group.
             let group = self.cfg.cluster.fastest_group(self.cfg.groups(), c.vtime);
             let cost = self.eval_cost(group, c.vtime);
-            let mut st = self.state.lock().unwrap();
-            st.evals.push(EvalRecord { seq: completed, vtime: c.vtime, loss, acc, group, cost });
+            {
+                let mut st = self.state.lock().unwrap();
+                st.evals.push(EvalRecord {
+                    seq: completed,
+                    vtime: c.vtime,
+                    loss,
+                    acc,
+                    group,
+                    cost,
+                });
+            }
+            // Emitted after the record commits (and outside the state
+            // lock), so a sink never sees an eval the report will lack.
+            self.opts.progress.emit(crate::engine::ProgressEvent::Eval {
+                seq: completed,
+                vtime: c.vtime,
+                loss,
+                acc,
+            });
         }
         Ok(())
     }

@@ -28,6 +28,7 @@ mod averaging;
 #[cfg(feature = "xla")]
 mod driver;
 mod options;
+mod progress;
 mod report;
 #[cfg(feature = "xla")]
 mod sim_time;
@@ -42,6 +43,7 @@ pub use driver::{
     Scheduler, ServerStats, TrainSession,
 };
 pub use options::{EngineOptions, SchedulerKind};
+pub use progress::{ProgressEvent, ProgressHook, ProgressSink};
 pub use report::{
     sort_records, EvalRecord, FaultRecord, GroupStats, IterRecord, PlanEpochRecord,
     TrainReport,

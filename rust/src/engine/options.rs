@@ -40,6 +40,11 @@ pub struct EngineOptions {
     /// chain of resumes keeps one monotone step budget. Internal — set
     /// by [`crate::api::RunSpec::execute_from_step`], never serialized.
     pub step_offset: u64,
+    /// Live progress sink + cooperative cancellation (see
+    /// [`super::progress`]). Unset by default (no-op, bit-identical
+    /// timelines); execution context like `step_offset`, never
+    /// serialized.
+    pub progress: super::progress::ProgressHook,
 }
 
 impl Default for EngineOptions {
@@ -55,6 +60,7 @@ impl Default for EngineOptions {
             checkpoint_every: 0,
             checkpoint_path: None,
             step_offset: 0,
+            progress: super::progress::ProgressHook::none(),
         }
     }
 }

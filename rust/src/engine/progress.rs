@@ -1,0 +1,211 @@
+//! [`ProgressSink`] — live progress events out of the training driver.
+//!
+//! The driver historically reported only after the fact (the finalized
+//! [`super::TrainReport`]); a long-lived consumer like the serve
+//! daemon's `GET /runs/{id}/events` stream would have to poll the
+//! store. Instead, [`EngineOptions::progress`](super::EngineOptions)
+//! carries an optional sink that the driver calls as events COMMIT —
+//! after the matching record is pushed into the session state, so a
+//! sink can never observe an event the final report will not contain.
+//!
+//! The default is a no-op: [`ProgressHook`] holds no sink, `emit` takes
+//! one branch and allocates nothing, and `cancelled` is `false` — an
+//! unset hook leaves every timeline bit-identical to a build without
+//! this module. The hook also carries cooperative cancellation: the
+//! driver polls [`ProgressHook::cancelled`] once per completed
+//! iteration and drains via its normal stop path (`request_stop`), the
+//! same mechanism the divergence and vtime-budget rules use.
+//!
+//! Like [`super::options`] and [`super::report`], this module is part
+//! of the ungated API surface (a `RunSpec` embeds `EngineOptions`), so
+//! it compiles in `--no-default-features` builds.
+
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// One committed progress event. Mirrors the report's record types
+/// ([`super::PlanEpochRecord`], [`super::EvalRecord`],
+/// [`super::FaultRecord`]) but carries only the fields known at commit
+/// time — per-epoch iteration counts, for example, exist only in the
+/// finalized report.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProgressEvent {
+    /// A revised batch plan went live (adaptive planning or a
+    /// membership change).
+    PlanEpoch { version: u64, since_vtime: f64, shares: Vec<usize> },
+    /// A held-out evaluation completed.
+    Eval { seq: u64, vtime: f64, loss: f32, acc: f32 },
+    /// A fault-schedule event fired (crash/restart/stall/partition).
+    Fault { kind: String, group: Option<usize>, at: f64 },
+}
+
+impl ProgressEvent {
+    /// Serialize for a newline-delimited JSON stream. The `"kind"` key
+    /// discriminates; the fault record's own kind is carried as
+    /// `"fault"` to keep the discriminator unambiguous.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ProgressEvent::PlanEpoch { version, since_vtime, shares } => Json::obj(vec![
+                ("kind", Json::Str("plan_epoch".into())),
+                ("version", Json::Num(*version as f64)),
+                ("since_vtime", num(*since_vtime)),
+                ("shares", Json::arr_usize(shares)),
+            ]),
+            ProgressEvent::Eval { seq, vtime, loss, acc } => Json::obj(vec![
+                ("kind", Json::Str("eval".into())),
+                ("seq", Json::Num(*seq as f64)),
+                ("vtime", num(*vtime)),
+                ("loss", num(*loss as f64)),
+                ("acc", num(*acc as f64)),
+            ]),
+            ProgressEvent::Fault { kind, group, at } => {
+                let mut fields = vec![
+                    ("kind", Json::Str("fault".into())),
+                    ("fault", Json::Str(kind.clone())),
+                    ("at", num(*at)),
+                ];
+                if let Some(g) = group {
+                    fields.push(("group", Json::Num(*g as f64)));
+                }
+                Json::obj(fields)
+            }
+        }
+    }
+}
+
+/// Non-finite-safe number encoding for the event stream: a diverged
+/// eval loss is a legitimate event, but [`Json::Num`] (and RFC 8259)
+/// only carry finite values — tag the exceptions as strings, the same
+/// convention `RunOutcome` uses on disk.
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("NaN".into())
+    } else if x > 0.0 {
+        Json::Str("Infinity".into())
+    } else {
+        Json::Str("-Infinity".into())
+    }
+}
+
+/// A live consumer of driver progress. `emit` is called on whichever
+/// thread commits the event (multiple under `OsThreads`), so
+/// implementations synchronize internally and should return quickly —
+/// the driver holds no locks across the call, but slow sinks still
+/// stretch the wall-clock of every scheduler.
+pub trait ProgressSink: Send + Sync {
+    fn emit(&self, event: &ProgressEvent);
+
+    /// Cooperative cancellation: return `true` to ask the session to
+    /// stop scheduling new work (in-flight iterations drain normally).
+    fn cancelled(&self) -> bool {
+        false
+    }
+}
+
+/// The optional sink as it rides on `EngineOptions`: cheap to clone
+/// (an `Arc`), `Default` is the no-op unset state, and it is never
+/// serialized — a spec JSON round-trip always yields an unset hook
+/// (like `step_offset`, it is execution context, not experiment
+/// description).
+#[derive(Clone, Default)]
+pub struct ProgressHook(Option<Arc<dyn ProgressSink>>);
+
+impl ProgressHook {
+    /// An unset hook (same as `Default`): no emissions, never cancelled.
+    pub fn none() -> Self {
+        Self(None)
+    }
+
+    pub fn new(sink: Arc<dyn ProgressSink>) -> Self {
+        Self(Some(sink))
+    }
+
+    /// Whether a sink is attached — guard event *construction* with
+    /// this when building the event allocates.
+    pub fn is_set(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn emit(&self, event: ProgressEvent) {
+        if let Some(sink) = &self.0 {
+            sink.emit(&event);
+        }
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.0.as_ref().is_some_and(|s| s.cancelled())
+    }
+}
+
+impl std::fmt::Debug for ProgressHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "ProgressHook(set)" } else { "ProgressHook(unset)" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    struct Capture {
+        events: Mutex<Vec<ProgressEvent>>,
+        cancel: AtomicBool,
+    }
+
+    impl ProgressSink for Capture {
+        fn emit(&self, event: &ProgressEvent) {
+            self.events.lock().unwrap().push(event.clone());
+        }
+
+        fn cancelled(&self) -> bool {
+            self.cancel.load(Ordering::Relaxed)
+        }
+    }
+
+    #[test]
+    fn unset_hook_is_inert() {
+        let hook = ProgressHook::default();
+        assert!(!hook.is_set());
+        assert!(!hook.cancelled());
+        hook.emit(ProgressEvent::Eval { seq: 1, vtime: 0.5, loss: 1.0, acc: 0.1 });
+        assert_eq!(format!("{hook:?}"), "ProgressHook(unset)");
+    }
+
+    #[test]
+    fn set_hook_delivers_and_cancels() {
+        let cap = Arc::new(Capture {
+            events: Mutex::new(vec![]),
+            cancel: AtomicBool::new(false),
+        });
+        let hook = ProgressHook::new(cap.clone());
+        assert!(hook.is_set());
+        let ev = ProgressEvent::Fault { kind: "crash".into(), group: Some(0), at: 6.0 };
+        hook.emit(ev.clone());
+        assert_eq!(cap.events.lock().unwrap().as_slice(), &[ev]);
+        assert!(!hook.cancelled());
+        cap.cancel.store(true, Ordering::Relaxed);
+        assert!(hook.cancelled());
+    }
+
+    #[test]
+    fn events_serialize_with_tagged_nonfinite() {
+        let j = ProgressEvent::Eval { seq: 3, vtime: 1.25, loss: f32::NAN, acc: 0.5 }
+            .to_json()
+            .dump();
+        assert!(j.contains("\"kind\":\"eval\""), "{j}");
+        assert!(j.contains("\"loss\":\"NaN\""), "{j}");
+        let p = ProgressEvent::PlanEpoch { version: 2, since_vtime: 8.0, shares: vec![16, 16] }
+            .to_json()
+            .dump();
+        assert!(p.contains("\"shares\":[16,16]"), "{p}");
+        let f = ProgressEvent::Fault { kind: "restart".into(), group: None, at: 12.0 }
+            .to_json()
+            .dump();
+        assert!(f.contains("\"fault\":\"restart\"") && !f.contains("group"), "{f}");
+    }
+}

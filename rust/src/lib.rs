@@ -28,7 +28,9 @@
 //! trainer, heterogeneous device profiles), [`engine::ThreadedEngine`]
 //! (real OS-thread groups), [`engine::AveragingEngine`] (SparkNet-style
 //! model averaging), [`optimizer::algorithm1::AutoOptimizer`] (the
-//! paper's Algorithm 1), and the `omnivore` CLI (`rust/src/main.rs`).
+//! paper's Algorithm 1), the `omnivore` CLI (`rust/src/main.rs`), and
+//! the multi-tenant experiment daemon ([`serve`] — `omnivore serve`,
+//! DESIGN.md §Serving).
 
 pub mod api;
 pub mod backend;
@@ -41,6 +43,7 @@ pub mod metrics;
 pub mod model;
 pub mod optimizer;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -7,6 +7,8 @@
 //! * `simulate` — timing-only cluster simulation (Fig 5b predicted vs
 //!   measured).
 //! * `bayesian` — compare Algorithm 1 against the GP-EI baseline.
+//! * `serve`    — multi-tenant experiment daemon: RunSpec traffic over
+//!   a shared group fleet (DESIGN.md §Serving).
 //! * `info`     — artifact/manifest inventory.
 //!
 //! Every training subcommand is a thin shell over the experiment API
@@ -125,6 +127,16 @@ const BAYESIAN_FLAGS: &[Flag] = &[
     switch("json"),
 ];
 
+const SERVE_FLAGS: &[Flag] = &[
+    val("addr", "HOST:PORT"),
+    val("fleet-groups", "N"),
+    val("workers", "N"),
+    val("rate", "TOKENS/S"),
+    val("burst", "N"),
+    val("max-client-runs", "N"),
+    val("runs", "DIR"),
+];
+
 const INFO_FLAGS: &[Flag] = &[];
 
 const SUBCOMMANDS: &[(&str, &[Flag])] = &[
@@ -133,6 +145,7 @@ const SUBCOMMANDS: &[(&str, &[Flag])] = &[
     ("sweep", SWEEP_FLAGS),
     ("simulate", SIMULATE_FLAGS),
     ("bayesian", BAYESIAN_FLAGS),
+    ("serve", SERVE_FLAGS),
     ("info", INFO_FLAGS),
 ];
 
@@ -140,7 +153,7 @@ const SUBCOMMANDS: &[(&str, &[Flag])] = &[
 fn usage() -> String {
     let mut out = String::from(
         "usage: omnivore [--artifacts DIR] [--backend stub|native|auto] \
-         <train|optimize|sweep|simulate|bayesian|info> [flags]\n",
+         <train|optimize|sweep|simulate|bayesian|serve|info> [flags]\n",
     );
     for (name, flags) in SUBCOMMANDS {
         let mut line = format!("  {name}:");
@@ -242,6 +255,7 @@ fn main() -> Result<()> {
         "sweep" => sweep(&args),
         "simulate" => simulate(&args),
         "bayesian" => bayesian(&args),
+        "serve" => serve(&args),
         "info" => info(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n{}", usage());
@@ -676,6 +690,34 @@ fn bayesian(args: &Args) -> Result<()> {
             .map(|c| c.to_string())
             .unwrap_or_else(|| "never".into()),
     );
+    Ok(())
+}
+
+/// Run the multi-tenant experiment daemon in the foreground
+/// (DESIGN.md §Serving). Submitted runs land in the same run store the
+/// CLI reads, so `omnivore serve` and `omnivore train` share results.
+fn serve(args: &Args) -> Result<()> {
+    let cx = Cx::new(args, SERVE_FLAGS);
+    let backend = cx.opt_str("backend");
+    if let Some(b) = &backend {
+        omnivore::backend::BackendChoice::parse(b)?;
+    }
+    let cfg = omnivore::serve::ServeConfig {
+        addr: cx.str("addr", "127.0.0.1:7911"),
+        fleet_groups: cx.get("fleet-groups", 8usize)?,
+        workers: cx.get("workers", 2usize)?,
+        runs_dir: cx.str("runs", DEFAULT_RUNS_DIR),
+        artifacts: cx.opt_str("artifacts"),
+        backend,
+        rate: cx.get("rate", 5.0f64)?,
+        burst: cx.get("burst", 10.0f64)?,
+        max_runs_per_client: cx.get("max-client-runs", 4usize)?,
+        ..Default::default()
+    };
+    cx.finish()?;
+    let daemon = omnivore::serve::Daemon::start(cfg)?;
+    println!("omnivore serve listening on http://{}", daemon.addr());
+    daemon.run_forever();
     Ok(())
 }
 

@@ -1,0 +1,629 @@
+//! The `omnivore serve` daemon: accept loop, router, job queue, and
+//! the worker pool executing leased runs (DESIGN.md §Serving).
+//!
+//! One `TcpListener` accept thread hands each connection to a short-
+//! lived handler thread (one request per connection, bounded by read/
+//! write timeouts); `POST /runs` enqueues; `workers` long-lived worker
+//! threads lease groups FIFO from the [`FleetAllocator`] and execute
+//! through the exact CLI path — fresh [`Runtime`], `initial_state`,
+//! `execute_from_step` — so a daemon run's stored [`RunOutcome`] is
+//! bit-identical to the same spec via `omnivore train` (modulo wall
+//! clocks). Progress streams through the run's [`EventLog`] via a
+//! [`ProgressSink`], which doubles as the cooperative cancel channel.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::fleet::FleetAllocator;
+use super::http::{
+    error_response, read_request, write_stream_head, Method, Request, Response,
+    DEFAULT_MAX_BODY,
+};
+use super::limits::ClientLimits;
+use super::registry::{parse_run_id, run_id_str, Registry, RunEntry, RunState};
+use crate::api::{resolve_artifacts_dir, RunOutcome, RunSpec, RunStore, DEFAULT_RUNS_DIR};
+use crate::engine::{ProgressEvent, ProgressHook, ProgressSink};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+/// How long a connection may dawdle sending its request or draining a
+/// response before its handler thread gives up (slowloris bound).
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Event-stream tail poll granularity (also the shutdown latency for
+/// an idle `/events` connection).
+const TAIL_POLL: Duration = Duration::from_millis(200);
+
+/// Daemon configuration (the `serve` subcommand's flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Total simulated compute groups the fleet leases out.
+    pub fleet_groups: usize,
+    /// Worker threads (max concurrently executing runs).
+    pub workers: usize,
+    /// Run-store directory (shared with the CLI's `--runs`).
+    pub runs_dir: String,
+    /// Artifacts dir override (the CLI's `--artifacts` precedence).
+    pub artifacts: Option<String>,
+    /// Backend policy override (the CLI's `--backend` precedence:
+    /// daemon flag > spec field > auto).
+    pub backend: Option<String>,
+    /// Token-bucket refill, requests/second per client.
+    pub rate: f64,
+    /// Token-bucket burst capacity per client.
+    pub burst: f64,
+    /// Max queued+running runs per client (0 = unlimited).
+    pub max_runs_per_client: usize,
+    /// Request-body cap in bytes.
+    pub max_body: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7911".into(),
+            fleet_groups: 8,
+            workers: 2,
+            runs_dir: DEFAULT_RUNS_DIR.into(),
+            artifacts: None,
+            backend: None,
+            rate: 5.0,
+            burst: 10.0,
+            max_runs_per_client: 4,
+            max_body: DEFAULT_MAX_BODY,
+        }
+    }
+}
+
+/// Everything the accept loop, handlers, and workers share.
+struct Shared {
+    cfg: ServeConfig,
+    store: RunStore,
+    state: Mutex<DaemonState>,
+    /// Signaled when the queue or the free set grows.
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+struct DaemonState {
+    registry: Registry,
+    /// FIFO admission order (run ids). Head-of-line only: a run later
+    /// in the queue never overtakes one whose demand does not fit yet,
+    /// so "position" is an honest promise.
+    queue: VecDeque<u64>,
+    fleet: FleetAllocator,
+    limits: ClientLimits,
+}
+
+/// A running daemon. Dropping it does NOT stop the threads — call
+/// [`Daemon::shutdown`] for an orderly stop (tests do; the CLI runs
+/// until killed).
+pub struct Daemon {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind, open the store, and spawn the accept + worker threads.
+    pub fn start(cfg: ServeConfig) -> Result<Daemon> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let store = RunStore::open(&cfg.runs_dir)?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(DaemonState {
+                registry: Registry::default(),
+                queue: VecDeque::new(),
+                fleet: FleetAllocator::new(cfg.fleet_groups),
+                limits: ClientLimits::new(cfg.rate, cfg.burst, cfg.max_runs_per_client),
+            }),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            store,
+            cfg,
+        });
+        let workers = (0..shared.cfg.workers.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        let accept = {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(&sh, listener))
+                .expect("spawning accept thread")
+        };
+        Ok(Daemon { shared, addr, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block on the accept loop — the CLI's foreground mode, which
+    /// runs until the process is killed.
+    pub fn run_forever(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Orderly stop: cancel queued runs, ask running ones to stop at
+    /// their next completed iteration, then join every thread.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let drained: Vec<u64> = st.queue.drain(..).collect();
+            for id in drained {
+                let client = match st.registry.get_mut(id) {
+                    Some(e) => {
+                        e.state = RunState::Cancelled;
+                        e.events.push(end_event(RunState::Cancelled, &e.tag, false));
+                        e.events.close();
+                        e.client.clone()
+                    }
+                    None => continue,
+                };
+                st.limits.release_run(&client);
+            }
+            for e in st.registry.iter() {
+                e.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        self.shared.work.notify_all();
+        // Unblock the accept loop with one throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// -- accept + per-connection handling ---------------------------------------
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let sh = shared.clone();
+        // Handler threads are bounded by IO_TIMEOUT (and the event
+        // tail's shutdown check), so detaching them is safe.
+        let _ = std::thread::Builder::new()
+            .name("serve-conn".into())
+            .spawn(move || handle_conn(&sh, stream));
+    }
+}
+
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let req = match read_request(&mut stream, shared.cfg.max_body) {
+        Ok(req) => req,
+        Err(e) => {
+            if let Some(resp) = error_response(&e) {
+                let _ = resp.write_to(&mut stream);
+            }
+            return;
+        }
+    };
+    // The event stream writes its own (unframed) response; everything
+    // else returns a Response.
+    if req.method == Method::Get {
+        if let Some(id) = req
+            .path
+            .strip_prefix("/runs/")
+            .and_then(|rest| rest.strip_suffix("/events"))
+            .and_then(parse_run_id)
+        {
+            stream_events(shared, &mut stream, id);
+            return;
+        }
+    }
+    let resp = respond(shared, &req);
+    let _ = resp.write_to(&mut stream);
+}
+
+fn respond(shared: &Arc<Shared>, req: &Request) -> Response {
+    match (req.method, req.path.as_str()) {
+        (Method::Get, "/healthz") => health(shared),
+        (Method::Get, "/fleet") => fleet_status(shared),
+        (Method::Get, "/runs") => run_list(shared),
+        (Method::Post, "/runs") => submit(shared, req),
+        (Method::Get, path) => match path.strip_prefix("/runs/") {
+            Some(x) if !x.is_empty() && !x.contains('/') => run_status(shared, x),
+            _ => Response::error(404, "no such endpoint"),
+        },
+        (Method::Delete, path) => match path.strip_prefix("/runs/").and_then(parse_run_id) {
+            Some(id) => cancel_run(shared, id),
+            None => Response::error(404, "DELETE wants /runs/{id}"),
+        },
+        (Method::Other, _) => Response::error(405, "unsupported method"),
+        (_, "/healthz") | (_, "/fleet") | (_, "/runs") => {
+            Response::error(405, "method not allowed here")
+        }
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+// -- endpoints ---------------------------------------------------------------
+
+fn client_of(req: &Request) -> String {
+    match req.header("x-omnivore-client") {
+        Some(c) if !c.is_empty() && c.len() <= 64 => c.to_string(),
+        _ => "anon".to_string(),
+    }
+}
+
+fn submit(shared: &Arc<Shared>, req: &Request) -> Response {
+    let client = client_of(req);
+    // Rate limit first: hostile traffic pays its token before any
+    // parsing work happens.
+    if !shared.state.lock().unwrap().limits.admit(&client) {
+        return Response::error(429, "rate limited");
+    }
+    let spec = match std::str::from_utf8(&req.body)
+        .map_err(anyhow::Error::from)
+        .and_then(|text| Json::parse(text))
+        .and_then(|v| RunSpec::from_json(&v))
+    {
+        Ok(spec) => spec,
+        Err(e) => return Response::error(400, &format!("bad RunSpec: {e}")),
+    };
+    let demand = spec.effective_config().groups();
+    let mut st = shared.state.lock().unwrap();
+    if !st.fleet.fits_fleet(demand) {
+        return Response::error(
+            400,
+            &format!("group demand {demand} can never fit a fleet of {}", st.fleet.total()),
+        );
+    }
+    if !st.limits.try_reserve_run(&client) {
+        return Response::error(429, "run quota exceeded for this client");
+    }
+    let id = st.registry.insert(spec, client, demand);
+    st.queue.push_back(id);
+    let position = st.queue.len();
+    let tag = st.registry.get(id).expect("just inserted").tag.clone();
+    drop(st);
+    shared.work.notify_all();
+    Response::json(
+        202,
+        &Json::obj(vec![
+            ("id", Json::Str(run_id_str(id))),
+            ("tag", Json::Str(tag)),
+            ("state", Json::Str("queued".into())),
+            ("position", Json::Num(position as f64)),
+        ]),
+    )
+}
+
+fn status_json(e: &RunEntry, position: Option<usize>) -> Json {
+    let mut fields = vec![
+        ("id", Json::Str(run_id_str(e.id))),
+        ("tag", Json::Str(e.tag.clone())),
+        ("client", Json::Str(e.client.clone())),
+        ("state", Json::Str(e.state.as_str().into())),
+        ("groups", Json::Num(e.groups as f64)),
+    ];
+    if let Some(p) = position {
+        fields.push(("position", Json::Num(p as f64)));
+    }
+    if let Some(err) = &e.error {
+        fields.push(("error", Json::Str(err.clone())));
+    }
+    if e.cancel.load(Ordering::Relaxed) && !e.state.is_terminal() {
+        fields.push(("cancel_requested", Json::Bool(true)));
+    }
+    Json::obj(fields)
+}
+
+/// `GET /runs/{x}`: a live run id -> status (with queue position);
+/// otherwise the store's outcomes under tag `x`; otherwise a live
+/// run's tag -> status; otherwise 404.
+fn run_status(shared: &Arc<Shared>, x: &str) -> Response {
+    let st = shared.state.lock().unwrap();
+    if let Some(e) = parse_run_id(x).and_then(|id| st.registry.get(id)) {
+        let position = st.queue.iter().position(|&q| q == e.id).map(|i| i + 1);
+        return Response::json(200, &status_json(e, position));
+    }
+    drop(st);
+    match shared.store.by_tag(x) {
+        Ok(outcomes) if !outcomes.is_empty() => Response::json(
+            200,
+            &Json::obj(vec![
+                ("tag", Json::Str(x.into())),
+                ("outcomes", Json::Arr(outcomes.iter().map(|o| o.to_json()).collect())),
+            ]),
+        ),
+        Ok(_) => {
+            let st = shared.state.lock().unwrap();
+            match st.registry.iter().rev().find(|e| e.tag == x) {
+                Some(e) => {
+                    let position =
+                        st.queue.iter().position(|&q| q == e.id).map(|i| i + 1);
+                    Response::json(200, &status_json(e, position))
+                }
+                None => Response::error(404, &format!("no run or stored tag {x:?}")),
+            }
+        }
+        Err(e) => Response::error(500, &format!("reading store: {e}")),
+    }
+}
+
+fn run_list(shared: &Arc<Shared>) -> Response {
+    let st = shared.state.lock().unwrap();
+    let runs: Vec<Json> = st
+        .registry
+        .iter()
+        .map(|e| {
+            let position = st.queue.iter().position(|&q| q == e.id).map(|i| i + 1);
+            status_json(e, position)
+        })
+        .collect();
+    Response::json(200, &Json::obj(vec![("runs", Json::Arr(runs))]))
+}
+
+fn cancel_run(shared: &Arc<Shared>, id: u64) -> Response {
+    let mut st = shared.state.lock().unwrap();
+    let Some(e) = st.registry.get(id) else {
+        return Response::error(404, &format!("no run {}", run_id_str(id)));
+    };
+    match e.state {
+        // Terminal already: idempotent no-op, report where it ended.
+        s if s.is_terminal() => {
+            let body = status_json(e, None);
+            Response::json(200, &body)
+        }
+        RunState::Queued => {
+            st.queue.retain(|&q| q != id);
+            let client = {
+                let e = st.registry.get_mut(id).expect("checked above");
+                e.state = RunState::Cancelled;
+                e.events.push(end_event(RunState::Cancelled, &e.tag, false));
+                e.events.close();
+                e.client.clone()
+            };
+            st.limits.release_run(&client);
+            let body = status_json(st.registry.get(id).expect("still present"), None);
+            drop(st);
+            shared.work.notify_all();
+            Response::json(200, &body)
+        }
+        _ => {
+            // Running: flip the cooperative flag; the driver stops at
+            // its next completed iteration and the worker finalizes.
+            e.cancel.store(true, Ordering::Relaxed);
+            Response::json(200, &status_json(e, None))
+        }
+    }
+}
+
+fn health(shared: &Arc<Shared>) -> Response {
+    let st = shared.state.lock().unwrap();
+    let running = st.registry.iter().filter(|e| e.state == RunState::Running).count();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("queue_depth", Json::Num(st.queue.len() as f64)),
+            ("running", Json::Num(running as f64)),
+            ("free_groups", Json::Num(st.fleet.free() as f64)),
+            ("total_groups", Json::Num(st.fleet.total() as f64)),
+        ]),
+    )
+}
+
+fn fleet_status(shared: &Arc<Shared>) -> Response {
+    let st = shared.state.lock().unwrap();
+    let active: Vec<Json> = st
+        .fleet
+        .leases()
+        .map(|(id, groups)| {
+            let tag = st.registry.get(id).map(|e| e.tag.clone()).unwrap_or_default();
+            Json::obj(vec![
+                ("id", Json::Str(run_id_str(id))),
+                ("tag", Json::Str(tag)),
+                ("groups", Json::Num(groups as f64)),
+            ])
+        })
+        .collect();
+    let queued: Vec<Json> = st
+        .queue
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &id)| {
+            let e = st.registry.get(id)?;
+            Some(Json::obj(vec![
+                ("id", Json::Str(run_id_str(id))),
+                ("tag", Json::Str(e.tag.clone())),
+                ("groups", Json::Num(e.groups as f64)),
+                ("position", Json::Num((i + 1) as f64)),
+            ]))
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("total_groups", Json::Num(st.fleet.total() as f64)),
+            ("leased_groups", Json::Num(st.fleet.leased() as f64)),
+            ("free_groups", Json::Num(st.fleet.free() as f64)),
+            ("queue_depth", Json::Num(st.queue.len() as f64)),
+            ("active", Json::Arr(active)),
+            ("queued", Json::Arr(queued)),
+        ]),
+    )
+}
+
+/// `GET /runs/{id}/events`: NDJSON tail of the run's event log, held
+/// open until the log closes (run terminal) or the client goes away.
+fn stream_events(shared: &Arc<Shared>, stream: &mut TcpStream, id: u64) {
+    use std::io::Write as _;
+    let events = {
+        let st = shared.state.lock().unwrap();
+        st.registry.get(id).map(|e| e.events.clone())
+    };
+    let Some(events) = events else {
+        let _ = Response::error(404, &format!("no run {}", run_id_str(id))).write_to(stream);
+        return;
+    };
+    if write_stream_head(stream).is_err() {
+        return;
+    }
+    let mut from = 0;
+    loop {
+        let (lines, closed) = events.wait_beyond(from, TAIL_POLL);
+        from += lines.len();
+        for line in &lines {
+            if stream.write_all(line.as_bytes()).is_err()
+                || stream.write_all(b"\n").is_err()
+            {
+                return;
+            }
+        }
+        if stream.flush().is_err() {
+            return;
+        }
+        if closed || shared.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+    }
+}
+
+// -- workers -----------------------------------------------------------------
+
+fn worker_loop(shared: &Arc<Shared>) {
+    while let Some(id) = next_job(shared) {
+        execute_run(shared, id);
+    }
+}
+
+/// Block until the head-of-queue run's demand fits the free set (then
+/// lease and claim it) or shutdown. Strict FIFO: only the head is ever
+/// considered, so queue positions cannot be overtaken.
+fn next_job(shared: &Arc<Shared>) -> Option<u64> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            return None;
+        }
+        if let Some(&id) = st.queue.front() {
+            let demand = st.registry.get(id).map(|e| e.groups).unwrap_or(0);
+            if demand > 0 && st.fleet.try_lease(id, demand) {
+                st.queue.pop_front();
+                if let Some(e) = st.registry.get_mut(id) {
+                    e.state = RunState::Running;
+                }
+                return Some(id);
+            }
+        }
+        let (guard, _) = shared.work.wait_timeout(st, Duration::from_millis(100)).unwrap();
+        st = guard;
+    }
+}
+
+/// The sink bridging driver progress into the run's event log, and
+/// the DELETE flag back into the driver's stop path.
+struct DaemonSink {
+    events: Arc<super::registry::EventLog>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl ProgressSink for DaemonSink {
+    fn emit(&self, event: &ProgressEvent) {
+        self.events.push(event.to_json().dump());
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+fn end_event(state: RunState, tag: &str, stored: bool) -> String {
+    Json::obj(vec![
+        ("kind", Json::Str("end".into())),
+        ("state", Json::Str(state.as_str().into())),
+        ("tag", Json::Str(tag.into())),
+        ("stored", Json::Bool(stored)),
+    ])
+    .dump()
+}
+
+/// Execute one leased run through the CLI's exact path and finalize:
+/// store the outcome, release the lease + quota, close the event log.
+fn execute_run(shared: &Arc<Shared>, id: u64) {
+    let (spec, cancel, events, client, tag) = {
+        let st = shared.state.lock().unwrap();
+        let e = st.registry.get(id).expect("leased run is registered");
+        (e.spec.clone(), e.cancel.clone(), e.events.clone(), e.client.clone(), e.tag.clone())
+    };
+    let result = run_one(shared, spec, &events, &cancel);
+    let (stored, error) = match result {
+        Ok(outcome) => match shared.store.append(&outcome) {
+            Ok(()) => (true, None),
+            Err(e) => (false, Some(format!("storing outcome: {e}"))),
+        },
+        Err(e) => (false, Some(format!("{e:#}"))),
+    };
+    let final_state = {
+        let mut st = shared.state.lock().unwrap();
+        st.fleet.release(id);
+        st.limits.release_run(&client);
+        let e = st.registry.get_mut(id).expect("leased run is registered");
+        e.state = match (&error, cancel.load(Ordering::Relaxed)) {
+            (Some(_), _) => RunState::Failed,
+            (None, true) => RunState::Cancelled,
+            (None, false) => RunState::Done,
+        };
+        e.error = error;
+        e.state
+    };
+    shared.work.notify_all();
+    events.push(end_event(final_state, &tag, stored));
+    events.close();
+}
+
+/// One run, the CLI way: resolve artifacts, fresh [`Runtime`] (so the
+/// outcome's runtime counters match a standalone `train` invocation),
+/// `initial_state` + `execute_from_step`, with this run's progress
+/// sink riding the spec's engine options.
+fn run_one(
+    shared: &Arc<Shared>,
+    mut spec: RunSpec,
+    events: &Arc<super::registry::EventLog>,
+    cancel: &Arc<AtomicBool>,
+) -> Result<RunOutcome> {
+    let dir =
+        resolve_artifacts_dir(shared.cfg.artifacts.as_deref(), Some(&spec.train.artifacts_dir));
+    spec.train.artifacts_dir = dir.clone();
+    if let Some(backend) = &shared.cfg.backend {
+        spec.backend = Some(backend.clone());
+    }
+    spec.options.progress = ProgressHook::new(Arc::new(DaemonSink {
+        events: events.clone(),
+        cancel: cancel.clone(),
+    }));
+    let rt = Runtime::load(&dir)?;
+    let (init, done) = spec.initial_state(&rt)?;
+    let (outcome, _report, _params) = spec.execute_from_step(&rt, init, done)?;
+    Ok(outcome)
+}

@@ -1,0 +1,114 @@
+//! [`FleetAllocator`] — compute groups as the schedulable resource.
+//!
+//! The daemon owns one simulated fleet of `total` groups (DESIGN.md
+//! §Serving). Every run's `ClusterSpec`/`Strategy` resolves to a group
+//! demand (`TrainConfig::groups()` on the effective config); a run
+//! executes only while it holds a lease for that many groups. Leasing
+//! is strict FIFO over the daemon's queue — the allocator itself only
+//! answers "does this demand fit the free set right now" and does the
+//! lease bookkeeping, so admission order stays the queue's single
+//! decision and a queued run's position is meaningful.
+//!
+//! Groups are fungible (the simulated cluster inside a run names its
+//! own groups 0..g), so a lease is a count, not a set of ids — the
+//! accounting is exact anyway: leases never exceed `total`, and
+//! releasing a run returns exactly what it leased.
+
+use std::collections::BTreeMap;
+
+/// Lease ledger over a fixed pool of simulated compute groups.
+#[derive(Debug)]
+pub struct FleetAllocator {
+    total: usize,
+    /// Live leases: run id -> groups held.
+    leases: BTreeMap<u64, usize>,
+}
+
+impl FleetAllocator {
+    pub fn new(total: usize) -> Self {
+        Self { total: total.max(1), leases: BTreeMap::new() }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn leased(&self) -> usize {
+        self.leases.values().sum()
+    }
+
+    pub fn free(&self) -> usize {
+        self.total - self.leased()
+    }
+
+    /// Whether `demand` can ever be satisfied (admission-time check:
+    /// a run asking for more than the whole fleet must be rejected,
+    /// not queued forever).
+    pub fn fits_fleet(&self, demand: usize) -> bool {
+        demand >= 1 && demand <= self.total
+    }
+
+    /// Lease `demand` groups to `run` if they are free right now.
+    pub fn try_lease(&mut self, run: u64, demand: usize) -> bool {
+        if demand == 0 || demand > self.free() || self.leases.contains_key(&run) {
+            return false;
+        }
+        self.leases.insert(run, demand);
+        true
+    }
+
+    /// Return `run`'s groups to the free set. Idempotent: releasing a
+    /// run that holds nothing is a no-op (a cancelled queued run never
+    /// leased).
+    pub fn release(&mut self, run: u64) {
+        self.leases.remove(&run);
+    }
+
+    /// Live leases as (run id, groups), ascending run id.
+    pub fn leases(&self) -> impl Iterator<Item = (u64, usize)> + '_ {
+        self.leases.iter().map(|(&run, &g)| (run, g))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_and_release_accounting() {
+        let mut f = FleetAllocator::new(8);
+        assert_eq!((f.total(), f.free()), (8, 8));
+        assert!(f.try_lease(1, 5));
+        assert!(f.try_lease(2, 3));
+        assert_eq!(f.free(), 0);
+        assert!(!f.try_lease(3, 1), "fleet is exhausted");
+        f.release(1);
+        assert_eq!(f.free(), 5);
+        assert!(f.try_lease(3, 4));
+        assert_eq!(f.leases().collect::<Vec<_>>(), vec![(2, 3), (3, 4)]);
+        f.release(2);
+        f.release(3);
+        assert_eq!(f.free(), 8, "all groups returned");
+    }
+
+    #[test]
+    fn oversize_and_zero_demand_never_lease() {
+        let mut f = FleetAllocator::new(4);
+        assert!(!f.fits_fleet(0));
+        assert!(!f.fits_fleet(5));
+        assert!(f.fits_fleet(4));
+        assert!(!f.try_lease(1, 0));
+        assert!(!f.try_lease(1, 5));
+        assert_eq!(f.free(), 4);
+    }
+
+    #[test]
+    fn double_lease_by_same_run_rejected() {
+        let mut f = FleetAllocator::new(4);
+        assert!(f.try_lease(7, 2));
+        assert!(!f.try_lease(7, 1), "a run holds at most one lease");
+        f.release(7);
+        f.release(7); // idempotent
+        assert_eq!(f.free(), 4);
+    }
+}

@@ -1,0 +1,443 @@
+//! Hand-rolled HTTP/1.1 request parser + response writer.
+//!
+//! The workspace is offline (path-only deps, DESIGN.md §Offline
+//! builds), so the daemon speaks just enough HTTP/1.1 itself: one
+//! request per connection, `Connection: close` on every response, no
+//! chunked transfer coding, bodies sized by `Content-Length` only.
+//! That subset is exactly what `curl`, `python3 -m urllib`, and the
+//! in-repo tests produce, and it keeps the parser small enough to
+//! fuzz exhaustively (`omnifuzz --surface serve`).
+//!
+//! This is an UNTRUSTED surface: [`read_request`] must survive
+//! arbitrary bytes, one-byte-at-a-time (slowloris-shaped) delivery,
+//! hostile `Content-Length`s, and header floods — every cap below is
+//! enforced before the matching allocation. It is deterministic in the
+//! byte stream alone (no clocks, no randomness), which the fuzzer
+//! exploits: parsing a stream dripped one byte per read must agree
+//! with parsing it from a single buffer.
+
+use std::io::{Read, Write};
+
+use crate::util::json::Json;
+
+/// Cap on the request line + headers, bytes. Far above any legitimate
+/// client of this API, far below memory that matters.
+pub const MAX_HEAD_BYTES: usize = 32 * 1024;
+/// Cap on the number of header lines (header-flood guard).
+pub const MAX_HEADERS: usize = 64;
+/// Default cap on a request body (a RunSpec JSON is a few KB).
+pub const DEFAULT_MAX_BODY: usize = 1024 * 1024;
+
+/// The three methods the API serves. Anything else is answered 405 —
+/// parsing still succeeds on well-formed syntax so the router can say
+/// *why* (see [`Request::method`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+    Delete,
+    /// Syntactically a token, not an API method (`PUT`, `PATCH`, ...).
+    Other,
+}
+
+/// One parsed request. Header names are lowercased at parse time
+/// (HTTP field names are case-insensitive); values keep their bytes
+/// minus surrounding whitespace.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: Method,
+    /// Raw path, percent-decoding not applied (run tags in this API
+    /// are `[A-Za-z0-9._-]` and never need it).
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name` (lowercase), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request did not parse. `Closed` (clean EOF before any byte)
+/// gets no response; everything else maps to a 4xx via
+/// [`error_response`].
+#[derive(Debug)]
+pub enum ParseError {
+    /// Peer closed before sending anything.
+    Closed,
+    /// Stream ended mid-request (truncated head or short body).
+    Truncated,
+    /// Malformed syntax: bad request line, bad header, bad
+    /// content-length, control bytes where tokens belong.
+    Bad(String),
+    /// A cap fired: "head" (431) or "body" (413).
+    TooLarge(&'static str),
+    /// Transport error (timeout, reset) — connection is dropped.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Closed => write!(f, "connection closed"),
+            ParseError::Truncated => write!(f, "truncated request"),
+            ParseError::Bad(why) => write!(f, "bad request: {why}"),
+            ParseError::TooLarge(what) => write!(f, "request {what} too large"),
+            ParseError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+/// Read one request off `stream`. Reads incrementally (robust to
+/// one-byte-at-a-time delivery) until the blank line, then exactly
+/// `Content-Length` body bytes (0 when absent, `max_body` at most).
+/// Body bytes that arrived in the same reads as the head are used
+/// first; bytes beyond the declared length are left untouched /
+/// discarded, never interpreted — the daemon serves one exchange per
+/// connection. The result depends only on the byte sequence, never on
+/// how reads chunked it (the fuzzer's drip-vs-buffered oracle).
+pub fn read_request<R: Read>(stream: &mut R, max_body: usize) -> Result<Request, ParseError> {
+    let (head, body_prefix) = read_head(stream)?;
+    let text = std::str::from_utf8(&head)
+        .map_err(|_| ParseError::Bad("head is not UTF-8".into()))?;
+    let (request_line, header_block) = match text.split_once("\r\n") {
+        Some((line, rest)) => (line, rest),
+        None => (text, ""),
+    };
+    let (method, path) = parse_request_line(request_line)?;
+    let headers = parse_headers(header_block)?;
+    let content_length = match find_header(&headers, "content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| ParseError::Bad(format!("content-length {v:?}")))?,
+    };
+    if content_length > max_body {
+        return Err(ParseError::TooLarge("body"));
+    }
+    let mut body = body_prefix;
+    if body.len() >= content_length {
+        body.truncate(content_length);
+    } else {
+        let filled = body.len();
+        body.resize(content_length, 0);
+        read_exact_or_truncated(stream, &mut body[filled..])?;
+    }
+    Ok(Request { method, path, headers, body })
+}
+
+/// Accumulate bytes until `\r\n\r\n`, capped at [`MAX_HEAD_BYTES`].
+/// Returns (head before the blank line, body bytes read past it).
+fn read_head<R: Read>(stream: &mut R) -> Result<(Vec<u8>, Vec<u8>), ParseError> {
+    let mut head = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        // Only the unseen suffix can complete the terminator, but the
+        // match may straddle a read boundary — rescan the last 3 bytes
+        // of the previous contents too.
+        let scan_from = head.len().saturating_sub(3);
+        let n = stream.read(&mut chunk).map_err(ParseError::Io)?;
+        if n == 0 {
+            return Err(if head.is_empty() { ParseError::Closed } else { ParseError::Truncated });
+        }
+        head.extend_from_slice(&chunk[..n]);
+        if head.len() > MAX_HEAD_BYTES {
+            return Err(ParseError::TooLarge("head"));
+        }
+        if let Some(at) = find_terminator(&head[scan_from..]) {
+            let end = scan_from + at;
+            let body_prefix = head.split_off(end + 4);
+            head.truncate(end); // drop the \r\n\r\n itself
+            return Ok((head, body_prefix));
+        }
+    }
+}
+
+fn find_terminator(bytes: &[u8]) -> Option<usize> {
+    bytes.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_request_line(line: &str) -> Result<(Method, String), ParseError> {
+    let mut parts = line.split(' ');
+    let (Some(method), Some(path), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(ParseError::Bad(format!("request line {line:?}")));
+    };
+    if parts.next().is_some() {
+        return Err(ParseError::Bad(format!("request line {line:?}")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ParseError::Bad(format!("version {version:?}")));
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ParseError::Bad(format!("method {method:?}")));
+    }
+    if path.is_empty()
+        || !path.starts_with('/')
+        || path.bytes().any(|b| b <= b' ' || b == 0x7f)
+    {
+        return Err(ParseError::Bad(format!("path {path:?}")));
+    }
+    let method = match method {
+        "GET" => Method::Get,
+        "POST" => Method::Post,
+        "DELETE" => Method::Delete,
+        _ => Method::Other,
+    };
+    Ok((method, path.to_string()))
+}
+
+fn parse_headers(block: &str) -> Result<Vec<(String, String)>, ParseError> {
+    let mut headers = Vec::new();
+    for line in block.split("\r\n") {
+        if line.is_empty() {
+            continue;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(ParseError::TooLarge("head"));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| ParseError::Bad(format!("header {line:?}")))?;
+        if name.is_empty()
+            || name.bytes().any(|b| b <= b' ' || b == 0x7f || b == b':')
+        {
+            return Err(ParseError::Bad(format!("header name {name:?}")));
+        }
+        let value = value.trim();
+        if value.bytes().any(|b| b < 0x20 && b != b'\t') {
+            return Err(ParseError::Bad(format!("header value for {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.to_string()));
+    }
+    Ok(headers)
+}
+
+fn find_header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn read_exact_or_truncated<R: Read>(
+    stream: &mut R,
+    buf: &mut [u8],
+) -> Result<(), ParseError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = stream.read(&mut buf[filled..]).map_err(ParseError::Io)?;
+        if n == 0 {
+            return Err(ParseError::Truncated);
+        }
+        filled += n;
+    }
+    Ok(())
+}
+
+// -- responses ---------------------------------------------------------------
+
+/// One response; `write_to` emits status line, `Content-Length`, and
+/// `Connection: close` (the daemon serves one exchange per connection).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Self {
+        let mut body = v.dump().into_bytes();
+        body.push(b'\n');
+        Self { status, content_type: "application/json", body }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &Json::obj(vec![("error", Json::Str(msg.into()))]))
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Head of a streaming NDJSON response (`GET /runs/{id}/events`): no
+/// `Content-Length`, the body is delimited by connection close.
+pub fn write_stream_head<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Map a parse failure to the response owed to the client — `None`
+/// when the peer is gone and nothing should (or can) be written.
+pub fn error_response(err: &ParseError) -> Option<Response> {
+    match err {
+        ParseError::Closed | ParseError::Io(_) => None,
+        ParseError::Truncated => Some(Response::error(400, "truncated request")),
+        ParseError::Bad(why) => Some(Response::error(400, why)),
+        ParseError::TooLarge("body") => Some(Response::error(413, "body exceeds limit")),
+        ParseError::TooLarge(_) => Some(Response::error(431, "headers exceed limit")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Request, ParseError> {
+        read_request(&mut Cursor::new(bytes), DEFAULT_MAX_BODY)
+    }
+
+    /// Reader that yields one byte per read (slowloris shape).
+    struct Drip<'a>(&'a [u8]);
+
+    impl Read for Drip<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.0.split_first() {
+                Some((&b, rest)) if !buf.is_empty() => {
+                    buf[0] = b;
+                    self.0 = rest;
+                    Ok(1)
+                }
+                _ => Ok(0),
+            }
+        }
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let r = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\nX-Omnivore-Client: ci\r\n\r\n")
+            .unwrap();
+        assert_eq!(r.method, Method::Get);
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.header("x-omnivore-client"), Some("ci"));
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = parse(b"POST /runs HTTP/1.1\r\nContent-Length: 7\r\n\r\n{\"a\":1}").unwrap();
+        assert_eq!(r.method, Method::Post);
+        assert_eq!(r.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn drip_delivery_matches_buffered() {
+        let raw: &[u8] =
+            b"POST /runs HTTP/1.1\r\ncontent-length: 4\r\nx-omnivore-client: t\r\n\r\nbody";
+        let a = parse(raw).unwrap();
+        let b = read_request(&mut Drip(raw), DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.path, b.path);
+        assert_eq!(a.headers, b.headers);
+        assert_eq!(a.body, b.body);
+    }
+
+    #[test]
+    fn unknown_method_parses_as_other() {
+        let r = parse(b"PATCH /runs HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(r.method, Method::Other);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(matches!(parse(b""), Err(ParseError::Closed)));
+        assert!(matches!(parse(b"GET /x HTTP/1.1\r\n"), Err(ParseError::Truncated)));
+        assert!(matches!(parse(b"GET /x\r\n\r\n"), Err(ParseError::Bad(_))));
+        assert!(matches!(parse(b"GET /x HTTP/9.9\r\n\r\n"), Err(ParseError::Bad(_))));
+        assert!(matches!(parse(b"GET x HTTP/1.1\r\n\r\n"), Err(ParseError::Bad(_))));
+        assert!(matches!(
+            parse(b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(ParseError::Bad(_))
+        ));
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\ncontent-length: -1\r\n\r\n"),
+            Err(ParseError::Bad(_))
+        ));
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nab"),
+            Err(ParseError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn caps_fire_before_allocation() {
+        // Body cap: a huge declared length is rejected without the
+        // allocation ever happening.
+        let huge = b"POST /x HTTP/1.1\r\ncontent-length: 99999999999\r\n\r\n";
+        assert!(matches!(
+            read_request(&mut Cursor::new(&huge[..]), 1024),
+            Err(ParseError::Bad(_)) | Err(ParseError::TooLarge("body"))
+        ));
+        let big_ok = b"POST /x HTTP/1.1\r\ncontent-length: 2048\r\n\r\n";
+        assert!(matches!(
+            read_request(&mut Cursor::new(&big_ok[..]), 1024),
+            Err(ParseError::TooLarge("body"))
+        ));
+        // Head cap.
+        let mut flood = b"GET /x HTTP/1.1\r\n".to_vec();
+        flood.extend_from_slice("a: b\r\n".repeat(40 * 1024).as_bytes());
+        flood.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&flood), Err(ParseError::TooLarge("head"))));
+        // Header-count cap (under the byte cap).
+        let mut many = b"GET /x HTTP/1.1\r\n".to_vec();
+        many.extend_from_slice("h: v\r\n".repeat(MAX_HEADERS + 1).as_bytes());
+        many.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&many), Err(ParseError::TooLarge("head"))));
+    }
+
+    #[test]
+    fn responses_have_framing() {
+        let mut out = Vec::new();
+        Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 12"), "{text}");
+        assert!(text.contains("Connection: close"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}\n"), "{text}");
+        let mut head = Vec::new();
+        write_stream_head(&mut head).unwrap();
+        assert!(String::from_utf8(head).unwrap().contains("application/x-ndjson"));
+    }
+
+    #[test]
+    fn error_responses_map_statuses() {
+        assert!(error_response(&ParseError::Closed).is_none());
+        assert_eq!(error_response(&ParseError::Truncated).unwrap().status, 400);
+        assert_eq!(error_response(&ParseError::Bad("x".into())).unwrap().status, 400);
+        assert_eq!(error_response(&ParseError::TooLarge("body")).unwrap().status, 413);
+        assert_eq!(error_response(&ParseError::TooLarge("head")).unwrap().status, 431);
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-client admission limits: token-bucket request rates and
+//! max-concurrent-run quotas, keyed by the `X-Omnivore-Client` header
+//! (DESIGN.md §Serving). Both exist to keep one tenant from starving
+//! the shared fleet: the bucket bounds how fast `POST /runs` can be
+//! called, the quota bounds how much of the queue one client can
+//! occupy at once.
+//!
+//! This module legitimately reads the wall clock (token refill is
+//! real-time behavior) — `serve/` is deliberately outside omnilint's
+//! sim-time domain. The arithmetic is injected-time (`admit_at`) so
+//! the tests and the fuzzer stay deterministic.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Rate/quota policy + live per-client state.
+#[derive(Debug)]
+pub struct ClientLimits {
+    /// Tokens per second added to each client's bucket (0 = no refill:
+    /// exactly `burst` requests, ever — the tests' deterministic mode).
+    rate: f64,
+    /// Bucket capacity (burst size); buckets start full.
+    burst: f64,
+    /// Max queued+running runs per client (0 = unlimited).
+    max_runs: usize,
+    clients: HashMap<String, ClientState>,
+}
+
+#[derive(Debug)]
+struct ClientState {
+    tokens: f64,
+    last: Instant,
+    active_runs: usize,
+}
+
+impl ClientLimits {
+    pub fn new(rate: f64, burst: f64, max_runs: usize) -> Self {
+        Self {
+            rate: rate.max(0.0),
+            burst: burst.max(1.0),
+            max_runs,
+            clients: HashMap::new(),
+        }
+    }
+
+    fn state(&mut self, client: &str, now: Instant) -> &mut ClientState {
+        let burst = self.burst;
+        self.clients
+            .entry(client.to_string())
+            .or_insert(ClientState { tokens: burst, last: now, active_runs: 0 })
+    }
+
+    /// Take one token from `client`'s bucket (refilled at `rate` since
+    /// its last request, capped at `burst`). `false` = rate-limited.
+    pub fn admit(&mut self, client: &str) -> bool {
+        self.admit_at(client, Instant::now())
+    }
+
+    /// [`Self::admit`] at an injected instant (deterministic tests).
+    pub fn admit_at(&mut self, client: &str, now: Instant) -> bool {
+        let rate = self.rate;
+        let burst = self.burst;
+        let st = self.state(client, now);
+        let dt = now.saturating_duration_since(st.last).as_secs_f64();
+        st.tokens = (st.tokens + dt * rate).min(burst);
+        st.last = now;
+        if st.tokens >= 1.0 {
+            st.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Count one more queued-or-running run against `client`'s quota.
+    /// `false` = quota full, nothing counted.
+    pub fn try_reserve_run(&mut self, client: &str) -> bool {
+        let max = self.max_runs;
+        let st = self.state(client, Instant::now());
+        if max > 0 && st.active_runs >= max {
+            return false;
+        }
+        st.active_runs += 1;
+        true
+    }
+
+    /// Return a reservation (run reached a terminal state).
+    pub fn release_run(&mut self, client: &str) {
+        if let Some(st) = self.clients.get_mut(client) {
+            st.active_runs = st.active_runs.saturating_sub(1);
+        }
+    }
+
+    /// Runs currently counted against `client`.
+    pub fn active_runs(&self, client: &str) -> usize {
+        self.clients.get(client).map_or(0, |st| st.active_runs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bucket_drains_and_refills() {
+        let mut l = ClientLimits::new(2.0, 3.0, 0);
+        let t0 = Instant::now();
+        // Bucket starts full: exactly `burst` immediate admits.
+        assert!(l.admit_at("a", t0));
+        assert!(l.admit_at("a", t0));
+        assert!(l.admit_at("a", t0));
+        assert!(!l.admit_at("a", t0), "burst exhausted");
+        // 1s at 2 tokens/s refills 2.
+        let t1 = t0 + Duration::from_secs(1);
+        assert!(l.admit_at("a", t1));
+        assert!(l.admit_at("a", t1));
+        assert!(!l.admit_at("a", t1));
+        // Refill caps at burst even after a long idle.
+        let t2 = t1 + Duration::from_secs(3600);
+        for _ in 0..3 {
+            assert!(l.admit_at("a", t2));
+        }
+        assert!(!l.admit_at("a", t2));
+    }
+
+    #[test]
+    fn zero_rate_is_a_hard_cap_and_clients_are_independent() {
+        let mut l = ClientLimits::new(0.0, 2.0, 0);
+        let t0 = Instant::now();
+        assert!(l.admit_at("a", t0) && l.admit_at("a", t0));
+        let later = t0 + Duration::from_secs(1_000_000);
+        assert!(!l.admit_at("a", later), "no refill at rate 0");
+        assert!(l.admit_at("b", later), "b has its own bucket");
+    }
+
+    #[test]
+    fn run_quota_reserve_release() {
+        let mut l = ClientLimits::new(0.0, 1.0, 2);
+        assert!(l.try_reserve_run("a"));
+        assert!(l.try_reserve_run("a"));
+        assert!(!l.try_reserve_run("a"), "quota of 2");
+        assert_eq!(l.active_runs("a"), 2);
+        assert!(l.try_reserve_run("b"), "quotas are per client");
+        l.release_run("a");
+        assert!(l.try_reserve_run("a"));
+        l.release_run("nobody"); // unknown client: no-op
+        // max_runs 0 = unlimited.
+        let mut open = ClientLimits::new(0.0, 1.0, 0);
+        for _ in 0..100 {
+            assert!(open.try_reserve_run("x"));
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! `omnivore serve` — a multi-tenant experiment daemon over a shared
+//! device fleet (DESIGN.md §Serving).
+//!
+//! Clients `POST /runs` with the same RunSpec JSON the CLI's
+//! `train --spec` takes; the daemon queues them, leases simulated
+//! compute groups from a fixed fleet ([`fleet`]), throttles per-client
+//! traffic ([`limits`]), and executes admitted runs on a bounded
+//! worker pool through the exact CLI path — so a daemon run's stored
+//! [`crate::api::RunOutcome`] is bit-identical to the same spec via
+//! `omnivore train` (modulo wall-clock fields). Live progress streams
+//! as NDJSON from `GET /runs/{id}/events`, fed by the engine's
+//! [`crate::engine::ProgressSink`] hook.
+//!
+//! The HTTP layer ([`http`]) is a hand-rolled, dependency-free
+//! HTTP/1.1 subset on `std::net` — one request per connection,
+//! `Connection: close`, hard caps on head/header/body sizes — and is
+//! fuzzed by omnifuzz's `serve` surface (buffered vs dripped delivery
+//! must parse identically). Everything except the daemon itself
+//! ([`daemon`], which needs the `xla` execution stack) builds without
+//! default features so the fuzzer can reach the parser.
+
+pub mod fleet;
+pub mod http;
+pub mod limits;
+pub mod registry;
+
+#[cfg(feature = "xla")]
+pub mod daemon;
+
+#[cfg(feature = "xla")]
+pub use daemon::{Daemon, ServeConfig};
+pub use fleet::FleetAllocator;
+pub use limits::ClientLimits;
+pub use registry::{Registry, RunState};

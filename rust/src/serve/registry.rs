@@ -1,0 +1,224 @@
+//! Live run bookkeeping: the [`Registry`] of submitted runs, their
+//! lifecycle [`RunState`]s, and the per-run [`EventLog`] feeding
+//! `GET /runs/{id}/events`.
+//!
+//! The registry is the daemon's in-memory view — terminal outcomes
+//! live in the [`crate::api::RunStore`] like every CLI run's, so a
+//! daemon restart loses only queue state, never results.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::api::RunSpec;
+
+/// Lifecycle of a submitted run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Waiting for its group demand to fit the fleet's free set.
+    Queued,
+    /// Holding a lease, executing on a worker.
+    Running,
+    /// Finished; outcome appended to the store.
+    Done,
+    /// Execution failed; `error` says why. Nothing stored.
+    Failed,
+    /// Cancelled by `DELETE /runs/{id}` (before or during execution).
+    /// A run cancelled mid-flight still stores its partial outcome.
+    Cancelled,
+}
+
+impl RunState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunState::Queued => "queued",
+            RunState::Running => "running",
+            RunState::Done => "done",
+            RunState::Failed => "failed",
+            RunState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RunState::Done | RunState::Failed | RunState::Cancelled)
+    }
+}
+
+/// Append-only line log with blocking tail-reads: the executing
+/// worker pushes NDJSON lines (progress events, the terminal marker),
+/// `/events` handlers wait for lines beyond what they already sent.
+/// Closed once the run is terminal, which unblocks every waiter for
+/// good.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    inner: Mutex<LogInner>,
+    grew: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct LogInner {
+    lines: Vec<String>,
+    closed: bool,
+}
+
+impl EventLog {
+    pub fn push(&self, line: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.closed {
+            inner.lines.push(line);
+        }
+        drop(inner);
+        self.grew.notify_all();
+    }
+
+    /// No more lines will ever arrive (run reached a terminal state).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.grew.notify_all();
+    }
+
+    /// Lines past `from`, blocking up to `timeout` for growth when
+    /// there are none yet. Returns `(new lines, closed)` — a caller
+    /// loops until it has drained a closed log.
+    pub fn wait_beyond(&self, from: usize, timeout: Duration) -> (Vec<String>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.lines.len() <= from && !inner.closed {
+            let (guard, _timeout) = self
+                .grew
+                .wait_timeout_while(inner, timeout, |i| i.lines.len() <= from && !i.closed)
+                .unwrap();
+            inner = guard;
+        }
+        (inner.lines.get(from..).unwrap_or(&[]).to_vec(), inner.closed)
+    }
+}
+
+/// One submitted run as the daemon tracks it.
+#[derive(Debug)]
+pub struct RunEntry {
+    pub id: u64,
+    /// `X-Omnivore-Client` value charged for this run.
+    pub client: String,
+    pub spec: RunSpec,
+    /// The spec's tag (defaulted to `serve-r{id}` when absent) — the
+    /// store key a finished run is found under.
+    pub tag: String,
+    /// Group demand (effective config), what the lease will hold.
+    pub groups: usize,
+    pub state: RunState,
+    /// Failure detail when `state == Failed`.
+    pub error: Option<String>,
+    /// Cooperative cancel flag, polled by the driver via the run's
+    /// `ProgressSink`.
+    pub cancel: Arc<AtomicBool>,
+    pub events: Arc<EventLog>,
+}
+
+/// All runs this daemon instance has accepted, by ascending id.
+#[derive(Debug, Default)]
+pub struct Registry {
+    next_id: u64,
+    runs: BTreeMap<u64, RunEntry>,
+}
+
+/// `r{N}` — the wire form of a run id.
+pub fn run_id_str(id: u64) -> String {
+    format!("r{id}")
+}
+
+/// Parse the wire form back (`"r3"` -> 3).
+pub fn parse_run_id(s: &str) -> Option<u64> {
+    s.strip_prefix('r').and_then(|n| n.parse().ok())
+}
+
+impl Registry {
+    /// Admit a spec: assigns the next id, defaults a missing tag to
+    /// `serve-r{id}`, starts `Queued`. Returns the id.
+    pub fn insert(&mut self, mut spec: RunSpec, client: String, groups: usize) -> u64 {
+        self.next_id += 1;
+        let id = self.next_id;
+        let tag = match &spec.tag {
+            Some(t) => t.clone(),
+            None => {
+                let t = format!("serve-{}", run_id_str(id));
+                spec.tag = Some(t.clone());
+                t
+            }
+        };
+        self.runs.insert(
+            id,
+            RunEntry {
+                id,
+                client,
+                spec,
+                tag,
+                groups,
+                state: RunState::Queued,
+                error: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+                events: Arc::new(EventLog::default()),
+            },
+        );
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<&RunEntry> {
+        self.runs.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut RunEntry> {
+        self.runs.get_mut(&id)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &RunEntry> {
+        self.runs.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_assign_and_parse() {
+        let mut reg = Registry::default();
+        let a = reg.insert(RunSpec::new("lenet"), "anon".into(), 2);
+        let b = reg.insert(RunSpec::new("lenet").tag("mine"), "anon".into(), 1);
+        assert!(b > a);
+        assert_eq!(parse_run_id(&run_id_str(a)), Some(a));
+        assert_eq!(parse_run_id("nope"), None);
+        assert_eq!(parse_run_id("r"), None);
+        // Tag defaulting: absent -> serve-r{id}, present -> kept.
+        assert_eq!(reg.get(a).unwrap().tag, format!("serve-r{a}"));
+        assert_eq!(reg.get(a).unwrap().spec.tag.as_deref(), Some(&*format!("serve-r{a}")));
+        assert_eq!(reg.get(b).unwrap().tag, "mine");
+        assert_eq!(reg.get(a).unwrap().state, RunState::Queued);
+        assert!(!reg.get(a).unwrap().state.is_terminal());
+        assert!(RunState::Done.is_terminal());
+    }
+
+    #[test]
+    fn event_log_tail_and_close() {
+        let log = Arc::new(EventLog::default());
+        log.push("one".into());
+        let (lines, closed) = log.wait_beyond(0, Duration::from_millis(1));
+        assert_eq!(lines, vec!["one".to_string()]);
+        assert!(!closed);
+        // A blocked tail wakes on push from another thread.
+        let tail = {
+            let log = log.clone();
+            std::thread::spawn(move || log.wait_beyond(1, Duration::from_secs(10)))
+        };
+        log.push("two".into());
+        let (lines, _) = tail.join().unwrap();
+        assert_eq!(lines, vec!["two".to_string()]);
+        // Close unblocks waiters with no new lines, and pushes after
+        // close are dropped.
+        log.close();
+        log.push("never".into());
+        let (lines, closed) = log.wait_beyond(2, Duration::from_secs(10));
+        assert!(lines.is_empty());
+        assert!(closed);
+    }
+}

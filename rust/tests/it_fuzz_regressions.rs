@@ -88,6 +88,55 @@ fn checkpoint_corpus() {
 }
 
 #[test]
+fn serve_corpus() {
+    use omnivore::serve::http::{read_request, Request};
+    use std::io::{Cursor, Read};
+
+    // Same small cap the fuzzer replays with, so cap-triggering corpus
+    // files stay meaningful.
+    const MAX_BODY: usize = 4096;
+
+    /// One byte per read — the slowloris delivery shape.
+    struct Drip<'a>(&'a [u8]);
+
+    impl Read for Drip<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.0.split_first() {
+                Some((&b, rest)) if !buf.is_empty() => {
+                    buf[0] = b;
+                    self.0 = rest;
+                    Ok(1)
+                }
+                _ => Ok(0),
+            }
+        }
+    }
+
+    fn sig(r: Result<Request, omnivore::serve::http::ParseError>) -> String {
+        match r {
+            Ok(req) => format!(
+                "ok {:?} {} headers={:?} body={:?}",
+                req.method, req.path, req.headers, req.body
+            ),
+            Err(e) => format!("err {e}"),
+        }
+    }
+
+    for path in corpus("serve") {
+        let name = path.display();
+        let bytes = fs::read(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let buffered = sig(read_request(&mut Cursor::new(&bytes[..]), MAX_BODY));
+        let dripped = sig(read_request(&mut Drip(&bytes), MAX_BODY));
+        assert_eq!(buffered, dripped, "{name}: delivery chunking changed the parse");
+        if expect_ok(&path) {
+            assert!(buffered.starts_with("ok "), "{name}: must parse: {buffered}");
+        } else {
+            assert!(buffered.starts_with("err "), "{name}: hostile request was accepted");
+        }
+    }
+}
+
+#[test]
 fn plan_corpus() {
     for path in corpus("plan") {
         let name = path.display();

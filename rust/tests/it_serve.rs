@@ -1,0 +1,340 @@
+//! Integration tests for `omnivore serve` (DESIGN.md §Serving): an
+//! in-process daemon on an ephemeral port, driven over real sockets by
+//! a hand-rolled one-request-per-connection HTTP client (mirroring the
+//! daemon's own one-exchange model).
+//!
+//! Covers the PR's acceptance gates: submit→poll→stored-outcome
+//! roundtrip with the outcome bit-identical to the same spec executed
+//! the CLI way (modulo wall-clock fields), admission control
+//! serializing two runs whose combined demand exceeds the fleet,
+//! per-client 429s (token bucket + run quota), mid-run cancellation
+//! returning its lease, and malformed-request 4xx mapping.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use omnivore::api::{resolve_artifacts_dir, RunSpec, RunStore};
+use omnivore::runtime::Runtime;
+use omnivore::serve::{Daemon, ServeConfig};
+use omnivore::util::json::Json;
+
+// -- tiny HTTP client --------------------------------------------------------
+
+/// One exchange: write `req` verbatim, read to EOF (the daemon always
+/// closes), return (status, body-after-blank-line).
+fn http(addr: SocketAddr, req: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read response");
+    let status = buf
+        .split(' ')
+        .nth(1)
+        .and_then(|w| w.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {buf:?}"));
+    let body = match buf.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    (status, body)
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn delete(addr: SocketAddr, path: &str) -> (u16, String) {
+    http(addr, &format!("DELETE {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str, client: &str, body: &str) -> (u16, String) {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nX-Omnivore-Client: {client}\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn parse_body(body: &str) -> Json {
+    Json::parse(body).unwrap_or_else(|e| panic!("bad JSON body {body:?}: {e}"))
+}
+
+/// Poll `GET /runs/{id}` until its `state` is `want` (terminal states
+/// other than `want` fail fast). Returns the final status body.
+fn wait_state(addr: SocketAddr, id: &str, want: &str, timeout: Duration) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (status, body) = get(addr, &format!("/runs/{id}"));
+        assert_eq!(status, 200, "status poll for {id}: {body}");
+        let v = parse_body(&body);
+        let state = v.get("state").unwrap().as_str().unwrap().to_string();
+        if state == want {
+            return v;
+        }
+        assert!(
+            !matches!(state.as_str(), "done" | "failed" | "cancelled"),
+            "{id} reached terminal {state:?} while waiting for {want:?}: {body}"
+        );
+        assert!(Instant::now() < deadline, "timed out waiting for {id} -> {want}: {body}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// -- daemon + spec helpers ---------------------------------------------------
+
+fn start(runs_dir: &std::path::Path, cfg: ServeConfig) -> Daemon {
+    Daemon::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        runs_dir: runs_dir.to_string_lossy().into_owned(),
+        ..cfg
+    })
+    .expect("daemon start")
+}
+
+/// A small deterministic run: 2 groups on cpu-s, 8 steps, evals firing.
+fn small_spec(tag: &str) -> RunSpec {
+    RunSpec::new("lenet").groups(2).steps(8).eval_every(2).seed(7).tag(tag)
+}
+
+/// A run that cannot finish before the test cancels it (tens of
+/// millions of simulated iterations, evals effectively off) — how the
+/// tests hold the fleet occupied deterministically.
+fn hog_spec(tag: &str) -> RunSpec {
+    RunSpec::new("lenet").groups(2).steps(10_000_000).eval_every(1_000_000).seed(7).tag(tag)
+}
+
+/// Zero the wall-clock-dependent fields (the only legitimate
+/// difference between a daemon run and a CLI run of the same spec).
+fn normalize(v: &Json) -> Json {
+    let Json::Obj(map) = v else { panic!("outcome is not an object") };
+    let mut map = map.clone();
+    for key in ["wallclock_secs", "execute_secs", "compile_secs"] {
+        assert!(map.contains_key(key), "outcome lost field {key}");
+        map.insert(key.to_string(), Json::Num(0.0));
+    }
+    Json::Obj(map)
+}
+
+// -- tests -------------------------------------------------------------------
+
+#[test]
+fn submitted_run_matches_cli_execution_bit_for_bit() {
+    let dir = omnivore::util::temp_dir("it-serve-parity").unwrap();
+    let daemon = start(
+        &dir,
+        ServeConfig { fleet_groups: 8, workers: 2, ..ServeConfig::default() },
+    );
+    let addr = daemon.addr();
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert!(parse_body(&body).get("ok").unwrap().as_bool().unwrap());
+
+    let spec = small_spec("parity");
+    let (status, body) = post(addr, "/runs", "ci", &spec.to_json().dump());
+    assert_eq!(status, 202, "{body}");
+    let accepted = parse_body(&body);
+    let id = accepted.get("id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(accepted.get("tag").unwrap().as_str().unwrap(), "parity");
+    assert_eq!(accepted.get("state").unwrap().as_str().unwrap(), "queued");
+
+    wait_state(addr, &id, "done", Duration::from_secs(60));
+
+    // The event stream replays start-to-finish after the fact: eval
+    // progress events from the driver plus the daemon's terminal line.
+    let (status, events) = get(addr, &format!("/runs/{id}/events"));
+    assert_eq!(status, 200);
+    assert!(events.contains("\"kind\":\"eval\""), "no eval events in: {events}");
+    let last = events.lines().last().unwrap();
+    let end = parse_body(last);
+    assert_eq!(end.get("kind").unwrap().as_str().unwrap(), "end");
+    assert_eq!(end.get("state").unwrap().as_str().unwrap(), "done");
+    assert!(end.get("stored").unwrap().as_bool().unwrap());
+
+    // The outcome is in the same store the CLI reads, under the tag.
+    let (status, body) = get(addr, "/runs/parity");
+    assert_eq!(status, 200);
+    assert_eq!(parse_body(&body).get("outcomes").unwrap().as_arr().unwrap().len(), 1);
+    let stored = RunStore::open(&dir).unwrap().by_tag("parity").unwrap();
+    assert_eq!(stored.len(), 1);
+
+    // Bit-identity with the CLI path: same spec, same artifacts
+    // resolution, fresh runtime, same execute entry point.
+    let mut cli_spec = small_spec("parity");
+    let art = resolve_artifacts_dir(None, Some(&cli_spec.train.artifacts_dir));
+    cli_spec.train.artifacts_dir = art.clone();
+    let rt = Runtime::load(&art).unwrap();
+    let (init, done) = cli_spec.initial_state(&rt).unwrap();
+    let (cli_outcome, _report, _params) =
+        cli_spec.execute_from_step(&rt, init, done).unwrap();
+    assert_eq!(
+        normalize(&stored[0].to_json()).dump(),
+        normalize(&cli_outcome.to_json()).dump(),
+        "daemon outcome diverged from CLI outcome"
+    );
+
+    daemon.shutdown();
+}
+
+#[test]
+fn admission_control_serializes_oversubscribed_runs() {
+    let dir = omnivore::util::temp_dir("it-serve-queue").unwrap();
+    let daemon = start(
+        &dir,
+        ServeConfig {
+            fleet_groups: 2,
+            workers: 2,
+            rate: 1000.0,
+            burst: 1000.0,
+            max_runs_per_client: 0,
+            ..ServeConfig::default()
+        },
+    );
+    let addr = daemon.addr();
+
+    // r1 takes the whole fleet and holds it.
+    let (status, body) = post(addr, "/runs", "ci", &hog_spec("hog").to_json().dump());
+    assert_eq!(status, 202, "{body}");
+    let r1 = parse_body(&body).get("id").unwrap().as_str().unwrap().to_string();
+    wait_state(addr, &r1, "running", Duration::from_secs(30));
+
+    // r2's demand (2 groups) exceeds the free set (0): queued with an
+    // honest position, visible in /fleet.
+    let (status, body) = post(addr, "/runs", "ci", &small_spec("waiter").to_json().dump());
+    assert_eq!(status, 202, "{body}");
+    let acc = parse_body(&body);
+    let r2 = acc.get("id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(acc.get("position").unwrap().as_usize().unwrap(), 1);
+    let st = wait_state(addr, &r2, "queued", Duration::from_secs(5));
+    assert_eq!(st.get("position").unwrap().as_usize().unwrap(), 1);
+    let (_, body) = get(addr, "/fleet");
+    let fleet = parse_body(&body);
+    assert_eq!(fleet.get("free_groups").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(fleet.get("queue_depth").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(fleet.get("active").unwrap().as_arr().unwrap().len(), 1);
+
+    // Cancel r1 mid-run: the driver stops cooperatively, the lease
+    // returns, r2 gets the fleet and completes.
+    let (status, body) = delete(addr, &format!("/runs/{r1}"));
+    assert_eq!(status, 200, "{body}");
+    wait_state(addr, &r1, "cancelled", Duration::from_secs(30));
+    wait_state(addr, &r2, "done", Duration::from_secs(60));
+
+    // A run cancelled mid-flight still stored its partial outcome.
+    let hog = RunStore::open(&dir).unwrap().by_tag("hog").unwrap();
+    assert_eq!(hog.len(), 1);
+    assert!(hog[0].iters < 10_000_000, "cancelled run somehow ran to completion");
+
+    // Zero leaked leases.
+    let (_, body) = get(addr, "/fleet");
+    let fleet = parse_body(&body);
+    assert_eq!(fleet.get("free_groups").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(fleet.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+    assert!(fleet.get("active").unwrap().as_arr().unwrap().is_empty());
+
+    daemon.shutdown();
+}
+
+#[test]
+fn rate_limits_and_quotas_answer_429() {
+    let dir = omnivore::util::temp_dir("it-serve-limits").unwrap();
+    let daemon = start(
+        &dir,
+        ServeConfig {
+            fleet_groups: 2,
+            workers: 1,
+            rate: 0.0, // no refill: exactly `burst` requests per client, ever
+            burst: 3.0,
+            max_runs_per_client: 1,
+            ..ServeConfig::default()
+        },
+    );
+    let addr = daemon.addr();
+
+    // Token bucket: even malformed submissions spend a token; the
+    // bucket (not the parser) answers once it runs dry.
+    let (s1, _) = post(addr, "/runs", "alice", "not json");
+    let (s2, _) = post(addr, "/runs", "alice", "not json");
+    let (s3, _) = post(addr, "/runs", "alice", "not json");
+    let (s4, body) = post(addr, "/runs", "alice", "not json");
+    assert_eq!((s1, s2, s3), (400, 400, 400));
+    assert_eq!(s4, 429, "{body}");
+    assert!(body.contains("rate"), "{body}");
+
+    // Buckets and quotas are per client: bob is unaffected by alice.
+    let (status, body) = post(addr, "/runs", "bob", &hog_spec("bob-hog").to_json().dump());
+    assert_eq!(status, 202, "{body}");
+    let r1 = parse_body(&body).get("id").unwrap().as_str().unwrap().to_string();
+
+    // Quota (1 concurrent run): the second submission is rejected even
+    // though the request itself was well-formed and within rate.
+    let (status, body) = post(addr, "/runs", "bob", &small_spec("bob-2").to_json().dump());
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("quota"), "{body}");
+
+    // The quota seat frees when the run reaches a terminal state.
+    let (status, _) = delete(addr, &format!("/runs/{r1}"));
+    assert_eq!(status, 200);
+    wait_state(addr, &r1, "cancelled", Duration::from_secs(30));
+    let (status, body) = post(addr, "/runs", "bob", &small_spec("bob-3").to_json().dump());
+    assert_eq!(status, 202, "{body}");
+
+    daemon.shutdown();
+}
+
+#[test]
+fn malformed_requests_map_to_4xx() {
+    let dir = omnivore::util::temp_dir("it-serve-malformed").unwrap();
+    let daemon = start(
+        &dir,
+        ServeConfig {
+            fleet_groups: 2,
+            workers: 1,
+            rate: 1000.0,
+            burst: 1000.0,
+            ..ServeConfig::default()
+        },
+    );
+    let addr = daemon.addr();
+
+    // Syntactically broken request line.
+    assert_eq!(http(addr, "BLARG\r\n\r\n").0, 400);
+    // Well-formed but non-API method.
+    assert_eq!(http(addr, "PUT /runs HTTP/1.1\r\n\r\n").0, 405);
+    // Wrong method on a known path.
+    assert_eq!(http(addr, "DELETE /healthz HTTP/1.1\r\n\r\n").0, 404);
+    assert_eq!(post(addr, "/healthz", "x", "").0, 405);
+    // Unknown paths and unknown runs.
+    assert_eq!(get(addr, "/nope").0, 404);
+    assert_eq!(get(addr, "/runs/r999").0, 404);
+    assert_eq!(delete(addr, "/runs/not-an-id").0, 404);
+    // Bodies that are not a RunSpec.
+    assert_eq!(post(addr, "/runs", "x", "{").0, 400);
+    assert_eq!(post(addr, "/runs", "x", "[1,2]").0, 400);
+    // A demand that can never fit this fleet is rejected, not queued.
+    let (status, body) =
+        post(addr, "/runs", "x", &RunSpec::new("lenet").groups(4).to_json().dump());
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("never fit"), "{body}");
+    // Oversized declared body: refused before allocation.
+    let huge = format!(
+        "POST /runs HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        16 * 1024 * 1024
+    );
+    assert_eq!(http(addr, &huge).0, 413);
+    // Header flood: the count cap fires.
+    let mut flood = String::from("GET /healthz HTTP/1.1\r\n");
+    for i in 0..80 {
+        flood.push_str(&format!("x-h{i}: v\r\n"));
+    }
+    flood.push_str("\r\n");
+    assert_eq!(http(addr, &flood).0, 431);
+
+    // The daemon is still healthy after all of that.
+    assert_eq!(get(addr, "/healthz").0, 200);
+    daemon.shutdown();
+}

@@ -406,14 +406,25 @@ fn lint_fenced_publish(sources: &[SourceFile]) -> Vec<Violation> {
 // ---------------------------------------------------------------------------
 
 /// The deterministic simulation domain: identical inputs must give
-/// identical traces, so wall clocks are banned. `engine/threaded.rs`
-/// (real-time scheduler) and `util/bench.rs` are deliberately outside.
+/// identical traces, so wall clocks are banned.
 const SIM_DOMAIN: &[&str] =
     &["rust/src/sim/", "rust/src/engine/sim_time.rs", "rust/src/data/plan_controller.rs"];
+
+/// Real-time domains where wall clocks are the point, not a leak: the
+/// serve daemon (token-bucket refill, IO timeouts), the real-thread
+/// scheduler, and the bench harness. Scoped here — NOT via lint.toml
+/// waivers — because the boundary is architectural, not an exception:
+/// these paths must never be folded into [`SIM_DOMAIN`] (the tests
+/// assert the two lists stay disjoint).
+const WALLCLOCK_OK: &[&str] =
+    &["rust/src/serve/", "rust/src/engine/threaded.rs", "rust/src/util/bench.rs"];
 
 fn lint_sim_wallclock(sources: &[SourceFile]) -> Vec<Violation> {
     let mut out = Vec::new();
     for f in sources {
+        if WALLCLOCK_OK.iter().any(|d| f.rel.starts_with(d)) {
+            continue;
+        }
         if !SIM_DOMAIN.iter().any(|d| f.rel.starts_with(d)) {
             continue;
         }
@@ -655,6 +666,27 @@ mod tests {
         assert_eq!(lint_sim_wallclock(std::slice::from_ref(&bad)).len(), 1);
         let ok = file("rust/src/engine/threaded.rs", "let t = Instant::now();\n");
         assert!(lint_sim_wallclock(std::slice::from_ref(&ok)).is_empty());
+    }
+
+    #[test]
+    fn wallclock_domains_are_disjoint_and_serve_is_real_time() {
+        // The serve daemon reads real clocks by design (rate limiting,
+        // IO timeouts) — no violation, and no lint.toml waiver needed.
+        let serve = file(
+            "rust/src/serve/limits.rs",
+            "let now = Instant::now();\nlet t = SystemTime::now();\n",
+        );
+        assert!(lint_sim_wallclock(std::slice::from_ref(&serve)).is_empty());
+        // The carve-out is a boundary, not an override: nothing in the
+        // sim domain may ever also match WALLCLOCK_OK.
+        for sim in SIM_DOMAIN {
+            for ok in WALLCLOCK_OK {
+                assert!(
+                    !sim.starts_with(ok) && !ok.starts_with(sim),
+                    "{sim} and {ok} overlap; sim determinism would silently unravel"
+                );
+            }
+        }
     }
 
     #[test]
