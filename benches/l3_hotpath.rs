@@ -149,6 +149,24 @@ fn main() {
             mean_secs: s.mean_secs,
         });
     }
+    // Unpacked (C-tile-stationary) single-thread reference: the packed
+    // microkernel's speedup over this row is the acceptance number —
+    // tools/check_bench_regression.py asserts packed >= 1.5x unpacked.
+    let gp1 = k::GemmParams::with_threads(1);
+    let su = bench("gemm 256^3 unpacked (1 thread)", 2, 8, || {
+        std::hint::black_box(k::gemm_unpacked(&ga, &gb, gm, gk, gn, &gp1));
+    });
+    println!("{}  [{:.2} GFLOP/s]", row(&su), gemm_gf / su.mean_secs);
+    jrows.push(support::BenchRow {
+        key: "gemm_256x256x256_t1_unpacked".into(),
+        kernel: "gemm_unpacked".into(),
+        shape: "256x256x256".into(),
+        b_p: 0,
+        threads: 1,
+        gflops: gemm_gf / su.mean_secs,
+        mean_secs: su.mean_secs,
+    });
+
     let g512 = 2.0 * 512f64.powi(3) / 1e9;
     let ga5 = randv(&mut rng, 512 * 512, 1.0);
     let gb5 = randv(&mut rng, 512 * 512, 1.0);

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Profile-guided optimization driver for the native kernel hot path.
+#
+# Builds the l3_hotpath bench with -Cprofile-generate, runs it to collect
+# a profile of the packed GEMM / conv / pool schedules, merges the raw
+# profiles with llvm-profdata, and rebuilds with -Cprofile-use. The
+# PGO'd artifacts land in a separate target dir (target-pgo/) so the
+# instrumented and optimized builds never share an incremental cache.
+#
+# Requires the llvm-tools rustup component for llvm-profdata:
+#     rustup component add llvm-tools
+#
+# Usage:
+#     benches/run_pgo.sh                 # full profile + rebuild
+#     OMNIVORE_BENCH_SCALE=0.25 benches/run_pgo.sh   # quicker CI profile
+#
+# Afterwards, rerun any bench against the PGO build, e.g.:
+#     CARGO_TARGET_DIR=target-pgo cargo bench --bench l3_hotpath
+#
+# PGO numbers are for local tuning and baseline refreshes; the committed
+# BENCH_*.json baselines are non-PGO so CI (which builds without PGO)
+# diffs like against like.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${PGO_DIR:-$PWD/target-pgo/pgo-profiles}"
+TARGET_DIR="${CARGO_TARGET_DIR:-$PWD/target-pgo}"
+BENCH="${PGO_BENCH:-l3_hotpath}"
+
+# llvm-profdata ships with the llvm-tools component, under the
+# host-specific rustlib bin dir (not on PATH by default).
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f | head -n1 || true)"
+if [ -z "$PROFDATA" ]; then
+    PROFDATA="$(command -v llvm-profdata || true)"
+fi
+if [ -z "$PROFDATA" ]; then
+    echo "error: llvm-profdata not found; run: rustup component add llvm-tools" >&2
+    exit 1
+fi
+
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+echo "==> [1/3] instrumented build + profile run ($BENCH)"
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" \
+    CARGO_TARGET_DIR="$TARGET_DIR" \
+    cargo bench --bench "$BENCH"
+
+echo "==> [2/3] merging raw profiles"
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+
+echo "==> [3/3] optimized rebuild with -Cprofile-use"
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata -Cllvm-args=-pgo-warn-missing-function" \
+    CARGO_TARGET_DIR="$TARGET_DIR" \
+    cargo bench --no-run
+
+echo "PGO build ready under $TARGET_DIR."
+echo "Run benches against it with: CARGO_TARGET_DIR=$TARGET_DIR cargo bench --bench $BENCH"

@@ -83,6 +83,10 @@ pub struct RunOutcome {
     pub dropped_stale_publishes: u64,
     /// Checkpoint this run resumed from, if any.
     pub resumed_from: Option<String>,
+    /// Lane count of the native backend's persistent kernel pool, when
+    /// one was built for this process (None on stub-only runs and in
+    /// files written before the pool shipped).
+    pub backend_threads: Option<usize>,
 }
 
 impl RunOutcome {
@@ -133,6 +137,9 @@ impl RunOutcome {
             group_downtime: report.group_downtime.clone(),
             dropped_stale_publishes: report.dropped_stale_publishes,
             resumed_from: report.resumed_from.clone(),
+            // Observed, not requested: the pool's actual size if the
+            // native backend built it (never forces a build here).
+            backend_threads: crate::backend::pool::current_global_lanes(),
         }
     }
 
@@ -199,6 +206,9 @@ impl RunOutcome {
             .push(("dropped_stale_publishes", Json::Num(self.dropped_stale_publishes as f64)));
         if let Some(r) = &self.resumed_from {
             fields.push(("resumed_from", Json::Str(r.clone())));
+        }
+        if let Some(n) = self.backend_threads {
+            fields.push(("backend_threads", Json::Num(n as f64)));
         }
         Json::obj(fields)
     }
@@ -302,6 +312,10 @@ impl RunOutcome {
                 .opt("resumed_from")
                 .map(|r| r.as_str().map(String::from))
                 .transpose()?,
+            backend_threads: v
+                .opt("backend_threads")
+                .map(|x| x.as_usize())
+                .transpose()?,
         })
     }
 
@@ -346,6 +360,7 @@ const OUTCOME_FIELDS: &[&str] = &[
     "group_downtime",
     "dropped_stale_publishes",
     "resumed_from",
+    "backend_threads",
 ];
 
 /// Non-finite-safe number encoding: a diverged run reports
@@ -612,6 +627,9 @@ mod tests {
         assert_eq!(o2.group_downtime, vec![6.0, 0.0]);
         assert_eq!(o2.dropped_stale_publishes, 3);
         assert_eq!(o2.resumed_from.as_deref(), Some("runs/checkpoints/t.ckpt"));
+        // Observed pool size (None when this process never built the
+        // pool — either way it must round-trip).
+        assert_eq!(o2.backend_threads, o.backend_threads);
         // The embedded spec round-trips too.
         assert_eq!(o2.spec.train.arch, "lenet");
         assert_eq!(o2.spec.options.stop_at_train_acc, Some(0.5));

@@ -48,6 +48,11 @@ pub struct RunSpec {
     /// auto — native for supported artifact kinds, stub otherwise). See
     /// [`crate::backend::BackendChoice`] and DESIGN.md §Backends.
     pub backend: Option<String>,
+    /// Worker-lane count for the native backend's persistent kernel
+    /// pool (None = `OMNIVORE_THREADS` / host parallelism). The pool is
+    /// built once per process; the first run's request wins and the
+    /// outcome records the actual size.
+    pub backend_threads: Option<usize>,
 }
 
 impl Default for RunSpec {
@@ -64,6 +69,7 @@ impl Default for RunSpec {
             tag: None,
             resume_from: None,
             backend: None,
+            backend_threads: None,
         }
     }
 }
@@ -222,6 +228,13 @@ impl RunSpec {
         Ok(self)
     }
 
+    /// Kernel-pool lane count for the native backend (clamped to
+    /// 1..=64 at pool build; see [`crate::backend::pool`]).
+    pub fn backend_threads(mut self, n: usize) -> Self {
+        self.backend_threads = Some(n);
+        self
+    }
+
     /// The parsed backend policy (`Auto` when unset).
     pub fn backend_choice(&self) -> Result<crate::backend::BackendChoice> {
         match &self.backend {
@@ -317,6 +330,9 @@ impl RunSpec {
         if let Some(b) = &self.backend {
             fields.push(("backend", Json::Str(b.clone())));
         }
+        if let Some(n) = self.backend_threads {
+            fields.push(("backend_threads", Json::Num(n as f64)));
+        }
         Json::obj(fields)
     }
 
@@ -399,6 +415,16 @@ impl RunSpec {
                 Ok(name.to_string())
             })
             .transpose()?;
+        let backend_threads = v
+            .opt("backend_threads")
+            .map(|n| -> Result<usize> {
+                let n = n.as_usize()?;
+                if n == 0 {
+                    bail!("backend_threads must be >= 1");
+                }
+                Ok(n)
+            })
+            .transpose()?;
         Ok(Self {
             spec_version: SPEC_VERSION,
             train,
@@ -408,6 +434,7 @@ impl RunSpec {
             tag,
             resume_from,
             backend,
+            backend_threads,
         })
     }
 
@@ -428,6 +455,7 @@ const TOP_FIELDS: &[&str] = &[
     "tag",
     "resume_from",
     "backend",
+    "backend_threads",
 ];
 const TRAIN_FIELDS: &[&str] = &[
     "arch",
@@ -660,6 +688,9 @@ impl RunSpec {
             spec.options.step_offset = done;
         }
         rt.set_backend_choice(spec.backend_choice()?);
+        if let Some(n) = spec.backend_threads {
+            rt.set_backend_threads(n);
+        }
         let (mut report, params) = spec.scheduler.run(rt, &spec, params)?;
         report.resumed_from = self.resume_from.clone();
         let outcome = spec.outcome_of(rt, &report);
@@ -917,6 +948,22 @@ mod tests {
         // Bogus values fail at build AND at parse time.
         assert!(RunSpec::new("x").backend("gpu").is_err());
         let bad = j.replacen("\"native\"", "\"gpu\"", 1);
+        assert!(RunSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn backend_threads_roundtrips_and_validates() {
+        let s = RunSpec::new("lenet").backend_threads(4);
+        let j = s.to_json().dump();
+        assert!(j.contains("\"backend_threads\":4"), "{j}");
+        let s2 = RunSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s2.backend_threads, Some(4));
+        // Absent field stays None and is not serialized (schema-additive).
+        let plain = RunSpec::default();
+        assert_eq!(plain.backend_threads, None);
+        assert!(!plain.to_json().dump().contains("backend_threads"));
+        // Zero lanes is rejected at parse time.
+        let bad = j.replacen("\"backend_threads\":4", "\"backend_threads\":0", 1);
         assert!(RunSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 

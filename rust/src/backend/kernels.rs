@@ -1,25 +1,53 @@
-//! Native CPU kernels for the four hot ops (paper §III) — blocked/tiled
-//! f32 GEMM, conv via im2col lowering with the `b_p` batching knob,
-//! 2x2 max-pool, and fused softmax + cross-entropy — pure functions over
-//! `&[f32]` slices so the [`super::NativeBackend`], the benches, and the
-//! parity tests all drive exactly the same code.
+//! Native CPU kernels for the four hot ops (paper §III) — packed
+//! microkernel f32 GEMM, conv via im2col lowering with the `b_p`
+//! batching knob, 2x2 max-pool, and fused softmax + cross-entropy —
+//! pure functions over `&[f32]` slices so the [`super::NativeBackend`],
+//! the benches, and the parity tests all drive exactly the same code.
 //!
 //! Ports of `python/compile/kernels/{gemm,conv_gemm,pool,softmax_xent}.py`
 //! with the paper's CPU schedule instead of the Pallas/TPU one:
 //!
-//! * GEMM is **C-tile stationary**: for each (i, j) output tile, the
-//!   accumulator tile stays hot while the k loop streams A/B stripes —
-//!   the OpenBLAS cache-blocking shape the paper assumes (§III-A).
-//! * Tiles come from [`pick_tile`]'s near-equal split, so ragged shapes
-//!   (K = 800 with max 512 -> 2x400) never pad (python gemm.py).
-//! * Row-panel parallelism via `std::thread::scope`: threads own disjoint
-//!   row ranges of C, so there is no reduction race and the result is
-//!   **bitwise invariant to thread count, tile sizes, and `b_p`** — each
-//!   output element always accumulates in ascending-k order.
+//! * GEMM is a BLIS-style **packed** schedule: A row-panels and B
+//!   column-panels are repacked into contiguous cache-blocked buffers
+//!   ([`pack_a`]/[`pack_b`]) and consumed by an [`MR`]x[`NR`]
+//!   register-tiled [`microkernel`] whose inner loop is fixed-size and
+//!   bounds-check-free, so the autovectorizer emits wide f32 lanes.
+//!   Cache-level block caps (MC/NC/KC) come from [`BlockPlan`], seeded
+//!   by a one-shot calibration probe (see [`calibrated_caps`]).
+//! * **Bitwise determinism**: every output element accumulates
+//!   `a[i,kk]*b[kk,j]` in ascending-kk order with exactly one mul + one
+//!   add per kk, no matter the packing, block sizes, pool size, or
+//!   `b_p`. Between KC blocks the partial sum round-trips through C
+//!   memory (an exact f32 store/load), so KC blocking cannot
+//!   reassociate the chain. The unpacked PR 7 kernel is kept as
+//!   [`gemm_unpacked_into`] and property tests assert the two paths are
+//!   bitwise identical.
+//! * Bias-add and ReLU **epilogues are fused** into the microkernel's
+//!   final write-back ([`Epilogue`]) so `fc_forward`/`conv_phase` no
+//!   longer make separate full-tensor passes; the fused value
+//!   `relu(sum + bias[j])` is computed with the same two operations the
+//!   separate passes used, keeping goldens bitwise stable.
+//! * Parallelism runs on the persistent [`super::pool`] worker pool
+//!   (deterministic static partition, no per-call thread spawns):
+//!   GEMM over contiguous row panels of C, conv additionally over
+//!   `b_p` chunks when there are enough of them to fill the pool.
+//! * All sizable temporaries (packed panels, im2col D-hat, accumulator
+//!   tiles) come from the per-thread [`super::scratch`] arena: zero
+//!   steady-state heap allocations.
 //! * Conv lowers all `b_p` images into one D-hat and runs ONE large GEMM
 //!   per chunk (paper Fig 2): `b_p = b` is the CPU strategy (max tile
 //!   utilization, b x the lowering memory), `b_p = 1` the GPU/Caffe
 //!   strategy (Fig 4's tradeoff).
+
+use super::pool::{self, WorkerPool};
+use super::scratch;
+
+/// Microkernel register-tile rows: each inner-loop step updates an
+/// MR x NR accumulator tile held in registers (6x16 f32 = 12 YMM
+/// accumulators on AVX2, the classic f32 shape).
+pub const MR: usize = 6;
+/// Microkernel register-tile columns (one cache line of f32).
+pub const NR: usize = 16;
 
 /// Round `x` up to a multiple of `m`.
 fn ceil_to(x: usize, m: usize) -> usize {
@@ -32,16 +60,30 @@ fn ceil_to(x: usize, m: usize) -> usize {
 /// tiles of 512 + 288 (21.9% wasted MACs against a 512 accumulator).
 /// Splitting into ceil(n/max_tile) near-equal tiles (800 -> 2x400)
 /// eliminates the waste. Must match python/compile/kernels/gemm.py.
+/// (The packed path uses [`pick_block`], the same split with the
+/// microkernel's own alignment.)
 pub fn pick_tile(n: usize, max_tile: usize) -> usize {
-    if n <= max_tile {
-        return ceil_to(n.max(1), 8);
-    }
-    let n_tiles = n.div_ceil(max_tile);
-    ceil_to(n.div_ceil(n_tiles), 8)
+    pick_block(n, max_tile, 8)
 }
 
-/// Blocked-GEMM schedule knobs. Defaults match the python kernels
-/// (`DEFAULT_BM/BN/BK`); `threads` defaults to the host parallelism.
+/// Near-equal split of `n` into blocks of at most ~`max_block`, rounded
+/// up to a multiple of `align`. The generalization of [`pick_tile`]
+/// the packed kernel needs: MC must align to [`MR`], NC to [`NR`], KC
+/// to nothing (align = 1).
+pub fn pick_block(n: usize, max_block: usize, align: usize) -> usize {
+    let n = n.max(1);
+    if n <= max_block {
+        return ceil_to(n, align);
+    }
+    let n_blocks = n.div_ceil(max_block);
+    ceil_to(n.div_ceil(n_blocks), align)
+}
+
+/// Blocked-GEMM schedule knobs: caps for the cache-level block sizes
+/// (`bm` -> MC, `bn` -> NC, `bk` -> KC — [`BlockPlan::from_params`]
+/// derives the actual near-equal splits) plus the row-panel thread
+/// count. `Default` seeds the caps from the one-shot calibration probe.
+/// Results are **bitwise invariant** to every field.
 #[derive(Clone, Copy, Debug)]
 pub struct GemmParams {
     pub bm: usize,
@@ -52,7 +94,8 @@ pub struct GemmParams {
 
 impl Default for GemmParams {
     fn default() -> Self {
-        Self { bm: 128, bn: 128, bk: 512, threads: default_threads() }
+        let (mc, nc, kc) = calibrated_caps();
+        Self { bm: mc, bn: nc, bk: kc, threads: default_threads() }
     }
 }
 
@@ -63,7 +106,9 @@ impl GemmParams {
 }
 
 /// Worker threads for kernel row panels: `OMNIVORE_THREADS` if set, else
-/// the host's available parallelism, capped at 16.
+/// the host's available parallelism, capped at 16. (The persistent pool
+/// in [`super::pool`] is sized from this unless `--backend-threads`
+/// overrides it first.)
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("OMNIVORE_THREADS") {
         if let Ok(n) = v.trim().parse::<usize>() {
@@ -73,44 +118,463 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
 }
 
+/// Fallback cache-block caps (MC, NC, KC) when the probe is skipped.
+const DEFAULT_CAPS: (usize, usize, usize) = (120, 512, 288);
+
+/// Cache-block caps (MC, NC, KC) for default-constructed [`GemmParams`].
+///
+/// Derived once per process: `OMNIVORE_MC`/`OMNIVORE_NC`/`OMNIVORE_KC`
+/// env overrides win; otherwise a small single-thread timing probe runs
+/// the packed schedule at a few candidate (MC, KC) pairs on a synthetic
+/// GEMM shaped like the paper's conv lowering and keeps the fastest.
+/// The probe picks *throughput only* — block sizes never change values
+/// (see the module docs), so timing noise cannot break determinism.
+pub fn calibrated_caps() -> (usize, usize, usize) {
+    use std::sync::OnceLock;
+    static CAPS: OnceLock<(usize, usize, usize)> = OnceLock::new();
+    *CAPS.get_or_init(|| {
+        let env = |key: &str| {
+            std::env::var(key).ok().and_then(|v| v.trim().parse::<usize>().ok())
+        };
+        let (emc, enc, ekc) = (env("OMNIVORE_MC"), env("OMNIVORE_NC"), env("OMNIVORE_KC"));
+        if let (Some(mc), Some(nc), Some(kc)) = (emc, enc, ekc) {
+            return (mc.max(MR), nc.max(NR), kc.max(1));
+        }
+        // ~10 MFLOP per timing: cheap enough to pay once per process,
+        // big enough that the L1/L2 working-set differences show.
+        let (m, k, n) = (96, 384, 64);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 31) as f32 * 0.25 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 17) as f32 * 0.5 - 4.0).collect();
+        let mut c = vec![0f32; m * n];
+        let (dmc, dnc, dkc) = DEFAULT_CAPS;
+        let mut best = (dmc, dkc);
+        let mut best_t = f64::INFINITY;
+        for (mc, kc) in [(60, 144), (120, 288), (120, 576), (240, 288)] {
+            let p = GemmParams { bm: mc, bn: dnc, bk: kc, threads: 1 };
+            gemm_fused_on(None, &mut c, &a, &b, m, k, n, &p, Epilogue::None); // warm
+            let t0 = std::time::Instant::now();
+            for _ in 0..2 {
+                gemm_fused_on(None, &mut c, &a, &b, m, k, n, &p, Epilogue::None);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best_t {
+                best_t = dt;
+                best = (mc, kc);
+            }
+        }
+        (
+            emc.unwrap_or(best.0).max(MR),
+            enc.unwrap_or(dnc).max(NR),
+            ekc.unwrap_or(best.1).max(1),
+        )
+    })
+}
+
+/// Cache-level block sizes actually used for one (rows, k, n) problem:
+/// near-equal splits of each dimension under the [`GemmParams`] caps,
+/// MC aligned to [`MR`] and NC to [`NR`] so edge handling stays in the
+/// last strip only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockPlan {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl BlockPlan {
+    pub fn from_params(rows: usize, k: usize, n: usize, p: &GemmParams) -> Self {
+        Self {
+            mc: pick_block(rows, p.bm.max(MR), MR),
+            kc: pick_block(k, p.bk.max(1), 1),
+            nc: pick_block(n, p.bn.max(NR), NR),
+        }
+    }
+}
+
+/// Write-back transform fused into the microkernel's final k-block
+/// store (one pass over C instead of separate full-tensor passes).
+/// Each variant applies the same per-element operations the separate
+/// kernels applied, in the same order, so fusion is bitwise neutral.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Plain store.
+    None,
+    /// `c = max(c, 0)` (written as the `< 0` test so `-0.0` survives
+    /// exactly like [`relu_inplace`]).
+    Relu,
+    /// `c += bias[j]` broadcast over rows.
+    Bias(&'a [f32]),
+    /// `c = relu(c + bias[j])`.
+    BiasRelu(&'a [f32]),
+}
+
 /// Run `f` over `rows` split into at most `threads` contiguous row
-/// panels of `c` (row width `cols`). Each panel is a disjoint `&mut`
-/// slice, so the scoped threads never race; panel boundaries do not
-/// change any output element's accumulation order.
-fn par_row_panels<F>(c: &mut [f32], rows: usize, cols: usize, threads: usize, f: F)
-where
+/// panels of `c` (row width `cols`) on the persistent worker pool (or
+/// `on`, when given). Each panel is a disjoint `&mut` slice; panel
+/// boundaries never change any output element's accumulation order.
+/// Inside a pool lane the split collapses to one panel (nested jobs run
+/// inline anyway, and one panel packs B once instead of per panel).
+fn par_row_panels<F>(
+    on: Option<&WorkerPool>,
+    c: &mut [f32],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    f: F,
+) where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
     debug_assert_eq!(c.len(), rows * cols);
-    // At least 8 rows per panel: tiny panels cost more to spawn than run.
-    let t = threads.max(1).min(rows.div_ceil(8)).max(1);
+    // At least 2*MR rows per panel: a panel smaller than two microtile
+    // rows repacks B for almost no work.
+    let t = if pool::in_pool() {
+        1
+    } else {
+        threads.max(1).min(rows.div_ceil(2 * MR)).max(1)
+    };
     if t <= 1 {
         f(0, rows, c);
         return;
     }
     let base = rows / t;
     let extra = rows % t;
-    std::thread::scope(|s| {
-        let fr = &f;
-        let mut rest = c;
-        let mut row0 = 0usize;
-        for i in 0..t {
-            let take = base + usize::from(i < extra);
-            let (panel, tail) = rest.split_at_mut(take * cols);
-            rest = tail;
-            s.spawn(move || fr(row0, take, panel));
-            row0 += take;
-        }
+    let cbase = c.as_mut_ptr() as usize;
+    let run = |p: usize| {
+        let row0 = p * base + p.min(extra);
+        let take = base + usize::from(p < extra);
+        // SAFETY: panel p covers rows [row0, row0 + take), disjoint
+        // across p, and the pool runs each chunk index exactly once, so
+        // no two lanes alias any element of `c`.
+        let panel = unsafe {
+            std::slice::from_raw_parts_mut((cbase as *mut f32).add(row0 * cols), take * cols)
+        };
+        f(row0, take, panel);
+    };
+    match on {
+        Some(p) => p.run(t, run),
+        None => pool::global().run(t, run),
+    }
+}
+
+/// Split `buf` into `nchunks` equal disjoint chunks and run `f` on each
+/// across the pool (chunk `ci` -> lane `ci % lanes`, deterministic).
+fn par_chunks<F>(on: &WorkerPool, buf: &mut [f32], chunk: usize, nchunks: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(buf.len(), chunk * nchunks);
+    let base = buf.as_mut_ptr() as usize;
+    on.run(nchunks, |ci| {
+        // SAFETY: chunk ci owns the disjoint range [ci*chunk, (ci+1)*chunk)
+        // of `buf`, and the pool runs every chunk index exactly once, so
+        // no two lanes alias.
+        let s = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut f32).add(ci * chunk), chunk)
+        };
+        f(ci, s);
     });
 }
 
-/// C = A @ B into `c`: a [m,k] row-major, b [k,n] row-major, c [m,n].
+/// Pack an [mc x kc] block of A (row-major, leading dimension `lda`)
+/// into [`MR`]-row strips, k-major within each strip:
+/// `apack[(s*kc + kk)*MR + r] = A[row0 + s*MR + r, k0 + kk]`.
+/// Rows past `mc` in the last strip are zero-filled; they only feed
+/// accumulator rows the write-back never stores.
+fn pack_a(apack: &mut [f32], a: &[f32], lda: usize, row0: usize, mc: usize, k0: usize, kc: usize) {
+    for s in 0..mc.div_ceil(MR) {
+        let rows = MR.min(mc - s * MR);
+        let dst = &mut apack[s * kc * MR..][..kc * MR];
+        for r in 0..MR {
+            if r < rows {
+                let arow = &a[(row0 + s * MR + r) * lda + k0..][..kc];
+                for (kk, &v) in arow.iter().enumerate() {
+                    dst[kk * MR + r] = v;
+                }
+            } else {
+                for kk in 0..kc {
+                    dst[kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack a [kc x nc] block of B (row-major, leading dimension `ldb`)
+/// into [`NR`]-column strips, k-major within each strip:
+/// `bpack[(s*kc + kk)*NR + j] = B[k0 + kk, j0 + s*NR + j]`.
+/// Columns past `nc` in the last strip are zero-filled; they only feed
+/// accumulator columns the write-back never stores.
+fn pack_b(bpack: &mut [f32], b: &[f32], ldb: usize, k0: usize, kc: usize, j0: usize, nc: usize) {
+    for s in 0..nc.div_ceil(NR) {
+        let cols = NR.min(nc - s * NR);
+        let dst = &mut bpack[s * kc * NR..][..kc * NR];
+        for kk in 0..kc {
+            let src = &b[(k0 + kk) * ldb + j0 + s * NR..];
+            let out = &mut dst[kk * NR..][..NR];
+            if cols == NR {
+                out.copy_from_slice(&src[..NR]);
+            } else {
+                out[..cols].copy_from_slice(&src[..cols]);
+                out[cols..].iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+}
+
+/// The MRxNR register-tiled inner kernel over one packed A strip and one
+/// packed B strip: `kc` steps of `acc[r][j] += a[r] * b[j]`.
 ///
-/// C-tile-stationary blocked schedule over [`pick_tile`] tiles with
-/// row-panel threading. Every `c[i,j]` accumulates `a[i,kk]*b[kk,j]` in
-/// ascending-kk order regardless of tiling or thread count, so the
-/// result is bitwise identical across schedules.
-pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: &GemmParams) {
+/// Determinism: the accumulator tile LOADS the partial sums already in C
+/// when `first` is false (f32 memory round-trips are exact), adds one
+/// mul + one add per kk in ascending-kk order, and stores back — so KC
+/// blocking never reassociates any element's accumulation chain, and the
+/// result is bitwise identical to the single-pass unpacked kernel. The
+/// epilogue is applied only on the final k block (`last`), using the
+/// same per-element operations as the standalone bias/ReLU kernels.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn microkernel(
+    c: &mut [f32],
+    ldc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    mr: usize,
+    nr: usize,
+    first: bool,
+    last: bool,
+    epi: Epilogue<'_>,
+    jabs: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    if !first {
+        for (r, accr) in acc.iter_mut().take(mr).enumerate() {
+            accr[..nr].copy_from_slice(&c[r * ldc..][..nr]);
+        }
+    }
+    // Hot loop: fixed-size MRxNR updates with no bounds checks (the
+    // `try_into` array casts are compile-time-known from chunks_exact),
+    // which LLVM turns into wide f32 FMA-shaped mul+add lanes.
+    for (ak, bk) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let ak: &[f32; MR] = ak.try_into().unwrap();
+        let bk: &[f32; NR] = bk.try_into().unwrap();
+        for (accr, &av) in acc.iter_mut().zip(ak) {
+            for (cv, &bv) in accr.iter_mut().zip(bk) {
+                *cv += av * bv;
+            }
+        }
+    }
+    if !last {
+        for (r, accr) in acc.iter().take(mr).enumerate() {
+            c[r * ldc..][..nr].copy_from_slice(&accr[..nr]);
+        }
+        return;
+    }
+    match epi {
+        Epilogue::None => {
+            for (r, accr) in acc.iter().take(mr).enumerate() {
+                c[r * ldc..][..nr].copy_from_slice(&accr[..nr]);
+            }
+        }
+        Epilogue::Relu => {
+            for (r, accr) in acc.iter().take(mr).enumerate() {
+                for (cv, &v) in c[r * ldc..][..nr].iter_mut().zip(accr.iter()) {
+                    *cv = if v < 0.0 { 0.0 } else { v };
+                }
+            }
+        }
+        Epilogue::Bias(bias) => {
+            let bs = &bias[jabs..][..nr];
+            for (r, accr) in acc.iter().take(mr).enumerate() {
+                let crow = &mut c[r * ldc..][..nr];
+                for ((cv, &v), &bv) in crow.iter_mut().zip(accr.iter()).zip(bs) {
+                    *cv = v + bv;
+                }
+            }
+        }
+        Epilogue::BiasRelu(bias) => {
+            let bs = &bias[jabs..][..nr];
+            for (r, accr) in acc.iter().take(mr).enumerate() {
+                let crow = &mut c[r * ldc..][..nr];
+                for ((cv, &v), &bv) in crow.iter_mut().zip(accr.iter()).zip(bs) {
+                    let x = v + bv;
+                    *cv = if x < 0.0 { 0.0 } else { x };
+                }
+            }
+        }
+    }
+}
+
+/// The packed BLIS loop nest (jc/NC -> pc/KC -> pack B -> ic/MC ->
+/// pack A -> NR strip -> MR strip -> microkernel) over one contiguous
+/// row panel of C. `arow0` is the panel's first row in A.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_panel(
+    panel: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    arow0: usize,
+    prows: usize,
+    k: usize,
+    n: usize,
+    plan: BlockPlan,
+    epi: Epilogue<'_>,
+) {
+    let mut apack = scratch::take(plan.mc * plan.kc);
+    let mut bpack = scratch::take(plan.nc * plan.kc);
+    let mut jc = 0;
+    while jc < n {
+        let nc = plan.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = plan.kc.min(k - pc);
+            let first = pc == 0;
+            let last = pc + kc == k;
+            pack_b(&mut bpack[..nc.div_ceil(NR) * NR * kc], b, n, pc, kc, jc, nc);
+            let mut ic = 0;
+            while ic < prows {
+                let mc = plan.mc.min(prows - ic);
+                pack_a(&mut apack[..mc.div_ceil(MR) * MR * kc], a, k, arow0 + ic, mc, pc, kc);
+                let mut jr = 0;
+                while jr < nc {
+                    let nr = NR.min(nc - jr);
+                    let bp = &bpack[jr * kc..][..NR * kc];
+                    let mut ir = 0;
+                    while ir < mc {
+                        let mr = MR.min(mc - ir);
+                        let ap = &apack[ir * kc..][..MR * kc];
+                        let coff = (ic + ir) * n + jc + jr;
+                        microkernel(
+                            &mut panel[coff..],
+                            n,
+                            ap,
+                            bp,
+                            mr,
+                            nr,
+                            first,
+                            last,
+                            epi,
+                            jc + jr,
+                        );
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// [`gemm_fused_into`] with an explicit pool (None = run panels on the
+/// process-global pool). The seam the pool-size property tests use.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_on(
+    on: Option<&WorkerPool>,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &GemmParams,
+    epi: Epilogue<'_>,
+) {
+    assert_eq!(a.len(), m * k, "gemm: A shape");
+    assert_eq!(b.len(), k * n, "gemm: B shape");
+    assert_eq!(c.len(), m * n, "gemm: C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // No k terms: the sum is 0, then the epilogue.
+        c.iter_mut().for_each(|v| *v = 0.0);
+        match epi {
+            Epilogue::None | Epilogue::Relu => {}
+            Epilogue::Bias(bias) => bias_add(c, bias, m, n),
+            Epilogue::BiasRelu(bias) => {
+                bias_add(c, bias, m, n);
+                relu_inplace(c);
+            }
+        }
+        return;
+    }
+    // Tiny problems: panel/packing overhead beats any parallel win.
+    let threads = if 2 * m * k * n < (1 << 16) { 1 } else { p.threads };
+    par_row_panels(on, c, m, n, threads, |row0, nrows, panel| {
+        let plan = BlockPlan::from_params(nrows, k, n, p);
+        gemm_packed_panel(panel, a, b, row0, nrows, k, n, plan, epi);
+    });
+}
+
+/// C = A @ B with a fused write-back epilogue: a [m,k] row-major,
+/// b [k,n] row-major, c [m,n]. See the module docs for the determinism
+/// argument; results are bitwise invariant to block sizes, pool size,
+/// thread count, and packing.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &GemmParams,
+    epi: Epilogue<'_>,
+) {
+    gemm_fused_on(None, c, a, b, m, k, n, p, epi);
+}
+
+/// C = A @ B into `c` (no epilogue): the packed microkernel schedule.
+pub fn gemm_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &GemmParams,
+) {
+    gemm_fused_on(None, c, a, b, m, k, n, p, Epilogue::None);
+}
+
+/// Allocating wrapper over [`gemm_into`].
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: &GemmParams) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    gemm_into(&mut c, a, b, m, k, n, p);
+    c
+}
+
+/// Allocating GEMM on an explicit pool (pool-size property tests).
+pub fn gemm_with_pool(
+    on: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &GemmParams,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    gemm_fused_on(Some(on), &mut c, a, b, m, k, n, p, Epilogue::None);
+    c
+}
+
+/// The PR 7 unpacked C-tile-stationary reference kernel, kept verbatim
+/// (modulo the pool and the arena) as the bitwise oracle for the packed
+/// path and as the bench baseline the packed speedup is measured
+/// against. Every `c[i,j]` accumulates in ascending-kk order, exactly
+/// like the packed kernel.
+pub fn gemm_unpacked_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &GemmParams,
+) {
     assert_eq!(a.len(), m * k, "gemm: A shape");
     assert_eq!(b.len(), k * n, "gemm: B shape");
     assert_eq!(c.len(), m * n, "gemm: C shape");
@@ -120,9 +584,9 @@ pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usi
     let threads = if 2 * m * k * n < (1 << 16) { 1 } else { p.threads };
     let tn = pick_tile(n, p.bn).min(n.max(1));
     let tk = pick_tile(k.max(1), p.bk);
-    par_row_panels(c, m, n, threads, |row0, nrows, panel| {
+    par_row_panels(None, c, m, n, threads, |row0, nrows, panel| {
         let tm = pick_tile(nrows, p.bm);
-        let mut acc = vec![0f32; tm * tn];
+        let mut acc = scratch::take(tm * tn);
         let mut i0 = 0;
         while i0 < nrows {
             let il = tm.min(nrows - i0);
@@ -146,8 +610,7 @@ pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usi
                     k0 += kl;
                 }
                 for ii in 0..il {
-                    panel[(i0 + ii) * n + j0..][..jl]
-                        .copy_from_slice(&acc[ii * jl..][..jl]);
+                    panel[(i0 + ii) * n + j0..][..jl].copy_from_slice(&acc[ii * jl..][..jl]);
                 }
                 j0 += jl;
             }
@@ -156,10 +619,17 @@ pub fn gemm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usi
     });
 }
 
-/// Allocating wrapper over [`gemm_into`].
-pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: &GemmParams) -> Vec<f32> {
+/// Allocating wrapper over [`gemm_unpacked_into`].
+pub fn gemm_unpacked(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &GemmParams,
+) -> Vec<f32> {
     let mut c = vec![0f32; m * n];
-    gemm_into(&mut c, a, b, m, k, n, p);
+    gemm_unpacked_into(&mut c, a, b, m, k, n, p);
     c
 }
 
@@ -167,12 +637,20 @@ pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: &GemmParams) 
 /// PLACE in ascending-p order (weight gradients: D-hat^T @ g-hat). The
 /// in-place, p-ascending accumulation makes chunked callers (conv wgrad
 /// over `b_p` chunks) bitwise independent of the chunking.
-pub fn gemm_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], p_rows: usize, m: usize, n: usize, threads: usize) {
+pub fn gemm_tn_acc(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    p_rows: usize,
+    m: usize,
+    n: usize,
+    threads: usize,
+) {
     assert_eq!(a.len(), p_rows * m, "gemm_tn: A shape");
     assert_eq!(b.len(), p_rows * n, "gemm_tn: B shape");
     assert_eq!(c.len(), m * n, "gemm_tn: C shape");
     let threads = if 2 * p_rows * m * n < (1 << 16) { 1 } else { threads };
-    par_row_panels(c, m, n, threads, |row0, nrows, panel| {
+    par_row_panels(None, c, m, n, threads, |row0, nrows, panel| {
         for pp in 0..p_rows {
             let brow = &b[pp * n..][..n];
             for ii in 0..nrows {
@@ -188,15 +666,23 @@ pub fn gemm_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], p_rows: usize, m: usize,
     });
 }
 
-/// C = A @ B^T: a [m,k], b [n,k], c [m,n] (activation gradients:
+/// C = A @ B^T into `c`: a [m,k], b [n,k] (activation gradients:
 /// `g @ W^T` without materializing the transpose). Row-wise dot products
 /// accumulate in ascending-k order.
-pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+pub fn gemm_nt_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "gemm_nt: A shape");
     assert_eq!(b.len(), n * k, "gemm_nt: B shape");
-    let mut c = vec![0f32; m * n];
+    assert_eq!(c.len(), m * n, "gemm_nt: C shape");
     let threads = if 2 * m * k * n < (1 << 16) { 1 } else { threads };
-    par_row_panels(&mut c, m, n, threads, |row0, nrows, panel| {
+    par_row_panels(None, c, m, n, threads, |row0, nrows, panel| {
         for ii in 0..nrows {
             let arow = &a[(row0 + ii) * k..][..k];
             let crow = &mut panel[ii * n..][..n];
@@ -210,6 +696,12 @@ pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usiz
             }
         }
     });
+}
+
+/// Allocating wrapper over [`gemm_nt_into`].
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    gemm_nt_into(&mut c, a, b, m, k, n, threads);
     c
 }
 
@@ -217,7 +709,17 @@ pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usiz
 /// into `dhat` ([b*h*w, kh*kw*cin], (kh, kw, cin) row-major — matching
 /// `im2col_ref` / the HWIO weight reshape). SAME padding, stride 1, odd
 /// kernels. Every element of `dhat` is written (padding zones zeroed).
-pub fn im2col_into(dhat: &mut [f32], x: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize) {
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    dhat: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+) {
     let kkc = kh * kw * cin;
     assert_eq!(dhat.len(), b * h * w * kkc, "im2col: D-hat shape");
     assert_eq!(x.len(), b * h * w * cin, "im2col: x shape");
@@ -258,60 +760,152 @@ pub fn normalize_bp(b: usize, b_p: usize) -> usize {
     bp
 }
 
-/// SAME stride-1 conv via lowering + batched GEMM (paper §III, Fig 2).
-/// x [b,h,w,cin], w [kh,kw,cin,cout] (HWIO) -> [b,h,w,cout].
+/// SAME stride-1 conv via lowering + batched GEMM (paper §III, Fig 2)
+/// with an optional fused bias(+ReLU) epilogue, writing into `out`.
+/// x [b,h,w,cin], w [kh,kw,cin,cout] (HWIO) -> out [b,h,w,cout].
 ///
 /// `b_p` images are lowered per chunk into one D-hat feeding ONE GEMM of
 /// `b_p*h*w` rows; the result is bitwise b_p-invariant (each output row
 /// belongs to exactly one image) — only the schedule and the D-hat
-/// footprint (`4*b_p*h*w*kh*kw*cin` bytes) change.
+/// footprint (`4*b_p*h*w*kh*kw*cin` bytes) change. When the chunk count
+/// can fill the pool, chunks run in parallel lanes (im2col AND GEMM),
+/// each lane's inner GEMM inline; otherwise chunks run sequentially
+/// with row-parallel GEMMs. Both schedules are bitwise identical.
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d_same(x: &[f32], wt: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize, cout: usize, b_p: usize, p: &GemmParams) -> Vec<f32> {
+pub fn conv2d_fused_into(
+    out: &mut [f32],
+    x: &[f32],
+    wt: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    b_p: usize,
+    p: &GemmParams,
+) {
     assert_eq!(x.len(), b * h * w * cin, "conv: x shape");
     assert_eq!(wt.len(), kh * kw * cin * cout, "conv: w shape");
+    assert_eq!(out.len(), b * h * w * cout, "conv: out shape");
     let b_p = normalize_bp(b, b_p);
     let kkc = kh * kw * cin;
     let rows = b_p * h * w;
-    let mut out = vec![0f32; b * h * w * cout];
-    let mut dhat = vec![0f32; rows * kkc];
-    let mut c0 = 0;
-    while c0 < b {
-        im2col_into(&mut dhat, &x[c0 * h * w * cin..][..b_p * h * w * cin], b_p, h, w, cin, kh, kw);
-        gemm_into(&mut out[c0 * h * w * cout..][..rows * cout], &dhat, wt, rows, kkc, cout, p);
-        c0 += b_p;
+    let nchunks = b / b_p;
+    let epi = match (bias, relu) {
+        (Some(bv), true) => Epilogue::BiasRelu(bv),
+        (Some(bv), false) => Epilogue::Bias(bv),
+        (None, true) => Epilogue::Relu,
+        (None, false) => Epilogue::None,
+    };
+    let in_chunk = b_p * h * w * cin;
+    let out_chunk = b_p * h * w * cout;
+    let work = |ci: usize, out_c: &mut [f32]| {
+        let mut dhat = scratch::take(rows * kkc);
+        im2col_into(&mut dhat, &x[ci * in_chunk..][..in_chunk], b_p, h, w, cin, kh, kw);
+        gemm_fused_into(out_c, &dhat, wt, rows, kkc, cout, p, epi);
+    };
+    if nchunks > 1 && p.threads > 1 && !pool::in_pool() {
+        let pl = pool::global();
+        if nchunks >= pl.lanes() && pl.lanes() > 1 {
+            par_chunks(pl, out, out_chunk, nchunks, work);
+            return;
+        }
     }
+    for ci in 0..nchunks {
+        work(ci, &mut out[ci * out_chunk..][..out_chunk]);
+    }
+}
+
+/// Allocating SAME conv, no epilogue (bench/test surface; the backend
+/// uses [`conv2d_fused_into`]).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same(
+    x: &[f32],
+    wt: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    b_p: usize,
+    p: &GemmParams,
+) -> Vec<f32> {
+    let mut out = vec![0f32; b * h * w * cout];
+    conv2d_fused_into(&mut out, x, wt, None, false, b, h, w, cin, kh, kw, cout, b_p, p);
     out
 }
 
 /// dL/dw for SAME stride-1 conv as chunked `D-hat^T @ g-hat` GEMMs
-/// (the paper's lowering applied to the backward pass). x [b,h,w,cin],
-/// g [b,h,w,cout] -> [kh,kw,cin,cout] flat. In-place p-ascending
-/// accumulation keeps the result bitwise b_p-invariant.
+/// (the paper's lowering applied to the backward pass), into `gw`
+/// ([kh,kw,cin,cout] flat). x [b,h,w,cin], g [b,h,w,cout]. Chunks stay
+/// SEQUENTIAL: the in-place p-ascending accumulation that makes the
+/// result bitwise b_p-invariant also orders chunk contributions, so
+/// parallelizing across chunks here would reassociate the sums. The
+/// row panels of each chunk's GEMM parallelize instead.
 #[allow(clippy::too_many_arguments)]
-pub fn conv_wgrad(x: &[f32], g: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize, cout: usize, b_p: usize, p: &GemmParams) -> Vec<f32> {
+pub fn conv_wgrad_into(
+    gw: &mut [f32],
+    x: &[f32],
+    g: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    b_p: usize,
+    p: &GemmParams,
+) {
     assert_eq!(x.len(), b * h * w * cin, "wgrad: x shape");
     assert_eq!(g.len(), b * h * w * cout, "wgrad: g shape");
     let b_p = normalize_bp(b, b_p);
     let kkc = kh * kw * cin;
     let rows = b_p * h * w;
-    let mut gw = vec![0f32; kkc * cout];
-    let mut dhat = vec![0f32; rows * kkc];
+    assert_eq!(gw.len(), kkc * cout, "wgrad: gw shape");
+    gw.iter_mut().for_each(|v| *v = 0.0);
+    let mut dhat = scratch::take(rows * kkc);
     let mut c0 = 0;
     while c0 < b {
         im2col_into(&mut dhat, &x[c0 * h * w * cin..][..rows * cin], b_p, h, w, cin, kh, kw);
         let ghat = &g[c0 * h * w * cout..][..rows * cout];
-        gemm_tn_acc(&mut gw, &dhat, ghat, rows, kkc, cout, p.threads);
+        gemm_tn_acc(gw, &dhat, ghat, rows, kkc, cout, p.threads);
         c0 += b_p;
     }
+}
+
+/// Allocating wrapper over [`conv_wgrad_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_wgrad(
+    x: &[f32],
+    g: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    b_p: usize,
+    p: &GemmParams,
+) -> Vec<f32> {
+    let mut gw = vec![0f32; kh * kw * cin * cout];
+    conv_wgrad_into(&mut gw, x, g, b, h, w, cin, kh, kw, cout, b_p, p);
     gw
 }
 
 /// HWIO kernel -> 180-degree-rotated, in/out-swapped kernel for the
-/// input-gradient conv (`_flip_w` in python model.py):
-/// out[i,j,o,c] = w[kh-1-i, kw-1-j, c, o]. Returns [kh,kw,cout,cin] flat.
-pub fn flip_w(wt: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<f32> {
+/// input-gradient conv (`_flip_w` in python model.py), into `out`
+/// ([kh,kw,cout,cin] flat): out[i,j,o,c] = w[kh-1-i, kw-1-j, c, o].
+pub fn flip_w_into(out: &mut [f32], wt: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) {
     assert_eq!(wt.len(), kh * kw * cin * cout, "flip_w: shape");
-    let mut out = vec![0f32; kh * kw * cout * cin];
+    assert_eq!(out.len(), kh * kw * cout * cin, "flip_w: out shape");
     for i in 0..kh {
         for j in 0..kw {
             for c in 0..cin {
@@ -322,15 +916,22 @@ pub fn flip_w(wt: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<
             }
         }
     }
+}
+
+/// Allocating wrapper over [`flip_w_into`].
+pub fn flip_w(wt: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<f32> {
+    let mut out = vec![0f32; kh * kw * cout * cin];
+    flip_w_into(&mut out, wt, kh, kw, cin, cout);
     out
 }
 
-/// 2x2 stride-2 max pool. x [b,h,w,c] (h, w even) -> [b,h/2,w/2,c].
-pub fn maxpool2x2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// 2x2 stride-2 max pool into `out`. x [b,h,w,c] (h, w even) ->
+/// out [b,h/2,w/2,c].
+pub fn maxpool2x2_into(out: &mut [f32], x: &[f32], b: usize, h: usize, w: usize, c: usize) {
     assert_eq!(x.len(), b * h * w * c, "pool: x shape");
     assert!(h % 2 == 0 && w % 2 == 0, "pool: odd spatial dims");
     let (h2, w2) = (h / 2, w / 2);
-    let mut out = vec![0f32; b * h2 * w2 * c];
+    assert_eq!(out.len(), b * h2 * w2 * c, "pool: out shape");
     for img in 0..b {
         for y in 0..h2 {
             for xw in 0..w2 {
@@ -350,18 +951,36 @@ pub fn maxpool2x2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32>
             }
         }
     }
+}
+
+/// Allocating wrapper over [`maxpool2x2_into`].
+pub fn maxpool2x2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0f32; b * (h / 2) * (w / 2) * c];
+    maxpool2x2_into(&mut out, x, b, h, w, c);
     out
 }
 
-/// Max-pool backward: route pooled grads to max positions; ties (exact
-/// float equality) receive the gradient in every tied position — the
-/// `gu * (x == yu)` rule of python model.py `_maxpool_bwd`.
-pub fn maxpool2x2_bwd(x: &[f32], y: &[f32], g: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// Max-pool backward into `out`: route pooled grads to max positions;
+/// ties (exact float equality) receive the gradient in every tied
+/// position — the `gu * (x == yu)` rule of python model.py
+/// `_maxpool_bwd`. Every element of `out` is written.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2x2_bwd_into(
+    out: &mut [f32],
+    x: &[f32],
+    y: &[f32],
+    g: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) {
     let (h2, w2) = (h / 2, w / 2);
     assert_eq!(x.len(), b * h * w * c, "pool_bwd: x shape");
     assert_eq!(y.len(), b * h2 * w2 * c, "pool_bwd: y shape");
     assert_eq!(g.len(), y.len(), "pool_bwd: g shape");
-    let mut out = vec![0f32; x.len()];
+    assert_eq!(out.len(), x.len(), "pool_bwd: out shape");
+    out.iter_mut().for_each(|v| *v = 0.0);
     for img in 0..b {
         for yy in 0..h2 {
             for xw in 0..w2 {
@@ -377,16 +996,36 @@ pub fn maxpool2x2_bwd(x: &[f32], y: &[f32], g: &[f32], b: usize, h: usize, w: us
             }
         }
     }
+}
+
+/// Allocating wrapper over [`maxpool2x2_bwd_into`].
+pub fn maxpool2x2_bwd(
+    x: &[f32],
+    y: &[f32],
+    g: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    maxpool2x2_bwd_into(&mut out, x, y, g, b, h, w, c);
     out
 }
 
-/// Fused softmax + cross-entropy: logits [b,n], labels [b] ->
-/// (mean loss, accuracy, grad [b,n] already divided by b). Matches
+/// Fused softmax + cross-entropy into `grad`: logits [b,n], labels [b]
+/// -> (mean loss, accuracy); `grad` [b,n] already divided by b. Matches
 /// `softmax_xent_ref`: max-subtracted logsumexp, first-occurrence argmax.
-pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, n: usize) -> (f32, f32, Vec<f32>) {
+pub fn softmax_xent_into(
+    grad: &mut [f32],
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    n: usize,
+) -> (f32, f32) {
     assert_eq!(logits.len(), b * n, "xent: logits shape");
     assert_eq!(labels.len(), b, "xent: labels shape");
-    let mut grad = vec![0f32; b * n];
+    assert_eq!(grad.len(), b * n, "xent: grad shape");
     let mut loss = 0f64;
     let mut correct = 0usize;
     for i in 0..b {
@@ -416,7 +1055,14 @@ pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, n: usize) -> (f32,
             *gz = (p - onehot) / b as f32;
         }
     }
-    ((loss / b as f64) as f32, correct as f32 / b as f32, grad)
+    ((loss / b as f64) as f32, correct as f32 / b as f32)
+}
+
+/// Allocating wrapper over [`softmax_xent_into`].
+pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, n: usize) -> (f32, f32, Vec<f32>) {
+    let mut grad = vec![0f32; b * n];
+    let (loss, acc) = softmax_xent_into(&mut grad, logits, labels, b, n);
+    (loss, acc, grad)
 }
 
 /// y += bias broadcast over rows: y [rows, c], bias [c].
@@ -439,7 +1085,11 @@ pub fn relu_inplace(x: &mut [f32]) {
     }
 }
 
-/// g *= (z > 0): ReLU backward mask.
+/// g *= (z > 0): ReLU backward mask. Because `a = relu(z)` satisfies
+/// `a <= 0.0 <=> z <= 0.0` bit-for-bit (positives survive unchanged,
+/// everything else becomes 0.0), callers may pass the post-activation
+/// tensor instead of the pre-activation one — which is what lets the
+/// fused forward drop the pre-activation buffers entirely.
 pub fn relu_bwd_inplace(g: &mut [f32], z: &[f32]) {
     assert_eq!(g.len(), z.len(), "relu_bwd: shape");
     for (gv, &zv) in g.iter_mut().zip(z) {
@@ -467,7 +1117,16 @@ pub fn lowered_bytes(b_p: usize, h: usize, w: usize, kh: usize, kw: usize, cin: 
 }
 
 /// FLOP count of a SAME conv as GFLOP (2 MACs per multiply-add).
-pub fn conv_gflops(b: usize, h: usize, w: usize, kh: usize, kw: usize, cin: usize, cout: usize) -> f64 {
+#[allow(clippy::too_many_arguments)]
+pub fn conv_gflops(
+    b: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+) -> f64 {
     2.0 * (b * h * w) as f64 * cout as f64 * (kh * kw * cin) as f64 / 1e9
 }
 
@@ -507,6 +1166,28 @@ mod tests {
     }
 
     #[test]
+    fn block_plan_handles_ragged_shapes() {
+        // The ISSUE's ragged trio: 800 rows, k=257, n=1.
+        let p = GemmParams { bm: 128, bn: 512, bk: 256, threads: 1 };
+        let plan = BlockPlan::from_params(800, 257, 1, &p);
+        // 800 under a 128 cap -> 7 near-equal blocks of 115 -> MR-align.
+        assert_eq!(plan.mc, 120);
+        assert_eq!(plan.mc % MR, 0);
+        // 257 under a 256 cap -> 2 near-equal blocks, no padding waste.
+        assert_eq!(plan.kc, 129);
+        // n=1 -> one NR-aligned block.
+        assert_eq!(plan.nc, NR);
+        // Coverage: the last block is never empty.
+        for (dim, blk) in [(800, plan.mc), (257, plan.kc), (1, plan.nc)] {
+            assert!((dim.div_ceil(blk) - 1) * blk < dim, "{dim}/{blk}");
+        }
+        // Degenerate caps clamp to the microtile.
+        let degenerate = GemmParams { bm: 1, bn: 1, bk: 1, threads: 1 };
+        let tiny = BlockPlan::from_params(4, 3, 2, &degenerate);
+        assert_eq!((tiny.mc, tiny.kc, tiny.nc), (MR, 1, NR));
+    }
+
+    #[test]
     fn gemm_matches_naive_ragged() {
         // Ragged in every dimension (not multiples of any tile).
         let (m, k, n) = (13, 57, 9);
@@ -529,6 +1210,94 @@ mod tests {
             for (bm, bn, bk) in [(128, 128, 512), (32, 16, 64), (8, 8, 8), (256, 256, 1024)] {
                 let c = gemm(&a, &b, m, k, n, &GemmParams { bm, bn, bk, threads });
                 assert_eq!(c, base, "threads={threads} tiles=({bm},{bn},{bk})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_unpacked_bitwise() {
+        // The tentpole property: the packed microkernel schedule and the
+        // PR 7 unpacked reference produce identical bits on ragged
+        // shapes, across thread counts and block caps.
+        let shapes = [
+            ((13usize, 57usize, 9usize), 21u64),
+            ((64, 800, 24), 22),
+            ((100, 257, 1), 23),
+            ((33, 1, 17), 24),
+            ((5, 129, 40), 25),
+        ];
+        for (shape, seed) in shapes {
+            let (m, k, n) = shape;
+            let a = randv(m * k, seed);
+            let b = randv(k * n, seed + 100);
+            for threads in [1usize, 4] {
+                for (bm, bn, bk) in [(128, 128, 512), (8, 8, 8), (48, 32, 129)] {
+                    let p = GemmParams { bm, bn, bk, threads };
+                    let packed = gemm(&a, &b, m, k, n, &p);
+                    let unpacked = gemm_unpacked(&a, &b, m, k, n, &p);
+                    assert_eq!(
+                        packed, unpacked,
+                        "shape={shape:?} threads={threads} caps=({bm},{bn},{bk})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_passes() {
+        let (m, k, n) = (23, 41, 19);
+        let a = randv(m * k, 31);
+        let b = randv(k * n, 32);
+        let bias = randv(n, 33);
+        let p = GemmParams { bm: 16, bn: 32, bk: 16, threads: 2 };
+        // Reference: unpacked GEMM then separate bias/relu passes.
+        let mut want = gemm_unpacked(&a, &b, m, k, n, &p);
+        bias_add(&mut want, &bias, m, n);
+        let mut want_relu = want.clone();
+        relu_inplace(&mut want_relu);
+        // Fused bias.
+        let mut got = vec![0f32; m * n];
+        gemm_fused_into(&mut got, &a, &b, m, k, n, &p, Epilogue::Bias(&bias));
+        assert_eq!(got, want, "fused bias");
+        // Fused bias + relu.
+        gemm_fused_into(&mut got, &a, &b, m, k, n, &p, Epilogue::BiasRelu(&bias));
+        assert_eq!(got, want_relu, "fused bias+relu");
+        // Fused relu only.
+        let mut plain = gemm_unpacked(&a, &b, m, k, n, &p);
+        relu_inplace(&mut plain);
+        gemm_fused_into(&mut got, &a, &b, m, k, n, &p, Epilogue::Relu);
+        assert_eq!(got, plain, "fused relu");
+    }
+
+    #[test]
+    fn gemm_with_explicit_pools_is_bitwise_stable() {
+        let (m, k, n) = (37, 65, 29);
+        let a = randv(m * k, 41);
+        let b = randv(k * n, 42);
+        let p = GemmParams::with_threads(8);
+        let base = gemm(&a, &b, m, k, n, &p);
+        for lanes in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(lanes);
+            let c = gemm_with_pool(&pool, &a, &b, m, k, n, &p);
+            assert_eq!(c, base, "pool lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn zero_k_gemm_writes_zeros_and_epilogue() {
+        let (m, n) = (3, 5);
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 - 2.0).collect();
+        let mut c = vec![7f32; m * n];
+        gemm_into(&mut c, &[], &[], m, 0, n, &GemmParams::with_threads(2));
+        assert!(c.iter().all(|&v| v == 0.0));
+        let mut c2 = vec![7f32; m * n];
+        let p1 = GemmParams::with_threads(1);
+        gemm_fused_into(&mut c2, &[], &[], m, 0, n, &p1, Epilogue::BiasRelu(&bias));
+        for r in 0..m {
+            for j in 0..n {
+                let want = (bias[j]).max(0.0);
+                assert_eq!(c2[r * n + j], want);
             }
         }
     }
@@ -565,7 +1334,18 @@ mod tests {
         }
     }
 
-    fn conv_naive(x: &[f32], wt: &[f32], b: usize, h: usize, w: usize, cin: usize, kh: usize, kw: usize, cout: usize) -> Vec<f32> {
+    #[allow(clippy::too_many_arguments)]
+    fn conv_naive(
+        x: &[f32],
+        wt: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+    ) -> Vec<f32> {
         let (ph, pw) = (kh / 2, kw / 2);
         let mut out = vec![0f32; b * h * w * cout];
         for img in 0..b {
@@ -611,6 +1391,36 @@ mod tests {
     }
 
     #[test]
+    fn conv_fused_epilogue_matches_separate_passes() {
+        let (b, h, w, cin, kh, kw, cout) = (2, 4, 4, 3, 3, 3, 5);
+        let x = randv(b * h * w * cin, 51);
+        let wt = randv(kh * kw * cin * cout, 52);
+        let bias = randv(cout, 53);
+        let p = GemmParams::with_threads(2);
+        let mut want = conv2d_same(&x, &wt, b, h, w, cin, kh, kw, cout, 1, &p);
+        bias_add(&mut want, &bias, b * h * w, cout);
+        relu_inplace(&mut want);
+        let mut got = vec![0f32; b * h * w * cout];
+        conv2d_fused_into(
+            &mut got,
+            &x,
+            &wt,
+            Some(&bias),
+            true,
+            b,
+            h,
+            w,
+            cin,
+            kh,
+            kw,
+            cout,
+            2,
+            &p,
+        );
+        assert_eq!(got, want, "fused conv bias+relu == separate passes");
+    }
+
+    #[test]
     fn wgrad_is_bp_invariant() {
         let (b, h, w, cin, kh, kw, cout) = (4, 4, 4, 2, 3, 3, 3);
         let x = randv(b * h * w * cin, 11);
@@ -649,6 +1459,21 @@ mod tests {
         let (loss2, acc2, _) = softmax_xent(&[10.0, 0.0, 0.0], &[0], 1, 3);
         assert!(loss2 < 1e-3);
         assert_eq!(acc2, 1.0);
+    }
+
+    #[test]
+    fn relu_bwd_accepts_post_activation_mask() {
+        // The fused forward keeps only a = relu(z); backward masking by
+        // a must match masking by z bit-for-bit.
+        let z = [-1.5f32, -0.0, 0.0, 1e-30, 2.5, -3.0];
+        let mut a = z;
+        relu_inplace(&mut a);
+        let g0 = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut by_z = g0;
+        relu_bwd_inplace(&mut by_z, &z);
+        let mut by_a = g0;
+        relu_bwd_inplace(&mut by_a, &a);
+        assert_eq!(by_z, by_a);
     }
 
     #[test]

@@ -27,6 +27,8 @@ use crate::runtime::{ArtifactEntry, Runtime};
 pub mod kernels;
 #[cfg(feature = "xla")]
 mod native;
+pub mod pool;
+pub mod scratch;
 
 #[cfg(feature = "xla")]
 pub use native::NativeBackend;

@@ -1,5 +1,5 @@
 //! [`NativeBackend`] — pure-Rust CPU execution of the manifest's
-//! artifact kinds over the blocked kernels in [`super::kernels`].
+//! artifact kinds over the packed kernels in [`super::kernels`].
 //!
 //! Shapes are read from the input literals themselves (not the manifest
 //! entry), so one dispatcher serves every arch and batch size; the entry
@@ -7,10 +7,26 @@
 //! a line-for-line port of python/compile/model.py (conv phase, recompute
 //! -vjp conv backward, fused FC step) — parity against goldens generated
 //! from those kernels is asserted to <= 1e-4 in `tests/it_backend.rs`.
+//!
+//! Memory discipline (the steady-state zero-allocation contract):
+//!
+//! * Input literals are **borrowed** (`Literal::as_f32`/`as_i32`), never
+//!   copied into fresh `Vec`s.
+//! * Every intermediate (activations, pooled maps, gradients in flight)
+//!   lives in the per-thread [`super::scratch`] arena.
+//! * Bias-add + ReLU ride the GEMM write-back ([`k::Epilogue`]) instead
+//!   of separate full-tensor passes, and the pre-activations `z1`/`z2`
+//!   are no longer materialized at all: `relu(z)` preserves exactly the
+//!   sign information the backward mask needs (`a <= 0 <=> z <= 0`
+//!   bit-for-bit), so the backward passes mask by the activations.
+//! * Only artifact *outputs* allocate — their ownership leaves the
+//!   backend inside the returned literals via `Literal::from_f32`
+//!   (moved, not serialized through a byte copy).
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::kernels as k;
+use super::scratch::{self, ScratchVec};
 use super::{Backend, NATIVE_KINDS};
 use crate::runtime::{ArtifactEntry, Runtime};
 
@@ -25,24 +41,23 @@ fn dims_of(l: &xla::Literal) -> Result<Vec<usize>> {
     }
 }
 
-fn f32_of(l: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(l.to_vec::<f32>()?)
+/// Borrow a literal's f32 storage (no copy).
+fn f32_of(l: &xla::Literal) -> Result<&[f32]> {
+    Ok(l.as_f32()?)
 }
 
-fn i32_of(l: &xla::Literal) -> Result<Vec<i32>> {
-    Ok(l.to_vec::<i32>()?)
+/// Borrow a literal's i32 storage (no copy).
+fn i32_of(l: &xla::Literal) -> Result<&[i32]> {
+    Ok(l.as_i32()?)
 }
 
-fn lit(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        crate::tensor::f32_bytes(data),
-    )?)
+/// Move an output buffer into a literal (no copy).
+fn lit(dims: &[usize], data: Vec<f32>) -> Result<xla::Literal> {
+    Ok(xla::Literal::from_f32(dims, data)?)
 }
 
 fn scalar(v: f32) -> Result<xla::Literal> {
-    lit(&[], &[v])
+    lit(&[], vec![v])
 }
 
 /// The two-phase CNN's dimensions, derived from the input literals
@@ -74,13 +89,15 @@ impl Dims {
 }
 
 /// Forward conv-phase intermediates kept for the recompute backward.
+/// Post-activation tensors only: the fused conv epilogue never
+/// materializes the pre-activations, and the ReLU backward mask taken
+/// from `a = relu(z)` is bit-identical to the one taken from `z`.
+/// All four live in the scratch arena; `conv_fwd` copies `p2` out.
 struct ConvTrace {
-    z1: Vec<f32>,
-    a1: Vec<f32>,
-    p1: Vec<f32>,
-    z2: Vec<f32>,
-    a2: Vec<f32>,
-    p2: Vec<f32>,
+    a1: ScratchVec,
+    p1: ScratchVec,
+    a2: ScratchVec,
+    p2: ScratchVec,
 }
 
 fn conv_phase(
@@ -94,21 +111,50 @@ fn conv_phase(
     gp: &k::GemmParams,
 ) -> ConvTrace {
     let (h2, w2) = (d.h / 2, d.w / 2);
-    let mut z1 = k::conv2d_same(x, wc1, d.b, d.h, d.w, d.cin, d.k, d.k, d.c1, b_p, gp);
-    k::bias_add(&mut z1, bc1, d.b * d.h * d.w, d.c1);
-    let mut a1 = z1.clone();
-    k::relu_inplace(&mut a1);
-    let p1 = k::maxpool2x2(&a1, d.b, d.h, d.w, d.c1);
-    let mut z2 = k::conv2d_same(&p1, wc2, d.b, h2, w2, d.c1, d.k, d.k, d.c2, b_p, gp);
-    k::bias_add(&mut z2, bc2, d.b * h2 * w2, d.c2);
-    let mut a2 = z2.clone();
-    k::relu_inplace(&mut a2);
-    let p2 = k::maxpool2x2(&a2, d.b, h2, w2, d.c2);
-    ConvTrace { z1, a1, p1, z2, a2, p2 }
+    let mut a1 = scratch::take(d.b * d.h * d.w * d.c1);
+    k::conv2d_fused_into(
+        &mut a1,
+        x,
+        wc1,
+        Some(bc1),
+        true,
+        d.b,
+        d.h,
+        d.w,
+        d.cin,
+        d.k,
+        d.k,
+        d.c1,
+        b_p,
+        gp,
+    );
+    let mut p1 = scratch::take(d.b * h2 * w2 * d.c1);
+    k::maxpool2x2_into(&mut p1, &a1, d.b, d.h, d.w, d.c1);
+    let mut a2 = scratch::take(d.b * h2 * w2 * d.c2);
+    k::conv2d_fused_into(
+        &mut a2,
+        &p1,
+        wc2,
+        Some(bc2),
+        true,
+        d.b,
+        h2,
+        w2,
+        d.c1,
+        d.k,
+        d.k,
+        d.c2,
+        b_p,
+        gp,
+    );
+    let mut p2 = scratch::take(d.b * (h2 / 2) * (w2 / 2) * d.c2);
+    k::maxpool2x2_into(&mut p2, &a2, d.b, h2, w2, d.c2);
+    ConvTrace { a1, p1, a2, p2 }
 }
 
 /// Chain rule back through pool/relu/conv twice (model.py `conv_bwd`).
-/// Returns (gwc1, gbc1, gwc2, gbc2) flat.
+/// Returns (gwc1, gbc1, gwc2, gbc2) flat — these are outputs, so they
+/// are plain `Vec`s whose ownership moves into the result literals.
 #[allow(clippy::too_many_arguments)]
 fn conv_backward(
     x: &[f32],
@@ -121,20 +167,44 @@ fn conv_backward(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     let (h2, w2) = (d.h / 2, d.w / 2);
     // g_act [b, feat] IS g_p2 [b, h/4, w/4, c2] (row-major reshape).
-    let mut g_a2 = k::maxpool2x2_bwd(&t.a2, &t.p2, g_act, d.b, h2, w2, d.c2);
-    k::relu_bwd_inplace(&mut g_a2, &t.z2); // now g_z2
-    let gwc2 = k::conv_wgrad(&t.p1, &g_a2, d.b, h2, w2, d.c1, d.k, d.k, d.c2, b_p, gp);
+    let mut g_a2 = scratch::take(d.b * h2 * w2 * d.c2);
+    k::maxpool2x2_bwd_into(&mut g_a2, &t.a2, &t.p2, g_act, d.b, h2, w2, d.c2);
+    k::relu_bwd_inplace(&mut g_a2, &t.a2); // a2-mask == z2-mask; now g_z2
+    let mut gwc2 = vec![0f32; d.k * d.k * d.c1 * d.c2];
+    k::conv_wgrad_into(&mut gwc2, &t.p1, &g_a2, d.b, h2, w2, d.c1, d.k, d.k, d.c2, b_p, gp);
     let gbc2 = k::colsum(&g_a2, d.b * h2 * w2, d.c2);
-    let wflip = k::flip_w(wc2, d.k, d.k, d.c1, d.c2);
-    let g_p1 = k::conv2d_same(&g_a2, &wflip, d.b, h2, w2, d.c2, d.k, d.k, d.c1, b_p, gp);
-    let mut g_a1 = k::maxpool2x2_bwd(&t.a1, &t.p1, &g_p1, d.b, d.h, d.w, d.c1);
-    k::relu_bwd_inplace(&mut g_a1, &t.z1); // now g_z1
-    let gwc1 = k::conv_wgrad(x, &g_a1, d.b, d.h, d.w, d.cin, d.k, d.k, d.c1, b_p, gp);
+    let mut wflip = scratch::take(d.k * d.k * d.c2 * d.c1);
+    k::flip_w_into(&mut wflip, wc2, d.k, d.k, d.c1, d.c2);
+    let mut g_p1 = scratch::take(d.b * h2 * w2 * d.c1);
+    k::conv2d_fused_into(
+        &mut g_p1,
+        &g_a2,
+        &wflip,
+        None,
+        false,
+        d.b,
+        h2,
+        w2,
+        d.c2,
+        d.k,
+        d.k,
+        d.c1,
+        b_p,
+        gp,
+    );
+    let mut g_a1 = scratch::take(d.b * d.h * d.w * d.c1);
+    k::maxpool2x2_bwd_into(&mut g_a1, &t.a1, &t.p1, &g_p1, d.b, d.h, d.w, d.c1);
+    k::relu_bwd_inplace(&mut g_a1, &t.a1); // a1-mask == z1-mask; now g_z1
+    let mut gwc1 = vec![0f32; d.k * d.k * d.cin * d.c1];
+    k::conv_wgrad_into(&mut gwc1, x, &g_a1, d.b, d.h, d.w, d.cin, d.k, d.k, d.c1, b_p, gp);
     let gbc1 = k::colsum(&g_a1, d.b * d.h * d.w, d.c1);
     (gwc1, gbc1, gwc2, gbc2)
 }
 
-/// FC forward keeping pre-activations (model.py `_fc_phase`).
+/// FC forward (model.py `_fc_phase`) with bias/ReLU fused into the GEMM
+/// write-backs. Returns (h, logits) in scratch; `h = relu(z1)` carries
+/// the backward mask, so `z1` itself is never materialized.
+#[allow(clippy::too_many_arguments)]
 fn fc_forward(
     act: &[f32],
     wf1: &[f32],
@@ -146,18 +216,16 @@ fn fc_forward(
     f1: usize,
     ncls: usize,
     gp: &k::GemmParams,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut z1 = k::gemm(act, wf1, b, feat, f1, gp);
-    k::bias_add(&mut z1, bf1, b, f1);
-    let mut h = z1.clone();
-    k::relu_inplace(&mut h);
-    let mut logits = k::gemm(&h, wf2, b, f1, ncls, gp);
-    k::bias_add(&mut logits, bf2, b, ncls);
-    (z1, h, logits)
+) -> (ScratchVec, ScratchVec) {
+    let mut h = scratch::take(b * f1);
+    k::gemm_fused_into(&mut h, act, wf1, b, feat, f1, gp, k::Epilogue::BiasRelu(bf1));
+    let mut logits = scratch::take(b * ncls);
+    k::gemm_fused_into(&mut logits, &h, wf2, b, f1, ncls, gp, k::Epilogue::Bias(bf2));
+    (h, logits)
 }
 
 /// Fused FC fwd + bwd + loss (model.py `fc_step`). Returns
-/// (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2).
+/// (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2); the `Vec`s are outputs.
 #[allow(clippy::too_many_arguments, clippy::type_complexity)]
 fn fc_step(
     act: &[f32],
@@ -172,24 +240,28 @@ fn fc_step(
     ncls: usize,
     gp: &k::GemmParams,
 ) -> (f32, f32, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
-    let (z1, h, logits) = fc_forward(act, wf1, bf1, wf2, bf2, b, feat, f1, ncls, gp);
-    let (loss, acc, g_logits) = k::softmax_xent(&logits, labels, b, ncls);
+    let (h, logits) = fc_forward(act, wf1, bf1, wf2, bf2, b, feat, f1, ncls, gp);
+    let mut g_logits = scratch::take(b * ncls);
+    let (loss, acc) = k::softmax_xent_into(&mut g_logits, &logits, labels, b, ncls);
     let mut gwf2 = vec![0f32; f1 * ncls];
     k::gemm_tn_acc(&mut gwf2, &h, &g_logits, b, f1, ncls, gp.threads);
     let gbf2 = k::colsum(&g_logits, b, ncls);
-    let mut g_h = k::gemm_nt(&g_logits, wf2, b, ncls, f1, gp.threads);
-    k::relu_bwd_inplace(&mut g_h, &z1); // now g_z1
+    let mut g_h = scratch::take(b * f1);
+    k::gemm_nt_into(&mut g_h, &g_logits, wf2, b, ncls, f1, gp.threads);
+    k::relu_bwd_inplace(&mut g_h, &h); // h-mask == z1-mask; now g_z1
     let mut gwf1 = vec![0f32; feat * f1];
     k::gemm_tn_acc(&mut gwf1, act, &g_h, b, feat, f1, gp.threads);
     let gbf1 = k::colsum(&g_h, b, f1);
-    let g_act = k::gemm_nt(&g_h, wf1, b, f1, feat, gp.threads);
+    let mut g_act = vec![0f32; b * feat];
+    k::gemm_nt_into(&mut g_act, &g_h, wf1, b, f1, feat, gp.threads);
     (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2)
 }
 
-/// Read (dims, data) for a conv-parameter quad [wc1, bc1, wc2, bc2].
-fn conv_quad(
-    lits: &[&xla::Literal],
-) -> Result<(Vec<usize>, Vec<usize>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+/// Read (dims, borrowed data) for a conv-parameter quad
+/// [wc1, bc1, wc2, bc2].
+type ConvQuad<'a> = (Vec<usize>, Vec<usize>, &'a [f32], &'a [f32], &'a [f32], &'a [f32]);
+
+fn conv_quad<'a>(lits: &[&'a xla::Literal]) -> Result<ConvQuad<'a>> {
     let wc1d = dims_of(lits[0])?;
     let wc2d = dims_of(lits[2])?;
     Ok((
@@ -222,8 +294,8 @@ impl NativeBackend {
                 let d = Dims::conv(&xd, &wc1d, &wc2d)?;
                 let b_p = k::normalize_bp(d.b, bp_knob);
                 let x = f32_of(inputs[0])?;
-                let t = conv_phase(&x, &wc1, &bc1, &wc2, &bc2, d, b_p, &gp);
-                Ok(vec![lit(&[d.b, d.feat], &t.p2)?])
+                let t = conv_phase(x, wc1, bc1, wc2, bc2, d, b_p, &gp);
+                Ok(vec![lit(&[d.b, d.feat], t.p2.to_vec())?])
             }
             "conv_bwd" => {
                 ensure!(inputs.len() == 6, "conv_bwd takes (x, conv params, g_act)");
@@ -234,14 +306,13 @@ impl NativeBackend {
                 let x = f32_of(inputs[0])?;
                 let g_act = f32_of(inputs[5])?;
                 ensure!(g_act.len() == d.b * d.feat, "g_act shape");
-                let t = conv_phase(&x, &wc1, &bc1, &wc2, &bc2, d, b_p, &gp);
-                let (gwc1, gbc1, gwc2, gbc2) =
-                    conv_backward(&x, &wc2, &t, &g_act, d, b_p, &gp);
+                let t = conv_phase(x, wc1, bc1, wc2, bc2, d, b_p, &gp);
+                let (gwc1, gbc1, gwc2, gbc2) = conv_backward(x, wc2, &t, g_act, d, b_p, &gp);
                 Ok(vec![
-                    lit(&wc1d, &gwc1)?,
-                    lit(&[d.c1], &gbc1)?,
-                    lit(&wc2d, &gwc2)?,
-                    lit(&[d.c2], &gbc2)?,
+                    lit(&wc1d, gwc1)?,
+                    lit(&[d.c1], gbc1)?,
+                    lit(&wc2d, gwc2)?,
+                    lit(&[d.c2], gbc2)?,
                 ])
             }
             "fc_step" => {
@@ -260,21 +331,26 @@ impl NativeBackend {
                     f32_of(inputs[5])?,
                 );
                 let (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2) =
-                    fc_step(&act, &labels, &wf1, &bf1, &wf2, &bf2, ad[0], feat, f1, ncls, &gp);
+                    fc_step(act, labels, wf1, bf1, wf2, bf2, ad[0], feat, f1, ncls, &gp);
                 Ok(vec![
                     scalar(loss)?,
                     scalar(acc)?,
-                    lit(&ad, &g_act)?,
-                    lit(&[feat, f1], &gwf1)?,
-                    lit(&[f1], &gbf1)?,
-                    lit(&[f1, ncls], &gwf2)?,
-                    lit(&[ncls], &gbf2)?,
+                    lit(&ad, g_act)?,
+                    lit(&[feat, f1], gwf1)?,
+                    lit(&[f1], gbf1)?,
+                    lit(&[f1, ncls], gwf2)?,
+                    lit(&[ncls], gbf2)?,
                 ])
             }
             "full_step" | "infer" => {
                 let infer = entry.kind == "infer";
                 let np = if infer { 9 } else { 10 };
-                ensure!(inputs.len() == np, "{} takes x{} and 8 params", entry.kind, if infer { "" } else { ", labels" });
+                ensure!(
+                    inputs.len() == np,
+                    "{} takes x{} and 8 params",
+                    entry.kind,
+                    if infer { "" } else { ", labels" }
+                );
                 let xd = dims_of(inputs[0])?;
                 let poff = if infer { 1 } else { 2 };
                 let (wc1d, wc2d, wc1, bc1, wc2, bc2) = conv_quad(&inputs[poff..poff + 4])?;
@@ -289,29 +365,28 @@ impl NativeBackend {
                     f32_of(inputs[poff + 6])?,
                     f32_of(inputs[poff + 7])?,
                 );
-                let t = conv_phase(&x, &wc1, &bc1, &wc2, &bc2, d, b_p, &gp);
+                let t = conv_phase(x, wc1, bc1, wc2, bc2, d, b_p, &gp);
                 if infer {
-                    let (_, _, logits) =
-                        fc_forward(&t.p2, &wf1, &bf1, &wf2, &bf2, d.b, feat, f1, ncls, &gp);
-                    return Ok(vec![lit(&[d.b, ncls], &logits)?]);
+                    let (_h, logits) =
+                        fc_forward(&t.p2, wf1, bf1, wf2, bf2, d.b, feat, f1, ncls, &gp);
+                    return Ok(vec![lit(&[d.b, ncls], logits.to_vec())?]);
                 }
                 let labels = i32_of(inputs[1])?;
                 ensure!(labels.len() == d.b, "labels length");
                 let (loss, acc, g_act, gwf1, gbf1, gwf2, gbf2) =
-                    fc_step(&t.p2, &labels, &wf1, &bf1, &wf2, &bf2, d.b, feat, f1, ncls, &gp);
-                let (gwc1, gbc1, gwc2, gbc2) =
-                    conv_backward(&x, &wc2, &t, &g_act, d, b_p, &gp);
+                    fc_step(&t.p2, labels, wf1, bf1, wf2, bf2, d.b, feat, f1, ncls, &gp);
+                let (gwc1, gbc1, gwc2, gbc2) = conv_backward(x, wc2, &t, &g_act, d, b_p, &gp);
                 Ok(vec![
                     scalar(loss)?,
                     scalar(acc)?,
-                    lit(&wc1d, &gwc1)?,
-                    lit(&[d.c1], &gbc1)?,
-                    lit(&wc2d, &gwc2)?,
-                    lit(&[d.c2], &gbc2)?,
-                    lit(&[feat, f1], &gwf1)?,
-                    lit(&[f1], &gbf1)?,
-                    lit(&[f1, ncls], &gwf2)?,
-                    lit(&[ncls], &gbf2)?,
+                    lit(&wc1d, gwc1)?,
+                    lit(&[d.c1], gbc1)?,
+                    lit(&wc2d, gwc2)?,
+                    lit(&[d.c2], gbc2)?,
+                    lit(&[feat, f1], gwf1)?,
+                    lit(&[f1], gbf1)?,
+                    lit(&[f1, ncls], gwf2)?,
+                    lit(&[ncls], gbf2)?,
                 ])
             }
             "convchunk" | "convbench" => {
@@ -324,8 +399,8 @@ impl NativeBackend {
                 let b_p = k::normalize_bp(b, bp_knob);
                 let x = f32_of(inputs[0])?;
                 let wt = f32_of(inputs[1])?;
-                let y = k::conv2d_same(&x, &wt, b, h, w, cin, wd[0], wd[1], wd[3], b_p, &gp);
-                Ok(vec![lit(&[b, h, w, wd[3]], &y)?])
+                let y = k::conv2d_same(x, wt, b, h, w, cin, wd[0], wd[1], wd[3], b_p, &gp);
+                Ok(vec![lit(&[b, h, w, wd[3]], y)?])
             }
             "gemm" => {
                 ensure!(inputs.len() == 2, "gemm takes (a, b)");
@@ -337,8 +412,8 @@ impl NativeBackend {
                 );
                 let a = f32_of(inputs[0])?;
                 let b = f32_of(inputs[1])?;
-                let c = k::gemm(&a, &b, adim[0], adim[1], bdim[1], &gp);
-                Ok(vec![lit(&[adim[0], bdim[1]], &c)?])
+                let c = k::gemm(a, b, adim[0], adim[1], bdim[1], &gp);
+                Ok(vec![lit(&[adim[0], bdim[1]], c)?])
             }
             other => bail!(
                 "native backend has no kernel for artifact kind {other:?} \

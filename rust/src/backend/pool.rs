@@ -1,0 +1,364 @@
+//! Persistent worker pool for the native CPU kernels.
+//!
+//! PR 7's kernels spawned fresh `std::thread::scope` threads on every
+//! GEMM call — tens of microseconds of clone/TLB churn per call on a hot
+//! path that executes thousands of times per epoch. This pool parks a
+//! fixed set of workers once per process and hands them chunked jobs
+//! through a generation-counted condvar handshake.
+//!
+//! Design properties the kernels rely on:
+//!
+//! * **Deterministic static partition** (no work stealing): chunk `c` of
+//!   a `run(nchunks, f)` call always executes on lane `c % lanes`, where
+//!   lane 0 is the submitting thread itself. Which lane runs a chunk
+//!   never affects values — chunks write disjoint outputs — but the
+//!   static map keeps scheduling reproducible and keeps each worker's
+//!   thread-local scratch arena (see [`super::scratch`]) warm with the
+//!   same buffer sizes every iteration.
+//! * **Serialized submission**: `run` holds an internal lock for the
+//!   duration of the job, so concurrent callers (e.g. the threaded
+//!   engine executing two artifacts at once) queue rather than
+//!   interleave on the same workers.
+//! * **Nested submission runs inline**: a chunk closure that itself
+//!   calls `run` (conv chunk -> inner GEMM) executes the nested job on
+//!   the current thread instead of deadlocking on the submission lock.
+//!   The thread-local [`in_pool`] flag implements this.
+//! * The pool never outlives a job's borrows: `run` blocks until every
+//!   worker has finished the generation, which is what makes handing
+//!   workers a raw pointer to the caller's stack closure sound.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Type-erased view of one submitted job: `call(data, chunk)` runs one
+/// chunk of the caller's closure, `data` pointing at that closure on the
+/// submitting thread's stack.
+///
+/// SAFETY: `call` may only be invoked while the submitting `run` call is
+/// blocked on the generation barrier (it is the shim monomorphized for
+/// the closure's real type, and `data` borrows that closure).
+#[derive(Clone, Copy)]
+struct Job {
+    call: unsafe fn(*const (), usize),
+    data: *const (),
+    nchunks: usize,
+}
+
+// SAFETY: `data` points at a closure owned by the thread blocked inside
+// `WorkerPool::run` until every worker finishes the generation, so the
+// pointer never dangles while a worker can observe it; the closure is
+// `Sync`, so sharing it across worker threads is sound.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per submitted job; workers detect work by comparing
+    /// against the last generation they executed.
+    generation: u64,
+    job: Option<Job>,
+    /// Workers still executing the current generation.
+    active: usize,
+    /// A worker chunk panicked; the submitter re-raises after the barrier.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new generation.
+    work_cv: Condvar,
+    /// The submitter waits here for `active` to reach zero.
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads plus the submitting lane.
+pub struct WorkerPool {
+    /// Total lanes including the submitting thread (so `lanes - 1`
+    /// parked workers). `lanes == 1` means every job runs inline.
+    lanes: usize,
+    shared: &'static Shared,
+    /// Serializes `run` calls from different threads.
+    run_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+thread_local! {
+    /// True while this thread is executing pool work (either as a
+    /// worker lane or as the submitting lane 0). Nested `run` calls
+    /// observe it and execute inline.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Is the current thread inside a pool job? (Nested kernel calls use
+/// this to skip re-submission and stay on the current lane.)
+pub fn in_pool() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+impl WorkerPool {
+    /// Build a pool with `lanes` total execution lanes (clamped to
+    /// 1..=64). `lanes - 1` worker threads are spawned and parked.
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.clamp(1, 64);
+        // Leaked on purpose: worker lifetime == process lifetime for the
+        // global pool, and explicit pools join their workers in Drop
+        // (the tiny Shared block is the only thing that outlives them).
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }));
+        let handles = (1..lanes)
+            .map(|lane| {
+                std::thread::Builder::new()
+                    .name(format!("omnivore-kernel-{lane}"))
+                    .spawn(move || worker_loop(shared, lane, lanes))
+                    .expect("spawning kernel pool worker")
+            })
+            .collect();
+        Self { lanes, shared, run_lock: Mutex::new(()), handles }
+    }
+
+    /// Total execution lanes (submitting thread included).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Execute `f(c)` for every chunk `c in 0..nchunks`, chunk `c` on
+    /// lane `c % lanes`. Blocks until all chunks are done. Chunks MUST
+    /// write disjoint data (each index runs exactly once; the compiler
+    /// only sees `&F`, so interior writes go through raw pointers the
+    /// caller derives per chunk). Runs inline when the pool has a single
+    /// lane, the job has a single chunk, or the current thread is
+    /// already a pool lane.
+    pub fn run<F>(&self, nchunks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if nchunks == 0 {
+            return;
+        }
+        if self.lanes == 1 || nchunks == 1 || in_pool() {
+            for c in 0..nchunks {
+                f(c);
+            }
+            return;
+        }
+        /// Monomorphized shim giving workers a way to call `F` through a
+        /// type-erased pointer. SAFETY contract: `data` was derived from
+        /// `&f` in `run` below, which does not return until the
+        /// completion barrier passes, so the borrow is always live.
+        unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), chunk: usize) {
+            let f = &*(data as *const F);
+            f(chunk);
+        }
+        let job =
+            Job { call: call_shim::<F>, data: &f as *const F as *const (), nchunks };
+        let _submit = self.run_lock.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.generation += 1;
+            st.job = Some(job);
+            st.active = self.lanes - 1;
+            st.panicked = false;
+            self.shared.work_cv.notify_all();
+        }
+        // Lane 0 = the submitting thread; mark it as in-pool so nested
+        // kernel calls inside `f` execute inline instead of deadlocking
+        // on `run_lock`. Catch panics so the generation barrier always
+        // completes before this frame (and the closure workers borrow)
+        // can unwind away.
+        IN_POOL.with(|c| c.set(true));
+        let lane0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut c = 0;
+            while c < nchunks {
+                f(c);
+                c += self.lanes;
+            }
+        }));
+        IN_POOL.with(|c| c.set(false));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let poisoned = st.panicked;
+        drop(st);
+        if let Err(payload) = lane0 {
+            std::panic::resume_unwind(payload);
+        }
+        assert!(!poisoned, "a kernel pool worker panicked while running a chunk");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &'static Shared, lane: usize, lanes: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    seen = st.generation;
+                    break st.job.expect("generation bumped without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        IN_POOL.with(|c| c.set(true));
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut c = lane;
+            while c < job.nchunks {
+                // SAFETY: the submitting thread is blocked in `run`
+                // until this generation's barrier clears, so the closure
+                // behind `job.data` is alive; `call` is the shim
+                // monomorphized for the closure's real type.
+                unsafe { (job.call)(job.data, c) };
+                c += lanes;
+            }
+        }))
+        .is_err();
+        IN_POOL.with(|c| c.set(false));
+        let mut st = shared.state.lock().unwrap();
+        if panicked {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Desired size for the global pool before it is first built (0 = use
+/// [`super::kernels::default_threads`]).
+static REQUESTED_LANES: AtomicUsize = AtomicUsize::new(0);
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Size the process-global pool. Effective only before the pool's first
+/// use (the pool is built lazily); afterwards the existing size wins.
+/// Returns the size the global pool has / will have.
+pub fn set_global_lanes(n: usize) -> usize {
+    if let Some(p) = GLOBAL.get() {
+        return p.lanes();
+    }
+    REQUESTED_LANES.store(n.clamp(1, 64), Ordering::SeqCst);
+    // Build it now so the recorded size is the real one even if another
+    // thread races a different request in.
+    global().lanes()
+}
+
+/// The global pool's lane count if it has been built, `None` otherwise
+/// (never forces a build — outcome recording must not spawn workers for
+/// runs that executed no native kernel).
+pub fn current_global_lanes() -> Option<usize> {
+    GLOBAL.get().map(WorkerPool::lanes)
+}
+
+/// The process-global kernel pool, built on first use and sized by
+/// [`set_global_lanes`] / `OMNIVORE_THREADS` / host parallelism.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        let n = match REQUESTED_LANES.load(Ordering::SeqCst) {
+            0 => super::kernels::default_threads(),
+            n => n,
+        };
+        WorkerPool::new(n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for nchunks in [1usize, 2, 3, 4, 7, 16, 33] {
+            let hits: Vec<AtomicU64> =
+                (0..nchunks).map(|_| AtomicU64::new(0)).collect();
+            pool.run(nchunks, |c| {
+                hits[c].fetch_add(1, Ordering::SeqCst);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c} of {nchunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.lanes(), 1);
+        let sum = AtomicU64::new(0);
+        pool.run(5, |c| {
+            assert!(!in_pool(), "1-lane pools never mark threads as pool lanes");
+            sum.fetch_add(c as u64 + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = WorkerPool::new(3);
+        let outer_hits: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        let inner_total = AtomicU64::new(0);
+        pool.run(6, |c| {
+            outer_hits[c].fetch_add(1, Ordering::SeqCst);
+            assert!(in_pool());
+            // A nested submission must not deadlock; it runs inline.
+            pool.run(4, |i| {
+                inner_total.fetch_add(i as u64 + 1, Ordering::SeqCst);
+            });
+        });
+        assert!(outer_hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert_eq!(inner_total.load(Ordering::SeqCst), 6 * 10);
+        assert!(!in_pool());
+    }
+
+    #[test]
+    fn disjoint_writes_through_raw_parts() {
+        let pool = WorkerPool::new(4);
+        let mut buf = vec![0u64; 40];
+        let ptr = buf.as_mut_ptr() as usize;
+        pool.run(10, |c| {
+            // SAFETY: chunk c owns the disjoint range [4c, 4c+4); every
+            // chunk index executes exactly once, so no two writers alias.
+            let s = unsafe { std::slice::from_raw_parts_mut((ptr as *mut u64).add(4 * c), 4) };
+            for (i, v) in s.iter_mut().enumerate() {
+                *v = (c * 4 + i) as u64;
+            }
+        });
+        assert_eq!(buf, (0..40).map(|i| i as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn global_pool_is_built_once() {
+        let a = global().lanes();
+        let b = set_global_lanes(a + 7);
+        assert_eq!(a, b, "resizing after first use keeps the existing pool");
+    }
+}

@@ -59,7 +59,11 @@ const fn switch(name: &'static str) -> Flag {
 }
 
 /// Flags every subcommand accepts.
-const GLOBAL_FLAGS: &[Flag] = &[val("artifacts", "DIR"), val("backend", "stub|native|auto")];
+const GLOBAL_FLAGS: &[Flag] = &[
+    val("artifacts", "DIR"),
+    val("backend", "stub|native|auto"),
+    val("backend-threads", "N"),
+];
 
 const TRAIN_FLAGS: &[Flag] = &[
     val("arch", "A"),
@@ -153,6 +157,7 @@ const SUBCOMMANDS: &[(&str, &[Flag])] = &[
 fn usage() -> String {
     let mut out = String::from(
         "usage: omnivore [--artifacts DIR] [--backend stub|native|auto] \
+         [--backend-threads N] \
          <train|optimize|sweep|simulate|bayesian|serve|info> [flags]\n",
     );
     for (name, flags) in SUBCOMMANDS {
@@ -278,9 +283,32 @@ fn load_runtime(cx: &Cx, spec: &mut RunSpec) -> Result<Runtime> {
         omnivore::backend::BackendChoice::parse(&backend)?;
         spec.backend = Some(backend);
     }
+    if let Some(n) = parse_backend_threads(&cx)? {
+        spec.backend_threads = Some(n);
+    }
     let rt = Runtime::load(&dir)?;
     rt.set_backend_choice(spec.backend_choice()?);
+    if let Some(n) = spec.backend_threads {
+        rt.set_backend_threads(n);
+    }
     Ok(rt)
+}
+
+/// `--backend-threads N`: kernel-pool lanes for the native backend
+/// (flag > spec field > `OMNIVORE_THREADS` > host parallelism).
+fn parse_backend_threads(cx: &Cx) -> Result<Option<usize>> {
+    match cx.opt_str("backend-threads") {
+        None => Ok(None),
+        Some(s) => {
+            let n: usize = s.parse().map_err(|_| {
+                anyhow::anyhow!("--backend-threads wants a positive integer, got {s:?}")
+            })?;
+            if n == 0 {
+                anyhow::bail!("--backend-threads must be >= 1");
+            }
+            Ok(Some(n))
+        }
+    }
 }
 
 fn store_outcome(runs_dir: &str, outcome: &RunOutcome) -> Result<()> {
@@ -701,6 +729,11 @@ fn serve(args: &Args) -> Result<()> {
     let backend = cx.opt_str("backend");
     if let Some(b) = &backend {
         omnivore::backend::BackendChoice::parse(b)?;
+    }
+    // The kernel pool is process-global: size it once at daemon start
+    // and every tenant run shares it.
+    if let Some(n) = parse_backend_threads(&cx)? {
+        omnivore::backend::pool::set_global_lanes(n);
     }
     let cfg = omnivore::serve::ServeConfig {
         addr: cx.str("addr", "127.0.0.1:7911"),

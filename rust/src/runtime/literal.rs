@@ -4,22 +4,14 @@ use anyhow::{bail, Result};
 
 use crate::tensor::HostTensor;
 
-/// f32 HostTensor -> Literal.
+/// f32 HostTensor -> Literal (one copy of the data, no byte encoding).
 pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        t.shape(),
-        crate::tensor::f32_bytes(t.data()),
-    )?)
+    Ok(xla::Literal::from_f32(t.shape(), t.data().to_vec())?)
 }
 
 /// i32 labels -> Literal (rank-1).
 pub fn labels_literal(labels: &[i32]) -> Result<xla::Literal> {
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        &[labels.len()],
-        crate::tensor::i32_bytes(labels),
-    )?)
+    Ok(xla::Literal::from_i32(&[labels.len()], labels.to_vec())?)
 }
 
 /// Literal -> f32 HostTensor (element type must be F32).
@@ -29,7 +21,7 @@ pub fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
         xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
         other => bail!("expected array literal, got {other:?}"),
     };
-    let data = l.to_vec::<f32>()?;
+    let data = l.as_f32()?.to_vec();
     HostTensor::new(dims, data)
 }
 

@@ -140,6 +140,15 @@ impl Runtime {
         *self.backend_choice.lock().unwrap()
     }
 
+    /// Request `n` lanes for the native backend's persistent kernel
+    /// pool (CLI `--backend-threads`, `RunSpec.backend_threads`).
+    /// The pool is built once per process, so the first request wins;
+    /// returns the pool's actual lane count either way, which
+    /// `RunOutcome` records as `backend_threads`.
+    pub fn set_backend_threads(&self, n: usize) -> usize {
+        crate::backend::pool::set_global_lanes(n)
+    }
+
     /// Resolve the policy against one artifact: `Auto` collapses to
     /// native when the artifact's kind has a native kernel, stub
     /// otherwise; `Native` on an unsupported kind is an upfront error

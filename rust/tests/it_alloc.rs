@@ -1,0 +1,92 @@
+//! Steady-state allocation discipline of the native training path.
+//!
+//! The scratch arena (`omnivore::backend::scratch`) counts every miss —
+//! a `take()` that had to grow a fresh buffer instead of reusing a
+//! cached one — behind the `invariants` feature. After a short warmup
+//! (worker-pool spawn, GEMM calibration probe, first-touch growth of
+//! every per-thread buffer), repeated `full_step` executions must hit
+//! the arena every single time: the deterministic static partition
+//! gives each worker lane the same chunks each iteration, so its
+//! thread-local cache always has the right sizes on hand.
+//!
+//! This is its own test binary (not a module of it_backend) because the
+//! counter is process-global: other tests allocating scratch would race
+//! the delta assertion.
+
+#![cfg(feature = "invariants")]
+
+mod common;
+
+use common::runtime;
+use omnivore::backend::{scratch, Backend, NativeBackend};
+use omnivore::runtime::{ArtifactEntry, TensorSpec};
+use omnivore::util::rng::Rng;
+
+#[test]
+fn steady_state_full_step_never_misses_the_scratch_arena() {
+    let (b, h, w, cin, c1, c2, f1, ncls, kk) =
+        (4usize, 8usize, 8usize, 3usize, 4usize, 6usize, 10usize, 5usize, 3usize);
+    let feat = (h / 4) * (w / 4) * c2;
+
+    let mut rng = Rng::seed_from_u64(7);
+    let mut randv = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32 * 0.1).collect() };
+    let x = randv(b * h * w * cin);
+    let labels: Vec<i32> = (0..b).map(|i| (i % ncls) as i32).collect();
+    let params: Vec<(Vec<usize>, Vec<f32>)> = vec![
+        (vec![kk, kk, cin, c1], randv(kk * kk * cin * c1)),
+        (vec![c1], randv(c1)),
+        (vec![kk, kk, c1, c2], randv(kk * kk * c1 * c2)),
+        (vec![c2], randv(c2)),
+        (vec![feat, f1], randv(feat * f1)),
+        (vec![f1], randv(f1)),
+        (vec![f1, ncls], randv(f1 * ncls)),
+        (vec![ncls], randv(ncls)),
+    ];
+
+    let mut lits = vec![
+        xla::Literal::from_f32(&[b, h, w, cin], x).unwrap(),
+        xla::Literal::from_i32(&[b], labels).unwrap(),
+    ];
+    for (dims, data) in &params {
+        lits.push(xla::Literal::from_f32(dims, data.clone()).unwrap());
+    }
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+
+    let spec = |dims: &[usize]| TensorSpec { shape: dims.to_vec(), dtype: "float32".into() };
+    let entry = ArtifactEntry {
+        name: "alloc_probe_full_step".into(),
+        file: "none".into(),
+        inputs: vec![spec(&[b, h, w, cin])],
+        outputs: vec![spec(&[])],
+        arch: Some("tiny".into()),
+        variant: Some("jnp".into()),
+        kind: "full_step".into(),
+        batch: Some(b),
+        b_p: Some(2),
+        n: None,
+        gflops: None,
+        lowered_bytes: None,
+    };
+    let rt = runtime();
+
+    // Warmup: builds the persistent worker pool, runs the one-time GEMM
+    // calibration probe, and grows every scratch buffer (main thread
+    // and worker lanes) to its steady-state size.
+    for _ in 0..3 {
+        NativeBackend.execute(rt, &entry, &refs).unwrap();
+    }
+
+    let before = scratch::alloc_count();
+    const ITERS: u64 = 5;
+    for _ in 0..ITERS {
+        let outs = NativeBackend.execute(rt, &entry, &refs).unwrap();
+        assert_eq!(outs.len(), 10);
+    }
+    let after = scratch::alloc_count();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state full_step leaked {} scratch misses over {ITERS} iterations",
+        after - before
+    );
+}

@@ -60,6 +60,8 @@ impl ElementType {
 pub trait ArrayElement: Copy {
     const TY: ElementType;
     fn from_ne_chunk(bytes: &[u8]) -> Self;
+    /// Borrow the literal's typed buffer (None on dtype mismatch/tuple).
+    fn slice_of(lit: &Literal) -> Option<&[Self]>;
 }
 
 impl ArrayElement for f32 {
@@ -67,12 +69,24 @@ impl ArrayElement for f32 {
     fn from_ne_chunk(b: &[u8]) -> Self {
         f32::from_ne_bytes([b[0], b[1], b[2], b[3]])
     }
+    fn slice_of(lit: &Literal) -> Option<&[Self]> {
+        match &lit.data {
+            Storage::F32(v) => Some(v),
+            _ => None,
+        }
+    }
 }
 
 impl ArrayElement for i32 {
     const TY: ElementType = ElementType::S32;
     fn from_ne_chunk(b: &[u8]) -> Self {
         i32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+    fn slice_of(lit: &Literal) -> Option<&[Self]> {
+        match &lit.data {
+            Storage::I32(v) => Some(v),
+            _ => None,
+        }
     }
 }
 
@@ -100,12 +114,33 @@ pub enum Shape {
     Tuple(Vec<Shape>),
 }
 
+/// Typed backing storage for a dense literal. Values are stored as
+/// native `f32`/`i32` vectors (not raw bytes) so callers can **borrow**
+/// the buffer aligned and zero-copy via [`Literal::as_f32`] /
+/// [`Literal::as_i32`], and construct literals by **moving** a vector in
+/// via [`Literal::from_f32`] — the hot native-backend path does neither
+/// a byte round-trip nor a copy.
+#[derive(Clone, Debug)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+}
+
 /// A host-side typed buffer — genuinely functional in the stub.
 #[derive(Debug)]
 pub struct Literal {
     ty: ElementType,
     dims: Vec<i64>,
-    data: Vec<u8>,
+    data: Storage,
     tuple: Option<Vec<Literal>>,
 }
 
@@ -124,11 +159,73 @@ impl Literal {
                 data.len()
             )));
         }
+        let storage = match ty {
+            ElementType::F32 => {
+                Storage::F32(data.chunks_exact(4).map(f32::from_ne_chunk).collect())
+            }
+            ElementType::S32 => {
+                Storage::I32(data.chunks_exact(4).map(i32::from_ne_chunk).collect())
+            }
+        };
         Ok(Literal {
             ty,
             dims: dims.iter().map(|&d| d as i64).collect(),
-            data: data.to_vec(),
+            data: storage,
             tuple: None,
+        })
+    }
+
+    /// Build an F32 literal by MOVING `data` in — no copy, no byte pass.
+    pub fn from_f32(dims: &[usize], data: Vec<f32>) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::new(format!(
+                "literal dims {dims:?} want {n} f32s, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty: ElementType::F32,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: Storage::F32(data),
+            tuple: None,
+        })
+    }
+
+    /// Build an S32 literal by MOVING `data` in — no copy, no byte pass.
+    pub fn from_i32(dims: &[usize], data: Vec<i32>) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::new(format!(
+                "literal dims {dims:?} want {n} i32s, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty: ElementType::S32,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: Storage::I32(data),
+            tuple: None,
+        })
+    }
+
+    /// Borrow the f32 buffer zero-copy (dense F32 literals only).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        self.as_slice::<f32>()
+    }
+
+    /// Borrow the i32 buffer zero-copy (dense S32 literals only).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        self.as_slice::<i32>()
+    }
+
+    /// Borrow the typed buffer zero-copy.
+    pub fn as_slice<T: ArrayElement>(&self) -> Result<&[T]> {
+        if self.tuple.is_some() {
+            return Err(Error::new("as_slice on a tuple literal"));
+        }
+        T::slice_of(self).ok_or_else(|| {
+            Error::new(format!("element type mismatch: literal is {:?}", self.ty))
         })
     }
 
@@ -146,17 +243,12 @@ impl Literal {
         if self.tuple.is_some() {
             return Err(Error::new("to_vec on a tuple literal"));
         }
-        if self.ty != T::TY {
-            return Err(Error::new(format!(
-                "element type mismatch: literal is {:?}",
-                self.ty
-            )));
-        }
-        Ok(self
-            .data
-            .chunks_exact(self.ty.byte_size())
-            .map(T::from_ne_chunk)
-            .collect())
+        Ok(self.as_slice::<T>()?.to_vec())
+    }
+
+    /// Number of elements in a dense literal.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
     }
 
     /// Decompose a tuple literal into its elements.
@@ -272,6 +364,18 @@ mod tests {
             .unwrap();
         assert!(l.to_vec::<f32>().is_err());
         assert_eq!(l.to_vec::<i32>().unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn from_f32_moves_and_borrows() {
+        let l = Literal::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(l.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert!(l.as_i32().is_err());
+        assert!(Literal::from_f32(&[3], vec![0.0]).is_err());
+        let li = Literal::from_i32(&[2], vec![7, 9]).unwrap();
+        assert_eq!(li.as_i32().unwrap(), &[7, 9]);
+        assert_eq!(li.to_vec::<i32>().unwrap(), vec![7, 9]);
     }
 
     #[test]

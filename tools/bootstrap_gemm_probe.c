@@ -1,0 +1,229 @@
+/* Bootstrap probe for the BENCH_l3.json GEMM rows on a box without a
+ * Rust toolchain.
+ *
+ * Mirrors the two schedules in rust/src/backend/kernels.rs at
+ * threads = 1, op-for-op:
+ *
+ *   unpacked — the PR 7 C-tile-stationary reference (`gemm_unpacked`):
+ *     row tiles of pick_tile(m,120) x pick_tile(n,512), k-blocked by
+ *     pick_tile(k,288), plain triple loop over the tile;
+ *   packed   — the BLIS-style microkernel path (`gemm`): A packed into
+ *     MR=6 row strips, B into NR=16 column strips, 6x16 register
+ *     accumulator, ascending-k.
+ *
+ * Compile WITHOUT fp contraction so the FLOP mix matches rustc (which
+ * never contracts a*b+c into fma by default):
+ *
+ *   cc -O3 -march=native -ffp-contract=off -o probe \
+ *       tools/bootstrap_gemm_probe.c && ./probe
+ *
+ * Prints the two 256^3 GFLOP/s numbers and their ratio; paste them into
+ * BENCH_l3.json (keys gemm_256x256x256_t1 and
+ * gemm_256x256x256_t1_unpacked, "bootstrap": true stays set). CI's
+ * check_bench_regression.py asserts packed >= 1.5x unpacked on the
+ * fresh Rust run; this probe is how that claim was validated when the
+ * baseline was seeded.
+ */
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define MR 6
+#define NR 16
+
+static size_t ceil_to(size_t n, size_t align) {
+    return (n + align - 1) / align * align;
+}
+
+/* pick_block from kernels.rs: near-equal split, aligned up. */
+static size_t pick_block(size_t n, size_t max_block, size_t align) {
+    if (n == 0) n = 1;
+    if (n <= max_block) return ceil_to(n, align);
+    size_t n_blocks = (n + max_block - 1) / max_block;
+    return ceil_to((n + n_blocks - 1) / n_blocks, align);
+}
+
+static double now_secs(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + 1e-9 * (double)ts.tv_nsec;
+}
+
+/* ---- unpacked reference (gemm_unpacked_into, threads = 1) ---- */
+static void gemm_unpacked(float *c, const float *a, const float *b, size_t m,
+                          size_t k, size_t n) {
+    size_t tn = pick_block(n, 512, 8);
+    if (tn > n) tn = n;
+    size_t tk = pick_block(k, 288, 8);
+    size_t tm = pick_block(m, 120, 8);
+    float *acc = malloc(tm * tn * sizeof(float));
+    for (size_t i0 = 0; i0 < m; i0 += tm) {
+        size_t il = (m - i0 < tm) ? m - i0 : tm;
+        for (size_t j0 = 0; j0 < n; j0 += tn) {
+            size_t jl = (n - j0 < tn) ? n - j0 : tn;
+            memset(acc, 0, il * jl * sizeof(float));
+            for (size_t k0 = 0; k0 < k; k0 += tk) {
+                size_t kl = (k - k0 < tk) ? k - k0 : tk;
+                for (size_t ii = 0; ii < il; ii++) {
+                    const float *arow = a + (i0 + ii) * k + k0;
+                    float *crow = acc + ii * jl;
+                    for (size_t kk = 0; kk < kl; kk++) {
+                        float av = arow[kk];
+                        const float *brow = b + (k0 + kk) * n + j0;
+                        for (size_t jj = 0; jj < jl; jj++)
+                            crow[jj] += av * brow[jj];
+                    }
+                }
+            }
+            for (size_t ii = 0; ii < il; ii++)
+                memcpy(c + (i0 + ii) * n + j0, acc + ii * jl,
+                       jl * sizeof(float));
+        }
+    }
+    free(acc);
+}
+
+/* ---- packed microkernel path (gemm_fused_on, threads = 1) ----
+ *
+ * The register tile is written with GCC vector extensions (one NR-wide
+ * f32 lane per accumulator row, so the 6x16 tile is 6 vector registers)
+ * because gcc 10's autovectorizer only finds 4-wide SSE in the plain-C
+ * nest; LLVM (what rustc uses) emits this shape from the scalar Rust
+ * microkernel on its own. Per output element it is still one mul and
+ * one add per k, ascending — the lane split changes which elements
+ * share an instruction, never the per-element op sequence, so results
+ * stay bitwise identical to the scalar unpacked path (checked in
+ * main). */
+typedef float vnr __attribute__((vector_size(NR * 4), aligned(4)));
+
+static inline vnr splat(float x) {
+    return (vnr){x, x, x, x, x, x, x, x, x, x, x, x, x, x, x, x};
+}
+
+static void microkernel(float *restrict c, size_t ldc,
+                        const float *restrict ap, const float *restrict bp,
+                        size_t kc, size_t mr, size_t nr, int first) {
+    vnr acc[MR];
+    for (size_t r = 0; r < MR; r++) acc[r] = splat(0.0f);
+    if (!first) {
+        float edge[MR][NR];
+        memset(edge, 0, sizeof(edge));
+        for (size_t r = 0; r < mr; r++)
+            for (size_t j = 0; j < nr; j++) edge[r][j] = c[r * ldc + j];
+        for (size_t r = 0; r < MR; r++) acc[r] = *(const vnr *)&edge[r][0];
+    }
+    for (size_t kk = 0; kk < kc; kk++) {
+        const float *restrict av = ap + kk * MR;
+        vnr b0 = *(const vnr *)(bp + kk * NR);
+        for (size_t r = 0; r < MR; r++) acc[r] += splat(av[r]) * b0;
+    }
+    float out[MR][NR];
+    for (size_t r = 0; r < MR; r++) *(vnr *)&out[r][0] = acc[r];
+    for (size_t r = 0; r < mr; r++)
+        for (size_t j = 0; j < nr; j++) c[r * ldc + j] = out[r][j];
+}
+
+static void gemm_packed(float *c, const float *a, const float *b, size_t m,
+                        size_t k, size_t n) {
+    size_t mc = pick_block(m, 120, MR);
+    size_t kc = pick_block(k, 288, 1);
+    size_t nc = pick_block(n, 512, NR);
+    float *apack = malloc(mc * kc * sizeof(float));
+    float *bpack = malloc(nc * kc * sizeof(float));
+    for (size_t jc = 0; jc < n; jc += nc) {
+        size_t jl = (n - jc < nc) ? n - jc : nc;
+        for (size_t pc = 0; pc < k; pc += kc) {
+            size_t kl = (k - pc < kc) ? k - pc : kc;
+            int first = pc == 0;
+            /* pack B: NR-wide column strips, kl deep, zero-padded */
+            for (size_t s = 0; s * NR < jl; s++) {
+                float *dst = bpack + s * kl * NR;
+                size_t w = (jl - s * NR < NR) ? jl - s * NR : NR;
+                for (size_t kk = 0; kk < kl; kk++) {
+                    const float *src = b + (pc + kk) * n + jc + s * NR;
+                    for (size_t j = 0; j < w; j++) dst[kk * NR + j] = src[j];
+                    for (size_t j = w; j < NR; j++) dst[kk * NR + j] = 0.0f;
+                }
+            }
+            for (size_t ic = 0; ic < m; ic += mc) {
+                size_t il = (m - ic < mc) ? m - ic : mc;
+                /* pack A: MR-tall row strips, kl deep, zero-padded */
+                for (size_t s = 0; s * MR < il; s++) {
+                    float *dst = apack + s * kl * MR;
+                    size_t hgt = (il - s * MR < MR) ? il - s * MR : MR;
+                    for (size_t kk = 0; kk < kl; kk++) {
+                        for (size_t r = 0; r < hgt; r++)
+                            dst[kk * MR + r] =
+                                a[(ic + s * MR + r) * k + pc + kk];
+                        for (size_t r = hgt; r < MR; r++)
+                            dst[kk * MR + r] = 0.0f;
+                    }
+                }
+                for (size_t jr = 0; jr < jl; jr += NR) {
+                    size_t nr = (jl - jr < NR) ? jl - jr : NR;
+                    for (size_t ir = 0; ir < il; ir += MR) {
+                        size_t mr = (il - ir < MR) ? il - ir : MR;
+                        microkernel(c + (ic + ir) * n + jc + jr, n,
+                                    apack + (ir / MR) * kl * MR,
+                                    bpack + (jr / NR) * kl * NR, kl, mr, nr,
+                                    first);
+                    }
+                }
+            }
+        }
+    }
+    free(apack);
+    free(bpack);
+}
+
+typedef void (*gemm_fn)(float *, const float *, const float *, size_t, size_t,
+                        size_t);
+
+static double time_gemm(gemm_fn f, float *c, const float *a, const float *b,
+                        size_t n, int reps) {
+    f(c, a, b, n, n, n); /* warm */
+    double best = 1e30;
+    for (int r = 0; r < reps; r++) {
+        double t0 = now_secs();
+        f(c, a, b, n, n, n);
+        double dt = now_secs() - t0;
+        if (dt < best) best = dt;
+    }
+    return best;
+}
+
+int main(void) {
+    const size_t n = 256;
+    float *a = malloc(n * n * sizeof(float));
+    float *b = malloc(n * n * sizeof(float));
+    float *c0 = malloc(n * n * sizeof(float));
+    float *c1 = malloc(n * n * sizeof(float));
+    uint64_t s = 0x243f6a8885a308d3ULL;
+    for (size_t i = 0; i < n * n; i++) {
+        s = s * 6364136223846793005ULL + 1442695040888963407ULL;
+        a[i] = (float)((double)(s >> 33) / 4294967296.0) - 0.25f;
+        s = s * 6364136223846793005ULL + 1442695040888963407ULL;
+        b[i] = (float)((double)(s >> 33) / 4294967296.0) - 0.25f;
+    }
+
+    gemm_unpacked(c0, a, b, n, n, n);
+    gemm_packed(c1, a, b, n, n, n);
+    if (memcmp(c0, c1, n * n * sizeof(float)) != 0) {
+        fprintf(stderr, "FAIL: packed and unpacked disagree bitwise\n");
+        return 1;
+    }
+
+    double gf = 2.0 * (double)n * (double)n * (double)n / 1e9;
+    double tu = time_gemm(gemm_unpacked, c0, a, b, n, 10);
+    double tp = time_gemm(gemm_packed, c1, a, b, n, 10);
+    printf("bitwise check: packed == unpacked\n");
+    printf("unpacked 256^3: %.6e s  %.2f GFLOP/s\n", tu, gf / tu);
+    printf("packed   256^3: %.6e s  %.2f GFLOP/s\n", tp, gf / tp);
+    printf("speedup: %.2fx\n", tu / tp);
+    printf("json: {\"packed_gflops\": %.6f, \"packed_secs\": %.9f, "
+           "\"unpacked_gflops\": %.6f, \"unpacked_secs\": %.9f}\n",
+           gf / tp, tp, gf / tu, tu);
+    return 0;
+}
